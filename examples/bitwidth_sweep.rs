@@ -1,0 +1,46 @@
+//! Mini Fig. 1: bitwidth sensitivity on one environment, four quantization
+//! scopes, against the FP32 band.
+//!
+//! Run: `cargo run --release --example bitwidth_sweep -- \
+//!         [--env pendulum] [--bits 8,4,2] [--steps 1200]`
+
+use anyhow::Result;
+
+use qcontrol::coordinator::sweep::{fp32_band, matches_fp32, run_config,
+                                   Scope, SweepProtocol};
+use qcontrol::rl::Algo;
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::util::bench::Table;
+use qcontrol::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let env = args.str("env", "pendulum");
+    let bits = args.usize_list("bits", &[8, 4, 2])?;
+    let rt = Runtime::load(default_artifact_dir())?;
+    let mut proto = SweepProtocol::from_env();
+    proto.steps = args.usize("steps", 1200)?;
+    proto.learning_starts = (proto.steps / 5).max(200);
+    proto.hidden = args.usize("hidden", 16)?;
+
+    println!("== Fig.1-style sweep on {env} ({}) ==", proto.describe());
+    let fp32 = fp32_band(&rt, Algo::Sac, &env, &proto, true)?;
+    println!("FP32 band: {:.1} ± {:.1}\n", fp32.mean, fp32.std);
+
+    let mut table = Table::new(&["scope", "bits", "return", "in band"]);
+    for scope in Scope::ALL {
+        for &b in &bits {
+            let p = run_config(&rt, Algo::Sac, &env, &proto, proto.hidden,
+                               scope.bits(b as u32), true,
+                               &format!("{}{b}", scope.name()))?;
+            table.row(vec![
+                scope.name().into(),
+                b.to_string(),
+                format!("{:.1} ± {:.1}", p.mean, p.std),
+                if matches_fp32(&p, &fp32) { "yes" } else { "no" }.into(),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

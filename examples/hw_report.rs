@@ -1,0 +1,59 @@
+//! Table-3-style hardware report: synthesize every paper-selected policy
+//! and the 8-4-8 reference to the XC7A15T model, print the full table.
+//!
+//! Run: `cargo run --release --example hw_report`
+
+use anyhow::Result;
+
+use qcontrol::coordinator::select::paper_table1;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::rl;
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::synth::{synthesize, XC7A15T};
+use qcontrol::util::bench::Table;
+use qcontrol::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let envs = ["humanoid", "walker2d", "ant", "halfcheetah", "hopper"];
+
+    let mut table = Table::new(&["config", "env", "LUT", "FF", "BRAM",
+                                 "DSP", "latency", "P [W]", "TP [a/s]",
+                                 "E/action [J]"]);
+    for (label, cfgs) in [
+        ("selected", envs.map(|e| (e, paper_table1(e).unwrap()))),
+        ("ref 8-4-8", envs.map(|e| (e, (256, BitCfg::new(8, 4, 8))))),
+    ] {
+        for (env, (hidden, bits)) in cfgs {
+            let dims = rt.manifest.envs[env];
+            let spec = &rt.manifest.specs[&format!("sac_{env}_h{hidden}")];
+            let mut rng = Rng::new(7);
+            let flat = rl::init_flat(spec, &mut rng);
+            let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim,
+                                              hidden, dims.act_dim)?;
+            let policy = IntPolicy::from_tensors(&tensors, bits);
+            match synthesize(&policy, &XC7A15T, 1e8) {
+                Ok(r) => table.row(vec![
+                    label.into(), env.into(),
+                    r.design.luts().to_string(),
+                    r.design.ffs().to_string(),
+                    format!("{:.1}", r.design.bram36()),
+                    r.design.dsps().to_string(),
+                    qcontrol::util::human_time(r.latency_s),
+                    format!("{:.2}", r.power.total_w),
+                    format!("{:.1e}", r.throughput),
+                    format!("{:.1e}", r.energy_per_action),
+                ]),
+                Err(e) => table.row(vec![
+                    label.into(), env.into(), "-".into(), "-".into(),
+                    "-".into(), "-".into(), format!("DOES NOT FIT: {e}"),
+                    "-".into(), "-".into(), "-".into(),
+                ]),
+            }
+        }
+    }
+    println!("== Table-3-style report on {} @ 100 MHz ==", XC7A15T.name);
+    table.print();
+    Ok(())
+}

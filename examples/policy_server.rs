@@ -1,0 +1,83 @@
+//! Deployment scenario: serve a quantized integer policy over TCP and
+//! drive it with a client running the live environment — the paper's
+//! sense→infer→act loop with the controller behind a network hop.
+//!
+//! Run: `cargo run --release --example policy_server [-- --steps 2000]`
+//! Trains a small policy first (or loads --ckpt), then serves + queries it
+//! and reports per-action latency percentiles.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use qcontrol::coordinator::server::{serve, ActionClient};
+use qcontrol::envs;
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::{self, Algo, TrainConfig};
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::util::cli::Args;
+use qcontrol::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.usize("steps", 2500)?;
+    let episodes = args.usize("episodes", 5)?;
+    let bits = BitCfg::new(4, 2, 8);
+    let rt = Runtime::load(default_artifact_dir())?;
+
+    println!("== policy_server: train, deploy as integer TCP service, \
+              drive the env through it ==");
+    let mut cfg = TrainConfig::new(Algo::Sac, "pendulum");
+    cfg.hidden = 16;
+    cfg.bits = bits;
+    cfg.total_steps = steps;
+    cfg.learning_starts = (steps / 5).max(200);
+    cfg.seed = 3;
+    let res = rl::train(&rt, &cfg)?;
+
+    let spec = &rt.manifest.specs["sac_pendulum_h16"];
+    let tensors = rl::extract_tensors(spec, &res.flat, 3, 16, 1)?;
+    let engine = IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    println!("serving integer policy at {addr}");
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let norm = res.normalizer.clone();
+    let server_thread =
+        std::thread::spawn(move || serve(listener, engine, norm, stop2));
+
+    // client: run episodes against the live env, actions from the server
+    let mut client = ActionClient::connect(&addr, 3, 1)?;
+    let mut env = envs::make("pendulum")?;
+    let mut rng = Rng::new(42);
+    let mut returns = Vec::new();
+    for ep in 0..episodes {
+        let mut obs = env.reset(&mut rng);
+        let mut total = 0.0;
+        loop {
+            let action = client.act(&obs)?;
+            let out = env.step(&action);
+            total += out.reward;
+            obs = out.obs;
+            if out.terminated || out.truncated {
+                break;
+            }
+        }
+        println!("  episode {ep}: return {total:.1}");
+        returns.push(total);
+    }
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    let stats = server_thread.join().unwrap()?;
+    println!("server: {} requests, inference latency p50 {:.2} µs, \
+              p99 {:.2} µs, mean {:.2} µs",
+             stats.requests, stats.p50_us, stats.p99_us, stats.mean_us);
+    println!("mean return over TCP: {:.1}",
+             returns.iter().sum::<f64>() / returns.len() as f64);
+    Ok(())
+}

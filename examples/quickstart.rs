@@ -1,0 +1,107 @@
+//! End-to-end driver: the full learning-to-hardware pipeline on a real
+//! workload (pendulum swing-up), proving all layers compose:
+//!
+//!   1. QAT-train a SAC policy with the rust coordinator driving the AOT
+//!      JAX/Pallas train graphs via PJRT (L3 -> L2 -> L1),
+//!   2. log the reward curve,
+//!   3. export the trained policy to integer-only form,
+//!   4. validate the integer engine against the fake-quant and PJRT paths,
+//!   5. synthesize to the XC7A15T model and print the hardware report.
+//!
+//! Run: `cargo run --release --example quickstart [-- --steps 4000]`
+//! (recorded in EXPERIMENTS.md §Quickstart)
+
+use anyhow::Result;
+
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::synth::{synthesize, XC7A15T};
+use qcontrol::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.usize("steps", 4000)?;
+    let bits = BitCfg::new(4, 2, 8);
+    let hidden = 16;
+
+    println!("== qcontrol quickstart: QAT SAC on pendulum, {steps} steps, \
+              h={hidden}, bits=({},{},{}) ==",
+             bits.b_in, bits.b_core, bits.b_out);
+    let rt = Runtime::load(default_artifact_dir())?;
+
+    // -- 1. train ----------------------------------------------------------
+    let mut cfg = TrainConfig::new(Algo::Sac, "pendulum");
+    cfg.hidden = hidden;
+    cfg.bits = bits;
+    cfg.total_steps = steps;
+    cfg.learning_starts = (steps / 5).max(200);
+    cfg.eval_every = (steps / 8).max(1);
+    cfg.eval_episodes = 5;
+    cfg.seed = 7;
+    cfg.verbose = true;
+    let res = rl::train(&rt, &cfg)?;
+    println!("-- reward curve ({:.1} env steps/s):", res.steps_per_sec);
+    for p in &res.curve {
+        let bar = "#".repeat(((p.mean_return + 1700.0) / 60.0)
+                             .clamp(0.0, 28.0) as usize);
+        println!("   step {:>6}  {:>8.1} ± {:>6.1}  {bar}", p.step,
+                 p.mean_return, p.std_return);
+    }
+
+    // -- 2. evaluate the three backends -------------------------------------
+    let mut returns = Vec::new();
+    for backend in [EvalBackend::Pjrt, EvalBackend::FakeQuant,
+                    EvalBackend::Integer] {
+        let (mean, std) = rl::evaluate(&rt, &EvalOpts {
+            algo: Algo::Sac,
+            env: "pendulum".into(),
+            hidden,
+            bits,
+            quant_on: true,
+            episodes: 10,
+            noise_std: 0.0,
+            seed: 99,
+            backend,
+        }, &res.flat, &res.normalizer)?;
+        println!("-- eval[{backend:?}]: {mean:.1} ± {std:.1}");
+        returns.push(mean);
+    }
+    let spread = returns
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+    println!("   backend agreement spread: {:.1}", spread.1 - spread.0);
+
+    // -- 3. integer export + µs latency --------------------------------------
+    let spec = &rt.manifest.specs[&format!("sac_pendulum_h{hidden}")];
+    let tensors = rl::extract_tensors(spec, &res.flat, 3, hidden, 1)?;
+    let policy = IntPolicy::from_tensors(&tensors, bits);
+    println!("-- integer export: {} weight bits on-chip, {} threshold bits",
+             policy.weight_bits_total(), policy.threshold_bits_total());
+    let mut engine = IntEngine::new(policy.clone());
+    let obs = [0.3f32, -0.9, 0.2];
+    let r = qcontrol::util::bench::run("int-engine single action", 100,
+                                       0.3, || {
+        let mut out = [0.0f32];
+        engine.infer(&obs, &mut out);
+        std::hint::black_box(out);
+    });
+    println!("   software integer engine: {:.2} µs / action",
+             r.p50_ns / 1e3);
+
+    // -- 4. synthesize ---------------------------------------------------------
+    let report = synthesize(&policy, &XC7A15T, 1e8)?;
+    println!("-- synthesized to {} @100 MHz:", XC7A15T.name);
+    println!("   LUT {} FF {} BRAM {:.1} DSP {}  |  latency {}  \
+              TP {:.1e} a/s  P {:.2} W  E/action {:.2e} J",
+             report.design.luts(), report.design.ffs(),
+             report.design.bram36(), report.design.dsps(),
+             qcontrol::util::human_time(report.latency_s),
+             report.throughput, report.power.total_w,
+             report.energy_per_action);
+    println!("   dataflow-sim cross-check: {} cycles", report.sim_cycles);
+    println!("== quickstart complete ==");
+    Ok(())
+}

@@ -1,0 +1,230 @@
+"""AOT lowering: JAX train/act/forward graphs -> HLO text artifacts.
+
+Emits HLO **text**, NOT ``.serialize()``: the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+  manifest.json                 index: envs, hyper/metric maps, param specs,
+                                artifact signatures (mirrored by rust/runtime)
+  {algo}_{kind}_{env}_h{H}[_bB].hlo.txt
+  golden/*.json                 parity vectors for the rust quant mirror
+
+Run via ``make artifacts`` (no-op when inputs are unchanged); python never
+runs after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ddpg, hyper, sac
+from .params import ParamSpec
+
+# Environment table (obs_dim, act_dim). These are the gym/MuJoCo
+# dimensionalities, except Humanoid which our rust substrate reduces to
+# qpos+qvel (DESIGN.md §Substitutions).
+ENVS = {
+    "pendulum": (3, 1),
+    "hopper": (11, 3),
+    "walker2d": (17, 6),
+    "halfcheetah": (17, 6),
+    "ant": (27, 8),
+    "humanoid": (45, 17),
+}
+
+TRAIN_BATCH = 256
+EVAL_BATCH = 16
+SAC_WIDTHS = [16, 32, 64, 128, 256]
+DDPG_WIDTHS = [256]
+QUICK_ENVS = ["pendulum"]
+QUICK_WIDTHS = [16, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _sig(names_shapes):
+    return [{"name": n, "shape": list(s)} for n, s in names_shapes]
+
+
+class Emitter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.artifacts = []
+        self.specs = {}
+        os.makedirs(outdir, exist_ok=True)
+        os.makedirs(os.path.join(outdir, "golden"), exist_ok=True)
+
+    def add_spec(self, key: str, spec: ParamSpec) -> str:
+        if key not in self.specs:
+            self.specs[key] = {"n_params": spec.total,
+                               "entries": spec.to_json()}
+        return key
+
+    def emit(self, name, fn, arg_specs, *, kind, algo, env, hidden,
+             batch, spec_key, inputs, outputs):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        self.artifacts.append({
+            "name": name, "file": fname, "kind": kind, "algo": algo,
+            "env": env, "hidden": hidden, "batch": batch,
+            "spec": spec_key, "inputs": _sig(inputs),
+            "outputs": _sig(outputs),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  {fname:48s} {len(text)/1e6:7.2f} MB  "
+              f"{time.time()-t0:5.1f}s", flush=True)
+
+    def manifest(self):
+        return {
+            "version": 1,
+            "hyper": hyper.HYPER_NAMES, "hyper_len": hyper.HYPER_LEN,
+            "metrics": hyper.METRIC_NAMES, "metric_len": hyper.METRIC_LEN,
+            "train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH,
+            "envs": {k: {"obs_dim": o, "act_dim": a}
+                     for k, (o, a) in ENVS.items()},
+            "specs": self.specs,
+            "artifacts": self.artifacts,
+        }
+
+
+def emit_sac(em: Emitter, env: str, h: int, *, fwd_only=False):
+    obs_dim, act_dim = ENVS[env]
+    spec, step_fn = sac.make_train_step(obs_dim, act_dim, h)
+    key = em.add_spec(f"sac_{env}_h{h}", spec)
+    n = spec.total
+    B = TRAIN_BATCH
+    hl = hyper.HYPER_LEN
+
+    if not fwd_only:
+        em.emit(
+            f"sac_train_{env}_h{h}", step_fn,
+            (_spec_f32(n), _spec_f32(n), _spec_f32(n),
+             _spec_f32(B, obs_dim), _spec_f32(B, act_dim), _spec_f32(B),
+             _spec_f32(B, obs_dim), _spec_f32(B),
+             _spec_f32(B, act_dim), _spec_f32(B, act_dim), _spec_f32(hl)),
+            kind="train", algo="sac", env=env, hidden=h, batch=B,
+            spec_key=key,
+            inputs=[("params", (n,)), ("m", (n,)), ("v", (n,)),
+                    ("obs", (B, obs_dim)), ("act", (B, act_dim)),
+                    ("rew", (B,)), ("next_obs", (B, obs_dim)),
+                    ("done", (B,)), ("eps_next", (B, act_dim)),
+                    ("eps_cur", (B, act_dim)), ("hyper", (hl,))],
+            outputs=[("params", (n,)), ("m", (n,)), ("v", (n,)),
+                     ("metrics", (hyper.METRIC_LEN,))])
+
+        _, act_fn = sac.make_act_fn(obs_dim, act_dim, h)
+        em.emit(
+            f"sac_act_{env}_h{h}", act_fn,
+            (_spec_f32(n), _spec_f32(1, obs_dim), _spec_f32(1, act_dim),
+             _spec_f32(hl)),
+            kind="act", algo="sac", env=env, hidden=h, batch=1,
+            spec_key=key,
+            inputs=[("params", (n,)), ("obs", (1, obs_dim)),
+                    ("eps", (1, act_dim)), ("hyper", (hl,))],
+            outputs=[("action", (1, act_dim))])
+
+    _, fwd_fn = sac.make_fwd_fn(obs_dim, act_dim, h)
+    for b in (1, EVAL_BATCH):
+        em.emit(
+            f"sac_fwd_{env}_h{h}_b{b}", fwd_fn,
+            (_spec_f32(n), _spec_f32(b, obs_dim), _spec_f32(hl)),
+            kind="fwd", algo="sac", env=env, hidden=h, batch=b,
+            spec_key=key,
+            inputs=[("params", (n,)), ("obs", (b, obs_dim)),
+                    ("hyper", (hl,))],
+            outputs=[("action", (b, act_dim))])
+
+
+def emit_ddpg(em: Emitter, env: str, h: int):
+    obs_dim, act_dim = ENVS[env]
+    spec, step_fn = ddpg.make_train_step(obs_dim, act_dim, h)
+    key = em.add_spec(f"ddpg_{env}_h{h}", spec)
+    n = spec.total
+    B = TRAIN_BATCH
+    hl = hyper.HYPER_LEN
+
+    em.emit(
+        f"ddpg_train_{env}_h{h}", step_fn,
+        (_spec_f32(n), _spec_f32(n), _spec_f32(n),
+         _spec_f32(B, obs_dim), _spec_f32(B, act_dim), _spec_f32(B),
+         _spec_f32(B, obs_dim), _spec_f32(B), _spec_f32(hl)),
+        kind="train", algo="ddpg", env=env, hidden=h, batch=B,
+        spec_key=key,
+        inputs=[("params", (n,)), ("m", (n,)), ("v", (n,)),
+                ("obs", (B, obs_dim)), ("act", (B, act_dim)),
+                ("rew", (B,)), ("next_obs", (B, obs_dim)), ("done", (B,)),
+                ("hyper", (hl,))],
+        outputs=[("params", (n,)), ("m", (n,)), ("v", (n,)),
+                 ("metrics", (hyper.METRIC_LEN,))])
+
+    _, fwd_fn = ddpg.make_fwd_fn(obs_dim, act_dim, h)
+    for b in (1, EVAL_BATCH):
+        em.emit(
+            f"ddpg_fwd_{env}_h{h}_b{b}", fwd_fn,
+            (_spec_f32(n), _spec_f32(b, obs_dim), _spec_f32(hl)),
+            kind="fwd", algo="ddpg", env=env, hidden=h, batch=b,
+            spec_key=key,
+            inputs=[("params", (n,)), ("obs", (b, obs_dim)),
+                    ("hyper", (hl,))],
+            outputs=[("action", (b, act_dim))])
+
+
+def emit_golden(em: Emitter):
+    """Parity vectors for the rust quant/intinfer mirror (DESIGN.md §6)."""
+    from .golden import write_golden
+    write_golden(os.path.join(em.outdir, "golden"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="pendulum-only artifact set for development")
+    args = ap.parse_args()
+
+    em = Emitter(args.out)
+    envs = QUICK_ENVS if args.quick else list(ENVS)
+    sac_widths = QUICK_WIDTHS if args.quick else SAC_WIDTHS
+    ddpg_widths = QUICK_WIDTHS if args.quick else DDPG_WIDTHS
+
+    t0 = time.time()
+    for env in envs:
+        for h in sac_widths:
+            emit_sac(em, env, h)
+        for h in ddpg_widths:
+            emit_ddpg(em, env, h)
+    emit_golden(em)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(em.manifest(), f, indent=1)
+    print(f"wrote {len(em.artifacts)} artifacts in {time.time()-t0:.0f}s "
+          f"-> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

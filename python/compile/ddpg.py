@@ -1,0 +1,118 @@
+"""DDPG with quantization-aware training — the L2 train-step graph.
+
+CleanRL-faithful DDPG: single critic, deterministic quantized actor, target
+actor + target critic bootstrapping, actor updated every 2 critic steps
+(hyper[H_DO_POLICY] gate). Exploration noise is added by the rust
+coordinator (the graphs are RNG-free).
+
+Signature (lowered to ``ddpg_train_{env}_{h}.hlo.txt``):
+
+    (params, m, v, obs, act, rew, next_obs, done, hyper)
+      -> (params', m', v', metrics)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import hyper as H
+from .model import Bits, critic, policy_deterministic
+from .optim import adam_update
+from .params import ddpg_spec
+
+
+def _bits(hyp):
+    return Bits(hyp[H.H_B_IN], hyp[H.H_B_CORE], hyp[H.H_B_OUT],
+                on=hyp[H.H_QUANT_ON])
+
+
+def _critic_loss(flat, spec, obs, act, rew, next_obs, done, hyp):
+    p = spec.unpack(flat)
+    next_a = policy_deterministic(p, next_obs, _bits(hyp),
+                                  use_pallas=False, prefix="tgt_actor")
+    tq = critic(p, next_obs, next_a, "tgt_q1")
+    y = jax.lax.stop_gradient(rew + hyp[H.H_GAMMA] * (1.0 - done) * tq)
+    q = critic(p, obs, act, "q1")
+    loss = jnp.mean((q - y) ** 2)
+    return loss, (loss, jnp.mean(q))
+
+
+def _actor_loss(flat, spec, obs, hyp):
+    p = spec.unpack(flat)
+    a = policy_deterministic(p, obs, _bits(hyp), use_pallas=False)
+    loss = -jnp.mean(critic(p, obs, a, "q1"))
+    return loss, (loss,)
+
+
+def make_train_step(obs_dim: int, act_dim: int, hidden: int):
+    spec = ddpg_spec(obs_dim, act_dim, hidden)
+
+    def step_fn(flat, m, v, obs, act, rew, next_obs, done, hyp):
+        step = hyp[H.H_STEP]
+        do_pi = hyp[H.H_DO_POLICY]
+        critic_m = spec.group_vector({"critic": 1.0})
+        policy_m = spec.group_vector({"actor": do_pi, "scale": do_pi})
+
+        (_, (qf_loss, mean_q)), g_c = jax.value_and_grad(
+            _critic_loss, has_aux=True)(
+                flat, spec, obs, act, rew, next_obs, done, hyp)
+        flat, m, v = adam_update(flat, m, v, g_c, critic_m,
+                                 hyp[H.H_LR_Q], step)
+
+        (_, (a_loss,)), g_a = jax.value_and_grad(
+            _actor_loss, has_aux=True)(flat, spec, obs, hyp)
+        flat, m, v = adam_update(flat, m, v, g_a, policy_m,
+                                 hyp[H.H_LR_POLICY], step)
+
+        # --- activation-scale warm-up (same protocol as SAC) -------------
+        from .kernels.ref import qdq_linear_ref as lin
+        from .model import policy_pre_tanh
+        from .quantize import ema_percentile_update
+        p = spec.unpack(flat)
+        bits = _bits(hyp)
+        in_warmup = step < hyp[H.H_WARMUP]
+        h1 = lin(obs, p["actor.fc1.w"], p["actor.fc1.b"], p["actor.s_in"],
+                 p["actor.s_h1"], bits.b_in, bits.b_core, bits.b_core,
+                 signed_in=True, relu=True, signed_out=False, on=bits.on)
+        h2 = lin(h1, p["actor.fc2.w"], p["actor.fc2.b"], p["actor.s_h1"],
+                 p["actor.s_h2"], bits.b_core, bits.b_core, bits.b_core,
+                 signed_in=False, relu=True, signed_out=False, on=bits.on)
+        pre = policy_pre_tanh(p, obs, bits, use_pallas=False)
+        for name, x in (("actor.s_in", obs), ("actor.s_h1", h1),
+                        ("actor.s_h2", h2), ("actor.s_out", pre)):
+            ema = ema_percentile_update(p[name], x, decay=hyp[H.H_EMA_DECAY])
+            flat = spec.set_scalar(flat, name,
+                                   jnp.where(in_warmup, ema, p[name]))
+
+        # --- target soft updates (critic and actor) ----------------------
+        flat = spec.copy_segments(flat, "q1.", "tgt_q1.", hyp[H.H_TAU])
+        flat = spec.copy_segments(flat, "actor.", "tgt_actor.", hyp[H.H_TAU])
+
+        p = spec.unpack(flat)
+        metrics = jnp.zeros((H.METRIC_LEN,), jnp.float32)
+        for idx, val in ((H.M_QF1_LOSS, qf_loss), (H.M_QF2_LOSS, 0.0),
+                         (H.M_ACTOR_LOSS, a_loss), (H.M_ALPHA, 0.0),
+                         (H.M_MEAN_Q, mean_q), (H.M_ENTROPY, 0.0),
+                         (H.M_S_IN, p["actor.s_in"]),
+                         (H.M_S_H1, p["actor.s_h1"]),
+                         (H.M_S_H2, p["actor.s_h2"]),
+                         (H.M_S_OUT, p["actor.s_out"])):
+            metrics = metrics.at[idx].set(val)
+        return flat, m, v, metrics
+
+    return spec, step_fn
+
+
+def make_fwd_fn(obs_dim: int, act_dim: int, hidden: int, *,
+                use_pallas: bool = True):
+    """Deterministic forward (shared with SAC's deployment path shape-wise,
+    but over the DDPG param layout)."""
+    spec = ddpg_spec(obs_dim, act_dim, hidden)
+
+    def fwd_fn(flat, obs, hyp):
+        p = spec.unpack(flat)
+        return policy_deterministic(p, obs, _bits(hyp),
+                                    use_pallas=use_pallas)
+
+    return spec, fwd_fn

@@ -1,0 +1,122 @@
+"""Golden parity vectors: pin the rust quantization mirror to L2's math.
+
+Two files under ``artifacts/golden/``:
+
+  qdq_cases.json     scalar QDQ lattice projections (eq. 1) across bitwidths,
+                     signednesses and scales — rust `quant::qdq` must match
+                     bit-for-bit (both sides round half-to-even).
+  policy_cases.json  full quantized-policy forwards (actor tensors by name,
+                     observation batch, expected actions from the jnp ref
+                     path) across bit configs — rust fake-quant + the integer
+                     engine must reproduce the actions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import qdq_linear_ref
+from .model import Bits, policy_pre_tanh
+from .quantize import qdq, quantize
+
+BIT_CONFIGS = [(8, 8, 8), (4, 3, 8), (6, 2, 8), (3, 2, 4), (2, 2, 2),
+               (8, 4, 8)]
+
+
+def _qdq_cases(rng, n=256):
+    cases = []
+    for _ in range(n):
+        bits = int(rng.integers(2, 9))
+        signed = bool(rng.integers(0, 2))
+        scale = float(np.float32(rng.uniform(0.05, 8.0)))
+        x = float(np.float32(rng.normal() * rng.uniform(0.1, 10.0)))
+        if not signed:
+            x = abs(x)
+        q = float(quantize(jnp.float32(x), scale, float(bits), signed))
+        y = float(qdq(jnp.float32(x), scale, float(bits), signed))
+        cases.append({"x": x, "scale": scale, "bits": bits,
+                      "signed": signed, "q": q, "y": y})
+    return cases
+
+
+def _policy_cases(rng):
+    obs_dim, act_dim, h = 3, 1, 16
+    cases = []
+    for (b_in, b_core, b_out) in BIT_CONFIGS:
+        p = {
+            "actor.fc1.w": rng.normal(size=(h, obs_dim)).astype(np.float32) * 0.5,
+            "actor.fc1.b": rng.normal(size=(h,)).astype(np.float32) * 0.1,
+            "actor.fc2.w": rng.normal(size=(h, h)).astype(np.float32) * 0.3,
+            "actor.fc2.b": rng.normal(size=(h,)).astype(np.float32) * 0.1,
+            "actor.mean.w": rng.normal(size=(act_dim, h)).astype(np.float32) * 0.3,
+            "actor.mean.b": rng.normal(size=(act_dim,)).astype(np.float32) * 0.1,
+            "actor.s_in": np.float32(rng.uniform(1.0, 4.0)),
+            "actor.s_h1": np.float32(rng.uniform(0.5, 3.0)),
+            "actor.s_h2": np.float32(rng.uniform(0.5, 3.0)),
+            "actor.s_out": np.float32(rng.uniform(0.5, 3.0)),
+        }
+        obs = rng.normal(size=(8, obs_dim)).astype(np.float32) * 1.5
+        jp = {k: jnp.asarray(v) for k, v in p.items()}
+        bits = Bits(float(b_in), float(b_core), float(b_out))
+        pre = policy_pre_tanh(jp, jnp.asarray(obs), bits, use_pallas=False)
+        act = jnp.tanh(pre)
+        cases.append({
+            "bits": [b_in, b_core, b_out],
+            "obs_dim": obs_dim, "act_dim": act_dim, "hidden": h,
+            "params": {k: np.asarray(v).flatten().tolist()
+                       for k, v in p.items()},
+            "obs": obs.flatten().tolist(),
+            "pre_tanh": np.asarray(pre).flatten().tolist(),
+            "action": np.asarray(act).flatten().tolist(),
+        })
+    return cases
+
+
+def _layer_cases(rng, n=24):
+    """Single qdq_linear layers with odd shapes, for the rust layer mirror."""
+    cases = []
+    for _ in range(n):
+        b_in = int(rng.integers(2, 9))
+        b_core = int(rng.integers(2, 9))
+        din = int(rng.integers(1, 40))
+        dout = int(rng.integers(1, 40))
+        bsz = int(rng.integers(1, 9))
+        signed_in = bool(rng.integers(0, 2))
+        relu = bool(rng.integers(0, 2))
+        signed_out = not relu
+        x = rng.normal(size=(bsz, din)).astype(np.float32)
+        if not signed_in:
+            x = np.abs(x)
+        w = rng.normal(size=(dout, din)).astype(np.float32)
+        b = rng.normal(size=(dout,)).astype(np.float32) * 0.2
+        s_x = float(np.float32(rng.uniform(0.5, 4.0)))
+        s_a = float(np.float32(rng.uniform(0.5, 4.0)))
+        y = qdq_linear_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                           s_x, s_a, float(b_in), float(b_core),
+                           float(b_core), signed_in=signed_in, relu=relu,
+                           signed_out=signed_out)
+        cases.append({
+            "bits_x": b_in, "bits_w": b_core, "bits_a": b_core,
+            "bsz": bsz, "din": din, "dout": dout,
+            "signed_in": signed_in, "relu": relu, "signed_out": signed_out,
+            "s_x": s_x, "s_a": s_a,
+            "x": x.flatten().tolist(), "w": w.flatten().tolist(),
+            "b": b.flatten().tolist(),
+            "y": np.asarray(y).flatten().tolist(),
+        })
+    return cases
+
+
+def write_golden(outdir: str, seed: int = 1234):
+    rng = np.random.default_rng(seed)
+    with open(os.path.join(outdir, "qdq_cases.json"), "w") as f:
+        json.dump(_qdq_cases(rng), f)
+    with open(os.path.join(outdir, "layer_cases.json"), "w") as f:
+        json.dump(_layer_cases(rng), f)
+    with open(os.path.join(outdir, "policy_cases.json"), "w") as f:
+        json.dump(_policy_cases(rng), f)
+    print("  golden/{qdq,layer,policy}_cases.json")

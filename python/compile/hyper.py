@@ -1,0 +1,53 @@
+"""Hyper-parameter / metric vector layouts shared by every artifact.
+
+Graph inputs that vary per call ride in one f32 ``hyper[16]`` vector, and
+train steps return one f32 ``metrics[16]`` vector; the index maps below are
+exported to ``artifacts/manifest.json`` and mirrored by
+``rust/src/runtime/manifest.rs``.
+"""
+
+HYPER_LEN = 16
+H_STEP = 0            # global step t (Adam bias correction, warm-up gate)
+H_LR_POLICY = 1
+H_LR_Q = 2
+H_LR_ALPHA = 3
+H_GAMMA = 4
+H_TAU = 5
+H_DO_POLICY = 6       # 1.0 when the actor/alpha update fires this step
+H_B_IN = 7            # input-state bitwidth
+H_B_CORE = 8          # weights + internal activations bitwidth
+H_B_OUT = 9           # pre-tanh output bitwidth
+H_TARGET_ENT = 10     # SAC target entropy (-act_dim)
+H_WARMUP = 11         # activation-scale warm-up steps (paper: 300)
+H_EMA_DECAY = 12      # warm-up EMA decay (0.9)
+H_NOISE_STD = 13      # (reserved for in-graph exploration noise std)
+H_QUANT_ON = 14       # 1.0 = QAT policy, 0.0 = FP32 baseline (32-bit lattice)
+H_RESERVED = 15
+
+METRIC_LEN = 16
+M_QF1_LOSS = 0
+M_QF2_LOSS = 1
+M_ACTOR_LOSS = 2
+M_ALPHA = 3
+M_MEAN_Q = 4
+M_ENTROPY = 5
+M_S_IN = 6
+M_S_H1 = 7
+M_S_H2 = 8
+M_S_OUT = 9
+
+HYPER_NAMES = {
+    "step": H_STEP, "lr_policy": H_LR_POLICY, "lr_q": H_LR_Q,
+    "lr_alpha": H_LR_ALPHA, "gamma": H_GAMMA, "tau": H_TAU,
+    "do_policy": H_DO_POLICY, "b_in": H_B_IN, "b_core": H_B_CORE,
+    "b_out": H_B_OUT, "target_entropy": H_TARGET_ENT, "warmup": H_WARMUP,
+    "ema_decay": H_EMA_DECAY, "noise_std": H_NOISE_STD,
+    "quant_on": H_QUANT_ON,
+}
+
+METRIC_NAMES = {
+    "qf1_loss": M_QF1_LOSS, "qf2_loss": M_QF2_LOSS,
+    "actor_loss": M_ACTOR_LOSS, "alpha": M_ALPHA, "mean_q": M_MEAN_Q,
+    "entropy": M_ENTROPY, "s_in": M_S_IN, "s_h1": M_S_H1, "s_h2": M_S_H2,
+    "s_out": M_S_OUT,
+}

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: fused quantize-dequantize linear layer.
+
+``qdq_linear`` fuses, in one VMEM-resident kernel: input fake-quant, weight
+fake-quant (per-tensor absmax scale), the matmul (MXU), bias add, optional
+ReLU, and output fake-quant with a learned scale. This is the compute
+hot-spot of the paper: every policy layer, in training and deployment,
+is this operation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (batch-tile,
+out-tile) blocks; each step keeps an ``(BLK_B, IN) x (BLK_OUT, IN)`` pair in
+VMEM — the analogue of FINN keeping all weights on-chip — and the QDQ
+lattice projection is element-wise VPU work fused around the MXU dot, so
+fake-quantized activations never round-trip to HBM. The FINN PE/SIMD folding
+of the paper corresponds to the (BLK_OUT, BLK_IN) tile choice here.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is pinned against ``ref.qdq_linear_ref`` and
+real-TPU efficiency is estimated analytically (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. 128 matches the MXU systolic array edge; the batch tile is
+# small because the paper's policies are evaluated at batch 1..16.
+BLK_B = 8
+BLK_OUT = 128
+
+# meta vector layout (single (8,) f32 operand so scalars ride in one block)
+META_S_X = 0
+META_S_W = 1
+META_S_B = 2
+META_S_A = 3
+META_BITS_X = 4
+META_BITS_W = 5
+META_BITS_A = 6
+META_QUANT_ON = 7    # 1.0 = quantize, 0.0 = exact FP32 bypass
+META_LEN = 8
+
+
+def _qrange(bits, signed: bool):
+    if signed:
+        qs = jnp.power(2.0, bits - 1.0)
+        return -qs, qs - 1.0, qs
+    qmax = jnp.power(2.0, bits) - 1.0
+    return jnp.zeros_like(qmax), qmax, qmax
+
+
+def _qdq(x, scale, bits, signed: bool, on):
+    qmin, qmax, qs = _qrange(bits, signed)
+    scale = jnp.maximum(scale, 1e-12)
+    y = scale / qs * jnp.clip(jnp.round(x / scale * qs), qmin, qmax)
+    return jnp.where(on > 0.5, y, x)
+
+
+def _kernel(x_ref, w_ref, b_ref, meta_ref, o_ref,
+            *, signed_in: bool, relu: bool, signed_out: bool):
+    meta = meta_ref[...]
+    s_x, s_w, s_b, s_a = (meta[META_S_X], meta[META_S_W],
+                          meta[META_S_B], meta[META_S_A])
+    bits_x, bits_w, bits_a = (meta[META_BITS_X], meta[META_BITS_W],
+                              meta[META_BITS_A])
+    on = meta[META_QUANT_ON]
+
+    # VPU: lattice projection of the input tile and weight tile.
+    xq = _qdq(x_ref[...], s_x, bits_x, signed=signed_in, on=on)
+    wq = _qdq(w_ref[...], s_w, bits_w, signed=True, on=on)
+    bq = _qdq(b_ref[...], s_b, 8.0, signed=True, on=on)
+
+    # MXU: (BLK_B, IN) @ (IN, BLK_OUT); accumulate in f32.
+    acc = jax.lax.dot_general(
+        xq, wq,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + bq[None, :]
+
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = _qdq(acc, s_a, bits_a, signed=signed_out, on=on)
+
+
+def qdq_linear(x, w, b, s_x, s_a, bits_x, bits_w, bits_a,
+               *, signed_in: bool, relu: bool, signed_out: bool,
+               on=None, interpret: bool = True):
+    """Fused QDQ linear layer (Pallas).
+
+    Same contract as :func:`ref.qdq_linear_ref`; see module docstring for
+    the TPU mapping. ``x``: [B, in], ``w``: [out, in], ``b``: [out].
+    """
+    bsz, in_dim = x.shape
+    out_dim, in_w = w.shape
+    assert in_w == in_dim, (in_w, in_dim)
+
+    # Per-tensor scales that need a *global* reduction are computed outside
+    # the tiled kernel (they are scalars; the reduction is negligible).
+    s_w = jax.lax.stop_gradient(jnp.max(jnp.abs(w)) + 1e-12)
+    s_b = jax.lax.stop_gradient(jnp.max(jnp.abs(b)) + 1e-12)
+    meta = jnp.stack([
+        jnp.asarray(s_x, jnp.float32).reshape(()),
+        s_w.astype(jnp.float32),
+        s_b.astype(jnp.float32),
+        jnp.asarray(s_a, jnp.float32).reshape(()),
+        jnp.asarray(bits_x, jnp.float32).reshape(()),
+        jnp.asarray(bits_w, jnp.float32).reshape(()),
+        jnp.asarray(bits_a, jnp.float32).reshape(()),
+        jnp.asarray(1.0 if on is None else on, jnp.float32).reshape(()),
+    ])
+
+    blk_b = min(BLK_B, bsz)
+    blk_out = min(BLK_OUT, out_dim)
+    grid = (pl.cdiv(bsz, blk_b), pl.cdiv(out_dim, blk_out))
+
+    kernel = functools.partial(
+        _kernel, signed_in=signed_in, relu=relu, signed_out=signed_out)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_b, in_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_out, in_dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((blk_out,), lambda i, j: (j,)),
+            pl.BlockSpec((META_LEN,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk_b, blk_out), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, out_dim), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32),
+      b.astype(jnp.float32), meta)
+
+
+def vmem_footprint_bytes(bsz: int, in_dim: int, out_dim: int) -> int:
+    """Estimated VMEM bytes per grid step (f32): x-tile + w-tile + out-tile.
+
+    Used by DESIGN.md §Perf to check the kernel stays well inside the
+    ~16 MiB VMEM budget for the paper's largest layer (256 x 376).
+    """
+    blk_b = min(BLK_B, bsz)
+    blk_out = min(BLK_OUT, out_dim)
+    return 4 * (blk_b * in_dim + blk_out * in_dim + blk_out + blk_b * blk_out)

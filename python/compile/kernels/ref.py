@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the L1 ``qdq_linear`` Pallas kernel.
+
+This is the ground truth the kernel is pinned against by pytest/hypothesis,
+and also the implementation used inside the *training* graphs (Pallas calls
+are not differentiable; the kernel runs on the deployment forward artifact).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quantize import qdq, qdq_weight, qdq_bias
+
+
+def qdq_linear_ref(x, w, b, s_x, s_a, bits_x, bits_w, bits_a,
+                   *, signed_in: bool, relu: bool, signed_out: bool,
+                   on=None):
+    """Reference QDQ linear layer.
+
+    y = QDQ_a( act( QDQ_in(x) @ QDQ_w(w)^T + QDQ_b(b) ) )
+
+    x: [B, in], w: [out, in], b: [out]
+    s_x / s_a: input / output activation scales (scalars)
+    act = ReLU if ``relu`` else identity
+    the output lattice is unsigned when ``relu`` (post-ReLU values are >= 0),
+    signed otherwise (``signed_out`` marks the final pre-tanh layer).
+    ``on``: traced quantization gate (0.0 bypasses every quantizer exactly,
+    giving the FP32 baseline network).
+    """
+    xq = qdq(x, s_x, bits_x, signed=signed_in, on=on)
+    wq = qdq_weight(w, bits_w, on=on)
+    bq = qdq_bias(b, on=on)
+    y = xq @ wq.T + bq
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return qdq(y, s_a, bits_a, signed=signed_out, on=on)

@@ -1,0 +1,105 @@
+"""L2: quantized policy / FP32 critic forward passes (JAX).
+
+The quantized policy follows the paper's §2.2 exactly:
+
+  QDQ(input, signed, b_in) -> fc1 -> ReLU -> QDQ(unsigned, b_core)
+                           -> fc2 -> ReLU -> QDQ(unsigned, b_core)
+                           -> mean head    -> QDQ(signed, b_out) -> tanh
+
+Weights are fake-quantized at b_core with per-tensor absmax scales; biases at
+8 bit. Activation scales (s_in, s_h1, s_h2, s_out) are learned parameters.
+
+Two implementations of the QDQ linear layer exist:
+  * ``ref.qdq_linear_ref`` (pure jnp) — used inside *training* graphs, where
+    autodiff must flow (Pallas calls are not differentiable);
+  * ``kernels.qlinear.qdq_linear`` (Pallas, L1) — used in the deployment
+    forward artifact (`policy_fwd_*`). pytest pins kernel == ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import qdq, qdq_weight, qdq_bias
+from .kernels.ref import qdq_linear_ref
+from .kernels.qlinear import qdq_linear as qdq_linear_pallas
+
+LOG_STD_MIN = -5.0
+LOG_STD_MAX = 2.0
+
+
+class Bits:
+    """Traced bitwidth bundle — runtime f32 scalars.
+
+    ``on`` is the quantization gate: 1.0 = QAT network, 0.0 = every QDQ is
+    bypassed exactly, which *is* the FP32 baseline network.
+    """
+
+    def __init__(self, b_in, b_core, b_out, on=1.0):
+        self.b_in = b_in
+        self.b_core = b_core
+        self.b_out = b_out
+        self.on = on
+
+
+def policy_pre_tanh(p: dict, obs, bits: Bits, *, use_pallas: bool,
+                    prefix: str = "actor"):
+    """Quantized policy trunk; returns the QDQ'd pre-tanh mean [B, act]."""
+    lin = qdq_linear_pallas if use_pallas else qdq_linear_ref
+    h1 = lin(obs, p[f"{prefix}.fc1.w"], p[f"{prefix}.fc1.b"],
+             p[f"{prefix}.s_in"], p[f"{prefix}.s_h1"],
+             bits.b_in, bits.b_core, bits.b_core,
+             signed_in=True, relu=True, signed_out=False, on=bits.on)
+    h2 = lin(h1, p[f"{prefix}.fc2.w"], p[f"{prefix}.fc2.b"],
+             p[f"{prefix}.s_h1"], p[f"{prefix}.s_h2"],
+             bits.b_core, bits.b_core, bits.b_core,
+             signed_in=False, relu=True, signed_out=False, on=bits.on)
+    # Final layer: inputs are the unsigned h2 lattice; output requantized on
+    # the signed b_out lattice before tanh.
+    return lin(h2, p[f"{prefix}.mean.w"], p[f"{prefix}.mean.b"],
+               p[f"{prefix}.s_h2"], p[f"{prefix}.s_out"],
+               bits.b_core, bits.b_core, bits.b_out,
+               signed_in=False, relu=False, signed_out=True, on=bits.on)
+
+
+def policy_deterministic(p: dict, obs, bits: Bits, *, use_pallas: bool,
+                         prefix: str = "actor"):
+    """Deployment-time action: tanh of the quantized pre-tanh mean."""
+    return jnp.tanh(policy_pre_tanh(p, obs, bits, use_pallas=use_pallas,
+                                    prefix=prefix))
+
+
+def sigma_log_std(p: dict, obs):
+    """SAC sigma branch (FP32, train-only): CleanRL's tanh-rescaled log-std."""
+    h = jnp.maximum(obs @ p["sigma.fc1.w"].T + p["sigma.fc1.b"], 0.0)
+    raw = h @ p["sigma.head.w"].T + p["sigma.head.b"]
+    t = jnp.tanh(raw)
+    return LOG_STD_MIN + 0.5 * (LOG_STD_MAX - LOG_STD_MIN) * (t + 1.0)
+
+
+def sac_sample(p: dict, obs, eps, bits: Bits):
+    """Reparameterized SAC action + log-prob (tanh-squashed Gaussian).
+
+    eps: standard-normal noise [B, act] supplied by the rust coordinator
+    (graphs are RNG-free so artifacts stay deterministic functions).
+    Returns (action, logp[B], mean_action).
+    """
+    mean = policy_pre_tanh(p, obs, bits, use_pallas=False)
+    log_std = sigma_log_std(p, obs)
+    std = jnp.exp(log_std)
+    pre = mean + std * eps
+    act = jnp.tanh(pre)
+    # diag-Gaussian log-prob + tanh correction (CleanRL form)
+    logp = (-0.5 * ((pre - mean) / std) ** 2 - log_std
+            - 0.5 * jnp.log(2.0 * jnp.pi))
+    logp = logp - jnp.log(jnp.maximum(1.0 - act ** 2, 0.0) + 1e-6)
+    return act, jnp.sum(logp, axis=-1), jnp.tanh(mean)
+
+
+def critic(p: dict, obs, act, prefix: str):
+    """FP32 critic Q(s,a) -> [B] (discarded after training)."""
+    x = jnp.concatenate([obs, act], axis=-1)
+    h = jnp.maximum(x @ p[f"{prefix}.fc1.w"].T + p[f"{prefix}.fc1.b"], 0.0)
+    h = jnp.maximum(h @ p[f"{prefix}.fc2.w"].T + p[f"{prefix}.fc2.b"], 0.0)
+    return (h @ p[f"{prefix}.out.w"].T + p[f"{prefix}.out.b"])[:, 0]

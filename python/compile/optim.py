@@ -1,0 +1,45 @@
+"""Adam over the flat parameter vector, with per-group masking.
+
+CleanRL keeps three separate Adam optimizers (critic, actor, temperature).
+Here the whole optimizer state is two flat f32 vectors (m, v) the length of
+the parameter vector, shared by the three updates but with *disjoint
+supports*: each update passes a {0,1} mask vector that (a) zeroes gradients
+outside its group and (b) freezes the moments outside its group, which makes
+the shared-vector scheme exactly equivalent to separate optimizers. Masks
+are built from broadcast segments (``ParamSpec.group_vector``) so no
+parameter-sized literal lands in the lowered HLO.
+
+One intended deviation from CleanRL (documented in DESIGN.md): Adam bias
+correction uses the global step for all three groups, while CleanRL's actor
+optimizer counts only its own (every-2nd-step) updates. This affects only
+the first ~100 updates.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def adam_update(flat, m, v, grads, mask, lr, step):
+    """One masked Adam step.
+
+    mask: {0,1} per element — selects the parameter group (and carries any
+          do-this-update-at-all gate); moments and parameters outside the
+          mask are returned untouched.
+    lr:   scalar learning rate for the masked group.
+    step: 1-based update counter (traced f32) for bias correction.
+    """
+    g = mask * grads
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    v_new = BETA2 * v + (1.0 - BETA2) * g * g
+    m = mask * m_new + (1.0 - mask) * m
+    v = mask * v_new + (1.0 - mask) * v
+    t = jnp.maximum(step, 1.0)
+    mhat = m / (1.0 - jnp.power(BETA1, t))
+    vhat = v / (1.0 - jnp.power(BETA2, t))
+    flat = flat - (mask * lr) * mhat / (jnp.sqrt(vhat) + EPS)
+    return flat, m, v

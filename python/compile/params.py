@@ -1,0 +1,207 @@
+"""Flat parameter-vector packing.
+
+Every model's parameters, plus Adam moments, live in ONE flat f32 vector on
+the rust side; the layout (name, shape, offset) is recorded here and exported
+to ``artifacts/manifest.json``. This keeps the rust <-> PJRT interface to a
+handful of tensors per call and makes checkpointing a single `Vec<f32>`.
+
+Groups (drive the per-element learning rate / mask vectors, which are built
+from broadcast segments — never as large literal constants in the HLO):
+
+  actor    policy weights+biases            (policy lr, scaled by do_policy)
+  scale    learned activation scales        (policy lr + EMA warm-up override)
+  sigma    SAC sigma-branch (FP32, train-only)
+  alpha    SAC log_alpha                    (alpha lr)
+  critic   critic weights+biases            (q lr)
+  target   target-network copies            (lr 0; soft-updated analytically)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ParamEntry:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    group: str  # actor | scale | sigma | alpha | critic | target
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+class ParamSpec:
+    """Ordered layout of a flat parameter vector."""
+
+    def __init__(self):
+        self.entries: List[ParamEntry] = []
+        self.total = 0
+
+    def add(self, name: str, shape, group: str) -> ParamEntry:
+        shape = tuple(int(d) for d in shape)
+        e = ParamEntry(name, shape, self.total, group)
+        self.entries.append(e)
+        self.total += e.size
+        return e
+
+    def find(self, name: str) -> ParamEntry:
+        for e in self.entries:
+            if e.name == name:
+                return e
+        raise KeyError(name)
+
+    # ---- graph-side helpers -------------------------------------------------
+
+    def unpack(self, flat):
+        """flat f32 [total] -> dict name -> array(shape)."""
+        out = {}
+        for e in self.entries:
+            seg = jax.lax.dynamic_slice(flat, (e.offset,), (e.size,))
+            out[e.name] = seg.reshape(e.shape) if e.shape else seg[0]
+        return out
+
+    def group_vector(self, values: dict, default=0.0):
+        """Build a [total] vector that is constant per group, out of broadcast
+        segments (cheap in HLO; no large literals)."""
+        segs = []
+        for e in self.entries:
+            v = values.get(e.group, default)
+            segs.append(jnp.full((e.size,), jnp.float32(v))
+                        if not isinstance(v, jnp.ndarray)
+                        else jnp.broadcast_to(v, (e.size,)))
+        return jnp.concatenate(segs)
+
+    def set_scalar(self, flat, name: str, value):
+        """Overwrite a scalar entry inside the flat vector."""
+        e = self.find(name)
+        assert e.size == 1, name
+        return jax.lax.dynamic_update_slice(
+            flat, jnp.reshape(value, (1,)).astype(jnp.float32), (e.offset,))
+
+    def copy_segments(self, flat, src_prefix: str, dst_prefix: str, tau):
+        """target <- tau * online + (1-tau) * target for every pair of
+        entries `{src_prefix}X` / `{dst_prefix}X` (the soft update)."""
+        for e in self.entries:
+            if not e.name.startswith(src_prefix):
+                continue
+            suffix = e.name[len(src_prefix):]
+            d = self.find(dst_prefix + suffix)
+            src = jax.lax.dynamic_slice(flat, (e.offset,), (e.size,))
+            dst = jax.lax.dynamic_slice(flat, (d.offset,), (d.size,))
+            mixed = tau * src + (1.0 - tau) * dst
+            flat = jax.lax.dynamic_update_slice(flat, mixed, (d.offset,))
+        return flat
+
+    # ---- host-side helpers --------------------------------------------------
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        """Host-side init mirroring CleanRL: linear layers use PyTorch's
+        default kaiming-uniform fan_in bound; scales start at 1.0."""
+        rng = np.random.default_rng(seed)
+        flat = np.zeros((self.total,), np.float32)
+        for e in self.entries:
+            if e.group == "scale":
+                flat[e.offset:e.offset + e.size] = 1.0
+            elif e.name.endswith(".w"):
+                fan_in = e.shape[1]
+                bound = 1.0 / math.sqrt(fan_in)
+                flat[e.offset:e.offset + e.size] = rng.uniform(
+                    -bound, bound, e.size).astype(np.float32)
+            elif e.name.endswith(".b"):
+                # torch pairs bias bound with the layer's fan_in; stored next
+                # to its weight, so look it up.
+                w = self.find(e.name[:-2] + ".w")
+                bound = 1.0 / math.sqrt(w.shape[1])
+                flat[e.offset:e.offset + e.size] = rng.uniform(
+                    -bound, bound, e.size).astype(np.float32)
+            # alpha (log_alpha) starts at 0.0
+        # targets start as exact copies of their online sources
+        for e in self.entries:
+            if e.name.startswith("tgt_"):
+                src = self.find(e.name[len("tgt_"):])
+                flat[e.offset:e.offset + e.size] = \
+                    flat[src.offset:src.offset + src.size]
+        return flat
+
+    def to_json(self) -> list:
+        return [
+            {"name": e.name, "shape": list(e.shape), "offset": e.offset,
+             "size": e.size, "group": e.group}
+            for e in self.entries
+        ]
+
+
+def actor_spec(spec: ParamSpec, obs_dim: int, act_dim: int, hidden: int):
+    """Quantized policy: obs -> h -> h -> act (+ 4 learned activation scales)."""
+    spec.add("actor.fc1.w", (hidden, obs_dim), "actor")
+    spec.add("actor.fc1.b", (hidden,), "actor")
+    spec.add("actor.fc2.w", (hidden, hidden), "actor")
+    spec.add("actor.fc2.b", (hidden,), "actor")
+    spec.add("actor.mean.w", (act_dim, hidden), "actor")
+    spec.add("actor.mean.b", (act_dim,), "actor")
+    spec.add("actor.s_in", (), "scale")
+    spec.add("actor.s_h1", (), "scale")
+    spec.add("actor.s_h2", (), "scale")
+    spec.add("actor.s_out", (), "scale")
+
+
+def sigma_spec(spec: ParamSpec, obs_dim: int, act_dim: int):
+    """SAC sigma branch: FP32, one hidden layer of 64 (paper §2.2)."""
+    spec.add("sigma.fc1.w", (64, obs_dim), "sigma")
+    spec.add("sigma.fc1.b", (64,), "sigma")
+    spec.add("sigma.head.w", (act_dim, 64), "sigma")
+    spec.add("sigma.head.b", (act_dim,), "sigma")
+
+
+def critic_spec(spec: ParamSpec, obs_dim: int, act_dim: int, hidden: int,
+                prefix: str, group: str):
+    """FP32 critic: (obs ++ act) -> hidden -> hidden -> 1."""
+    d = obs_dim + act_dim
+    spec.add(f"{prefix}.fc1.w", (hidden, d), group)
+    spec.add(f"{prefix}.fc1.b", (hidden,), group)
+    spec.add(f"{prefix}.fc2.w", (hidden, hidden), group)
+    spec.add(f"{prefix}.fc2.b", (hidden,), group)
+    spec.add(f"{prefix}.out.w", (1, hidden), group)
+    spec.add(f"{prefix}.out.b", (1,), group)
+
+
+def sac_spec(obs_dim: int, act_dim: int, hidden: int,
+             critic_hidden: int = 256) -> ParamSpec:
+    spec = ParamSpec()
+    actor_spec(spec, obs_dim, act_dim, hidden)
+    sigma_spec(spec, obs_dim, act_dim)
+    spec.add("log_alpha", (), "alpha")
+    critic_spec(spec, obs_dim, act_dim, critic_hidden, "q1", "critic")
+    critic_spec(spec, obs_dim, act_dim, critic_hidden, "q2", "critic")
+    critic_spec(spec, obs_dim, act_dim, critic_hidden, "tgt_q1", "target")
+    critic_spec(spec, obs_dim, act_dim, critic_hidden, "tgt_q2", "target")
+    return spec
+
+
+def ddpg_spec(obs_dim: int, act_dim: int, hidden: int,
+              critic_hidden: int = 256) -> ParamSpec:
+    spec = ParamSpec()
+    actor_spec(spec, obs_dim, act_dim, hidden)
+    critic_spec(spec, obs_dim, act_dim, critic_hidden, "q1", "critic")
+    critic_spec(spec, obs_dim, act_dim, critic_hidden, "tgt_q1", "target")
+    # DDPG bootstraps through a *target actor* as well.
+    spec.add("tgt_actor.fc1.w", (hidden, obs_dim), "target")
+    spec.add("tgt_actor.fc1.b", (hidden,), "target")
+    spec.add("tgt_actor.fc2.w", (hidden, hidden), "target")
+    spec.add("tgt_actor.fc2.b", (hidden,), "target")
+    spec.add("tgt_actor.mean.w", (act_dim, hidden), "target")
+    spec.add("tgt_actor.mean.b", (act_dim,), "target")
+    spec.add("tgt_actor.s_in", (), "target")
+    spec.add("tgt_actor.s_h1", (), "target")
+    spec.add("tgt_actor.s_h2", (), "target")
+    spec.add("tgt_actor.s_out", (), "target")
+    return spec

@@ -1,0 +1,86 @@
+"""Quantize/De-Quantize (QDQ) primitives with straight-through estimators.
+
+Implements eq. (1) of the paper exactly:
+
+    QDQ_b(x; s) = (s / q_s) * Q_b(x; s)
+    Q_b(x; s)   = clip(round(x / s * q_s), q_min, q_max)
+
+with signed lattices ``[-2^(b-1), 2^(b-1)-1]`` for inputs / weights / outputs
+and unsigned lattices ``[0, 2^b - 1]`` for post-ReLU activations, and
+``q_s = max(|q_min|, |q_max|)``.
+
+Bitwidths are *traced* f32 scalars so a single lowered HLO artifact serves
+every bitwidth in the paper's sweeps (Fig. 1, Fig. 5). Rounding is
+round-half-to-even (XLA's ``round_nearest_even``); the rust mirror in
+``rust/src/quant`` uses ``f32::round_ties_even`` to match bit-for-bit.
+
+Gradients: ``round`` uses an identity STE; the scale ``s`` receives the
+LSQ-style gradient that falls out of keeping every other operation
+differentiable (prefactor + clip). Weight scales are not learned (absmax).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_ste(x):
+    """Round to nearest even with identity straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def qrange(bits, signed: bool):
+    """(q_min, q_max, q_s) for a traced f32 bitwidth.
+
+    signed:   [-2^(b-1), 2^(b-1)-1],  q_s = 2^(b-1)
+    unsigned: [0, 2^b - 1],           q_s = 2^b - 1
+    """
+    bits = jnp.asarray(bits, jnp.float32)
+    if signed:
+        qs = jnp.power(2.0, bits - 1.0)
+        return -qs, qs - 1.0, qs
+    qmax = jnp.power(2.0, bits) - 1.0
+    return jnp.zeros_like(qmax), qmax, qmax
+
+
+def quantize(x, scale, bits, signed: bool):
+    """Q_b(x; s): project to the integer lattice (returned as f32 ints)."""
+    qmin, qmax, qs = qrange(bits, signed)
+    scale = jnp.maximum(scale, 1e-12)
+    return jnp.clip(round_ste(x / scale * qs), qmin, qmax)
+
+
+def qdq(x, scale, bits, signed: bool, on=None):
+    """QDQ_b(x; s): fake-quantize (project + de-quantize), STE gradients.
+
+    ``on`` (optional traced scalar): 1.0 applies the quantizer, 0.0 bypasses
+    it exactly — this is how one artifact serves both the QAT policy and the
+    true FP32 baseline (hyper[H_QUANT_ON]).
+    """
+    _, _, qs = qrange(bits, signed)
+    scale = jnp.maximum(scale, 1e-12)
+    y = scale / qs * quantize(x, scale, bits, signed)
+    if on is None:
+        return y
+    return jnp.where(jnp.asarray(on, jnp.float32) > 0.5, y, x)
+
+
+def qdq_weight(w, bits, on=None):
+    """Weight fake-quant: per-tensor absmax scale (not learned), signed."""
+    s = jax.lax.stop_gradient(jnp.max(jnp.abs(w)) + 1e-12)
+    return qdq(w, s, bits, signed=True, on=on)
+
+
+def qdq_bias(b, bits=8.0, on=None):
+    """Bias fake-quant at fixed 8 bit against its own absmax (paper protocol:
+    non-swept components stay at 8 bit)."""
+    s = jax.lax.stop_gradient(jnp.max(jnp.abs(b)) + 1e-12)
+    return qdq(b, s, bits, signed=True, on=on)
+
+
+def ema_percentile_update(scale, x, decay=0.9, q=0.999):
+    """Warm-up update for activation scales (paper §2.2): exponential moving
+    high percentile of |x| over the incoming batch."""
+    stat = jnp.quantile(jax.lax.stop_gradient(jnp.abs(x)), q)
+    return jnp.maximum(decay * scale + (1.0 - decay) * stat, 1e-6)

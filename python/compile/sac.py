@@ -1,0 +1,179 @@
+"""SAC with quantization-aware training — the L2 train-step graph.
+
+One call = one CleanRL SAC iteration at batch 256: critic update (always),
+actor + entropy-temperature update (gated by hyper[H_DO_POLICY]), target
+soft update (every step, CleanRL target_network_frequency = 1), plus the
+paper's activation-scale EMA-percentile warm-up for the first
+hyper[H_WARMUP] steps.
+
+The whole step is a pure function
+
+    (params, m, v, obs, act, rew, next_obs, done, eps_next, eps_cur, hyper)
+      -> (params', m', v', metrics)
+
+lowered once per (env-shape, hidden-width) to HLO text and driven from rust;
+the graphs are RNG-free (the coordinator supplies the Gaussian noise).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import hyper as H
+from .model import Bits, critic, policy_pre_tanh, sac_sample
+from .optim import adam_update
+from .params import ParamSpec, sac_spec
+from .quantize import ema_percentile_update
+
+
+def _bits(hyp):
+    return Bits(hyp[H.H_B_IN], hyp[H.H_B_CORE], hyp[H.H_B_OUT],
+                on=hyp[H.H_QUANT_ON])
+
+
+def _critic_loss(flat, spec, obs, act, rew, next_obs, done, eps_next, hyp):
+    p = spec.unpack(flat)
+    bits = _bits(hyp)
+    alpha = jnp.exp(p["log_alpha"])
+    next_a, next_logp, _ = sac_sample(p, next_obs, eps_next, bits)
+    tq1 = critic(p, next_obs, next_a, "tgt_q1")
+    tq2 = critic(p, next_obs, next_a, "tgt_q2")
+    min_tq = jnp.minimum(tq1, tq2) - alpha * next_logp
+    y = jax.lax.stop_gradient(
+        rew + hyp[H.H_GAMMA] * (1.0 - done) * min_tq)
+    q1 = critic(p, obs, act, "q1")
+    q2 = critic(p, obs, act, "q2")
+    l1 = jnp.mean((q1 - y) ** 2)
+    l2 = jnp.mean((q2 - y) ** 2)
+    return l1 + l2, (l1, l2, jnp.mean(q1))
+
+
+def _actor_loss(flat, spec, obs, eps_cur, hyp):
+    p = spec.unpack(flat)
+    bits = _bits(hyp)
+    a, logp, _ = sac_sample(p, obs, eps_cur, bits)
+    alpha = jax.lax.stop_gradient(jnp.exp(p["log_alpha"]))
+    q1 = critic(p, obs, a, "q1")
+    q2 = critic(p, obs, a, "q2")
+    # gradient flows through the action into the critics, but the critic
+    # parameters themselves only move under the critic loss: the actor
+    # update's group mask zeroes this loss's critic-parameter gradients.
+    loss = jnp.mean(alpha * logp - jnp.minimum(q1, q2))
+    return loss, (loss, -jnp.mean(logp))
+
+
+def _alpha_loss(flat, spec, obs, eps_cur, hyp):
+    p = spec.unpack(flat)
+    bits = _bits(hyp)
+    _, logp, _ = sac_sample(p, obs, eps_cur, bits)
+    ent_term = jax.lax.stop_gradient(logp + hyp[H.H_TARGET_ENT])
+    return jnp.mean(-p["log_alpha"] * ent_term)
+
+
+def make_train_step(obs_dim: int, act_dim: int, hidden: int):
+    """Returns (spec, step_fn). step_fn signature documented in module doc."""
+    spec = sac_spec(obs_dim, act_dim, hidden)
+
+    def masks(hyp):
+        """{0,1} group-support masks; the policy/alpha masks carry the
+        every-2nd-step gate so their moments freeze on off steps (exactly
+        what a separate, not-stepped optimizer would do)."""
+        do_pi = hyp[H.H_DO_POLICY]
+        critic_m = spec.group_vector({"critic": 1.0})
+        policy_m = spec.group_vector(
+            {"actor": do_pi, "scale": do_pi, "sigma": do_pi})
+        alpha_m = spec.group_vector({"alpha": do_pi})
+        return critic_m, policy_m, alpha_m
+
+    def step_fn(flat, m, v, obs, act, rew, next_obs, done,
+                eps_next, eps_cur, hyp):
+        step = hyp[H.H_STEP]
+        critic_m, policy_m, alpha_m = masks(hyp)
+
+        # --- critic update (every call) ---------------------------------
+        (_, (l1, l2, mean_q)), g_c = jax.value_and_grad(
+            _critic_loss, has_aux=True)(
+                flat, spec, obs, act, rew, next_obs, done, eps_next, hyp)
+        flat, m, v = adam_update(flat, m, v, g_c, critic_m,
+                                 hyp[H.H_LR_Q], step)
+
+        # --- actor update (mask carries the every-2nd-step gate) ----------
+        (_, (a_loss, entropy)), g_a = jax.value_and_grad(
+            _actor_loss, has_aux=True)(flat, spec, obs, eps_cur, hyp)
+        flat, m, v = adam_update(flat, m, v, g_a, policy_m,
+                                 hyp[H.H_LR_POLICY], step)
+
+        # --- temperature update (gated) ----------------------------------
+        g_al = jax.grad(_alpha_loss)(flat, spec, obs, eps_cur, hyp)
+        flat, m, v = adam_update(flat, m, v, g_al, alpha_m,
+                                 hyp[H.H_LR_ALPHA], step)
+
+        # --- activation-scale warm-up (paper §2.2): EMA of the 99.9th
+        #     percentile of |pre-quantizer activations| for the first
+        #     H_WARMUP steps, overriding the gradient update -------------
+        p = spec.unpack(flat)
+        bits = _bits(hyp)
+        in_warmup = step < hyp[H.H_WARMUP]
+        decay = hyp[H.H_EMA_DECAY]
+
+        # recompute the layer inputs once to observe their statistics
+        from .kernels.ref import qdq_linear_ref as lin
+        h1 = lin(obs, p["actor.fc1.w"], p["actor.fc1.b"], p["actor.s_in"],
+                 p["actor.s_h1"], bits.b_in, bits.b_core, bits.b_core,
+                 signed_in=True, relu=True, signed_out=False, on=bits.on)
+        h2 = lin(h1, p["actor.fc2.w"], p["actor.fc2.b"], p["actor.s_h1"],
+                 p["actor.s_h2"], bits.b_core, bits.b_core, bits.b_core,
+                 signed_in=False, relu=True, signed_out=False, on=bits.on)
+        pre = policy_pre_tanh(p, obs, bits, use_pallas=False)
+
+        for name, x in (("actor.s_in", obs), ("actor.s_h1", h1),
+                        ("actor.s_h2", h2), ("actor.s_out", pre)):
+            cur = p[name]
+            ema = ema_percentile_update(cur, x, decay=decay)
+            new = jnp.where(in_warmup, ema, cur)
+            flat = spec.set_scalar(flat, name, new)
+
+        # --- target soft update (CleanRL frequency 1) ---------------------
+        flat = spec.copy_segments(flat, "q1.", "tgt_q1.", hyp[H.H_TAU])
+        flat = spec.copy_segments(flat, "q2.", "tgt_q2.", hyp[H.H_TAU])
+
+        p = spec.unpack(flat)
+        metrics = jnp.zeros((H.METRIC_LEN,), jnp.float32)
+        for idx, val in ((H.M_QF1_LOSS, l1), (H.M_QF2_LOSS, l2),
+                         (H.M_ACTOR_LOSS, a_loss),
+                         (H.M_ALPHA, jnp.exp(p["log_alpha"])),
+                         (H.M_MEAN_Q, mean_q), (H.M_ENTROPY, entropy),
+                         (H.M_S_IN, p["actor.s_in"]),
+                         (H.M_S_H1, p["actor.s_h1"]),
+                         (H.M_S_H2, p["actor.s_h2"]),
+                         (H.M_S_OUT, p["actor.s_out"])):
+            metrics = metrics.at[idx].set(val)
+        return flat, m, v, metrics
+
+    return spec, step_fn
+
+
+def make_act_fn(obs_dim: int, act_dim: int, hidden: int):
+    """Exploration action: a = tanh(mu + sigma * eps) at batch 1."""
+    spec = sac_spec(obs_dim, act_dim, hidden)
+
+    def act_fn(flat, obs, eps, hyp):
+        p = spec.unpack(flat)
+        a, _, _ = sac_sample(p, obs, eps, _bits(hyp))
+        return a
+
+    return spec, act_fn
+
+
+def make_fwd_fn(obs_dim: int, act_dim: int, hidden: int, *,
+                use_pallas: bool = True):
+    """Deterministic deployment forward (uses the L1 Pallas kernel)."""
+    spec = sac_spec(obs_dim, act_dim, hidden)
+
+    def fwd_fn(flat, obs, hyp):
+        p = spec.unpack(flat)
+        pre = policy_pre_tanh(p, obs, _bits(hyp), use_pallas=use_pallas)
+        return jnp.tanh(pre)
+
+    return spec, fwd_fn

@@ -1,0 +1,89 @@
+"""L1 correctness: the Pallas qdq_linear kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the deployment forward artifact:
+hypothesis sweeps shapes, bitwidths, signedness and the quantization gate.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qlinear import qdq_linear, vmem_footprint_bytes
+from compile.kernels.ref import qdq_linear_ref
+
+
+def _run_pair(bsz, din, dout, b_x, b_w, b_a, signed_in, relu, seed, on=1.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(bsz, din)).astype(np.float32)
+    if not signed_in:
+        x = np.abs(x)
+    w = rng.normal(size=(dout, din)).astype(np.float32)
+    b = rng.normal(size=(dout,)).astype(np.float32)
+    s_x = float(rng.uniform(0.3, 4.0))
+    s_a = float(rng.uniform(0.3, 4.0))
+    kw = dict(signed_in=signed_in, relu=relu, signed_out=not relu, on=on)
+    got = qdq_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                     s_x, s_a, float(b_x), float(b_w), float(b_a), **kw)
+    want = qdq_linear_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                          s_x, s_a, float(b_x), float(b_w), float(b_a), **kw)
+    return np.asarray(got), np.asarray(want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bsz=st.integers(1, 17),
+    din=st.integers(1, 70),
+    dout=st.integers(1, 150),
+    b_x=st.integers(2, 8),
+    b_w=st.integers(2, 8),
+    b_a=st.integers(2, 8),
+    signed_in=st.booleans(),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(bsz, din, dout, b_x, b_w, b_a,
+                            signed_in, relu, seed):
+    got, want = _run_pair(bsz, din, dout, b_x, b_w, b_a,
+                          signed_in, relu, seed)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 3, 16), (16, 45, 256), (8, 376, 256),
+                                   (5, 256, 32)])
+def test_kernel_paper_shapes(shape):
+    bsz, din, dout = shape
+    got, want = _run_pair(bsz, din, dout, 4, 3, 3, True, True, 7)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_quant_gate_off_is_fp32():
+    """on=0.0 must reproduce the plain FP32 linear layer exactly."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 11)).astype(np.float32)
+    w = rng.normal(size=(9, 11)).astype(np.float32)
+    b = rng.normal(size=(9,)).astype(np.float32)
+    got = np.asarray(qdq_linear(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 1.0, 1.0,
+        2.0, 2.0, 2.0, signed_in=True, relu=True, signed_out=False, on=0.0))
+    want = np.maximum(x @ w.T + b, 0.0)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_output_on_lattice():
+    """Quantized outputs must lie on the s_a/q_s integer lattice."""
+    got, _ = _run_pair(6, 13, 21, 8, 3, 3, True, True, 11)
+    s_a = None  # recompute: lattice check via unique spacing
+    # all outputs should be integer multiples of a common step
+    vals = np.unique(np.round(got, 6))
+    if len(vals) > 2:
+        steps = np.diff(vals)
+        step = steps.min()
+        assert step > 0
+        np.testing.assert_allclose(steps / step,
+                                   np.round(steps / step), atol=1e-3)
+
+
+def test_vmem_footprint_paper_layer():
+    """The largest paper layer (256x376 @ b16) stays far below ~16 MiB VMEM."""
+    assert vmem_footprint_bytes(16, 376, 256) < 2 * 2 ** 20

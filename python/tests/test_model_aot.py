@@ -1,0 +1,101 @@
+"""Model shapes, FP32-gate equivalence, pallas-vs-ref forward parity, and
+the AOT lowering contract (HLO text parses, manifest fields present)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import hyper as H, sac
+from compile.aot import ENVS, to_hlo_text, _spec_f32
+from compile.model import Bits, policy_deterministic, sigma_log_std
+from compile.params import sac_spec
+
+
+def _params(spec, seed=0):
+    flat = jnp.asarray(spec.init_flat(seed))
+    return spec.unpack(flat), flat
+
+
+@pytest.mark.parametrize("env", list(ENVS))
+def test_policy_shapes(env):
+    obs_dim, act_dim = ENVS[env]
+    spec = sac_spec(obs_dim, act_dim, 32)
+    p, _ = _params(spec)
+    obs = jnp.zeros((5, obs_dim))
+    a = policy_deterministic(p, obs, Bits(8.0, 8.0, 8.0), use_pallas=False)
+    assert a.shape == (5, act_dim)
+    assert np.all(np.abs(np.asarray(a)) <= 1.0)
+
+
+def test_pallas_and_ref_forward_agree():
+    spec = sac_spec(11, 3, 64)
+    p, _ = _params(spec, seed=4)
+    obs = jnp.asarray(np.random.default_rng(0).normal(size=(16, 11)),
+                      jnp.float32)
+    bits = Bits(4.0, 3.0, 8.0)
+    a_ref = policy_deterministic(p, obs, bits, use_pallas=False)
+    a_pal = policy_deterministic(p, obs, bits, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a_ref), np.asarray(a_pal),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_quant_gate_off_equals_manual_fp32():
+    spec = sac_spec(3, 1, 16)
+    p, _ = _params(spec, seed=2)
+    obs = jnp.asarray(np.random.default_rng(5).normal(size=(4, 3)),
+                      jnp.float32)
+    a = policy_deterministic(p, obs, Bits(2.0, 2.0, 2.0, on=0.0),
+                             use_pallas=False)
+    h1 = jnp.maximum(obs @ p["actor.fc1.w"].T + p["actor.fc1.b"], 0)
+    h2 = jnp.maximum(h1 @ p["actor.fc2.w"].T + p["actor.fc2.b"], 0)
+    want = jnp.tanh(h2 @ p["actor.mean.w"].T + p["actor.mean.b"])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_sigma_log_std_bounds():
+    spec = sac_spec(3, 1, 16)
+    p, _ = _params(spec)
+    obs = jnp.asarray(np.random.default_rng(0).normal(size=(64, 3)) * 10,
+                      jnp.float32)
+    ls = np.asarray(sigma_log_std(p, obs))
+    assert ls.min() >= -5.0 - 1e-5 and ls.max() <= 2.0 + 1e-5
+
+
+def test_hlo_text_lowering_contract():
+    """The interchange format: HLO text with an ENTRY computation and a
+    tuple return (rust unwraps with to_tuple)."""
+    _, fwd = sac.make_fwd_fn(3, 1, 16)
+    spec = sac_spec(3, 1, 16)
+    lowered = jax.jit(fwd).lower(_spec_f32(spec.total), _spec_f32(1, 3),
+                                 _spec_f32(H.HYPER_LEN))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32" in text
+    # must NOT be a serialized proto (the 0.5.1 incompatibility)
+    assert text.lstrip().startswith("HloModule")
+
+
+def test_bitwidths_are_runtime_inputs():
+    """One artifact must serve every bitwidth: outputs differ when only the
+    hyper bit entries change."""
+    _, fwd = sac.make_fwd_fn(3, 1, 16)
+    spec = sac_spec(3, 1, 16)
+    rng = np.random.default_rng(1)
+    flat = jnp.asarray(rng.normal(size=(spec.total,)).astype(np.float32))
+    # keep the learned scales positive so the lattice is sane
+    for name in ("actor.s_in", "actor.s_h1", "actor.s_h2", "actor.s_out"):
+        e = spec.find(name)
+        flat = flat.at[e.offset].set(1.5)
+    obs = jnp.asarray(rng.normal(size=(1, 3)), jnp.float32)
+    f = jax.jit(fwd)
+
+    def hyp(b):
+        h = np.zeros(H.HYPER_LEN, np.float32)
+        h[H.H_B_IN], h[H.H_B_CORE], h[H.H_B_OUT] = b
+        h[H.H_QUANT_ON] = 1.0
+        return jnp.asarray(h)
+
+    a2 = np.asarray(f(flat, obs, hyp((2, 2, 2))))
+    a8 = np.asarray(f(flat, obs, hyp((8, 8, 8))))
+    assert not np.array_equal(a2, a8)

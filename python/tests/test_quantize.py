@@ -1,0 +1,96 @@
+"""Eq. (1) QDQ properties + STE gradient behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import qdq, qrange, quantize, ema_percentile_update
+
+
+@settings(max_examples=100, deadline=None)
+@given(bits=st.integers(2, 8), signed=st.booleans(),
+       scale=st.floats(0.05, 16.0),
+       x=st.floats(-100.0, 100.0))
+def test_q_respects_bounds(bits, signed, scale, x):
+    if not signed:
+        x = abs(x)
+    q = float(quantize(jnp.float32(x), scale, float(bits), signed))
+    qmin, qmax, _ = qrange(float(bits), signed)
+    assert float(qmin) <= q <= float(qmax)
+    assert q == round(q)  # lattice point
+
+
+@settings(max_examples=100, deadline=None)
+@given(bits=st.integers(2, 8), signed=st.booleans(),
+       scale=st.floats(0.05, 16.0), x=st.floats(-50.0, 50.0))
+def test_qdq_idempotent(bits, signed, scale, x):
+    """QDQ is a projection: applying it twice equals once."""
+    if not signed:
+        x = abs(x)
+    y1 = qdq(jnp.float32(x), scale, float(bits), signed)
+    y2 = qdq(y1, scale, float(bits), signed)
+    np.testing.assert_allclose(float(y1), float(y2), atol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.integers(2, 8), scale=st.floats(0.1, 8.0),
+       a=st.floats(-20.0, 20.0), b=st.floats(-20.0, 20.0))
+def test_qdq_monotone(bits, scale, a, b):
+    lo, hi = min(a, b), max(a, b)
+    ylo = float(qdq(jnp.float32(lo), scale, float(bits), True))
+    yhi = float(qdq(jnp.float32(hi), scale, float(bits), True))
+    assert ylo <= yhi + 1e-7
+
+
+def test_qdq_error_bounded_inside_range():
+    """|QDQ(x) - x| <= step/2 for x inside the clipping range.
+
+    The signed lattice is asymmetric: it covers [-scale, scale*(qs-1)/qs],
+    so the sweep must stop at the *positive* clip edge qmax/qs.
+    """
+    bits, scale = 4.0, 2.0
+    _, qmax, qs = qrange(bits, True)
+    step = scale / float(qs)
+    hi = scale * float(qmax) / float(qs)
+    xs = np.linspace(-scale * 0.99, hi * 0.99, 201).astype(np.float32)
+    ys = np.asarray(qdq(jnp.asarray(xs), scale, bits, True))
+    assert np.max(np.abs(ys - xs)) <= step / 2 + 1e-6
+
+
+def test_signed_unsigned_lattices():
+    # signed b=3: [-4, 3], qs=4 ; unsigned b=3: [0, 7], qs=7 (paper §2.2)
+    qmin, qmax, qs = (float(v) for v in qrange(3.0, True))
+    assert (qmin, qmax, qs) == (-4.0, 3.0, 4.0)
+    qmin, qmax, qs = (float(v) for v in qrange(3.0, False))
+    assert (qmin, qmax, qs) == (0.0, 7.0, 7.0)
+
+
+def test_ste_identity_gradient_wrt_x():
+    g = jax.grad(lambda x: qdq(x, 1.0, 4.0, True))(jnp.float32(0.3))
+    np.testing.assert_allclose(float(g), 1.0, atol=1e-6)
+
+
+def test_ste_zero_gradient_outside_clip():
+    g = jax.grad(lambda x: qdq(x, 1.0, 4.0, True))(jnp.float32(5.0))
+    np.testing.assert_allclose(float(g), 0.0, atol=1e-6)
+
+
+def test_scale_receives_gradient():
+    """LSQ-style: the learned scale must get a non-zero gradient for
+    values that clip (that is what lets scales grow during training)."""
+    g = jax.grad(lambda s: qdq(jnp.float32(5.0), s, 4.0, True))(
+        jnp.float32(1.0))
+    assert abs(float(g)) > 1e-6
+
+
+def test_quant_gate_bypass():
+    x = jnp.float32(0.1234567)
+    y = qdq(x, 1.0, 2.0, True, on=0.0)
+    np.testing.assert_allclose(float(y), float(x), atol=0)
+
+
+def test_ema_percentile_update_moves_toward_stat():
+    x = jnp.full((1000,), 10.0)
+    s = float(ema_percentile_update(jnp.float32(1.0), x, decay=0.9))
+    np.testing.assert_allclose(s, 0.9 * 1.0 + 0.1 * 10.0, rtol=1e-5)

@@ -1,0 +1,183 @@
+"""L2 train-step semantics: SAC / DDPG graphs behave like CleanRL."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ddpg, hyper as H, sac
+
+
+def make_hyper(step=1, do_policy=1.0, quant_on=1.0, warmup=300,
+               b=(4, 3, 8)):
+    hyp = np.zeros(H.HYPER_LEN, np.float32)
+    hyp[H.H_STEP] = step
+    hyp[H.H_LR_POLICY] = 3e-4
+    hyp[H.H_LR_Q] = 1e-3
+    hyp[H.H_LR_ALPHA] = 1e-3
+    hyp[H.H_GAMMA] = 0.99
+    hyp[H.H_TAU] = 0.005
+    hyp[H.H_DO_POLICY] = do_policy
+    hyp[H.H_B_IN], hyp[H.H_B_CORE], hyp[H.H_B_OUT] = b
+    hyp[H.H_TARGET_ENT] = -1.0
+    hyp[H.H_WARMUP] = warmup
+    hyp[H.H_EMA_DECAY] = 0.9
+    hyp[H.H_QUANT_ON] = quant_on
+    return hyp
+
+
+def make_batch(obs_dim=3, act_dim=1, B=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.normal(size=(B, obs_dim)), jnp.float32),
+        jnp.asarray(rng.uniform(-1, 1, size=(B, act_dim)), jnp.float32),
+        jnp.asarray(rng.normal(size=(B,)), jnp.float32),
+        jnp.asarray(rng.normal(size=(B, obs_dim)), jnp.float32),
+        jnp.zeros((B,), jnp.float32),
+        jnp.asarray(rng.normal(size=(B, act_dim)), jnp.float32),
+        jnp.asarray(rng.normal(size=(B, act_dim)), jnp.float32),
+    )
+
+
+@pytest.fixture(scope="module")
+def sac_setup():
+    spec, step = sac.make_train_step(3, 1, 16)
+    return spec, jax.jit(step)
+
+
+@pytest.fixture(scope="module")
+def ddpg_setup():
+    spec, step = ddpg.make_train_step(3, 1, 16)
+    return spec, jax.jit(step)
+
+
+def _state(spec, seed=0):
+    flat = jnp.asarray(spec.init_flat(seed))
+    return flat, jnp.zeros(spec.total), jnp.zeros(spec.total)
+
+
+def test_sac_critic_loss_decreases(sac_setup):
+    spec, step = sac_setup
+    flat, m, v = _state(spec)
+    obs, act, rew, nobs, done, e1, e2 = make_batch()
+    losses = []
+    for t in range(1, 21):
+        hyp = make_hyper(step=t, do_policy=float(t % 2 == 0))
+        flat, m, v, met = step(flat, m, v, obs, act, rew, nobs, done,
+                               e1, e2, jnp.asarray(hyp))
+        losses.append(float(met[H.M_QF1_LOSS]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_sac_do_policy_zero_freezes_actor(sac_setup):
+    spec, step = sac_setup
+    flat, m, v = _state(spec)
+    obs, act, rew, nobs, done, e1, e2 = make_batch()
+    hyp = make_hyper(step=500, do_policy=0.0, warmup=0)  # past warm-up
+    flat2, _, _, _ = step(flat, m, v, obs, act, rew, nobs, done, e1, e2,
+                          jnp.asarray(hyp))
+    a = spec.find("actor.fc1.w")
+    q = spec.find("q1.fc1.w")
+    f0, f2 = np.asarray(flat), np.asarray(flat2)
+    np.testing.assert_array_equal(f0[a.offset:a.offset + a.size],
+                                  f2[a.offset:a.offset + a.size])
+    assert np.any(f0[q.offset:q.offset + q.size]
+                  != f2[q.offset:q.offset + q.size])
+
+
+def test_sac_targets_only_soft_update(sac_setup):
+    """Targets move exactly by tau*(online-target), never by gradients."""
+    spec, step = sac_setup
+    flat, m, v = _state(spec)
+    obs, act, rew, nobs, done, e1, e2 = make_batch()
+    hyp = make_hyper(step=500, warmup=0)
+    flat2, _, _, _ = step(flat, m, v, obs, act, rew, nobs, done, e1, e2,
+                          jnp.asarray(hyp))
+    f0, f2 = np.asarray(flat), np.asarray(flat2)
+    tau = 0.005
+    for name in ("tgt_q1.fc1.w", "tgt_q2.out.b"):
+        t = spec.find(name)
+        o = spec.find(name[len("tgt_"):])
+        # online params moved this step, so compare against the *new* online
+        expected = tau * f2[o.offset:o.offset + o.size] + \
+            (1 - tau) * f0[t.offset:t.offset + t.size]
+        np.testing.assert_allclose(f2[t.offset:t.offset + t.size],
+                                   expected, atol=1e-6)
+
+
+def test_sac_warmup_overrides_scale_gradients(sac_setup):
+    spec, step = sac_setup
+    flat, m, v = _state(spec)
+    obs, act, rew, nobs, done, e1, e2 = make_batch()
+    # scale all obs by 10: warm-up EMA must pull s_in up toward the stats
+    big_obs = obs * 10.0
+    hyp = make_hyper(step=1, warmup=300)
+    _, _, _, met = step(flat, m, v, big_obs, act, rew, big_obs, done,
+                        e1, e2, jnp.asarray(hyp))
+    assert float(met[H.M_S_IN]) > 1.0
+
+
+def test_sac_fp32_gate_keeps_scales_irrelevant(sac_setup):
+    """With quant_on=0 the bitwidths must not matter at all."""
+    spec, step = sac_setup
+    obs, act, rew, nobs, done, e1, e2 = make_batch()
+    outs = []
+    for b in ((2, 2, 2), (8, 8, 8)):
+        flat, m, v = _state(spec)
+        hyp = make_hyper(step=500, quant_on=0.0, warmup=0, b=b)
+        f2, _, _, _ = step(flat, m, v, obs, act, rew, nobs, done, e1, e2,
+                           jnp.asarray(hyp))
+        outs.append(np.asarray(f2))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_sac_act_matches_sample(sac_setup):
+    spec, _ = sac_setup
+    _, act_fn = sac.make_act_fn(3, 1, 16)
+    flat = jnp.asarray(spec.init_flat(0))
+    obs = jnp.asarray(np.random.default_rng(1).normal(size=(1, 3)),
+                      jnp.float32)
+    eps = jnp.zeros((1, 1), jnp.float32)
+    hyp = jnp.asarray(make_hyper())
+    a = np.asarray(jax.jit(act_fn)(flat, obs, eps, hyp))
+    assert a.shape == (1, 1) and np.all(np.abs(a) <= 1.0)
+
+
+def test_ddpg_critic_loss_decreases(ddpg_setup):
+    spec, step = ddpg_setup
+    flat, m, v = _state(spec)
+    obs, act, rew, nobs, done, _, _ = make_batch()
+    losses = []
+    for t in range(1, 16):
+        hyp = make_hyper(step=t, do_policy=float(t % 2 == 0))
+        flat, m, v, met = step(flat, m, v, obs, act, rew, nobs, done,
+                               jnp.asarray(hyp))
+        losses.append(float(met[H.M_QF1_LOSS]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_ddpg_target_actor_tracks_actor(ddpg_setup):
+    spec, step = ddpg_setup
+    flat, m, v = _state(spec)
+    obs, act, rew, nobs, done, _, _ = make_batch()
+    hyp = make_hyper(step=500, warmup=0)
+    flat2, _, _, _ = step(flat, m, v, obs, act, rew, nobs, done,
+                          jnp.asarray(hyp))
+    f0, f2 = np.asarray(flat), np.asarray(flat2)
+    t = spec.find("tgt_actor.fc1.w")
+    o = spec.find("actor.fc1.w")
+    expected = 0.005 * f2[o.offset:o.offset + o.size] + \
+        0.995 * f0[t.offset:t.offset + t.size]
+    np.testing.assert_allclose(f2[t.offset:t.offset + t.size], expected,
+                               atol=1e-6)
+
+
+def test_param_specs_are_dense_and_disjoint():
+    for spec in (sac.sac_spec(11, 3, 64), ddpg.ddpg_spec(11, 3, 64)):
+        cursor = 0
+        for e in spec.entries:
+            assert e.offset == cursor
+            cursor += e.size
+        assert cursor == spec.total

@@ -1,0 +1,50 @@
+//! Shared helpers for the paper-table bench targets (harness = false).
+//!
+//! Every bench prints the corresponding paper table/figure structure under
+//! a *reduced protocol* (this is a single-core box; the paper's full
+//! protocol is 1M steps x 10 seeds). Scale up via:
+//!   QCONTROL_STEPS=25000 QCONTROL_SEEDS=3 cargo bench --bench fig1_bitwidth
+
+use qcontrol::coordinator::sweep::SweepProtocol;
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+
+/// Default training budget for bench runs (env var overridable).
+pub const BENCH_STEPS: usize = 250;
+
+pub fn runtime() -> Runtime {
+    Runtime::load(default_artifact_dir())
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+pub fn proto() -> SweepProtocol {
+    let mut p = SweepProtocol::from_env();
+    if std::env::var("QCONTROL_STEPS").is_err() {
+        p.steps = BENCH_STEPS;
+        p.learning_starts = (p.steps / 4).max(100);
+    }
+    p.eval_episodes = 5;
+    p
+}
+
+pub fn banner(what: &str, paper: &str, proto_desc: &str) {
+    println!();
+    println!("=== {what} ===");
+    println!("paper reference: {paper}");
+    println!("protocol: {proto_desc} (reduced; see DESIGN.md §Substitutions)");
+    println!();
+}
+
+/// Benches that train use pendulum by default (episodes are 200 steps, so
+/// tiny budgets still produce learning signal on this 1-core box); pass
+/// QCONTROL_ENV to regenerate the table for any paper env.
+pub fn bench_env() -> String {
+    std::env::var("QCONTROL_ENV").unwrap_or_else(|_| "pendulum".into())
+}
+
+/// Hidden width used by training benches (pendulum-sized by default).
+pub fn bench_hidden() -> usize {
+    std::env::var("QCONTROL_HIDDEN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16)
+}

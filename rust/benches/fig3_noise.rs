@@ -1,0 +1,58 @@
+//! Fig. 3: robustness to observation noise — reward vs σ for the selected
+//! quantized policy and the FP32 baseline (noise on the normalized state).
+
+#[path = "common.rs"]
+mod common;
+
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
+use qcontrol::util::bench::Table;
+
+fn main() {
+    let rt = common::runtime();
+    let proto = common::proto();
+    let env = common::bench_env();
+    let hidden = common::bench_hidden();
+    let bits = BitCfg::new(4, 2, 8);
+    let sigmas = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5];
+
+    common::banner("Fig. 3 — reward vs input noise σ (QAT vs FP32)",
+                   "Figure 3", &proto.describe());
+
+    let mut trained = Vec::new();
+    for (label, quant_on) in [("QAT", true), ("FP32", false)] {
+        let mut cfg = TrainConfig::new(Algo::Sac, &env);
+        cfg.hidden = hidden;
+        cfg.bits = bits;
+        cfg.quant_on = quant_on;
+        cfg.total_steps = proto.steps;
+        cfg.learning_starts = proto.learning_starts;
+        cfg.seed = 11;
+        let res = rl::train(&rt, &cfg).unwrap();
+        trained.push((label, quant_on, res));
+    }
+
+    let mut t = Table::new(&["sigma", "QAT return", "FP32 return"]);
+    for &sigma in &sigmas {
+        let mut cells = vec![format!("{sigma:.1}")];
+        for (_, quant_on, res) in &trained {
+            let (mean, std) = rl::evaluate(&rt, &EvalOpts {
+                algo: Algo::Sac,
+                env: env.clone(),
+                hidden,
+                bits,
+                quant_on: *quant_on,
+                episodes: proto.eval_episodes,
+                noise_std: sigma,
+                seed: 1000 + (sigma * 10.0) as u64,
+                backend: EvalBackend::Pjrt,
+            }, &res.flat, &res.normalizer).unwrap();
+            cells.push(format!("{mean:.1} ± {std:.1}"));
+        }
+        t.row(cells);
+    }
+    t.print();
+    println!("\npaper shape: the quantized policy matches or exceeds FP32 \
+              at higher σ (training-time state discretization filters \
+              small perturbations).");
+}

@@ -1,0 +1,38 @@
+//! Fig. 4 (appendix B): return vs hidden width under the minimal
+//! FP32-matching core precision.
+
+#[path = "common.rs"]
+mod common;
+
+use qcontrol::coordinator::sweep::{fp32_band, matches_fp32, run_config};
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::Algo;
+use qcontrol::util::bench::Table;
+
+fn main() {
+    let rt = common::runtime();
+    let proto = common::proto();
+    let env = common::bench_env();
+    let widths: Vec<usize> = std::env::var("QCONTROL_WIDTHS")
+        .map(|s| s.split(',').map(|t| t.parse().unwrap()).collect())
+        .unwrap_or_else(|_| vec![64, 32, 16]);
+    let b_core = 2;
+
+    common::banner("Fig. 4 — return vs hidden width at minimal b_core",
+                   "Appendix B Figure 4", &proto.describe());
+
+    let fp32 = fp32_band(&rt, Algo::Sac, &env, &proto, true).unwrap();
+    println!("{env} FP32 band: {:.1} ± {:.1}", fp32.mean, fp32.std);
+    let mut t = Table::new(&["h", "return", "in band"]);
+    for &h in &widths {
+        let p = run_config(&rt, Algo::Sac, &env, &proto, h,
+                           BitCfg::new(8, b_core, 8), true,
+                           &format!("h{h}")).unwrap();
+        t.row(vec![h.to_string(), format!("{:.1} ± {:.1}", p.mean, p.std),
+                   if matches_fp32(&p, &fp32) { "yes" } else { "no" }
+                       .into()]);
+    }
+    t.print();
+    println!("\npaper shape: width can shrink substantially before \
+              returns drop out of the FP32 band (env-dependent knee).");
+}

@@ -1,0 +1,48 @@
+//! §3.4 adjunct: per-action latency of the software integer engine (the
+//! FPGA datapath twin) across the paper-selected configs — the L3 hot path
+//! whose optimization is tracked in EXPERIMENTS.md §Perf.
+
+#[path = "common.rs"]
+mod common;
+
+use qcontrol::coordinator::select::paper_table1;
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::rl;
+use qcontrol::util::bench;
+use qcontrol::util::rng::Rng;
+
+fn main() {
+    let rt = common::runtime();
+    common::banner("Integer-engine per-action latency (software twin)",
+                   "§3.4 latency discussion", "no training needed");
+
+    for env in ["pendulum", "hopper", "walker2d", "ant", "halfcheetah",
+                "humanoid"] {
+        let (hidden, bits) = paper_table1(env)
+            .unwrap_or((16, BitCfg::new(4, 2, 8)));
+        let dims = rt.manifest.envs[env];
+        let spec = &rt.manifest.specs[&format!("sac_{env}_h{hidden}")];
+        let mut rng = Rng::new(3);
+        let flat = rl::init_flat(spec, &mut rng);
+        let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim,
+                                          hidden, dims.act_dim).unwrap();
+        let mut engine =
+            IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+        let mut obs = vec![0.0f32; dims.obs_dim];
+        rng.fill_normal(&mut obs);
+        let mut out = vec![0.0f32; dims.act_dim];
+        let macs = engine.macs();
+        let r = bench::run(
+            &format!("{env} h={hidden} core={}b ({} MACs)", bits.b_core,
+                     macs),
+            1000, 0.5,
+            || {
+                engine.infer(&obs, &mut out);
+                std::hint::black_box(&out);
+            });
+        println!("    -> {:.0} M MAC/s",
+                 macs as f64 / (r.p50_ns / 1e9) / 1e6);
+    }
+}

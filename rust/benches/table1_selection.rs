@@ -1,0 +1,38 @@
+//! Table 1: staged model selection (b_core → h → b_in) under the
+//! FP32-parity criterion.
+
+#[path = "common.rs"]
+mod common;
+
+use qcontrol::coordinator::select::{select_model, SelectProtocol};
+use qcontrol::util::bench::Table;
+
+fn main() {
+    let rt = common::runtime();
+    let mut proto = SelectProtocol::from_env();
+    proto.sweep = common::proto();
+    proto.sweep.hidden = common::bench_hidden();
+    // reduced stage grids for the bench box; env vars widen them
+    proto.core_bits = vec![8, 3, 2];
+    proto.widths = vec![64, 16];
+    proto.input_bits = vec![8, 4, 2];
+    let env = common::bench_env();
+
+    common::banner("Table 1 — staged selection (h, b_core, b_in)",
+                   "Table 1", &proto.sweep.describe());
+
+    let out = select_model(&rt, &env, &proto).unwrap();
+    println!("FP32 band: {:.1} ± {:.1}", out.fp32.mean, out.fp32.std);
+    println!("audit trail:");
+    for (stage, label, mean, std, ok) in &out.trail {
+        println!("  [{stage:>5}] {label:<10} {mean:>9.1} ± {std:<8.1} {}",
+                 if *ok { "match" } else { "below band" });
+    }
+    let mut t = Table::new(&["Environment", "h", "b_core", "b_in"]);
+    t.row(vec![out.env.clone(), out.hidden.to_string(),
+               out.bits.b_core.to_string(), out.bits.b_in.to_string()]);
+    t.print();
+    println!("\npaper shape: FP32 parity reached with 2-3 core bits; \
+              tolerable h and b_in are environment-dependent (paper \
+              Table 1: hopper h=16 b_core=2 b_in=6, etc.)");
+}

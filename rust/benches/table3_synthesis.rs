@@ -1,0 +1,88 @@
+//! Tables 2+3: device resources, and post-synthesis resources / latency /
+//! power / throughput / energy-per-action for the paper-selected configs
+//! vs the 8-4-8 width-256 reference. No training needed — geometry+bits
+//! determine the hardware numbers.
+
+#[path = "common.rs"]
+mod common;
+
+use qcontrol::coordinator::select::paper_table1;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::rl;
+use qcontrol::synth::{synthesize, XC7A15T};
+use qcontrol::util::bench::Table;
+use qcontrol::util::rng::Rng;
+
+fn main() {
+    let rt = common::runtime();
+    common::banner("Tables 2 + 3 — FPGA synthesis on the XC7A15T model",
+                   "Table 2, Table 3", "geometry-determined (no training)");
+
+    println!("Table 2 — device: {}", XC7A15T.name);
+    println!("  LUTs {}  FFs {}  BRAM36 {}  DSPs {}\n", XC7A15T.luts,
+             XC7A15T.ffs, XC7A15T.bram36, XC7A15T.dsps);
+
+    let envs = ["humanoid", "walker2d", "ant", "halfcheetah", "hopper"];
+    let mut t = Table::new(&["config", "env", "LUT", "FF", "BRAM", "DSP",
+                             "latency", "P [W]", "TP [a/s]", "E.p.A. [J]"]);
+    let mut selected_epa = Vec::new();
+    let mut reference_epa = Vec::new();
+    for (label, pick) in [
+        ("selected", true),
+        ("ref 8-4-8 w256", false),
+    ] {
+        for env in envs {
+            let (hidden, bits) = if pick {
+                paper_table1(env).unwrap()
+            } else {
+                (256, BitCfg::new(8, 4, 8))
+            };
+            let dims = rt.manifest.envs[env];
+            let spec = &rt.manifest.specs[&format!("sac_{env}_h{hidden}")];
+            let mut rng = Rng::new(7);
+            let flat = rl::init_flat(spec, &mut rng);
+            let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim,
+                                              hidden, dims.act_dim)
+                .unwrap();
+            let policy = IntPolicy::from_tensors(&tensors, bits);
+            match synthesize(&policy, &XC7A15T, 1e8) {
+                Ok(r) => {
+                    if pick {
+                        selected_epa.push(r.energy_per_action);
+                    } else {
+                        reference_epa.push(r.energy_per_action);
+                    }
+                    t.row(vec![
+                        label.into(), env.into(),
+                        r.design.luts().to_string(),
+                        r.design.ffs().to_string(),
+                        format!("{:.1}", r.design.bram36()),
+                        r.design.dsps().to_string(),
+                        qcontrol::util::human_time(r.latency_s),
+                        format!("{:.2}", r.power.total_w),
+                        format!("{:.1e}", r.throughput),
+                        format!("{:.1e}", r.energy_per_action),
+                    ]);
+                }
+                Err(_) => t.row(vec![label.into(), env.into(),
+                                     "does not fit".into(), "-".into(),
+                                     "-".into(), "-".into(), "-".into(),
+                                     "-".into(), "-".into(), "-".into()]),
+            }
+        }
+    }
+    t.print();
+    if selected_epa.len() == reference_epa.len() {
+        let wins = selected_epa
+            .iter()
+            .zip(&reference_epa)
+            .filter(|(s, r)| s < r)
+            .count();
+        println!("\nselected beats the 8-4-8 reference on energy/action \
+                  in {wins}/{} envs", selected_epa.len());
+    }
+    println!("paper shape: selected models win latency + energy per action \
+              (order-of-magnitude for ant/humanoid/hopper); an 8-bit \
+              width-256 model does not fit the device at all.");
+}

@@ -1,0 +1,19 @@
+//! The learning-to-hardware coordinator — the paper's pipeline contribution.
+//!
+//! * [`sweep`]  — multi-seed bitwidth/width sweeps over the four
+//!   quantization scopes of Fig. 1 (all / input / output / core), with the
+//!   FP32 baseline band.
+//! * [`select`] — the paper's §3.2 three-step staged model selection:
+//!   smallest FP32-matching b_core → smallest hidden width → smallest b_in.
+//! * [`server`] — the deployment action server: integer-only inference over
+//!   TCP with µs latency accounting.
+//! * [`store`]  — JSON results store, so every bench/experiment appends to
+//!   `results/*.json` reproducibly.
+
+pub mod select;
+pub mod server;
+pub mod store;
+pub mod sweep;
+
+pub use select::{select_model, SelectOutcome, SelectProtocol};
+pub use sweep::{fp32_band, run_config, Scope, SweepPoint, SweepProtocol};

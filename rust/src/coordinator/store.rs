@@ -1,0 +1,79 @@
+//! JSON results store: every experiment/bench appends a record with its
+//! protocol, so EXPERIMENTS.md numbers are regenerable and auditable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::{self, Json};
+
+pub struct Store {
+    dir: PathBuf,
+}
+
+impl Store {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Store> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(Store { dir: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var("QCONTROL_RESULTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("results"))
+    }
+
+    /// Append a record to `<name>.json` (stored as a JSON array).
+    pub fn append(&self, name: &str, record: Json) -> Result<()> {
+        let path = self.dir.join(format!("{name}.json"));
+        let mut arr = if path.exists() {
+            match json::parse(&std::fs::read_to_string(&path)?)? {
+                Json::Arr(v) => v,
+                other => vec![other],
+            }
+        } else {
+            Vec::new()
+        };
+        arr.push(record);
+        std::fs::write(&path, Json::Arr(arr).to_string())?;
+        Ok(())
+    }
+
+    pub fn read(&self, name: &str) -> Result<Vec<Json>> {
+        let path = self.dir.join(format!("{name}.json"));
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        match json::parse(&std::fs::read_to_string(&path)?)? {
+            Json::Arr(v) => Ok(v),
+            other => Ok(vec![other]),
+        }
+    }
+}
+
+/// Timestamp (seconds since epoch) for records.
+pub fn now_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read() {
+        let dir = std::env::temp_dir().join(format!(
+            "qcontrol_store_{}", std::process::id()));
+        let s = Store::open(&dir).unwrap();
+        s.append("t", Json::obj(vec![("a", Json::num(1.0))])).unwrap();
+        s.append("t", Json::obj(vec![("a", Json::num(2.0))])).unwrap();
+        let r = s.read("t").unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[1].get("a").unwrap().as_f64().unwrap(), 2.0);
+        assert!(s.read("missing").unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

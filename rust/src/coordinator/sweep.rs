@@ -1,0 +1,188 @@
+//! Multi-seed sweep machinery for the Fig. 1 / Fig. 4 / Fig. 5 / Fig. 6
+//! experiments.
+
+use anyhow::Result;
+
+use crate::quant::BitCfg;
+use crate::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
+use crate::runtime::Runtime;
+use crate::util::stats;
+
+/// The four quantization scopes of Fig. 1. Non-swept components stay at
+/// 8 bit (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scope {
+    All,
+    Input,
+    Output,
+    Core,
+}
+
+impl Scope {
+    pub const ALL: [Scope; 4] =
+        [Scope::All, Scope::Input, Scope::Output, Scope::Core];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scope::All => "all",
+            Scope::Input => "input",
+            Scope::Output => "output",
+            Scope::Core => "core",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scope> {
+        Ok(match s {
+            "all" => Scope::All,
+            "input" => Scope::Input,
+            "output" => Scope::Output,
+            "core" => Scope::Core,
+            _ => anyhow::bail!("unknown scope `{s}`"),
+        })
+    }
+
+    /// Bit configuration when sweeping this scope at bitwidth `b`.
+    pub fn bits(self, b: u32) -> BitCfg {
+        match self {
+            Scope::All => BitCfg::new(b, b, b),
+            Scope::Input => BitCfg::new(b, 8, 8),
+            Scope::Output => BitCfg::new(8, 8, b),
+            Scope::Core => BitCfg::new(8, b, 8),
+        }
+    }
+}
+
+/// Reduced experimental protocol (the paper's full one is 1M steps x 10
+/// seeds x 1000 rollouts; see DESIGN.md §Substitutions). Every bench
+/// records the protocol it actually ran.
+#[derive(Clone, Debug)]
+pub struct SweepProtocol {
+    pub steps: usize,
+    pub learning_starts: usize,
+    pub seeds: Vec<u64>,
+    pub eval_episodes: usize,
+    pub hidden: usize,
+    pub normalize: bool,
+}
+
+impl SweepProtocol {
+    /// Tiny default sized for the single-core CI box; override via
+    /// QCONTROL_STEPS / QCONTROL_SEEDS env vars or bench flags.
+    pub fn from_env() -> SweepProtocol {
+        let steps = std::env::var("QCONTROL_STEPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1500);
+        let n_seeds: u64 = std::env::var("QCONTROL_SEEDS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1);
+        SweepProtocol {
+            steps,
+            learning_starts: (steps / 5).max(200),
+            seeds: (1..=n_seeds).collect(),
+            eval_episodes: 5,
+            hidden: 256,
+            normalize: true,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!("{} steps, {} seed(s), {} eval episodes, h={}",
+                self.steps, self.seeds.len(), self.eval_episodes,
+                self.hidden)
+    }
+}
+
+/// One point of a sweep: (mean, std) over seeds of final eval returns.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub mean: f64,
+    pub std: f64,
+    pub per_seed: Vec<f64>,
+}
+
+/// Train + evaluate one configuration over the protocol's seeds.
+#[allow(clippy::too_many_arguments)]
+pub fn run_config(rt: &Runtime, algo: Algo, env: &str, proto: &SweepProtocol,
+                  hidden: usize, bits: BitCfg, quant_on: bool,
+                  label: &str) -> Result<SweepPoint> {
+    let mut per_seed = Vec::with_capacity(proto.seeds.len());
+    for &seed in &proto.seeds {
+        let mut cfg = TrainConfig::new(algo, env);
+        cfg.hidden = hidden;
+        cfg.bits = bits;
+        cfg.quant_on = quant_on;
+        cfg.normalize = proto.normalize;
+        cfg.total_steps = proto.steps;
+        cfg.learning_starts = proto.learning_starts;
+        cfg.seed = seed;
+        let res = rl::train(rt, &cfg)?;
+        let (mean, _) = rl::evaluate(rt, &EvalOpts {
+            algo,
+            env: env.to_string(),
+            hidden,
+            bits,
+            quant_on,
+            episodes: proto.eval_episodes,
+            noise_std: 0.0,
+            seed: seed ^ 0xe7a1,
+            backend: EvalBackend::Pjrt,
+        }, &res.flat, &res.normalizer)?;
+        per_seed.push(mean);
+    }
+    Ok(SweepPoint {
+        label: label.to_string(),
+        mean: stats::mean(&per_seed),
+        std: stats::std(&per_seed),
+        per_seed,
+    })
+}
+
+/// Train the FP32 baseline band (quant gate off): returns (mean, std).
+pub fn fp32_band(rt: &Runtime, algo: Algo, env: &str,
+                 proto: &SweepProtocol, normalize: bool)
+                 -> Result<SweepPoint> {
+    let mut p = proto.clone();
+    p.normalize = normalize;
+    run_config(rt, algo, env, &p, proto.hidden, BitCfg::new(8, 8, 8),
+               false, "fp32")
+}
+
+/// The paper's parity criterion: quantized mean within FP32 mean ± 1 std.
+pub fn matches_fp32(point: &SweepPoint, fp32: &SweepPoint) -> bool {
+    point.mean >= fp32.mean - fp32.std
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_bit_configs() {
+        assert_eq!(Scope::All.bits(3), BitCfg::new(3, 3, 3));
+        assert_eq!(Scope::Input.bits(3), BitCfg::new(3, 8, 8));
+        assert_eq!(Scope::Output.bits(3), BitCfg::new(8, 8, 3));
+        assert_eq!(Scope::Core.bits(3), BitCfg::new(8, 3, 8));
+    }
+
+    #[test]
+    fn parity_criterion() {
+        let fp32 = SweepPoint { label: "fp32".into(), mean: 1000.0,
+                                std: 100.0, per_seed: vec![] };
+        let good = SweepPoint { label: "q".into(), mean: 950.0, std: 50.0,
+                                per_seed: vec![] };
+        let bad = SweepPoint { label: "q".into(), mean: 800.0, std: 50.0,
+                               per_seed: vec![] };
+        assert!(matches_fp32(&good, &fp32));
+        assert!(!matches_fp32(&bad, &fp32));
+    }
+
+    #[test]
+    fn protocol_env_default() {
+        let p = SweepProtocol::from_env();
+        assert!(p.steps >= 100);
+        assert!(!p.seeds.is_empty());
+    }
+}

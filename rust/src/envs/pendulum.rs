@@ -1,0 +1,142 @@
+//! Classic torque-limited pendulum swing-up (the e2e quickstart task).
+//!
+//! Matches the gym Pendulum-v1 contract: obs = [cos θ, sin θ, θ̇],
+//! reward = -(θ² + 0.1 θ̇² + 0.001 τ²), 200-step episodes, no termination.
+
+use super::{Env, StepOut};
+use crate::util::rng::Rng;
+
+const MAX_SPEED: f64 = 8.0;
+const MAX_TORQUE: f64 = 2.0;
+const DT: f64 = 0.05;
+const G: f64 = 10.0;
+const M: f64 = 1.0;
+const L: f64 = 1.0;
+
+pub struct Pendulum {
+    theta: f64,
+    theta_dot: f64,
+    steps: usize,
+}
+
+impl Pendulum {
+    pub fn new() -> Pendulum {
+        Pendulum { theta: std::f64::consts::PI, theta_dot: 0.0, steps: 0 }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![
+            self.theta.cos() as f32,
+            self.theta.sin() as f32,
+            self.theta_dot as f32,
+        ]
+    }
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn angle_normalize(x: f64) -> f64 {
+    let two_pi = 2.0 * std::f64::consts::PI;
+    ((x + std::f64::consts::PI).rem_euclid(two_pi)) - std::f64::consts::PI
+}
+
+impl Env for Pendulum {
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn max_steps(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.theta = rng.uniform_in(-std::f64::consts::PI,
+                                    std::f64::consts::PI);
+        self.theta_dot = rng.uniform_in(-1.0, 1.0);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> StepOut {
+        let u = (action[0] as f64).clamp(-1.0, 1.0) * MAX_TORQUE;
+        let th = angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot
+            + 0.001 * u * u;
+
+        let acc = 3.0 * G / (2.0 * L) * self.theta.sin()
+            + 3.0 / (M * L * L) * u;
+        self.theta_dot = (self.theta_dot + acc * DT)
+            .clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta += self.theta_dot * DT;
+        self.steps += 1;
+
+        StepOut {
+            obs: self.obs(),
+            reward: -cost,
+            terminated: false,
+            truncated: self.steps >= self.max_steps(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swingup_physics_sane() {
+        // hanging down (theta = pi), zero torque: stays near down position
+        let mut p = Pendulum::new();
+        p.theta = std::f64::consts::PI;
+        p.theta_dot = 0.0;
+        for _ in 0..50 {
+            p.step(&[0.0]);
+        }
+        assert!(angle_normalize(p.theta).abs() > 2.0,
+                "should remain near the bottom");
+    }
+
+    #[test]
+    fn upright_zero_cost() {
+        let mut p = Pendulum::new();
+        p.theta = 0.0;
+        p.theta_dot = 0.0;
+        let out = p.step(&[0.0]);
+        assert!(out.reward > -0.05, "upright ~ zero cost: {}", out.reward);
+    }
+
+    #[test]
+    fn truncates_at_200() {
+        let mut p = Pendulum::new();
+        let mut rng = Rng::new(0);
+        p.reset(&mut rng);
+        for i in 1..=200 {
+            let out = p.step(&[0.1]);
+            assert_eq!(out.truncated, i == 200);
+        }
+    }
+
+    #[test]
+    fn reward_bounded() {
+        // gym bound: -(pi^2 + 0.1*64 + 0.001*4) ~= -16.27
+        let mut p = Pendulum::new();
+        let mut rng = Rng::new(2);
+        p.reset(&mut rng);
+        for _ in 0..200 {
+            let out = p.step(&[1.0]);
+            assert!(out.reward <= 0.0 && out.reward > -16.3);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Integer-only inference engine — the deployment hot path.
+//!
+//! This is the software twin of the synthesized FPGA datapath (paper §2.3):
+//! after the one floating-point input quantization, everything is integer
+//! matrix-vector products with i32 accumulators, threshold requantization,
+//! and a final tanh lookup. Zero allocation per action; scratch buffers are
+//! owned by the engine. The paper's µs-scale "latency per action" claim is
+//! benchmarked against this engine (`benches/intinfer_latency.rs`) while
+//! the cycle-accurate FPGA numbers come from `synth`.
+
+use crate::quant::export::IntPolicy;
+
+/// Reusable integer inference engine over a fixed [`IntPolicy`].
+pub struct IntEngine {
+    pub policy: IntPolicy,
+    // ping-pong activation buffers (i32 lattice values)
+    buf_a: Vec<i32>,
+    buf_b: Vec<i32>,
+}
+
+impl IntEngine {
+    pub fn new(policy: IntPolicy) -> IntEngine {
+        let maxdim = policy
+            .layers
+            .iter()
+            .map(|l| l.rows.max(l.cols))
+            .max()
+            .unwrap_or(1)
+            .max(policy.obs_dim);
+        IntEngine {
+            policy,
+            buf_a: vec![0; maxdim],
+            buf_b: vec![0; maxdim],
+        }
+    }
+
+    /// Integer forward for one (already normalized) observation.
+    /// `action_out` must have length `act_dim`. No allocation.
+    pub fn infer(&mut self, obs: &[f32], action_out: &mut [f32]) {
+        let p = &self.policy;
+        debug_assert_eq!(obs.len(), p.obs_dim);
+        debug_assert_eq!(action_out.len(), p.act_dim);
+
+        // the single FP op: on-the-fly input quantization
+        p.quantize_input(obs, &mut self.buf_a[..p.obs_dim]);
+
+        let (mut cur, mut nxt) = (&mut self.buf_a, &mut self.buf_b);
+        for layer in &p.layers {
+            let nthr = layer.out_range.levels() - 1;
+            let x = &cur[..layer.cols];
+            for j in 0..layer.rows {
+                let wrow =
+                    &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
+                // i32 accumulation is safe: |acc| <= cols * 127 * 255 << 2^31
+                // (iterator form + exact slice bounds lets LLVM drop the
+                // bounds checks and vectorize — see EXPERIMENTS.md §Perf)
+                let acc: i32 = wrow
+                    .iter()
+                    .zip(x)
+                    .map(|(&w, &xv)| w as i32 * xv)
+                    .sum();
+                // threshold requant: binary search over sorted cutpoints
+                let t = &layer.thresholds[j * nthr..(j + 1) * nthr];
+                let cnt = t.partition_point(|&th| th <= acc);
+                nxt[j] = layer.out_range.qmin + cnt as i32;
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        let last = p.layers.last().unwrap();
+        let qmin = last.out_range.qmin;
+        for (o, &q) in action_out.iter_mut().zip(cur.iter()) {
+            *o = p.tanh_lut[(q - qmin) as usize];
+        }
+    }
+
+    /// Convenience allocating wrapper.
+    pub fn infer_vec(&mut self, obs: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.policy.act_dim];
+        self.infer(obs, &mut out);
+        out
+    }
+
+    /// Multiply-accumulate count per inference (for ops/s reporting).
+    pub fn macs(&self) -> u64 {
+        self.policy
+            .layers
+            .iter()
+            .map(|l| (l.rows * l.cols) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::export::IntPolicy;
+    use crate::quant::fakequant::PolicyTensors;
+    use crate::quant::BitCfg;
+    use crate::util::rng::Rng;
+
+    fn build(seed: u64, obs: usize, h: usize, act: usize, bits: BitCfg)
+             -> (IntEngine, Vec<Vec<f32>>) {
+        let mut r = Rng::new(seed);
+        let mut mk = |n: usize, s: f32| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            r.fill_normal(&mut v);
+            v.iter_mut().for_each(|x| *x *= s);
+            v
+        };
+        let bufs = vec![
+            mk(h * obs, 0.5), mk(h, 0.1),
+            mk(h * h, 0.3), mk(h, 0.1),
+            mk(act * h, 0.3), mk(act, 0.1),
+        ];
+        let p = PolicyTensors {
+            obs_dim: obs, hidden: h, act_dim: act,
+            fc1_w: &bufs[0], fc1_b: &bufs[1],
+            fc2_w: &bufs[2], fc2_b: &bufs[3],
+            mean_w: &bufs[4], mean_b: &bufs[5],
+            s_in: 2.0, s_h1: 1.2, s_h2: 1.2, s_out: 1.0,
+        };
+        (IntEngine::new(IntPolicy::from_tensors(&p, bits)), bufs)
+    }
+
+    #[test]
+    fn engine_matches_naive_forward() {
+        for bits in [BitCfg::new(3, 2, 4), BitCfg::new(4, 3, 8),
+                     BitCfg::new(8, 8, 8)] {
+            let (mut eng, _keep) = build(7, 11, 32, 3, bits);
+            let mut rng = Rng::new(1);
+            for _ in 0..100 {
+                let mut obs = vec![0.0f32; 11];
+                rng.fill_normal(&mut obs);
+                let fast = eng.infer_vec(&obs);
+                let slow = eng.policy.forward_naive(&obs);
+                assert_eq!(fast, slow, "bits={bits:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_observation_is_stable() {
+        let (mut eng, _keep) = build(3, 5, 8, 2, BitCfg::new(4, 3, 8));
+        let a1 = eng.infer_vec(&vec![0.0; 5]);
+        let a2 = eng.infer_vec(&vec![0.0; 5]);
+        assert_eq!(a1, a2);
+        assert!(a1.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn actions_in_unit_box_under_extreme_inputs() {
+        let (mut eng, _keep) = build(5, 6, 16, 4, BitCfg::new(2, 2, 2));
+        for v in [-1e9f32, -10.0, 10.0, 1e9, f32::MAX] {
+            let a = eng.infer_vec(&vec![v; 6]);
+            assert!(a.iter().all(|x| x.is_finite() && x.abs() <= 1.0),
+                    "{a:?} for input {v}");
+        }
+    }
+
+    #[test]
+    fn macs_count() {
+        let (eng, _keep) = build(0, 10, 20, 3, BitCfg::new(4, 3, 8));
+        assert_eq!(eng.macs(), (20 * 10 + 20 * 20 + 3 * 20) as u64);
+    }
+}

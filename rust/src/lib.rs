@@ -1,0 +1,26 @@
+//! # qcontrol
+//!
+//! Reproduction of *"Learning Quantized Continuous Controllers for Integer
+//! Hardware"* (Kresse & Lampert, 2025) as a three-layer rust + JAX + Pallas
+//! stack:
+//!
+//! * **L1** — a Pallas QDQ-linear kernel (build-time python, `python/compile/kernels/`).
+//! * **L2** — JAX SAC/DDPG models with quantization-aware training, AOT-lowered
+//!   to HLO text (`python/compile/`), loaded here via PJRT.
+//! * **L3** — this crate: environment physics, replay, training orchestration,
+//!   staged model selection, integer-only inference, and the FPGA synthesis
+//!   estimator that regenerates the paper's tables and figures.
+//!
+//! Python never runs on the request path; after `make artifacts` the binary is
+//! self-contained.
+
+pub mod util;
+pub mod envs;
+pub mod physics;
+pub mod replay;
+pub mod quant;
+pub mod intinfer;
+pub mod synth;
+pub mod runtime;
+pub mod rl;
+pub mod coordinator;

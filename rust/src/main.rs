@@ -1,0 +1,320 @@
+//! `qcontrol` — leader entrypoint for the learning-to-hardware pipeline.
+//!
+//! Subcommands:
+//!   train    train one policy (SAC/DDPG, quantized or FP32) and checkpoint
+//!   eval     evaluate a checkpoint (optionally with input noise / backends)
+//!   sweep    Fig.1-style bitwidth sweep for one env
+//!   select   staged model selection (paper §3.2)
+//!   synth    synthesize a config to the XC7A15T model (Table 3 row)
+//!   serve    run the integer action server over TCP
+//!   info     artifact/manifest summary
+//!
+//! Examples:
+//!   qcontrol train --env pendulum --hidden 16 --bits 4,3,8 --steps 3000
+//!   qcontrol synth --env hopper
+//!   qcontrol serve --ckpt results/pendulum.ckpt --port 7777
+
+use anyhow::{Context, Result};
+
+use qcontrol::coordinator::select::{paper_table1, SelectProtocol};
+use qcontrol::coordinator::store::{now_secs, Store};
+use qcontrol::coordinator::sweep::{fp32_band, run_config, Scope,
+                                   SweepProtocol};
+use qcontrol::coordinator::{select_model, server};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::synth::{synthesize, XC7A15T};
+use qcontrol::util::bench::Table;
+use qcontrol::util::cli::Args;
+use qcontrol::util::json::Json;
+use qcontrol::util::stats::ObsNormalizer;
+
+fn parse_bits(a: &Args) -> Result<BitCfg> {
+    let v = a.usize_list("bits", &[8, 8, 8])?;
+    anyhow::ensure!(v.len() == 3, "--bits b_in,b_core,b_out");
+    Ok(BitCfg::new(v[0] as u32, v[1] as u32, v[2] as u32))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "sweep" => cmd_sweep(&args),
+        "select" => cmd_select(&args),
+        "synth" => cmd_synth(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+qcontrol — quantized continuous controllers for integer hardware
+
+usage: qcontrol <cmd> [--flags]
+
+  train   --env E [--algo sac|ddpg] [--hidden H] [--bits i,c,o]
+          [--fp32] [--steps N] [--seed S] [--ckpt PATH] [--verbose]
+  eval    --ckpt PATH [--episodes N] [--noise SIGMA]
+          [--backend pjrt|fakequant|int]
+  sweep   --env E [--scopes all,input,output,core] [--bits 8,6,4,3,2]
+  select  --env E
+  synth   --env E [--hidden H] [--bits i,c,o]  (defaults: paper Table 1)
+  serve   --ckpt PATH [--port P]
+  info";
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let algo = Algo::parse(&a.str("algo", "sac"))?;
+    let env = a.str("env", "pendulum");
+    let mut cfg = TrainConfig::new(algo, &env);
+    cfg.hidden = a.usize("hidden", 64)?;
+    cfg.bits = parse_bits(a)?;
+    cfg.quant_on = !a.has("fp32");
+    cfg.total_steps = a.usize("steps", 5000)?;
+    cfg.learning_starts = a.usize("learning-starts",
+                                  (cfg.total_steps / 5).max(200))?;
+    cfg.seed = a.u64("seed", 1)?;
+    cfg.normalize = a.bool("normalize", true)?;
+    cfg.eval_every = a.usize("eval-every", (cfg.total_steps / 5).max(1))?;
+    cfg.verbose = a.has("verbose");
+
+    println!("training {algo:?} on {env} h={} bits={:?} quant={} \
+              steps={}", cfg.hidden, cfg.bits, cfg.quant_on,
+             cfg.total_steps);
+    let res = rl::train(&rt, &cfg)?;
+    println!("done: {:.1} env steps/s", res.steps_per_sec);
+    for p in &res.curve {
+        println!("  step {:>7}  return {:>9.1} ± {:.1}", p.step,
+                 p.mean_return, p.std_return);
+    }
+
+    let ckpt = a.str("ckpt", &format!("results/{env}_{}.ckpt",
+                                      algo.name()));
+    if let Some(parent) = std::path::Path::new(&ckpt).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let meta = Json::obj(vec![
+        ("env", Json::str(&env)),
+        ("algo", Json::str(algo.name())),
+        ("hidden", Json::num(cfg.hidden as f64)),
+        ("b_in", Json::num(cfg.bits.b_in as f64)),
+        ("b_core", Json::num(cfg.bits.b_core as f64)),
+        ("b_out", Json::num(cfg.bits.b_out as f64)),
+        ("quant_on", Json::Bool(cfg.quant_on)),
+        ("steps", Json::num(cfg.total_steps as f64)),
+        ("time", Json::num(now_secs() as f64)),
+    ]);
+    rl::policy::save_checkpoint(std::path::Path::new(&ckpt), &res.flat,
+                                &res.normalizer.state(), &meta)?;
+    println!("checkpoint -> {ckpt}");
+    Ok(())
+}
+
+fn load_ckpt(a: &Args) -> Result<(Json, Vec<f32>, ObsNormalizer, String,
+                                  Algo, usize, BitCfg, bool)> {
+    let path = a
+        .str_opt("ckpt")
+        .context("--ckpt required")?
+        .to_string();
+    let (meta, flat, mean, var) =
+        rl::policy::load_checkpoint(std::path::Path::new(&path))?;
+    let env = meta.get("env")?.as_str()?.to_string();
+    let algo = Algo::parse(meta.get("algo")?.as_str()?)?;
+    let hidden = meta.get("hidden")?.as_usize()?;
+    let bits = BitCfg::new(meta.get("b_in")?.as_usize()? as u32,
+                           meta.get("b_core")?.as_usize()? as u32,
+                           meta.get("b_out")?.as_usize()? as u32);
+    let quant_on = meta.get("quant_on")?.as_bool()?;
+    let dim = mean.len();
+    let mut norm = ObsNormalizer::new(dim, dim > 0);
+    norm.load_state(mean, var, 1e6);
+    norm.freeze();
+    Ok((meta, flat, norm, env, algo, hidden, bits, quant_on))
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let (_, flat, norm, env, algo, hidden, bits, quant_on) = load_ckpt(a)?;
+    let opts = EvalOpts {
+        algo,
+        env: env.clone(),
+        hidden,
+        bits,
+        quant_on,
+        episodes: a.usize("episodes", 10)?,
+        noise_std: a.f64("noise", 0.0)?,
+        seed: a.u64("seed", 42)?,
+        backend: EvalBackend::parse(&a.str("backend", "pjrt"))?,
+    };
+    let (mean, std) = rl::evaluate(&rt, &opts, &flat, &norm)?;
+    println!("{env}: return {mean:.1} ± {std:.1} over {} episodes \
+              (noise σ={}, backend {:?})",
+             opts.episodes, opts.noise_std, opts.backend);
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let env = a.str("env", "pendulum");
+    let algo = Algo::parse(&a.str("algo", "sac"))?;
+    let mut proto = SweepProtocol::from_env();
+    proto.steps = a.usize("steps", proto.steps)?;
+    proto.hidden = a.usize("hidden",
+                           if env == "pendulum" { 64 } else { 256 })?;
+    let scopes: Vec<Scope> = a
+        .list("scopes", &["all", "input", "output", "core"])
+        .iter()
+        .map(|s| Scope::parse(s))
+        .collect::<Result<_>>()?;
+    let bits = a.usize_list("bits", &[8, 4, 2])?;
+
+    println!("sweep {env} ({})", proto.describe());
+    let fp32 = fp32_band(&rt, algo, &env, &proto, true)?;
+    println!("FP32 band: {:.1} ± {:.1}", fp32.mean, fp32.std);
+    let mut table = Table::new(&["scope", "bits", "return", "matches FP32"]);
+    let store = Store::open(Store::default_dir())?;
+    for scope in scopes {
+        for &b in &bits {
+            let p = run_config(&rt, algo, &env, &proto, proto.hidden,
+                               scope.bits(b as u32), true,
+                               &format!("{}-{b}", scope.name()))?;
+            let ok = qcontrol::coordinator::sweep::matches_fp32(&p, &fp32);
+            table.row(vec![scope.name().into(), b.to_string(),
+                           format!("{:.1} ± {:.1}", p.mean, p.std),
+                           if ok { "yes" } else { "no" }.into()]);
+            store.append("sweep", Json::obj(vec![
+                ("env", Json::str(&env)),
+                ("scope", Json::str(scope.name())),
+                ("bits", Json::num(b as f64)),
+                ("mean", Json::num(p.mean)),
+                ("std", Json::num(p.std)),
+                ("fp32_mean", Json::num(fp32.mean)),
+                ("fp32_std", Json::num(fp32.std)),
+                ("steps", Json::num(proto.steps as f64)),
+                ("time", Json::num(now_secs() as f64)),
+            ]))?;
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_select(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let env = a.str("env", "pendulum");
+    let mut proto = SelectProtocol::from_env();
+    proto.sweep.steps = a.usize("steps", proto.sweep.steps)?;
+    println!("staged selection on {env} ({})", proto.sweep.describe());
+    let out = select_model(&rt, &env, &proto)?;
+    println!("FP32: {:.1} ± {:.1}", out.fp32.mean, out.fp32.std);
+    for (stage, label, mean, std, ok) in &out.trail {
+        println!("  [{stage:>5}] {label:<12} {mean:>9.1} ± {std:<8.1} {}",
+                 if *ok { "match" } else { "below band" });
+    }
+    println!("selected: h={} bits=({},{},{})", out.hidden,
+             out.bits.b_in, out.bits.b_core, out.bits.b_out);
+    Ok(())
+}
+
+fn cmd_synth(a: &Args) -> Result<()> {
+    let env = a.str("env", "hopper");
+    let (h_def, bits_def) = paper_table1(&env)
+        .unwrap_or((64, BitCfg::new(4, 3, 8)));
+    let hidden = a.usize("hidden", h_def)?;
+    let bits = if a.has("bits") { parse_bits(a)? } else { bits_def };
+
+    // synthesize a representative (randomly initialized or checkpointed)
+    // policy — resources/latency depend only on dims+bits, not weights
+    let rt = Runtime::load(default_artifact_dir())?;
+    let dims = *rt
+        .manifest
+        .envs
+        .get(&env)
+        .with_context(|| format!("unknown env {env}"))?;
+    let mut rng = qcontrol::util::rng::Rng::new(7);
+    let spec = &rt.manifest.specs[&format!("sac_{env}_h{hidden}")];
+    let flat = if let Some(ckpt) = a.str_opt("ckpt") {
+        rl::policy::load_checkpoint(std::path::Path::new(ckpt))?.1
+    } else {
+        rl::init_flat(spec, &mut rng)
+    };
+    let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim, hidden,
+                                      dims.act_dim)?;
+    let policy = IntPolicy::from_tensors(&tensors, bits);
+    let report = synthesize(&policy, &XC7A15T, 1e8)?;
+    println!("{env} h={hidden} bits=({},{},{}) on {}:",
+             bits.b_in, bits.b_core, bits.b_out, XC7A15T.name);
+    println!("  LUT {:>6}/{}   FF {:>6}/{}   BRAM {:>5.1}/{}   DSP {:>3}/{}",
+             report.design.luts(), XC7A15T.luts,
+             report.design.ffs(), XC7A15T.ffs,
+             report.design.bram36(), XC7A15T.bram36,
+             report.design.dsps(), XC7A15T.dsps);
+    println!("  latency {}   throughput {:.1e} actions/s   P {:.2} W   \
+              E/action {:.2e} J",
+             qcontrol::util::human_time(report.latency_s),
+             report.throughput, report.power.total_w,
+             report.energy_per_action);
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let (_, flat, norm, env, _algo, hidden, bits, quant_on) = load_ckpt(a)?;
+    anyhow::ensure!(quant_on, "serve requires a quantized checkpoint");
+    let dims = rt.manifest.envs[&env];
+    let spec = &rt.manifest.specs[&format!("sac_{env}_h{hidden}")];
+    let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim, hidden,
+                                      dims.act_dim)?;
+    let engine = IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+    let port = a.usize("port", 7777)?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    println!("serving {env} integer policy on 127.0.0.1:{port} \
+              (obs={}, act={})", dims.obs_dim, dims.act_dim);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stats = server::serve(listener, engine, norm, stop)?;
+    println!("served {} requests, p50 {:.1} µs", stats.requests,
+             stats.p50_us);
+    Ok(())
+}
+
+fn cmd_info(_a: &Args) -> Result<()> {
+    let dir = default_artifact_dir();
+    let rt = Runtime::load(&dir)?;
+    println!("artifacts: {} ({} executables, {} specs)",
+             dir.display(), rt.manifest.artifacts.len(),
+             rt.manifest.specs.len());
+    let mut table = Table::new(&["env", "obs", "act", "SAC widths",
+                                 "DDPG widths"]);
+    for (env, d) in &rt.manifest.envs {
+        let widths = |algo: &str| -> String {
+            let mut w: Vec<usize> = rt
+                .manifest
+                .artifacts
+                .values()
+                .filter(|x| x.env == *env && x.algo == algo
+                        && x.kind == "train")
+                .map(|x| x.hidden)
+                .collect();
+            w.sort_unstable();
+            format!("{w:?}")
+        };
+        table.row(vec![env.clone(), d.obs_dim.to_string(),
+                       d.act_dim.to_string(), widths("sac"),
+                       widths("ddpg")]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,430 @@
+//! Planar torque-driven link-tree simulator (see module docs in `mod.rs`).
+
+use crate::util::rng::Rng;
+
+/// One hinged link of the tree.
+#[derive(Clone, Debug)]
+pub struct LinkSpec {
+    /// parent link index, or -1 to attach to the torso
+    pub parent: i32,
+    /// attachment point along the torso, in [-1, 1] (head..tail); ignored
+    /// for links whose parent is another link (they attach at its tip)
+    pub attach: f64,
+    /// link length (m) — the point mass sits at the tip
+    pub length: f64,
+    /// link mass (kg)
+    pub mass: f64,
+    /// rest angle relative to the parent frame (rad)
+    pub rest: f64,
+    /// torque gear: applied torque = gear * action
+    pub gear: f64,
+    /// viscous joint damping
+    pub damping: f64,
+    /// joint limits (rad, relative to rest)
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// A morphology: torso + link tree + world constants.
+#[derive(Clone, Debug)]
+pub struct Morphology {
+    pub torso_len: f64,
+    pub torso_mass: f64,
+    /// torso pitch inertia
+    pub torso_inertia: f64,
+    pub links: Vec<LinkSpec>,
+    pub gravity: f64,
+    /// initial torso height
+    pub init_z: f64,
+    /// physics sub-step (s) and control frame-skip
+    pub dt: f64,
+    pub frame_skip: usize,
+    /// ground contact spring / damper / friction
+    pub contact_kp: f64,
+    pub contact_kd: f64,
+    pub friction: f64,
+}
+
+impl Morphology {
+    pub fn n_joints(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// Simulator state: generalized coordinates `[x, z, pitch, q...]`.
+#[derive(Clone, Debug)]
+pub struct ChainSim {
+    pub m: Morphology,
+    pub q: Vec<f64>,
+    pub qd: Vec<f64>,
+    /// world positions computed by the last FK pass: per link (tip x, tip z)
+    tips: Vec<(f64, f64)>,
+    /// world joint anchor positions per link
+    anchors: Vec<(f64, f64)>,
+    /// world absolute angle per link
+    angles: Vec<f64>,
+    /// contact flags from the last step (feet touching ground)
+    pub contacts: Vec<bool>,
+    /// composite inertia per joint (recomputed per step)
+    joint_inertia: Vec<f64>,
+}
+
+impl ChainSim {
+    pub fn new(m: Morphology) -> ChainSim {
+        let n = m.n_joints();
+        let mut sim = ChainSim {
+            q: vec![0.0; 3 + n],
+            qd: vec![0.0; 3 + n],
+            tips: vec![(0.0, 0.0); n],
+            anchors: vec![(0.0, 0.0); n],
+            angles: vec![0.0; n],
+            contacts: vec![false; n],
+            joint_inertia: vec![0.0; n],
+            m,
+        };
+        sim.reset(&mut Rng::new(0));
+        sim
+    }
+
+    /// Reset to the rest configuration with small random perturbations.
+    pub fn reset(&mut self, rng: &mut Rng) {
+        let n = self.m.n_joints();
+        self.q.iter_mut().for_each(|v| *v = 0.0);
+        self.qd.iter_mut().for_each(|v| *v = 0.0);
+        self.q[1] = self.m.init_z;
+        for i in 0..n {
+            self.q[3 + i] = rng.uniform_in(-0.05, 0.05);
+            self.qd[3 + i] = rng.uniform_in(-0.05, 0.05);
+        }
+        self.q[2] = rng.uniform_in(-0.02, 0.02);
+        self.fk();
+    }
+
+    /// Forward kinematics: world anchors, angles and tips of every link.
+    fn fk(&mut self) {
+        let (x, z, pitch) = (self.q[0], self.q[1], self.q[2]);
+        let half = self.m.torso_len / 2.0;
+        for i in 0..self.m.links.len() {
+            let l = &self.m.links[i];
+            let (anchor, parent_angle) = if l.parent < 0 {
+                let ax = x + pitch.cos() * l.attach * half;
+                let az = z + pitch.sin() * l.attach * half;
+                ((ax, az), pitch)
+            } else {
+                let p = l.parent as usize;
+                debug_assert!(p < i, "links must be topologically sorted");
+                (self.tips[p], self.angles[p])
+            };
+            let ang = parent_angle + l.rest + self.q[3 + i];
+            self.anchors[i] = anchor;
+            self.angles[i] = ang;
+            self.tips[i] =
+                (anchor.0 + l.length * ang.cos(), anchor.1 + l.length * ang.sin());
+        }
+    }
+
+    /// Spring–damper ground force at a point (world), given its velocity.
+    fn contact_force(&self, p: (f64, f64), v: (f64, f64)) -> (f64, f64) {
+        if p.1 >= 0.0 {
+            return (0.0, 0.0);
+        }
+        let fn_ = (-p.1) * self.m.contact_kp - v.1 * self.m.contact_kd;
+        let fn_ = fn_.max(0.0);
+        // Coulomb-capped viscous friction
+        let ft = (-v.0 * self.m.contact_kd * 2.0)
+            .clamp(-self.m.friction * fn_, self.m.friction * fn_);
+        (ft, fn_)
+    }
+
+    /// World velocity of a link tip (finite chain of hinge contributions).
+    fn tip_velocity(&self, i: usize) -> (f64, f64) {
+        // v = v_root + w_root x r_root + sum_j (qd_j x r_j) over ancestors
+        let (mut vx, mut vz) = (self.qd[0], self.qd[1]);
+        let tip = self.tips[i];
+        // torso rotation about (x, z)
+        let rx = tip.0 - self.q[0];
+        let rz = tip.1 - self.q[1];
+        vx += -self.qd[2] * rz;
+        vz += self.qd[2] * rx;
+        // ancestor joints
+        let mut j = i as i32;
+        while j >= 0 {
+            let anchor = self.anchors[j as usize];
+            let r = (tip.0 - anchor.0, tip.1 - anchor.1);
+            let w = self.qd[3 + j as usize];
+            vx += -w * r.1;
+            vz += w * r.0;
+            j = self.m.links[j as usize].parent;
+        }
+        (vx, vz)
+    }
+
+    /// Composite inertia seen by each joint: sum of distal point masses
+    /// times their (current) squared lever arms, plus a floor.
+    fn compute_joint_inertia(&mut self) {
+        let n = self.m.n_joints();
+        for j in 0..n {
+            let mut inertia = 0.05; // motor/armature floor
+            for i in j..n {
+                if self.is_ancestor(j, i) {
+                    let anchor = self.anchors[j];
+                    let tip = self.tips[i];
+                    let d2 = (tip.0 - anchor.0).powi(2)
+                        + (tip.1 - anchor.1).powi(2);
+                    inertia += self.m.links[i].mass * d2.max(0.01);
+                }
+            }
+            self.joint_inertia[j] = inertia;
+        }
+    }
+
+    /// Is joint `j` on the chain from link `i` to the torso (inclusive)?
+    fn is_ancestor(&self, j: usize, i: usize) -> bool {
+        let mut k = i as i32;
+        while k >= 0 {
+            if k as usize == j {
+                return true;
+            }
+            k = self.m.links[k as usize].parent;
+        }
+        false
+    }
+
+    /// One control step: apply torques (`action` in [-1,1] per joint) for
+    /// `frame_skip` physics sub-steps. Returns the average forward velocity
+    /// of the torso over the control step.
+    pub fn step(&mut self, action: &[f64]) -> f64 {
+        let n = self.m.n_joints();
+        debug_assert_eq!(action.len(), n);
+        let x0 = self.q[0];
+        for _ in 0..self.m.frame_skip {
+            self.substep(action);
+        }
+        (self.q[0] - x0) / (self.m.dt * self.m.frame_skip as f64)
+    }
+
+    fn substep(&mut self, action: &[f64]) {
+        let n = self.m.n_joints();
+        let g = self.m.gravity;
+        self.fk();
+        self.compute_joint_inertia();
+
+        let total_mass: f64 =
+            self.m.torso_mass + self.m.links.iter().map(|l| l.mass).sum::<f64>();
+
+        // --- accumulate world forces --------------------------------------
+        // (point, force) pairs: gravity at masses, contacts at tips and
+        // torso endpoints
+        let mut points: Vec<((f64, f64), (f64, f64))> = Vec::with_capacity(2 * n + 4);
+        // gravity on torso (at root) and each link tip mass
+        points.push(((self.q[0], self.q[1]), (0.0, -self.m.torso_mass * g)));
+        for i in 0..n {
+            points.push((self.tips[i], (0.0, -self.m.links[i].mass * g)));
+        }
+        // contacts at link tips
+        for i in 0..n {
+            let v = self.tip_velocity(i);
+            let f = self.contact_force(self.tips[i], v);
+            self.contacts[i] = f.1 > 0.0;
+            if f != (0.0, 0.0) {
+                points.push((self.tips[i], f));
+            }
+        }
+        // contacts at torso endpoints (keeps the torso from sinking)
+        let half = self.m.torso_len / 2.0;
+        for s in [-1.0, 1.0] {
+            let p = (self.q[0] + self.q[2].cos() * s * half,
+                     self.q[1] + self.q[2].sin() * s * half);
+            let v = (self.qd[0] - self.qd[2] * (p.1 - self.q[1]),
+                     self.qd[1] + self.qd[2] * (p.0 - self.q[0]));
+            let f = self.contact_force(p, v);
+            if f != (0.0, 0.0) {
+                points.push((p, f));
+            }
+        }
+
+        // --- root accelerations -------------------------------------------
+        let (mut fx, mut fz, mut tau_root) = (0.0, 0.0, 0.0);
+        for &(p, f) in &points {
+            fx += f.0;
+            fz += f.1;
+            // torque about the root
+            tau_root += (p.0 - self.q[0]) * f.1 - (p.1 - self.q[1]) * f.0;
+        }
+        // total pitch inertia: torso + links about root
+        let mut i_root = self.m.torso_inertia;
+        for i in 0..n {
+            let d2 = (self.tips[i].0 - self.q[0]).powi(2)
+                + (self.tips[i].1 - self.q[1]).powi(2);
+            i_root += self.m.links[i].mass * d2.max(0.01);
+        }
+        // motor reaction torques act on the parent structure
+        let mut tau_reaction = 0.0;
+        for i in 0..n {
+            tau_reaction -= self.m.links[i].gear * action[i].clamp(-1.0, 1.0);
+        }
+
+        let ax = fx / total_mass;
+        let az = fz / total_mass;
+        let apitch = (tau_root + tau_reaction) / i_root;
+
+        // --- joint accelerations (Jacobian-transpose + diagonal inertia) --
+        let mut qdd = vec![0.0f64; n];
+        for j in 0..n {
+            let anchor = self.anchors[j];
+            let mut tau = self.m.links[j].gear * action[j].clamp(-1.0, 1.0);
+            tau -= self.m.links[j].damping * self.qd[3 + j];
+            // forces applied at points distal to joint j
+            for i in 0..n {
+                if self.is_ancestor(j, i) {
+                    // gravity of mass i
+                    let r = (self.tips[i].0 - anchor.0,
+                             self.tips[i].1 - anchor.1);
+                    tau += r.0 * (-self.m.links[i].mass * g);
+                    // contact at tip i
+                    let v = self.tip_velocity(i);
+                    let f = self.contact_force(self.tips[i], v);
+                    tau += r.0 * f.1 - r.1 * f.0;
+                }
+            }
+            // joint limit penalty spring
+            let l = &self.m.links[j];
+            let qj = self.q[3 + j];
+            if qj < l.lo {
+                tau += (l.lo - qj) * 200.0 - self.qd[3 + j] * 5.0;
+            } else if qj > l.hi {
+                tau += (l.hi - qj) * 200.0 - self.qd[3 + j] * 5.0;
+            }
+            qdd[j] = tau / self.joint_inertia[j];
+        }
+
+        // --- semi-implicit Euler -------------------------------------------
+        let dt = self.m.dt;
+        self.qd[0] += ax * dt;
+        self.qd[1] += az * dt;
+        self.qd[2] += apitch * dt;
+        for j in 0..n {
+            self.qd[3 + j] += qdd[j] * dt;
+            // numerical safety clamp
+            self.qd[3 + j] = self.qd[3 + j].clamp(-50.0, 50.0);
+        }
+        self.qd[0] = self.qd[0].clamp(-50.0, 50.0);
+        self.qd[1] = self.qd[1].clamp(-50.0, 50.0);
+        self.qd[2] = self.qd[2].clamp(-50.0, 50.0);
+        for k in 0..self.q.len() {
+            self.q[k] += self.qd[k] * dt;
+        }
+        self.fk();
+    }
+
+    /// Lowest world point of the structure (for termination checks).
+    pub fn lowest_point(&self) -> f64 {
+        let mut z = self.q[1];
+        for t in &self.tips {
+            z = z.min(t.1);
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hopper_like() -> Morphology {
+        Morphology {
+            torso_len: 0.4,
+            torso_mass: 3.0,
+            torso_inertia: 0.3,
+            links: vec![
+                LinkSpec { parent: -1, attach: 0.0, length: 0.45, mass: 1.5,
+                           rest: -std::f64::consts::FRAC_PI_2, gear: 60.0,
+                           damping: 1.0, lo: -0.8, hi: 0.8 },
+                LinkSpec { parent: 0, attach: 0.0, length: 0.5, mass: 1.0,
+                           rest: 0.2, gear: 60.0, damping: 1.0,
+                           lo: -1.2, hi: 1.2 },
+                LinkSpec { parent: 1, attach: 0.0, length: 0.35, mass: 0.6,
+                           rest: -0.2, gear: 40.0, damping: 1.0,
+                           lo: -0.8, hi: 0.8 },
+            ],
+            gravity: 9.81,
+            init_z: 1.2,
+            dt: 0.008,
+            frame_skip: 4,
+            contact_kp: 6000.0,
+            contact_kd: 120.0,
+            friction: 1.2,
+        }
+    }
+
+    #[test]
+    fn falls_under_gravity_then_contacts_catch() {
+        let mut sim = ChainSim::new(hopper_like());
+        let z0 = sim.q[1];
+        for _ in 0..20 {
+            sim.step(&[0.0, 0.0, 0.0]);
+        }
+        assert!(sim.q[1] < z0, "should fall");
+        // settle for a while: contacts must prevent sinking through ground
+        for _ in 0..300 {
+            sim.step(&[0.0, 0.0, 0.0]);
+        }
+        assert!(sim.lowest_point() > -0.3,
+                "sank through floor: {}", sim.lowest_point());
+        assert!(sim.q.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ChainSim::new(hopper_like());
+        let mut b = ChainSim::new(hopper_like());
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        a.reset(&mut ra);
+        b.reset(&mut rb);
+        for i in 0..50 {
+            let act = [(i as f64 * 0.1).sin(), -0.3, 0.5];
+            a.step(&act);
+            b.step(&act);
+        }
+        assert_eq!(a.q, b.q);
+    }
+
+    #[test]
+    fn torques_move_joints() {
+        let mut sim = ChainSim::new(hopper_like());
+        let q0 = sim.q[3];
+        for _ in 0..10 {
+            sim.step(&[1.0, 0.0, 0.0]);
+        }
+        assert!((sim.q[3] - q0).abs() > 1e-3, "joint did not move");
+    }
+
+    #[test]
+    fn energy_does_not_explode() {
+        let mut sim = ChainSim::new(hopper_like());
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let act = [rng.uniform_in(-1.0, 1.0),
+                       rng.uniform_in(-1.0, 1.0),
+                       rng.uniform_in(-1.0, 1.0)];
+            sim.step(&act);
+        }
+        let ke: f64 = sim.qd.iter().map(|v| v * v).sum();
+        assert!(ke.is_finite() && ke < 1e5, "ke={ke}");
+        assert!(sim.q[1].abs() < 100.0, "z={}", sim.q[1]);
+    }
+
+    #[test]
+    fn fk_consistency() {
+        let mut sim = ChainSim::new(hopper_like());
+        sim.q[2] = 0.3;
+        sim.q[3] = 0.5;
+        sim.fk();
+        // first link anchors at torso center
+        assert!((sim.anchors[0].0 - sim.q[0]).abs() < 1e-9);
+        // chain: link1 anchor == link0 tip
+        assert_eq!(sim.anchors[1], sim.tips[0]);
+        assert_eq!(sim.anchors[2], sim.tips[1]);
+    }
+}

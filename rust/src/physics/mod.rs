@@ -1,0 +1,24 @@
+//! Planar articulated rigid-body substrate for the locomotion environments.
+//!
+//! MuJoCo is substituted (DESIGN.md §Substitutions) by a planar
+//! composite-rigid-body model: a torso (x, z, pitch) plus a tree of hinged
+//! links, torque-driven, with
+//!
+//! * forward kinematics over the link tree,
+//! * spring–damper ground contacts with Coulomb-capped tangential friction
+//!   at every link endpoint (and the torso ends),
+//! * Jacobian-transpose mapping of contact + gravity forces onto joint
+//!   coordinates, with a diagonal composite-inertia approximation of the
+//!   mass matrix,
+//! * motor-torque reaction on the torso pitch,
+//! * joint limits as stiff penalty springs, and
+//! * semi-implicit Euler integration.
+//!
+//! The model keeps the properties the paper's study actually exercises —
+//! continuous multi-dimensional state/action, contact-driven non-smooth
+//! dynamics, forward-velocity rewards — while staying a few hundred lines
+//! of dependency-free rust.
+
+pub mod chain;
+
+pub use chain::{ChainSim, LinkSpec, Morphology};

@@ -1,0 +1,428 @@
+//! Integer export: trained fake-quant policy -> integer-only deployment
+//! artifacts (lattice weights, FINN-style per-channel thresholds with the
+//! bias folded in, tanh LUT).
+//!
+//! Deployment semantics (paper §2.3): the input state is quantized on the
+//! fly with the floating-point input scale (the ONLY FP operation); every
+//! layer is an integer matrix-vector product with a wide accumulator,
+//! ReLU, and a requantization to the next lattice implemented with stored
+//! thresholds; the final layer requantizes to the signed output lattice and
+//! maps through a tanh lookup.
+//!
+//! Threshold construction: analytically seeded at
+//! `ceil(((q+0.5-?)*Δ - b_fq)/A)` then *nudged against the exact rescale
+//! function* so the threshold path equals the arithmetic rescale path on
+//! every integer accumulator value — making "thresholds ≡ requantization"
+//! a checked invariant rather than an assumption.
+
+use super::{absmax_scale, quantize, BitCfg, QRange};
+use super::fakequant::PolicyTensors;
+
+/// One integer layer of the deployed policy.
+#[derive(Clone, Debug)]
+pub struct IntLayer {
+    pub rows: usize,
+    pub cols: usize,
+    /// lattice weights, [rows, cols] row-major; |w| < 2^(b_core-1) <= 128
+    pub w_int: Vec<i8>,
+    /// input lattice of this layer (signed only for the first layer)
+    pub in_range: QRange,
+    /// output lattice after requantization
+    pub out_range: QRange,
+    /// requant thresholds, [rows, levels-1] row-major, monotone per row:
+    /// out_int = out_range.qmin + #{k : acc >= T[row][k]}
+    pub thresholds: Vec<i32>,
+    /// rescale semantics (the verification / alternative path):
+    /// real pre-activation y = a * acc + bias_fq[row]
+    pub a: f64,
+    pub bias_fq: Vec<f64>,
+    /// output lattice step s_out / qs_out
+    pub delta_out: f64,
+    pub relu: bool,
+    /// analytic accumulator bitwidth (for the synthesis estimator)
+    pub acc_bits: u32,
+    pub w_bits: u32,
+}
+
+impl IntLayer {
+    /// Exact rescale requantization of an integer accumulator value.
+    #[inline]
+    pub fn requant_rescale(&self, row: usize, acc: i64) -> i32 {
+        let mut y = self.a * acc as f64 + self.bias_fq[row];
+        if self.relu {
+            y = y.max(0.0);
+        }
+        let q = (y / self.delta_out).round_ties_even();
+        (q as i64).clamp(self.out_range.qmin as i64,
+                         self.out_range.qmax as i64) as i32
+    }
+
+    /// Threshold requantization (binary search over the per-row cutpoints).
+    #[inline]
+    pub fn requant_threshold(&self, row: usize, acc: i64) -> i32 {
+        let n = self.out_range.levels() - 1;
+        let t = &self.thresholds[row * n..(row + 1) * n];
+        // count of thresholds <= acc == partition point
+        let cnt = t.partition_point(|&th| (th as i64) <= acc);
+        self.out_range.qmin + cnt as i32
+    }
+
+    /// Worst-case |accumulator| (drives acc_bits and the synth model).
+    pub fn acc_abs_bound(&self) -> i64 {
+        let wmax = self
+            .w_int
+            .iter()
+            .fold(0i64, |m, &w| m.max((w as i64).abs()));
+        let xmax = self
+            .in_range
+            .qmax
+            .max(self.in_range.qmin.abs()) as i64;
+        self.cols as i64 * wmax * xmax
+    }
+}
+
+/// Fully integer policy: 3 layers + input quantizer + tanh LUT.
+#[derive(Clone, Debug)]
+pub struct IntPolicy {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub act_dim: usize,
+    pub bits: BitCfg,
+    pub s_in: f32,
+    pub in_range: QRange,
+    pub layers: Vec<IntLayer>,
+    /// tanh(delta_out * q) for q in [qmin, qmax] of the output lattice
+    pub tanh_lut: Vec<f32>,
+}
+
+fn build_layer(
+    w: &[f32], b: &[f32], rows: usize, cols: usize,
+    s_x: f32, s_a: f32,
+    in_range: QRange, out_range: QRange,
+    w_bits: u32, relu: bool,
+) -> IntLayer {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(b.len(), rows);
+    let rw = QRange::new(w_bits, true);
+    let rb = QRange::new(8, true);
+    let s_w = absmax_scale(w);
+    let s_b = absmax_scale(b);
+
+    let w_int: Vec<i8> = w
+        .iter()
+        .map(|&v| {
+            let q = quantize(v, s_w, rw);
+            debug_assert!((-128..=127).contains(&q));
+            q as i8
+        })
+        .collect();
+
+    // fake-quant bias values (f32 lattice points, then widened)
+    let bias_fq: Vec<f64> = b
+        .iter()
+        .map(|&v| {
+            let q = quantize(v, s_b, rb);
+            (s_b as f64 / rb.qs as f64) * q as f64
+        })
+        .collect();
+
+    // real = a * acc + bias_fq ; a = (s_x/qs_x) * (s_w/qs_w)
+    // Mirror the f32 lattice-value products: compute the per-step factors in
+    // f32 first (as the fake-quant path does), widen for the product.
+    let a = (s_x as f64 / in_range.qs as f64)
+        * (s_w as f64 / rw.qs as f64);
+    let delta_out = s_a as f64 / out_range.qs as f64;
+
+    let mut layer = IntLayer {
+        rows, cols, w_int, in_range, out_range,
+        thresholds: Vec::new(),
+        a, bias_fq, delta_out, relu,
+        acc_bits: 0, w_bits,
+    };
+
+    // accumulator width: ceil(log2(bound)) + sign bit
+    let bound = layer.acc_abs_bound().max(1);
+    layer.acc_bits = 64 - (bound as u64).leading_zeros() + 1;
+
+    // thresholds: seeded analytically, nudged against requant_rescale so
+    // both paths agree exactly for every integer acc.
+    let nlev = out_range.levels();
+    let mut thresholds = vec![0i32; rows * (nlev - 1)];
+    for row in 0..rows {
+        for k in 1..nlev {
+            let target = out_range.qmin + k as i32;
+            // y >= (target - 0.5) * delta  (ignoring tie rules; nudged below)
+            let y_star = (target as f64 - 0.5) * delta_out;
+            let mut t = ((y_star - layer.bias_fq[row]) / a).ceil() as i64;
+            let mut guard = 0;
+            while layer.requant_rescale(row, t) < target {
+                t += 1;
+                guard += 1;
+                assert!(guard < 1_000_000, "threshold nudge diverged");
+            }
+            while layer.requant_rescale(row, t - 1) >= target {
+                t -= 1;
+                guard += 1;
+                assert!(guard < 1_000_000, "threshold nudge diverged");
+            }
+            thresholds[row * (nlev - 1) + k - 1] =
+                t.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        }
+    }
+    layer.thresholds = thresholds;
+    layer
+}
+
+impl IntPolicy {
+    /// Build the integer policy from trained FP tensors + bit config.
+    pub fn from_tensors(p: &PolicyTensors, bits: BitCfg) -> IntPolicy {
+        p.validate();
+        let r_in = QRange::new(bits.b_in, true);
+        let r_core = QRange::new(bits.b_core, false);
+        let r_out = QRange::new(bits.b_out, true);
+
+        let l1 = build_layer(
+            p.fc1_w, p.fc1_b, p.hidden, p.obs_dim,
+            p.s_in, p.s_h1, r_in, r_core, bits.b_core, true);
+        let l2 = build_layer(
+            p.fc2_w, p.fc2_b, p.hidden, p.hidden,
+            p.s_h1, p.s_h2, r_core, r_core, bits.b_core, true);
+        let l3 = build_layer(
+            p.mean_w, p.mean_b, p.act_dim, p.hidden,
+            p.s_h2, p.s_out, r_core, r_out, bits.b_core, false);
+
+        let delta_out = l3.delta_out;
+        let tanh_lut: Vec<f32> = (r_out.qmin..=r_out.qmax)
+            .map(|q| ((q as f64) * delta_out).tanh() as f32)
+            .collect();
+
+        IntPolicy {
+            obs_dim: p.obs_dim,
+            hidden: p.hidden,
+            act_dim: p.act_dim,
+            bits,
+            s_in: p.s_in,
+            in_range: r_in,
+            layers: vec![l1, l2, l3],
+            tanh_lut,
+        }
+    }
+
+    /// Quantize a (normalized) observation — the single FP operation of the
+    /// deployment pipeline (paper §2.3 keeps this in FP too).
+    pub fn quantize_input(&self, obs: &[f32], out: &mut [i32]) {
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        for (o, &x) in out.iter_mut().zip(obs) {
+            *o = quantize(x, self.s_in, self.in_range);
+        }
+    }
+
+    /// Reference (unoptimized) integer forward via the *threshold* path.
+    /// The fast engine lives in `intinfer`; this one exists to verify it.
+    pub fn forward_naive(&self, obs: &[f32]) -> Vec<f32> {
+        let mut x: Vec<i32> = vec![0; self.obs_dim];
+        self.quantize_input(obs, &mut x);
+        for layer in &self.layers {
+            let mut next = vec![0i32; layer.rows];
+            for j in 0..layer.rows {
+                let wrow = &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
+                let mut acc = 0i64;
+                for k in 0..layer.cols {
+                    acc += wrow[k] as i64 * x[k] as i64;
+                }
+                next[j] = layer.requant_threshold(j, acc);
+            }
+            x = next;
+        }
+        let qmin = self.layers.last().unwrap().out_range.qmin;
+        x.iter()
+            .map(|&q| self.tanh_lut[(q - qmin) as usize])
+            .collect()
+    }
+
+    /// Same, but using the arithmetic rescale path (must agree exactly).
+    pub fn forward_naive_rescale(&self, obs: &[f32]) -> Vec<f32> {
+        let mut x: Vec<i32> = vec![0; self.obs_dim];
+        self.quantize_input(obs, &mut x);
+        for layer in &self.layers {
+            let mut next = vec![0i32; layer.rows];
+            for j in 0..layer.rows {
+                let wrow = &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
+                let mut acc = 0i64;
+                for k in 0..layer.cols {
+                    acc += wrow[k] as i64 * x[k] as i64;
+                }
+                next[j] = layer.requant_rescale(j, acc);
+            }
+            x = next;
+        }
+        let qmin = self.layers.last().unwrap().out_range.qmin;
+        x.iter()
+            .map(|&q| self.tanh_lut[(q - qmin) as usize])
+            .collect()
+    }
+
+    /// Total on-chip weight bits (synthesis estimator input).
+    pub fn weight_bits_total(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| (l.rows * l.cols) as u64 * l.w_bits as u64)
+            .sum()
+    }
+
+    /// Total threshold storage bits (the exponential-in-bitwidth term).
+    pub fn threshold_bits_total(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                (l.rows * (l.out_range.levels() - 1)) as u64
+                    * l.acc_bits as u64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fakequant;
+    use crate::util::rng::Rng;
+
+    pub(crate) struct ToyBufs {
+        pub w1: Vec<f32>, pub b1: Vec<f32>,
+        pub w2: Vec<f32>, pub b2: Vec<f32>,
+        pub w3: Vec<f32>, pub b3: Vec<f32>,
+    }
+
+    pub(crate) fn toy_bufs(seed: u64, obs: usize, h: usize, act: usize)
+                           -> ToyBufs {
+        let mut r = Rng::new(seed);
+        let mut mk = |n: usize, s: f32| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            r.fill_normal(&mut v);
+            v.iter_mut().for_each(|x| *x *= s);
+            v
+        };
+        ToyBufs {
+            w1: mk(h * obs, 0.5), b1: mk(h, 0.1),
+            w2: mk(h * h, 0.3), b2: mk(h, 0.1),
+            w3: mk(act * h, 0.3), b3: mk(act, 0.1),
+        }
+    }
+
+    pub(crate) fn toy_tensors<'a>(bufs: &'a ToyBufs, obs: usize, h: usize,
+                                  act: usize) -> PolicyTensors<'a> {
+        PolicyTensors {
+            obs_dim: obs, hidden: h, act_dim: act,
+            fc1_w: &bufs.w1, fc1_b: &bufs.b1,
+            fc2_w: &bufs.w2, fc2_b: &bufs.b2,
+            mean_w: &bufs.w3, mean_b: &bufs.b3,
+            s_in: 2.5, s_h1: 1.3, s_h2: 1.1, s_out: 0.9,
+        }
+    }
+
+    #[test]
+    fn thresholds_monotone_per_row() {
+        let bufs = toy_bufs(0, 5, 8, 2);
+        let p = toy_tensors(&bufs, 5, 8, 2);
+        let ip = IntPolicy::from_tensors(&p, BitCfg::new(4, 3, 8));
+        for layer in &ip.layers {
+            let n = layer.out_range.levels() - 1;
+            for row in 0..layer.rows {
+                let t = &layer.thresholds[row * n..(row + 1) * n];
+                for w in t.windows(2) {
+                    assert!(w[0] <= w[1], "non-monotone thresholds");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_equals_rescale_everywhere() {
+        // the central integer-deployment invariant, swept exhaustively over
+        // a band of accumulator values around every threshold
+        let bufs = toy_bufs(1, 4, 6, 3);
+        let p = toy_tensors(&bufs, 4, 6, 3);
+        for bits in [BitCfg::new(3, 2, 4), BitCfg::new(4, 3, 8),
+                     BitCfg::new(8, 8, 8)] {
+            let ip = IntPolicy::from_tensors(&p, bits);
+            for layer in &ip.layers {
+                let bound = layer.acc_abs_bound();
+                for row in 0..layer.rows {
+                    let step = (2 * bound / 500).max(1);
+                    let mut acc = -bound;
+                    while acc <= bound {
+                        assert_eq!(
+                            layer.requant_threshold(row, acc),
+                            layer.requant_rescale(row, acc),
+                            "bits={bits:?} row={row} acc={acc}"
+                        );
+                        acc += step;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn integer_forward_tracks_fakequant() {
+        // integer engine vs the fake-quant mirror: equality on the output
+        // lattice up to 1 LSB (f32 matmul reduction order differs)
+        let bufs = toy_bufs(2, 5, 16, 3);
+        let p = toy_tensors(&bufs, 5, 16, 3);
+        let bits = BitCfg::new(6, 4, 8);
+        let ip = IntPolicy::from_tensors(&p, bits);
+        let mut rng = Rng::new(9);
+        let lsb = (p.s_out as f64
+            / QRange::new(bits.b_out, true).qs as f64) as f32;
+        for _ in 0..50 {
+            let mut obs = vec![0.0f32; 5];
+            rng.fill_normal(&mut obs);
+            let ai = ip.forward_naive(&obs);
+            let af = fakequant::policy_forward(&p, &obs, 1, bits);
+            for (x, y) in ai.iter().zip(&af) {
+                // compare pre-tanh lattice distance via atanh
+                let d = (x.atanh() - y.atanh()).abs();
+                assert!(d <= 1.5 * lsb + 1e-5,
+                        "int={x} fq={y} d={d} lsb={lsb}");
+            }
+        }
+    }
+
+    #[test]
+    fn both_integer_paths_agree_on_random_inputs() {
+        let bufs = toy_bufs(3, 7, 12, 4);
+        let p = toy_tensors(&bufs, 7, 12, 4);
+        let ip = IntPolicy::from_tensors(&p, BitCfg::new(5, 3, 6));
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let mut obs = vec![0.0f32; 7];
+            rng.fill_normal(&mut obs);
+            assert_eq!(ip.forward_naive(&obs),
+                       ip.forward_naive_rescale(&obs));
+        }
+    }
+
+    #[test]
+    fn acc_bits_reasonable() {
+        let bufs = toy_bufs(4, 17, 64, 6);
+        let p = toy_tensors(&bufs, 17, 64, 6);
+        let ip = IntPolicy::from_tensors(&p, BitCfg::new(8, 4, 8));
+        for l in &ip.layers {
+            assert!(l.acc_bits >= 8 && l.acc_bits <= 32, "{}", l.acc_bits);
+        }
+    }
+
+    #[test]
+    fn storage_grows_exponentially_with_out_bits() {
+        // the paper's "requantization memory is exponential in activation
+        // bits" mechanism, at the data level
+        let bufs = toy_bufs(5, 5, 8, 2);
+        let p = toy_tensors(&bufs, 5, 8, 2);
+        let t4 = IntPolicy::from_tensors(&p, BitCfg::new(8, 4, 8))
+            .threshold_bits_total();
+        let t8 = IntPolicy::from_tensors(&p, BitCfg::new(8, 8, 8))
+            .threshold_bits_total();
+        assert!(t8 > 8 * t4, "t4={t4} t8={t8}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Pure-rust fake-quant policy forward — the CPU mirror of the L2 reference
+//! path (`python/compile/kernels/ref.py`), pinned by the golden vectors.
+//!
+//! Used for (a) parity-testing the integer engine without PJRT in the loop,
+//! and (b) as an independent cross-check of the AOT `*_fwd_*` artifacts.
+
+use super::{absmax_scale, qdq, BitCfg, QRange};
+
+/// Borrowed view of the actor tensors inside a flat parameter vector.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyTensors<'a> {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub act_dim: usize,
+    pub fc1_w: &'a [f32],
+    pub fc1_b: &'a [f32],
+    pub fc2_w: &'a [f32],
+    pub fc2_b: &'a [f32],
+    pub mean_w: &'a [f32],
+    pub mean_b: &'a [f32],
+    pub s_in: f32,
+    pub s_h1: f32,
+    pub s_h2: f32,
+    pub s_out: f32,
+}
+
+impl<'a> PolicyTensors<'a> {
+    pub fn validate(&self) {
+        assert_eq!(self.fc1_w.len(), self.hidden * self.obs_dim);
+        assert_eq!(self.fc1_b.len(), self.hidden);
+        assert_eq!(self.fc2_w.len(), self.hidden * self.hidden);
+        assert_eq!(self.fc2_b.len(), self.hidden);
+        assert_eq!(self.mean_w.len(), self.act_dim * self.hidden);
+        assert_eq!(self.mean_b.len(), self.act_dim);
+    }
+}
+
+/// One fake-quant linear layer: mirrors `qdq_linear_ref`.
+/// `x`: [B, din] row-major; `w`: [dout, din]; output [B, dout].
+#[allow(clippy::too_many_arguments)]
+pub fn qdq_linear(
+    x: &[f32], bsz: usize, din: usize,
+    w: &[f32], b: &[f32], dout: usize,
+    s_x: f32, s_a: f32,
+    bits_x: u32, bits_w: u32, bits_a: u32,
+    signed_in: bool, relu: bool, signed_out: bool,
+) -> Vec<f32> {
+    assert_eq!(x.len(), bsz * din);
+    assert_eq!(w.len(), dout * din);
+    assert_eq!(b.len(), dout);
+    let rx = QRange::new(bits_x, signed_in);
+    let rw = QRange::new(bits_w, true);
+    let rb = QRange::new(8, true);
+    let ra = QRange::new(bits_a, signed_out);
+    let s_w = absmax_scale(w);
+    let s_b = absmax_scale(b);
+
+    // fake-quantized operands (f32 lattice values, like the jnp ref)
+    let xq: Vec<f32> = x.iter().map(|&v| qdq(v, s_x, rx)).collect();
+    let wq: Vec<f32> = w.iter().map(|&v| qdq(v, s_w, rw)).collect();
+    let bq: Vec<f32> = b.iter().map(|&v| qdq(v, s_b, rb)).collect();
+
+    let mut out = vec![0.0f32; bsz * dout];
+    for i in 0..bsz {
+        let xrow = &xq[i * din..(i + 1) * din];
+        for j in 0..dout {
+            let wrow = &wq[j * din..(j + 1) * din];
+            let mut acc = 0.0f32;
+            for k in 0..din {
+                acc += xrow[k] * wrow[k];
+            }
+            let mut y = acc + bq[j];
+            if relu {
+                y = y.max(0.0);
+            }
+            out[i * dout + j] = qdq(y, s_a, ra);
+        }
+    }
+    out
+}
+
+/// Full fake-quant policy forward: returns actions [B, act_dim] in [-1, 1].
+pub fn policy_forward(p: &PolicyTensors, obs: &[f32], bsz: usize,
+                      bits: BitCfg) -> Vec<f32> {
+    p.validate();
+    assert_eq!(obs.len(), bsz * p.obs_dim);
+    let h1 = qdq_linear(
+        obs, bsz, p.obs_dim, p.fc1_w, p.fc1_b, p.hidden,
+        p.s_in, p.s_h1, bits.b_in, bits.b_core, bits.b_core,
+        true, true, false);
+    let h2 = qdq_linear(
+        &h1, bsz, p.hidden, p.fc2_w, p.fc2_b, p.hidden,
+        p.s_h1, p.s_h2, bits.b_core, bits.b_core, bits.b_core,
+        false, true, false);
+    let pre = qdq_linear(
+        &h2, bsz, p.hidden, p.mean_w, p.mean_b, p.act_dim,
+        p.s_h2, p.s_out, bits.b_core, bits.b_core, bits.b_out,
+        false, false, true);
+    pre.iter().map(|&v| v.tanh()).collect()
+}
+
+/// Pre-tanh variant (for lattice-level comparisons against `intinfer`).
+pub fn policy_pre_tanh(p: &PolicyTensors, obs: &[f32], bsz: usize,
+                       bits: BitCfg) -> Vec<f32> {
+    p.validate();
+    let h1 = qdq_linear(
+        obs, bsz, p.obs_dim, p.fc1_w, p.fc1_b, p.hidden,
+        p.s_in, p.s_h1, bits.b_in, bits.b_core, bits.b_core,
+        true, true, false);
+    let h2 = qdq_linear(
+        &h1, bsz, p.hidden, p.fc2_w, p.fc2_b, p.hidden,
+        p.s_h1, p.s_h2, bits.b_core, bits.b_core, bits.b_core,
+        false, true, false);
+    qdq_linear(
+        &h2, bsz, p.hidden, p.mean_w, p.mean_b, p.act_dim,
+        p.s_h2, p.s_out, bits.b_core, bits.b_core, bits.b_out,
+        false, false, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy<'a>(bufs: &'a ToyBufs) -> PolicyTensors<'a> {
+        PolicyTensors {
+            obs_dim: 3, hidden: 4, act_dim: 2,
+            fc1_w: &bufs.w1, fc1_b: &bufs.b1,
+            fc2_w: &bufs.w2, fc2_b: &bufs.b2,
+            mean_w: &bufs.w3, mean_b: &bufs.b3,
+            s_in: 2.0, s_h1: 1.5, s_h2: 1.5, s_out: 1.0,
+        }
+    }
+
+    struct ToyBufs {
+        w1: Vec<f32>, b1: Vec<f32>,
+        w2: Vec<f32>, b2: Vec<f32>,
+        w3: Vec<f32>, b3: Vec<f32>,
+    }
+
+    fn toy_bufs(seed: u64) -> ToyBufs {
+        let mut r = Rng::new(seed);
+        let mut mk = |n: usize| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            r.fill_normal(&mut v);
+            v
+        };
+        ToyBufs {
+            w1: mk(4 * 3), b1: mk(4),
+            w2: mk(4 * 4), b2: mk(4),
+            w3: mk(2 * 4), b3: mk(2),
+        }
+    }
+
+    #[test]
+    fn actions_bounded() {
+        let bufs = toy_bufs(0);
+        let p = toy(&bufs);
+        let obs = [0.5f32, -1.0, 2.0, 0.1, 0.0, -0.7];
+        let a = policy_forward(&p, &obs, 2, BitCfg::new(4, 3, 8));
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn pre_tanh_on_lattice() {
+        let bufs = toy_bufs(1);
+        let p = toy(&bufs);
+        let obs = [0.5f32, -1.0, 2.0];
+        let bits = BitCfg::new(4, 3, 6);
+        let pre = policy_pre_tanh(&p, &obs, 1, bits);
+        let r = QRange::new(bits.b_out, true);
+        let step = p.s_out / r.qs as f32;
+        for v in pre {
+            let k = v / step;
+            assert!((k - k.round()).abs() < 1e-4, "off-lattice: {v}");
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        // fake-quant at 8 bits must be closer to fp32 than at 2 bits
+        let bufs = toy_bufs(2);
+        let p = toy(&bufs);
+        let obs = [0.9f32, -0.3, 1.2];
+        let a2 = policy_forward(&p, &obs, 1, BitCfg::uniform(2));
+        let a8 = policy_forward(&p, &obs, 1, BitCfg::uniform(8));
+        // fp32 reference
+        let matvec = |w: &[f32], b: &[f32], x: &[f32], dout: usize,
+                      relu: bool| -> Vec<f32> {
+            let din = x.len();
+            (0..dout)
+                .map(|j| {
+                    let mut acc = b[j];
+                    for k in 0..din {
+                        acc += w[j * din + k] * x[k];
+                    }
+                    if relu { acc.max(0.0) } else { acc }
+                })
+                .collect()
+        };
+        let h1 = matvec(p.fc1_w, p.fc1_b, &obs, 4, true);
+        let h2 = matvec(p.fc2_w, p.fc2_b, &h1, 4, true);
+        let pre = matvec(p.mean_w, p.mean_b, &h2, 2, false);
+        let afp: Vec<f32> = pre.iter().map(|v| v.tanh()).collect();
+        let err = |a: &[f32]| -> f32 {
+            a.iter().zip(&afp).map(|(x, y)| (x - y).abs()).sum()
+        };
+        assert!(err(&a8) <= err(&a2) + 1e-6,
+                "e8={} e2={}", err(&a8), err(&a2));
+    }
+}

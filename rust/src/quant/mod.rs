@@ -1,0 +1,137 @@
+//! Quantization core: the rust mirror of eq. (1), integer weight export,
+//! FINN-style threshold requantization, and the tanh output LUT.
+//!
+//! This module is the bridge between the L2 fake-quant training graphs and
+//! the integer-only deployment engine (`intinfer`):
+//!
+//! * [`qdq`] mirrors `python/compile/quantize.py` bit-for-bit (both round
+//!   half-to-even); pinned by the golden vectors in `artifacts/golden/`.
+//! * [`export::IntPolicy`] converts a trained flat parameter vector into the
+//!   integer artifacts the FPGA datapath needs: lattice weights, per-channel
+//!   requantization thresholds (bias folded in, the FINN trick that removes
+//!   every FP op), and the final tanh lookup table.
+//! * The threshold construction is *verified against the rescale semantics
+//!   at build time* (monotone nudge), so the threshold path and the
+//!   arithmetic rescale path agree exactly on every integer accumulator
+//!   value — a property the test-suite re-checks.
+
+pub mod export;
+pub mod fakequant;
+
+/// Quantization lattice for a bitwidth/signedness pair (eq. 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QRange {
+    pub qmin: i32,
+    pub qmax: i32,
+    /// to-integer scaling factor q_s = max(|qmin|, |qmax|)
+    pub qs: i32,
+}
+
+impl QRange {
+    pub fn new(bits: u32, signed: bool) -> QRange {
+        assert!((1..=16).contains(&bits), "bits={bits}");
+        if signed {
+            let qs = 1i32 << (bits - 1);
+            QRange { qmin: -qs, qmax: qs - 1, qs }
+        } else {
+            let qmax = (1i32 << bits) - 1;
+            QRange { qmin: 0, qmax, qs: qmax }
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        (self.qmax - self.qmin + 1) as usize
+    }
+}
+
+/// Q_b(x; s): project onto the integer lattice. Mirrors the L2 graphs:
+/// the division/multiplication happen in f32 and rounding is half-to-even.
+#[inline]
+pub fn quantize(x: f32, scale: f32, r: QRange) -> i32 {
+    let scale = scale.max(1e-12);
+    let v = (x / scale * r.qs as f32).round_ties_even();
+    (v as i64).clamp(r.qmin as i64, r.qmax as i64) as i32
+}
+
+/// QDQ_b(x; s): fake-quantize (eq. 1).
+#[inline]
+pub fn qdq(x: f32, scale: f32, r: QRange) -> f32 {
+    let scale = scale.max(1e-12);
+    scale / r.qs as f32 * quantize(x, scale, r) as f32
+}
+
+/// Per-tensor absmax scale (weight / bias quantizers).
+pub fn absmax_scale(w: &[f32]) -> f32 {
+    w.iter().fold(0.0f32, |m, &x| m.max(x.abs())) + 1e-12
+}
+
+/// Bitwidth configuration of a deployed policy (paper notation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BitCfg {
+    pub b_in: u32,
+    pub b_core: u32,
+    pub b_out: u32,
+}
+
+impl BitCfg {
+    pub fn new(b_in: u32, b_core: u32, b_out: u32) -> BitCfg {
+        BitCfg { b_in, b_core, b_out }
+    }
+
+    pub fn uniform(b: u32) -> BitCfg {
+        BitCfg::new(b, b, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_match_paper() {
+        // signed b=3: [-4,3], qs=4 ; unsigned b=3: [0,7], qs=7
+        assert_eq!(QRange::new(3, true),
+                   QRange { qmin: -4, qmax: 3, qs: 4 });
+        assert_eq!(QRange::new(3, false),
+                   QRange { qmin: 0, qmax: 7, qs: 7 });
+        assert_eq!(QRange::new(8, true).levels(), 256);
+    }
+
+    #[test]
+    fn quantize_clips_and_rounds_ties_even() {
+        let r = QRange::new(4, true); // [-8, 7], qs = 8
+        assert_eq!(quantize(100.0, 1.0, r), 7);
+        assert_eq!(quantize(-100.0, 1.0, r), -8);
+        // 0.5/1.0*8 = 4.0 exactly -> 4 ; 0.4375*8 = 3.5 -> ties-even -> 4
+        assert_eq!(quantize(0.4375, 1.0, r), 4);
+        // 0.3125*8 = 2.5 -> ties-even -> 2
+        assert_eq!(quantize(0.3125, 1.0, r), 2);
+    }
+
+    #[test]
+    fn qdq_is_projection() {
+        let r = QRange::new(5, false);
+        for i in 0..200 {
+            let x = i as f32 * 0.037;
+            let y = qdq(x, 3.7, r);
+            assert_eq!(y, qdq(y, 3.7, r));
+        }
+    }
+
+    #[test]
+    fn qdq_error_bound() {
+        let r = QRange::new(6, true);
+        let s = 2.0f32;
+        let step = s / r.qs as f32;
+        for i in -100..100 {
+            let x = i as f32 * 0.019; // inside range
+            let y = qdq(x, s, r);
+            assert!((y - x).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn absmax() {
+        assert!((absmax_scale(&[1.0, -3.5, 2.0]) - 3.5).abs() < 1e-6);
+    }
+}

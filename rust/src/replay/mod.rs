@@ -1,0 +1,180 @@
+//! Transition replay buffer (ring, uniform sampling) — CleanRL semantics.
+//!
+//! Stores flattened f32 transitions in one contiguous arena to keep the
+//! sampling hot path allocation-free: `sample_into` scatters directly into
+//! the batch staging buffers the PJRT runtime uploads from.
+
+use crate::util::rng::Rng;
+
+/// Fixed-capacity ring buffer of (obs, act, reward, next_obs, done).
+pub struct Replay {
+    pub capacity: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: Vec<f32>,
+    next_obs: Vec<f32>,
+    done: Vec<f32>,
+    len: usize,
+    head: usize,
+}
+
+impl Replay {
+    pub fn new(capacity: usize, obs_dim: usize, act_dim: usize) -> Replay {
+        Replay {
+            capacity,
+            obs_dim,
+            act_dim,
+            obs: vec![0.0; capacity * obs_dim],
+            act: vec![0.0; capacity * act_dim],
+            rew: vec![0.0; capacity],
+            next_obs: vec![0.0; capacity * obs_dim],
+            done: vec![0.0; capacity],
+            len: 0,
+            head: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Push one transition (overwrites the oldest when full).
+    /// `done` is the *termination* flag (not truncation): bootstrapping
+    /// continues through time-limit truncations, as in CleanRL.
+    pub fn push(&mut self, obs: &[f32], act: &[f32], rew: f32,
+                next_obs: &[f32], done: bool) {
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        debug_assert_eq!(act.len(), self.act_dim);
+        debug_assert_eq!(next_obs.len(), self.obs_dim);
+        let i = self.head;
+        self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+            .copy_from_slice(obs);
+        self.act[i * self.act_dim..(i + 1) * self.act_dim]
+            .copy_from_slice(act);
+        self.rew[i] = rew;
+        self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+            .copy_from_slice(next_obs);
+        self.done[i] = if done { 1.0 } else { 0.0 };
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+    }
+
+    /// Uniform minibatch sample into caller-provided staging buffers
+    /// (shapes: [B,obs], [B,act], [B], [B,obs], [B]).
+    pub fn sample_into(
+        &self, rng: &mut Rng, batch: usize,
+        obs: &mut [f32], act: &mut [f32], rew: &mut [f32],
+        next_obs: &mut [f32], done: &mut [f32],
+    ) {
+        assert!(self.len > 0, "sampling from empty replay");
+        debug_assert_eq!(obs.len(), batch * self.obs_dim);
+        debug_assert_eq!(act.len(), batch * self.act_dim);
+        for b in 0..batch {
+            let i = rng.below(self.len);
+            obs[b * self.obs_dim..(b + 1) * self.obs_dim]
+                .copy_from_slice(
+                    &self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            act[b * self.act_dim..(b + 1) * self.act_dim]
+                .copy_from_slice(
+                    &self.act[i * self.act_dim..(i + 1) * self.act_dim]);
+            rew[b] = self.rew[i];
+            next_obs[b * self.obs_dim..(b + 1) * self.obs_dim]
+                .copy_from_slice(
+                    &self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            done[b] = self.done[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_n(r: &mut Replay, n: usize) {
+        for i in 0..n {
+            let v = i as f32;
+            r.push(&[v, v], &[v], v, &[v + 1.0, v + 1.0], i % 7 == 0);
+        }
+    }
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut r = Replay::new(8, 2, 1);
+        push_n(&mut r, 5);
+        assert_eq!(r.len(), 5);
+        push_n(&mut r, 10);
+        assert_eq!(r.len(), 8); // capacity-bound
+    }
+
+    #[test]
+    fn overwrites_oldest() {
+        let mut r = Replay::new(4, 2, 1);
+        push_n(&mut r, 6); // values 0..5; slots hold 2,3,4,5
+        let mut rng = Rng::new(0);
+        let (mut o, mut a, mut rw, mut no, mut d) =
+            (vec![0.0; 2 * 64], vec![0.0; 64], vec![0.0; 64],
+             vec![0.0; 2 * 64], vec![0.0; 64]);
+        r.sample_into(&mut rng, 64, &mut o, &mut a, &mut rw, &mut no,
+                      &mut d);
+        assert!(rw.iter().all(|&x| x >= 2.0 && x <= 5.0), "{rw:?}");
+    }
+
+    #[test]
+    fn sample_consistency() {
+        // sampled (obs, act, rew, next_obs) tuples must come from the same
+        // transition: here next_obs == obs + 1 by construction
+        let mut r = Replay::new(100, 2, 1);
+        push_n(&mut r, 50);
+        let mut rng = Rng::new(1);
+        let (mut o, mut a, mut rw, mut no, mut d) =
+            (vec![0.0; 2 * 32], vec![0.0; 32], vec![0.0; 32],
+             vec![0.0; 2 * 32], vec![0.0; 32]);
+        r.sample_into(&mut rng, 32, &mut o, &mut a, &mut rw, &mut no,
+                      &mut d);
+        for b in 0..32 {
+            assert_eq!(o[2 * b] + 1.0, no[2 * b]);
+            assert_eq!(o[2 * b], rw[b]);
+            assert_eq!(a[b], rw[b]);
+            let done_expected = (rw[b] as usize) % 7 == 0;
+            assert_eq!(d[b] == 1.0, done_expected);
+        }
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        let mut r = Replay::new(10, 2, 1);
+        push_n(&mut r, 10);
+        let mut rng = Rng::new(2);
+        let mut counts = [0usize; 10];
+        let (mut o, mut a, mut rw, mut no, mut d) =
+            (vec![0.0; 2 * 100], vec![0.0; 100], vec![0.0; 100],
+             vec![0.0; 2 * 100], vec![0.0; 100]);
+        for _ in 0..100 {
+            r.sample_into(&mut rng, 100, &mut o, &mut a, &mut rw, &mut no,
+                          &mut d);
+            for b in 0..100 {
+                counts[rw[b] as usize] += 1;
+            }
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 250.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sampling from empty replay")]
+    fn empty_sample_panics() {
+        let r = Replay::new(4, 1, 1);
+        let mut rng = Rng::new(0);
+        let (mut o, mut a, mut rw, mut no, mut d) =
+            (vec![0.0; 1], vec![0.0; 1], vec![0.0; 1], vec![0.0; 1],
+             vec![0.0; 1]);
+        r.sample_into(&mut rng, 1, &mut o, &mut a, &mut rw, &mut no, &mut d);
+    }
+}

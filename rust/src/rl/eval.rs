@@ -1,0 +1,161 @@
+//! Deterministic policy evaluation: rollouts, input-noise injection
+//! (Fig. 3), and three interchangeable policy backends whose agreement is
+//! itself a validation of the deployment chain:
+//!
+//! * `Pjrt`      — the AOT `*_fwd_*` artifact (L2 graph incl. the Pallas
+//!                 kernel path),
+//! * `FakeQuant` — the pure-rust fake-quant mirror (`quant::fakequant`),
+//! * `Integer`   — the integer-only engine (`intinfer`), i.e. exactly what
+//!                 the FPGA executes.
+
+use anyhow::Result;
+
+use super::{fwd_hyper, policy::extract_tensors, Algo};
+use crate::envs;
+use crate::intinfer::IntEngine;
+use crate::quant::export::IntPolicy;
+use crate::quant::{fakequant, BitCfg};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::stats::{self, ObsNormalizer};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalBackend {
+    Pjrt,
+    FakeQuant,
+    Integer,
+}
+
+impl EvalBackend {
+    pub fn parse(s: &str) -> Result<EvalBackend> {
+        Ok(match s {
+            "pjrt" => EvalBackend::Pjrt,
+            "fakequant" => EvalBackend::FakeQuant,
+            "integer" | "int" => EvalBackend::Integer,
+            _ => anyhow::bail!("unknown backend `{s}` (pjrt|fakequant|int)"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalOpts {
+    pub algo: Algo,
+    pub env: String,
+    pub hidden: usize,
+    pub bits: BitCfg,
+    pub quant_on: bool,
+    pub episodes: usize,
+    /// i.i.d. Gaussian noise added to the *normalized* observation
+    /// (paper §3.3): ŝ = norm(s) + ε, ε ~ N(0, σ²)
+    pub noise_std: f64,
+    pub seed: u64,
+    pub backend: EvalBackend,
+}
+
+/// Roll out the deterministic policy; returns (mean, std) of episode
+/// returns.
+pub fn evaluate(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
+                norm: &ObsNormalizer) -> Result<(f64, f64)> {
+    let returns = evaluate_returns(rt, opts, flat, norm)?;
+    Ok((stats::mean(&returns), stats::std(&returns)))
+}
+
+/// Full per-episode returns (for robustness bands and selection rules).
+pub fn evaluate_returns(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
+                        norm: &ObsNormalizer) -> Result<Vec<f64>> {
+    let mut env = envs::make(&opts.env)?;
+    let (obs_dim, act_dim) = (env.obs_dim(), env.act_dim());
+    let mut rng = Rng::new(opts.seed);
+
+    // backend setup
+    let exe_fwd = match opts.backend {
+        EvalBackend::Pjrt => Some(rt.exe_for(opts.algo.name(), "fwd",
+                                             &opts.env, opts.hidden,
+                                             Some(1))?),
+        _ => None,
+    };
+    let spec = rt
+        .manifest
+        .specs
+        .get(&format!("{}_{}_h{}", opts.algo.name(), opts.env, opts.hidden))
+        .ok_or_else(|| anyhow::anyhow!("no spec for eval config"))?;
+    let tensors = extract_tensors(spec, flat, obs_dim, opts.hidden,
+                                  act_dim)?;
+    let mut int_engine = match opts.backend {
+        EvalBackend::Integer => {
+            anyhow::ensure!(opts.quant_on,
+                            "integer backend requires a quantized policy");
+            Some(IntEngine::new(IntPolicy::from_tensors(&tensors,
+                                                        opts.bits)))
+        }
+        _ => None,
+    };
+    let hyper = fwd_hyper(rt, opts.bits, opts.quant_on);
+
+    let mut returns = Vec::with_capacity(opts.episodes);
+    let mut action = vec![0.0f32; act_dim];
+    for _ in 0..opts.episodes {
+        let mut obs = env.reset(&mut rng);
+        let mut ep = 0.0f64;
+        loop {
+            let mut x = obs.clone();
+            norm.normalize(&mut x);
+            if opts.noise_std > 0.0 {
+                for v in x.iter_mut() {
+                    *v += (rng.normal() * opts.noise_std) as f32;
+                }
+            }
+            match opts.backend {
+                EvalBackend::Pjrt => {
+                    let out = exe_fwd.as_ref().unwrap().run_f32(&[
+                        flat, &x, &hyper,
+                    ])?;
+                    action.copy_from_slice(&out[0]);
+                }
+                EvalBackend::FakeQuant => {
+                    if opts.quant_on {
+                        let a = fakequant::policy_forward(&tensors, &x, 1,
+                                                          opts.bits);
+                        action.copy_from_slice(&a);
+                    } else {
+                        fp32_forward(&tensors, &x, &mut action);
+                    }
+                }
+                EvalBackend::Integer => {
+                    int_engine.as_mut().unwrap().infer(&x, &mut action);
+                }
+            }
+            let out = env.step(&action);
+            ep += out.reward;
+            obs = out.obs;
+            if out.terminated || out.truncated {
+                break;
+            }
+        }
+        returns.push(ep);
+    }
+    Ok(returns)
+}
+
+/// Plain FP32 forward (quant gate off) for the FakeQuant backend.
+fn fp32_forward(p: &fakequant::PolicyTensors, x: &[f32], out: &mut [f32]) {
+    let matvec = |w: &[f32], b: &[f32], x: &[f32], dout: usize,
+                  relu: bool| -> Vec<f32> {
+        let din = x.len();
+        (0..dout)
+            .map(|j| {
+                let mut acc = b[j];
+                for k in 0..din {
+                    acc += w[j * din + k] * x[k];
+                }
+                if relu { acc.max(0.0) } else { acc }
+            })
+            .collect()
+    };
+    let h1 = matvec(p.fc1_w, p.fc1_b, x, p.hidden, true);
+    let h2 = matvec(p.fc2_w, p.fc2_b, &h1, p.hidden, true);
+    let pre = matvec(p.mean_w, p.mean_b, &h2, p.act_dim, false);
+    for (o, v) in out.iter_mut().zip(pre) {
+        *o = v.tanh();
+    }
+}

@@ -1,0 +1,346 @@
+//! RL training orchestration: the rust event loop driving the AOT train
+//! graphs (SAC / DDPG) against the rust environments, CleanRL-faithfully.
+//!
+//! The rust side owns: environment stepping, running input normalization,
+//! the replay buffer, exploration noise, the hyper vector, evaluation
+//! rollouts, and checkpointing. The gradient math is entirely inside the
+//! AOT HLO executables.
+
+pub mod eval;
+pub mod policy;
+
+use anyhow::Result;
+
+use crate::envs;
+use crate::quant::BitCfg;
+use crate::replay::Replay;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::stats::ObsNormalizer;
+
+pub use eval::{evaluate, EvalBackend, EvalOpts};
+pub use policy::{extract_tensors, init_flat};
+
+/// Which paper algorithm (both from CleanRL).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Sac,
+    Ddpg,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Sac => "sac",
+            Algo::Ddpg => "ddpg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo> {
+        match s {
+            "sac" => Ok(Algo::Sac),
+            "ddpg" => Ok(Algo::Ddpg),
+            _ => anyhow::bail!("unknown algo `{s}` (sac|ddpg)"),
+        }
+    }
+}
+
+/// Training configuration (defaults = paper Appendix A / CleanRL).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub algo: Algo,
+    pub env: String,
+    pub hidden: usize,
+    pub bits: BitCfg,
+    /// false = FP32 baseline (the QDQ gate in the graphs bypasses exactly)
+    pub quant_on: bool,
+    /// running per-dimension input normalization (paper Appendix C)
+    pub normalize: bool,
+    pub total_steps: usize,
+    pub learning_starts: usize,
+    pub seed: u64,
+    pub lr_policy: f64,
+    pub lr_q: f64,
+    pub gamma: f64,
+    pub tau: f64,
+    pub policy_freq: usize,
+    pub scale_warmup: usize,
+    /// DDPG exploration noise std (CleanRL: 0.1)
+    pub exploration_noise: f64,
+    pub replay_capacity: usize,
+    /// evaluation cadence; 0 disables intermediate evals
+    pub eval_every: usize,
+    pub eval_episodes: usize,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(algo: Algo, env: &str) -> TrainConfig {
+        TrainConfig {
+            algo,
+            env: env.to_string(),
+            hidden: 256,
+            bits: BitCfg::new(8, 8, 8),
+            quant_on: true,
+            normalize: true,
+            total_steps: 25_000,
+            learning_starts: 5_000,
+            seed: 1,
+            lr_policy: 3e-4,
+            lr_q: 1e-3,
+            gamma: 0.99,
+            tau: 0.005,
+            policy_freq: 2,
+            scale_warmup: 300,
+            exploration_noise: 0.1,
+            replay_capacity: 1_000_000,
+            eval_every: 0,
+            eval_episodes: 10,
+            verbose: false,
+        }
+    }
+}
+
+/// A point on the training curve (Fig. 2).
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub mean_return: f64,
+    pub std_return: f64,
+}
+
+/// Everything a finished run hands back to the coordinator.
+pub struct TrainResult {
+    pub cfg: TrainConfig,
+    pub flat: Vec<f32>,
+    pub normalizer: ObsNormalizer,
+    pub curve: Vec<CurvePoint>,
+    /// returns of the episodes finished *during* training (exploration policy)
+    pub train_episode_returns: Vec<f64>,
+    pub last_metrics: Vec<f32>,
+    pub steps_per_sec: f64,
+}
+
+/// Build the hyper vector for a train step.
+fn hyper_vec(rt: &Runtime, cfg: &TrainConfig, step: usize, do_policy: bool,
+             target_entropy: f64) -> Vec<f32> {
+    let m = &rt.manifest;
+    let mut h = vec![0.0f32; m.hyper_len];
+    h[m.hyper_idx("step")] = step as f32;
+    h[m.hyper_idx("lr_policy")] = cfg.lr_policy as f32;
+    h[m.hyper_idx("lr_q")] = cfg.lr_q as f32;
+    h[m.hyper_idx("lr_alpha")] = cfg.lr_q as f32; // CleanRL: alpha uses q_lr
+    h[m.hyper_idx("gamma")] = cfg.gamma as f32;
+    h[m.hyper_idx("tau")] = cfg.tau as f32;
+    h[m.hyper_idx("do_policy")] = if do_policy { 1.0 } else { 0.0 };
+    h[m.hyper_idx("b_in")] = cfg.bits.b_in as f32;
+    h[m.hyper_idx("b_core")] = cfg.bits.b_core as f32;
+    h[m.hyper_idx("b_out")] = cfg.bits.b_out as f32;
+    h[m.hyper_idx("target_entropy")] = target_entropy as f32;
+    h[m.hyper_idx("warmup")] = cfg.scale_warmup as f32;
+    h[m.hyper_idx("ema_decay")] = 0.9;
+    h[m.hyper_idx("quant_on")] = if cfg.quant_on { 1.0 } else { 0.0 };
+    h
+}
+
+/// Hyper vector for forward/act artifacts (only bits + gate matter).
+pub fn fwd_hyper(rt: &Runtime, bits: BitCfg, quant_on: bool) -> Vec<f32> {
+    let m = &rt.manifest;
+    let mut h = vec![0.0f32; m.hyper_len];
+    h[m.hyper_idx("b_in")] = bits.b_in as f32;
+    h[m.hyper_idx("b_core")] = bits.b_core as f32;
+    h[m.hyper_idx("b_out")] = bits.b_out as f32;
+    h[m.hyper_idx("quant_on")] = if quant_on { 1.0 } else { 0.0 };
+    h
+}
+
+/// Train one policy. Blocking; one OS thread per concurrent run.
+pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainResult> {
+    let t_start = std::time::Instant::now();
+    let mut env = envs::make(&cfg.env)?;
+    let (obs_dim, act_dim) = (env.obs_dim(), env.act_dim());
+    {
+        let dims = rt.manifest.envs.get(&cfg.env).ok_or_else(|| {
+            anyhow::anyhow!("env `{}` not in manifest", cfg.env)
+        })?;
+        anyhow::ensure!(dims.obs_dim == obs_dim && dims.act_dim == act_dim,
+                        "manifest/env dims mismatch for {}", cfg.env);
+    }
+
+    let algo = cfg.algo.name();
+    let exe_train = rt.exe_for(algo, "train", &cfg.env, cfg.hidden, None)?;
+    let exe_act = match cfg.algo {
+        Algo::Sac => Some(rt.exe_for("sac", "act", &cfg.env, cfg.hidden,
+                                     None)?),
+        Algo::Ddpg => None,
+    };
+    let exe_fwd = rt.exe_for(algo, "fwd", &cfg.env, cfg.hidden, Some(1))?;
+
+    let spec = &rt.manifest.specs[&exe_train.meta.spec_key];
+    let n = spec.n_params;
+    let batch = rt.manifest.train_batch;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut env_rng = rng.fork(11);
+    let mut init_rng = rng.fork(22);
+    let mut eval_seed = cfg.seed ^ 0x5eed;
+
+    let mut flat = init_flat(spec, &mut init_rng);
+    let mut m_vec = vec![0.0f32; n];
+    let mut v_vec = vec![0.0f32; n];
+
+    let mut norm = ObsNormalizer::new(obs_dim, cfg.normalize);
+    let mut replay = Replay::new(
+        cfg.replay_capacity.min(cfg.total_steps.max(1)), obs_dim, act_dim);
+
+    // staging buffers (allocation-free loop)
+    let mut b_obs = vec![0.0f32; batch * obs_dim];
+    let mut b_act = vec![0.0f32; batch * act_dim];
+    let mut b_rew = vec![0.0f32; batch];
+    let mut b_nobs = vec![0.0f32; batch * obs_dim];
+    let mut b_done = vec![0.0f32; batch];
+    let mut eps1 = vec![0.0f32; batch * act_dim];
+    let mut eps2 = vec![0.0f32; batch * act_dim];
+    let mut act_eps = vec![0.0f32; act_dim];
+
+    let target_entropy = -(act_dim as f64);
+
+    let raw_obs = env.reset(&mut env_rng);
+    norm.observe(&raw_obs);
+    let mut obs_n = raw_obs;
+    norm.normalize(&mut obs_n);
+
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    let mut train_episode_returns: Vec<f64> = Vec::new();
+    let mut ep_return = 0.0f64;
+    let mut last_metrics = vec![0.0f32; rt.manifest.metric_len];
+    let mut update_count: usize = 0;
+
+    for t in 0..cfg.total_steps {
+        // ---- act ----------------------------------------------------------
+        let action: Vec<f32> = if t < cfg.learning_starts {
+            (0..act_dim)
+                .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+                .collect()
+        } else {
+            match cfg.algo {
+                Algo::Sac => {
+                    rng.fill_normal(&mut act_eps);
+                    let h = fwd_hyper(rt, cfg.bits, cfg.quant_on);
+                    let out = exe_act.as_ref().unwrap().run_f32(&[
+                        &flat, &obs_n, &act_eps, &h,
+                    ])?;
+                    out.into_iter().next().unwrap()
+                }
+                Algo::Ddpg => {
+                    let h = fwd_hyper(rt, cfg.bits, cfg.quant_on);
+                    let out = exe_fwd.run_f32(&[&flat, &obs_n, &h])?;
+                    out[0]
+                        .iter()
+                        .map(|&a| {
+                            (a + (rng.normal() * cfg.exploration_noise) as f32)
+                                .clamp(-1.0, 1.0)
+                        })
+                        .collect()
+                }
+            }
+        };
+
+        // ---- env step -------------------------------------------------------
+        let out = env.step(&action);
+        ep_return += out.reward;
+        let mut next_n = out.obs.clone();
+        norm.observe(&out.obs);
+        norm.normalize(&mut next_n);
+        replay.push(&obs_n, &action, out.reward as f32, &next_n,
+                    out.terminated);
+
+        if out.terminated || out.truncated {
+            train_episode_returns.push(ep_return);
+            ep_return = 0.0;
+            let raw = env.reset(&mut env_rng);
+            norm.observe(&raw);
+            obs_n = raw;
+            norm.normalize(&mut obs_n);
+        } else {
+            obs_n = next_n;
+        }
+
+        // ---- learn ----------------------------------------------------------
+        if t >= cfg.learning_starts {
+            update_count += 1;
+            replay.sample_into(&mut rng, batch, &mut b_obs, &mut b_act,
+                               &mut b_rew, &mut b_nobs, &mut b_done);
+            let do_policy = update_count % cfg.policy_freq == 0;
+            let h = hyper_vec(rt, cfg, update_count, do_policy,
+                              target_entropy);
+            let outs = match cfg.algo {
+                Algo::Sac => {
+                    rng.fill_normal(&mut eps1);
+                    rng.fill_normal(&mut eps2);
+                    exe_train.run_f32(&[
+                        &flat, &m_vec, &v_vec, &b_obs, &b_act, &b_rew,
+                        &b_nobs, &b_done, &eps1, &eps2, &h,
+                    ])?
+                }
+                Algo::Ddpg => exe_train.run_f32(&[
+                    &flat, &m_vec, &v_vec, &b_obs, &b_act, &b_rew, &b_nobs,
+                    &b_done, &h,
+                ])?,
+            };
+            let mut it = outs.into_iter();
+            flat = it.next().unwrap();
+            m_vec = it.next().unwrap();
+            v_vec = it.next().unwrap();
+            last_metrics = it.next().unwrap();
+            anyhow::ensure!(
+                last_metrics.iter().all(|x| x.is_finite()),
+                "non-finite training metrics at step {t}: {last_metrics:?}"
+            );
+        }
+
+        // ---- evaluate ---------------------------------------------------------
+        if cfg.eval_every > 0
+            && t >= cfg.learning_starts
+            && (t + 1) % cfg.eval_every == 0
+        {
+            eval_seed = eval_seed.wrapping_add(1);
+            let (mean, std) = evaluate(rt, &EvalOpts {
+                algo: cfg.algo,
+                env: cfg.env.clone(),
+                hidden: cfg.hidden,
+                bits: cfg.bits,
+                quant_on: cfg.quant_on,
+                episodes: cfg.eval_episodes,
+                noise_std: 0.0,
+                seed: eval_seed,
+                backend: EvalBackend::Pjrt,
+            }, &flat, &norm)?;
+            if cfg.verbose {
+                println!(
+                    "  [{:>6}/{}] eval {:8.1} ± {:6.1}   qf1 {:.3}  \
+                     alpha {:.3}  s_in {:.3}",
+                    t + 1, cfg.total_steps, mean, std,
+                    last_metrics[rt.manifest.metric_idx("qf1_loss")],
+                    last_metrics[rt.manifest.metric_idx("alpha")],
+                    last_metrics[rt.manifest.metric_idx("s_in")]);
+            }
+            curve.push(CurvePoint { step: t + 1, mean_return: mean,
+                                    std_return: std });
+        }
+    }
+
+    let steps_per_sec =
+        cfg.total_steps as f64 / t_start.elapsed().as_secs_f64().max(1e-9);
+    norm.freeze();
+    Ok(TrainResult {
+        cfg: cfg.clone(),
+        flat,
+        normalizer: norm,
+        curve,
+        train_episode_returns,
+        last_metrics,
+        steps_per_sec,
+    })
+}

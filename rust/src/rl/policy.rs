@@ -1,0 +1,183 @@
+//! Flat-parameter helpers on the rust side: initialization (mirroring
+//! `params.py::init_flat`'s distributions) and extraction of the actor
+//! tensors for the quantization/export path.
+
+use anyhow::Result;
+
+use crate::quant::fakequant::PolicyTensors;
+use crate::runtime::ParamSpec;
+use crate::util::rng::Rng;
+
+/// Initialize a flat parameter vector: PyTorch-default kaiming-uniform
+/// (±1/√fan_in) for linear layers, 1.0 for learned scales, 0 for log_alpha,
+/// targets copied from their online sources.
+///
+/// The *distribution* matches the python reference; the draws come from the
+/// rust RNG (bit-identical parity with python is not required — golden
+/// tests pin the math, not the seeds).
+pub fn init_flat(spec: &ParamSpec, rng: &mut Rng) -> Vec<f32> {
+    let mut flat = vec![0.0f32; spec.n_params];
+    for e in &spec.entries {
+        let seg = e.offset..e.offset + e.size;
+        if e.group == "scale" {
+            flat[seg].fill(1.0);
+        } else if e.name.ends_with(".w") {
+            let fan_in = *e.shape.get(1).unwrap_or(&1) as f64;
+            let bound = 1.0 / fan_in.sqrt();
+            for x in &mut flat[seg] {
+                *x = rng.uniform_in(-bound, bound) as f32;
+            }
+        } else if e.name.ends_with(".b") {
+            let w = spec
+                .find(&format!("{}w", &e.name[..e.name.len() - 1]))
+                .expect("bias without matching weight");
+            let bound = 1.0 / (*w.shape.get(1).unwrap_or(&1) as f64).sqrt();
+            for x in &mut flat[seg] {
+                *x = rng.uniform_in(-bound, bound) as f32;
+            }
+        }
+        // log_alpha and anything else: zero
+    }
+    // targets start as exact copies
+    for e in &spec.entries {
+        if let Some(src_name) = e.name.strip_prefix("tgt_") {
+            if let Ok(src) = spec.find(src_name) {
+                let (a, b) = (src.offset, e.offset);
+                for i in 0..e.size {
+                    flat[b + i] = flat[a + i];
+                }
+            }
+        }
+    }
+    flat
+}
+
+/// Borrow the actor tensors out of a flat vector (for `IntPolicy` export
+/// and the fake-quant mirror).
+pub fn extract_tensors<'a>(spec: &ParamSpec, flat: &'a [f32],
+                           obs_dim: usize, hidden: usize, act_dim: usize)
+                           -> Result<PolicyTensors<'a>> {
+    let t = PolicyTensors {
+        obs_dim,
+        hidden,
+        act_dim,
+        fc1_w: spec.slice(flat, "actor.fc1.w")?,
+        fc1_b: spec.slice(flat, "actor.fc1.b")?,
+        fc2_w: spec.slice(flat, "actor.fc2.w")?,
+        fc2_b: spec.slice(flat, "actor.fc2.b")?,
+        mean_w: spec.slice(flat, "actor.mean.w")?,
+        mean_b: spec.slice(flat, "actor.mean.b")?,
+        s_in: spec.scalar(flat, "actor.s_in")?,
+        s_h1: spec.scalar(flat, "actor.s_h1")?,
+        s_h2: spec.scalar(flat, "actor.s_h2")?,
+        s_out: spec.scalar(flat, "actor.s_out")?,
+    };
+    t.validate();
+    Ok(t)
+}
+
+/// Checkpoint a flat vector + normalizer to a simple binary format
+/// (little-endian f32s with a JSON header line).
+pub fn save_checkpoint(path: &std::path::Path, flat: &[f32],
+                       norm_state: &(Vec<f64>, Vec<f64>),
+                       meta: &crate::util::json::Json) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let header = meta.to_string();
+    writeln!(f, "{header}")?;
+    writeln!(f, "{} {} {}", flat.len(), norm_state.0.len(),
+             norm_state.1.len())?;
+    for &x in flat {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    for &x in &norm_state.0 {
+        f.write_all(&(x as f32).to_le_bytes())?;
+    }
+    for &x in &norm_state.1 {
+        f.write_all(&(x as f32).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save_checkpoint`].
+pub fn load_checkpoint(path: &std::path::Path)
+                       -> Result<(crate::util::json::Json, Vec<f32>,
+                                  Vec<f64>, Vec<f64>)> {
+    use std::io::{BufRead, Read};
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let meta = crate::util::json::parse(header.trim())?;
+    let mut counts = String::new();
+    r.read_line(&mut counts)?;
+    let ns: Vec<usize> = counts
+        .trim()
+        .split(' ')
+        .map(|s| s.parse())
+        .collect::<std::result::Result<_, _>>()?;
+    anyhow::ensure!(ns.len() == 3, "bad checkpoint counts line");
+    let mut read_f32s = |n: usize| -> Result<Vec<f32>> {
+        let mut buf = vec![0u8; 4 * n];
+        r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let flat = read_f32s(ns[0])?;
+    let mean = read_f32s(ns[1])?.iter().map(|&x| x as f64).collect();
+    let var = read_f32s(ns[2])?.iter().map(|&x| x as f64).collect();
+    Ok((meta, flat, mean, var))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::SpecEntry;
+    use crate::util::json::Json;
+
+    fn toy_spec() -> ParamSpec {
+        let entries = vec![
+            SpecEntry { name: "actor.fc1.w".into(), shape: vec![4, 3],
+                        offset: 0, size: 12, group: "actor".into() },
+            SpecEntry { name: "actor.fc1.b".into(), shape: vec![4],
+                        offset: 12, size: 4, group: "actor".into() },
+            SpecEntry { name: "actor.s_in".into(), shape: vec![],
+                        offset: 16, size: 1, group: "scale".into() },
+            SpecEntry { name: "log_alpha".into(), shape: vec![],
+                        offset: 17, size: 1, group: "alpha".into() },
+            SpecEntry { name: "tgt_actor.fc1.w".into(), shape: vec![4, 3],
+                        offset: 18, size: 12, group: "target".into() },
+        ];
+        ParamSpec { n_params: 30, entries }
+    }
+
+    #[test]
+    fn init_distributions() {
+        let spec = toy_spec();
+        let mut rng = Rng::new(0);
+        let flat = init_flat(&spec, &mut rng);
+        let bound = 1.0 / 3.0f32.sqrt();
+        assert!(flat[..12].iter().all(|x| x.abs() <= bound));
+        assert!(flat[..12].iter().any(|x| x.abs() > 1e-3));
+        assert_eq!(flat[16], 1.0); // scale
+        assert_eq!(flat[17], 0.0); // log_alpha
+        assert_eq!(&flat[18..30], &flat[0..12]); // target copy
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("qcontrol_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.ckpt");
+        let flat = vec![1.0f32, -2.5, 3.25];
+        let norm = (vec![0.5f64], vec![2.0f64]);
+        let meta = Json::obj(vec![("env", Json::str("pendulum"))]);
+        save_checkpoint(&path, &flat, &norm, &meta).unwrap();
+        let (m2, f2, mean, var) = load_checkpoint(&path).unwrap();
+        assert_eq!(f2, flat);
+        assert_eq!(mean, vec![0.5]);
+        assert_eq!(var, vec![2.0]);
+        assert_eq!(m2.get("env").unwrap().as_str().unwrap(), "pendulum");
+    }
+}

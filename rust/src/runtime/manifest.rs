@@ -1,0 +1,306 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and this runtime. Mirrors `python/compile/hyper.py` and
+//! `python/compile/params.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One entry of a flat parameter vector layout.
+#[derive(Clone, Debug)]
+pub struct SpecEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub group: String,
+}
+
+/// Flat-vector layout of one (algo, env, hidden) model.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub n_params: usize,
+    pub entries: Vec<SpecEntry>,
+}
+
+impl ParamSpec {
+    pub fn find(&self, name: &str) -> Result<&SpecEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no param entry `{name}`"))
+    }
+
+    /// Borrow the slice of `flat` occupied by entry `name`.
+    pub fn slice<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self.find(name)?;
+        Ok(&flat[e.offset..e.offset + e.size])
+    }
+
+    pub fn scalar(&self, flat: &[f32], name: &str) -> Result<f32> {
+        let e = self.find(name)?;
+        if e.size != 1 {
+            bail!("`{name}` is not scalar");
+        }
+        Ok(flat[e.offset])
+    }
+}
+
+/// Tensor signature of an artifact input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String, // train | act | fwd
+    pub algo: String, // sac | ddpg
+    pub env: String,
+    pub hidden: usize,
+    pub batch: usize,
+    pub spec_key: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Environment dimensionalities as seen by the compile path.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvDims {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub hyper: BTreeMap<String, usize>,
+    pub hyper_len: usize,
+    pub metrics: BTreeMap<String, usize>,
+    pub metric_len: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub envs: BTreeMap<String, EnvDims>,
+    pub specs: BTreeMap<String, ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let idx_map = |v: &Json| -> Result<BTreeMap<String, usize>> {
+            v.as_obj()?
+                .iter()
+                .map(|(k, x)| Ok((k.clone(), x.as_usize()?)))
+                .collect()
+        };
+        let mut envs = BTreeMap::new();
+        for (k, v) in j.get("envs")?.as_obj()? {
+            envs.insert(k.clone(), EnvDims {
+                obs_dim: v.get("obs_dim")?.as_usize()?,
+                act_dim: v.get("act_dim")?.as_usize()?,
+            });
+        }
+        let mut specs = BTreeMap::new();
+        for (k, v) in j.get("specs")?.as_obj()? {
+            let entries = v
+                .get("entries")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(SpecEntry {
+                        name: e.get("name")?.as_str()?.to_string(),
+                        shape: e.get("shape")?.as_usize_vec()?,
+                        offset: e.get("offset")?.as_usize()?,
+                        size: e.get("size")?.as_usize()?,
+                        group: e.get("group")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            specs.insert(k.clone(), ParamSpec {
+                n_params: v.get("n_params")?.as_usize()?,
+                entries,
+            });
+        }
+        let sig = |v: &Json| -> Result<Vec<TensorSig>> {
+            v.as_arr()?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSig {
+                        name: t.get("name")?.as_str()?.to_string(),
+                        shape: t.get("shape")?.as_usize_vec()?,
+                    })
+                })
+                .collect()
+        };
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            artifacts.insert(name.clone(), ArtifactMeta {
+                name,
+                file: dir.join(a.get("file")?.as_str()?),
+                kind: a.get("kind")?.as_str()?.to_string(),
+                algo: a.get("algo")?.as_str()?.to_string(),
+                env: a.get("env")?.as_str()?.to_string(),
+                hidden: a.get("hidden")?.as_usize()?,
+                batch: a.get("batch")?.as_usize()?,
+                spec_key: a.get("spec")?.as_str()?.to_string(),
+                inputs: sig(a.get("inputs")?)?,
+                outputs: sig(a.get("outputs")?)?,
+            });
+        }
+        let m = Manifest {
+            hyper: idx_map(j.get("hyper")?)?,
+            hyper_len: j.get("hyper_len")?.as_usize()?,
+            metrics: idx_map(j.get("metrics")?)?,
+            metric_len: j.get("metric_len")?.as_usize()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            envs,
+            specs,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, a) in &self.artifacts {
+            if !self.specs.contains_key(&a.spec_key) {
+                bail!("artifact {name} references unknown spec {}",
+                      a.spec_key);
+            }
+            if !self.envs.contains_key(&a.env) {
+                bail!("artifact {name} references unknown env {}", a.env);
+            }
+        }
+        for spec in self.specs.values() {
+            let mut cursor = 0;
+            for e in &spec.entries {
+                if e.offset != cursor {
+                    bail!("spec has holes at `{}`", e.name);
+                }
+                cursor += e.size;
+            }
+            if cursor != spec.n_params {
+                bail!("spec total mismatch: {} != {}", cursor, spec.n_params);
+            }
+        }
+        Ok(())
+    }
+
+    /// Artifact lookup by structured key.
+    pub fn artifact(&self, algo: &str, kind: &str, env: &str, hidden: usize,
+                    batch: Option<usize>) -> Result<&ArtifactMeta> {
+        let name = match (kind, batch) {
+            ("fwd", Some(b)) => format!("{algo}_fwd_{env}_h{hidden}_b{b}"),
+            _ => format!("{algo}_{kind}_{env}_h{hidden}"),
+        };
+        self.artifacts
+            .get(&name)
+            .ok_or_else(|| anyhow!(
+                "artifact `{name}` not in manifest (available widths for \
+                 {env}: {:?})",
+                self.artifacts
+                    .values()
+                    .filter(|a| a.env == env && a.algo == algo
+                            && a.kind == kind)
+                    .map(|a| a.hidden)
+                    .collect::<Vec<_>>()))
+    }
+
+    pub fn hyper_idx(&self, name: &str) -> usize {
+        *self.hyper.get(name).unwrap_or_else(|| {
+            panic!("hyper field `{name}` missing from manifest")
+        })
+    }
+
+    pub fn metric_idx(&self, name: &str) -> usize {
+        *self.metrics.get(name).unwrap_or_else(|| {
+            panic!("metric field `{name}` missing from manifest")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> String {
+        r#"{
+          "hyper": {"step": 0, "b_in": 7}, "hyper_len": 16,
+          "metrics": {"qf1_loss": 0}, "metric_len": 16,
+          "train_batch": 256, "eval_batch": 16,
+          "envs": {"pendulum": {"obs_dim": 3, "act_dim": 1}},
+          "specs": {"sac_pendulum_h16": {"n_params": 10, "entries": [
+            {"name": "a.w", "shape": [2,3], "offset": 0, "size": 6,
+             "group": "actor"},
+            {"name": "a.b", "shape": [3], "offset": 6, "size": 3,
+             "group": "actor"},
+            {"name": "s", "shape": [], "offset": 9, "size": 1,
+             "group": "scale"}]}},
+          "artifacts": [
+            {"name": "sac_train_pendulum_h16",
+             "file": "sac_train_pendulum_h16.hlo.txt",
+             "kind": "train", "algo": "sac", "env": "pendulum",
+             "hidden": 16, "batch": 256, "spec": "sac_pendulum_h16",
+             "inputs": [{"name": "params", "shape": [10]}],
+             "outputs": [{"name": "params", "shape": [10]}],
+             "sha256": "x"}]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let j = json::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp")).unwrap();
+        assert_eq!(m.hyper_idx("b_in"), 7);
+        assert_eq!(m.envs["pendulum"].obs_dim, 3);
+        let a = m.artifact("sac", "train", "pendulum", 16, None).unwrap();
+        assert_eq!(a.batch, 256);
+        let spec = &m.specs[&a.spec_key];
+        assert_eq!(spec.find("a.b").unwrap().offset, 6);
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(spec.slice(&flat, "a.b").unwrap(), &[6.0, 7.0, 8.0]);
+        assert_eq!(spec.scalar(&flat, "s").unwrap(), 9.0);
+    }
+
+    #[test]
+    fn validation_catches_holes() {
+        let bad = toy_manifest_json().replace(
+            r#""offset": 6"#, r#""offset": 7"#);
+        let j = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_reports_alternatives() {
+        let j = json::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp")).unwrap();
+        let err = m.artifact("sac", "train", "pendulum", 999, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("16"), "{err}");
+    }
+}

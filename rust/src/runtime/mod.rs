@@ -1,0 +1,175 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the rust hot path. Python never runs here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal that we decompose.
+//!
+//! Executables are compiled lazily and cached per artifact name; a process
+//! typically touches a handful of the 100+ artifacts in the manifest.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub use manifest::{ArtifactMeta, EnvDims, Manifest, ParamSpec, SpecEntry};
+
+/// Shared PJRT runtime over one artifact directory.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Exe>>>,
+    /// cumulative compile time (reported by `qcontrol info`)
+    pub compile_secs: Mutex<f64>,
+}
+
+/// A compiled executable plus its manifest signature.
+pub struct Exe {
+    raw: PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            compile_secs: Mutex::new(0.0),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn exe(&self, name: &str) -> Result<Arc<Exe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))?
+            .clone();
+        let t0 = Instant::now();
+        let path = meta.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let raw = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let exe = Arc::new(Exe { raw, meta });
+        *self.compile_secs.lock().unwrap() += t0.elapsed().as_secs_f64();
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Structured lookup + compile.
+    pub fn exe_for(&self, algo: &str, kind: &str, env: &str, hidden: usize,
+                   batch: Option<usize>) -> Result<Arc<Exe>> {
+        let meta = self.manifest.artifact(algo, kind, env, hidden, batch)?;
+        let name = meta.name.clone();
+        self.exe(&name)
+    }
+}
+
+impl Exe {
+    /// Execute with f32 host buffers; returns the decomposed output tuple
+    /// as host `Vec<f32>`s, in manifest output order.
+    ///
+    /// Input shapes are validated against the manifest signature — a
+    /// mismatch is a bug in the caller, reported with the tensor name.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("{}: expected {} inputs, got {}",
+                  self.meta.name, self.meta.inputs.len(), inputs.len());
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (sig, data) in self.meta.inputs.iter().zip(inputs) {
+            if sig.numel() != data.len() {
+                bail!("{}: input `{}` expects {} elements ({:?}), got {}",
+                      self.meta.name, sig.name, sig.numel(), sig.shape,
+                      data.len());
+            }
+            // single-copy literal creation (vec1+reshape would copy twice;
+            // measured in EXPERIMENTS.md §Perf)
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                           data.len() * 4)
+            };
+            let lit = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32, &sig.shape, bytes)
+                .map_err(|e| anyhow::anyhow!("literal: {e}"))?;
+            lits.push(lit);
+        }
+        let out = self
+            .raw
+            .execute::<Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.meta.name))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!("{}: expected {} outputs, got {}",
+                  self.meta.name, self.meta.outputs.len(), parts.len());
+        }
+        let mut res = Vec::with_capacity(parts.len());
+        for (sig, p) in self.meta.outputs.iter().zip(parts) {
+            let p = if p.element_type()
+                .map(|t| t != ElementType::F32)
+                .unwrap_or(false)
+            {
+                p.convert(ElementType::F32.primitive_type())
+                    .map_err(|e| anyhow::anyhow!("convert: {e}"))?
+            } else {
+                p
+            };
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec {}: {e}", sig.name))?;
+            if v.len() != sig.numel() {
+                bail!("{}: output `{}` numel mismatch {} vs {}",
+                      self.meta.name, sig.name, v.len(), sig.numel());
+            }
+            res.push(v);
+        }
+        Ok(res)
+    }
+}
+
+/// Locate the artifacts directory: `$QCONTROL_ARTIFACTS`, else ./artifacts
+/// relative to the current dir or the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("QCONTROL_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}

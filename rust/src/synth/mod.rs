@@ -1,0 +1,64 @@
+//! FPGA synthesis estimator — the FINN/Vivado substitute (DESIGN.md §3).
+//!
+//! Models a FINN-style streaming dataflow build of an [`IntPolicy`] on the
+//! Artix-7 XC7A15T at 100 MHz: one matrix-vector-activation unit (MVAU) per
+//! layer with PE×SIMD folding, threshold-based requantization memory, FIFO
+//! links, and an XPE-style analytic power model. The throughput-driven
+//! folding search reproduces the paper's §3.4 procedure: sweep target
+//! throughputs in powers of 10, let the folding optimizer hit each target,
+//! retain the highest target that fits the device and meets timing.
+//!
+//! The cost model is calibrated to the *mechanisms* FINN-R publishes
+//! (threshold memory exponential in activation bits, LUT MACs proportional
+//! to the bit product, II set by the slowest layer), so Table 3's relative
+//! structure — who wins, by roughly what factor — is preserved rather than
+//! absolute LUT counts.
+
+pub mod dataflow;
+pub mod folding;
+pub mod model;
+pub mod power;
+
+pub use dataflow::simulate_latency_cycles;
+pub use folding::{search_folding, FoldingChoice, SearchOutcome};
+pub use model::{Design, Device, LayerFold, MvauCost, XC7A15T};
+pub use power::{estimate_power, PowerBreakdown};
+
+use crate::quant::export::IntPolicy;
+
+/// Full synthesis report for one policy (a Table 3 row).
+#[derive(Clone, Debug)]
+pub struct SynthReport {
+    pub design: Design,
+    pub power: PowerBreakdown,
+    /// end-to-end latency (s) at the design clock
+    pub latency_s: f64,
+    /// peak throughput (actions / s), II-bound
+    pub throughput: f64,
+    /// energy per action (J)
+    pub energy_per_action: f64,
+    /// cycle count cross-checked by the dataflow simulator
+    pub sim_cycles: u64,
+}
+
+/// Synthesize a policy: folding search at the given clock, then power and
+/// the cycle-level simulation cross-check.
+pub fn synthesize(policy: &IntPolicy, device: &Device, clock_hz: f64)
+                  -> anyhow::Result<SynthReport> {
+    let outcome = search_folding(policy, device, clock_hz)?;
+    let design = outcome.design;
+    let power = estimate_power(&design, clock_hz);
+    let latency_cycles = design.latency_cycles();
+    let ii = design.initiation_interval();
+    let sim_cycles = simulate_latency_cycles(&design);
+    let latency_s = sim_cycles as f64 / clock_hz;
+    let throughput = clock_hz / ii as f64;
+    Ok(SynthReport {
+        design,
+        power,
+        latency_s,
+        throughput,
+        energy_per_action: power.total_w * latency_s,
+        sim_cycles: sim_cycles.max(latency_cycles),
+    })
+}

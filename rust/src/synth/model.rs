@@ -1,0 +1,305 @@
+//! Device + MVAU cost model.
+//!
+//! Each policy layer maps to one MVAU(rows, cols, PE, SIMD): PE output
+//! channels are computed in parallel, each consuming SIMD inputs per cycle,
+//! so one inference takes `(rows/PE) * (cols/SIMD)` cycles in that layer.
+//! Resources follow FINN-R's published scaling:
+//!
+//! * MAC array: LUTs ∝ PE · SIMD · (w_bits · a_bits) (LUT-based multipliers
+//!   below the DSP threshold, DSP48 blocks above it),
+//! * weight memory: on-chip, rows·cols·w_bits, LUTRAM below a threshold,
+//!   BRAM36 above,
+//! * threshold memory: rows · (2^out_bits − 1) · acc_bits — the
+//!   exponential-in-activation-bits term that makes 8-bit models not fit,
+//! * FIFOs + control: FFs proportional to PE·(acc_bits) plus stream widths.
+
+use crate::quant::export::IntPolicy;
+
+/// FPGA device resources (Table 2).
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub dsps: u64,
+    /// max achievable clock for a design that "meets timing" here (Hz);
+    /// models the -1 speed grade at the paper's fixed 100 MHz
+    pub fmax_hz: f64,
+}
+
+/// Artix-7 XC7A15T-FGG484-1 (paper Table 2).
+pub const XC7A15T: Device = Device {
+    name: "XC7A15T-FGG484-1",
+    luts: 10_400,
+    ffs: 20_800,
+    bram36: 25.0,
+    dsps: 45,
+    fmax_hz: 1.2e8,
+};
+
+/// Folding choice for one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerFold {
+    /// parallel output channels; must divide padded rows
+    pub pe: usize,
+    /// parallel inputs per cycle; must divide padded cols
+    pub simd: usize,
+}
+
+/// Per-layer resource/cycle estimate.
+#[derive(Clone, Debug)]
+pub struct MvauCost {
+    pub rows: usize,
+    pub cols: usize,
+    pub fold: LayerFold,
+    pub w_bits: u32,
+    pub in_bits: u32,
+    pub out_bits: u32,
+    pub acc_bits: u32,
+    pub cycles: u64,
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub dsps: u64,
+}
+
+/// FINN pads stream widths to neat multiples; the paper pads action dims to
+/// multiples of 32 — we apply the same rule to rows of the final layer.
+pub const PAD_MULTIPLE: usize = 32;
+
+pub fn pad_to(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// DSP48 inference rule: bit products at or above this use DSPs when
+/// available (Vivado synthesizes small products into LUTs).
+const DSP_BIT_PRODUCT: u32 = 24; // e.g. 8x8 with wide acc goes DSP-ward
+/// LUTRAM -> BRAM threshold per memory (bits)
+const LUTRAM_MAX_BITS: u64 = 16_384;
+
+/// Cost one layer under a folding choice.
+/// `rows`/`cols` are the *padded* dimensions.
+#[allow(clippy::too_many_arguments)]
+pub fn cost_layer(rows: usize, cols: usize, fold: LayerFold, w_bits: u32,
+                  in_bits: u32, out_bits: u32, acc_bits: u32,
+                  dsps_available: u64) -> MvauCost {
+    assert_eq!(rows % fold.pe, 0, "PE must divide rows");
+    assert_eq!(cols % fold.simd, 0, "SIMD must divide cols");
+    let cycles = (rows / fold.pe) as u64 * (cols / fold.simd) as u64;
+    let macs = (fold.pe * fold.simd) as u64;
+
+    // --- MAC array -----------------------------------------------------------
+    let bit_product = w_bits * in_bits;
+    let (mac_luts, dsps) = if bit_product >= DSP_BIT_PRODUCT {
+        // one DSP48 can host one (or two narrow) MACs; spill to LUTs when
+        // the device runs out
+        let want = macs.div_ceil(2).max(1);
+        let got = want.min(dsps_available);
+        let spill = (want - got) * 2;
+        (spill * (3 * bit_product as u64 + 8), got)
+    } else {
+        // LUT MAC: ~bit_product LUTs for the partial product + adder tree
+        (macs * (bit_product as u64 + acc_bits as u64 / 4), 0)
+    };
+
+    // --- memories -------------------------------------------------------------
+    let weight_bits = (rows * cols) as u64 * w_bits as u64;
+    let nthresh = (1u64 << out_bits) - 1;
+    let thresh_bits = rows as u64 * nthresh * acc_bits as u64;
+    let mut bram = 0.0f64;
+    let mut mem_luts = 0u64;
+    for bits in [weight_bits, thresh_bits] {
+        if bits == 0 {
+            continue;
+        }
+        if bits <= LUTRAM_MAX_BITS {
+            mem_luts += bits / 32; // LUTRAM: 32 bits / LUT (RAM32)
+        } else {
+            bram += bits as f64 / 36_864.0; // BRAM36 = 36 Kib
+        }
+    }
+    // threshold comparators: PE comparators of acc_bits, pipelined over the
+    // levels (FINN streams thresholds; comparator cost is per PE)
+    let cmp_luts = fold.pe as u64 * acc_bits as u64;
+
+    // --- control / FIFOs --------------------------------------------------------
+    let ctrl_luts = 60 + (fold.pe + fold.simd) as u64 * 4;
+    let fifo_ffs = (fold.simd as u64 * in_bits as u64
+        + fold.pe as u64 * out_bits as u64) * 2;
+    let acc_ffs = fold.pe as u64 * acc_bits as u64 * 2;
+    let pipe_ffs = macs * 4;
+
+    MvauCost {
+        rows, cols, fold, w_bits, in_bits, out_bits, acc_bits,
+        cycles,
+        luts: mac_luts + mem_luts + cmp_luts + ctrl_luts,
+        ffs: fifo_ffs + acc_ffs + pipe_ffs + 120,
+        bram36: bram,
+        dsps,
+    }
+}
+
+/// A complete folded design (one policy on one device).
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub device: Device,
+    pub clock_hz: f64,
+    pub layers: Vec<MvauCost>,
+}
+
+impl Design {
+    pub fn luts(&self) -> u64 {
+        self.layers.iter().map(|l| l.luts).sum()
+    }
+
+    pub fn ffs(&self) -> u64 {
+        self.layers.iter().map(|l| l.ffs).sum()
+    }
+
+    pub fn bram36(&self) -> f64 {
+        self.layers.iter().map(|l| l.bram36).sum()
+    }
+
+    pub fn dsps(&self) -> u64 {
+        self.layers.iter().map(|l| l.dsps).sum()
+    }
+
+    /// Sum of per-layer compute cycles + per-layer pipeline fill overhead.
+    pub fn latency_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles + 4).sum()
+    }
+
+    /// Initiation interval: the slowest layer bounds steady-state
+    /// throughput of the streaming pipeline.
+    pub fn initiation_interval(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).max().unwrap_or(1).max(1)
+    }
+
+    pub fn fits(&self, headroom: f64) -> bool {
+        let d = &self.device;
+        (self.luts() as f64) <= d.luts as f64 * headroom
+            && (self.ffs() as f64) <= d.ffs as f64 * headroom
+            && self.bram36() <= d.bram36 * headroom
+            && self.dsps() <= d.dsps
+    }
+
+    /// Timing model: dense LUT usage degrades routing; a design "meets
+    /// timing" at `clock_hz` when utilization-derated fmax still clears it.
+    pub fn meets_timing(&self) -> bool {
+        let util = self.luts() as f64 / self.device.luts as f64;
+        let derate = 1.0 - 0.35 * util.clamp(0.0, 1.0);
+        self.device.fmax_hz * derate >= self.clock_hz
+    }
+}
+
+/// Build the padded MVAU geometry for a policy (before folding).
+pub fn layer_geometry(policy: &IntPolicy) -> Vec<(usize, usize, u32, u32, u32, u32)> {
+    policy
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let rows = if i + 1 == policy.layers.len() {
+                pad_to(l.rows, PAD_MULTIPLE)
+            } else {
+                l.rows
+            };
+            let in_bits = if i == 0 {
+                policy.bits.b_in
+            } else {
+                policy.bits.b_core
+            };
+            let out_bits = if i + 1 == policy.layers.len() {
+                policy.bits.b_out
+            } else {
+                policy.bits.b_core
+            };
+            (rows, l.cols, l.w_bits, in_bits, out_bits, l.acc_bits)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_to(1, 32), 32);
+        assert_eq!(pad_to(32, 32), 32);
+        assert_eq!(pad_to(33, 32), 64);
+    }
+
+    #[test]
+    fn cycles_scale_with_folding() {
+        let full = cost_layer(64, 64, LayerFold { pe: 64, simd: 64 },
+                              3, 3, 3, 16, 45);
+        let half = cost_layer(64, 64, LayerFold { pe: 32, simd: 64 },
+                              3, 3, 3, 16, 45);
+        let seq = cost_layer(64, 64, LayerFold { pe: 1, simd: 1 },
+                             3, 3, 3, 16, 45);
+        assert_eq!(full.cycles, 1);
+        assert_eq!(half.cycles, 2);
+        assert_eq!(seq.cycles, 64 * 64);
+        assert!(full.luts > half.luts, "parallelism costs area");
+    }
+
+    #[test]
+    fn threshold_memory_exponential_in_out_bits() {
+        let c4 = cost_layer(256, 256, LayerFold { pe: 4, simd: 8 },
+                            4, 4, 4, 18, 45);
+        let c8 = cost_layer(256, 256, LayerFold { pe: 4, simd: 8 },
+                            4, 4, 8, 18, 45);
+        assert!(c8.bram36 > 4.0 * c4.bram36.max(0.1),
+                "c4={} c8={}", c4.bram36, c8.bram36);
+    }
+
+    #[test]
+    fn ii_is_slowest_layer() {
+        let d = Design {
+            device: XC7A15T,
+            clock_hz: 1e8,
+            layers: vec![
+                cost_layer(64, 64, LayerFold { pe: 8, simd: 8 }, 3, 3, 3,
+                           16, 45),
+                cost_layer(64, 64, LayerFold { pe: 1, simd: 1 }, 3, 3, 3,
+                           16, 45),
+            ],
+        };
+        assert_eq!(d.initiation_interval(), 64 * 64);
+        assert!(d.latency_cycles() > 64 * 64);
+    }
+
+    #[test]
+    fn paper_8bit_wide_model_exceeds_device() {
+        // the paper's finding: width-256 8-8-8 models do not fit XC7A15T
+        // (threshold memory alone blows the 25 BRAM budget)
+        let layers = vec![
+            cost_layer(256, 384, LayerFold { pe: 2, simd: 4 }, 8, 8, 8,
+                       24, 45),
+            cost_layer(256, 256, LayerFold { pe: 2, simd: 4 }, 8, 8, 8,
+                       24, 45),
+            cost_layer(32, 256, LayerFold { pe: 1, simd: 2 }, 8, 8, 8,
+                       24, 45),
+        ];
+        let d = Design { device: XC7A15T, clock_hz: 1e8, layers };
+        assert!(!d.fits(1.0), "8-bit wide model should exceed XC7A15T: \
+                 bram={}", d.bram36());
+    }
+
+    #[test]
+    fn low_bit_small_model_fits() {
+        let layers = vec![
+            cost_layer(16, 32, LayerFold { pe: 4, simd: 8 }, 3, 4, 3, 14,
+                       45),
+            cost_layer(16, 16, LayerFold { pe: 4, simd: 4 }, 3, 3, 3, 12,
+                       45),
+            cost_layer(32, 16, LayerFold { pe: 4, simd: 4 }, 3, 3, 8, 12,
+                       45),
+        ];
+        let d = Design { device: XC7A15T, clock_hz: 1e8, layers };
+        assert!(d.fits(1.0), "luts={} bram={}", d.luts(), d.bram36());
+        assert!(d.meets_timing());
+    }
+}

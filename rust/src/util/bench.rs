@@ -1,0 +1,148 @@
+//! Micro-bench harness (replaces `criterion`, unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use
+//! [`Bench::run`] for timing loops (warmup + timed iterations, reporting
+//! mean / p50 / p99) and the table printers in the bench files for the
+//! paper-shaped outputs.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:42} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for at least `min_time_s` seconds (after `warmup` calls),
+/// one sample per call.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, min_time_s: f64,
+                       mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time_s
+        || samples_ns.len() < 10
+    {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+        if samples_ns.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples_ns[n / 2],
+        p99_ns: samples_ns[(n as f64 * 0.99) as usize % n],
+        min_ns: samples_ns[0],
+    };
+    r.print();
+    r
+}
+
+/// Simple fixed-width table printer for the paper-shaped bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let r = run("noop-ish", 2, 0.01, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["env", "reward"]);
+        t.row(vec!["hopper".into(), "2.7k ± 0.7k".into()]);
+        t.print();
+    }
+}

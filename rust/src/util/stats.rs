@@ -1,0 +1,235 @@
+//! Statistics helpers: running mean/std (Welford), per-dimension running
+//! normalization (the paper's input normalization, frozen at evaluation),
+//! percentiles, and summary formatting for the experiment tables.
+
+/// Welford running mean/variance over scalars.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Per-dimension running normalization of observations (paper Appendix C):
+/// maintains mean/var per input dimension during training; `frozen` stops
+/// updates at evaluation/deployment time.
+#[derive(Clone, Debug)]
+pub struct ObsNormalizer {
+    pub enabled: bool,
+    pub frozen: bool,
+    n: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl ObsNormalizer {
+    pub fn new(dim: usize, enabled: bool) -> Self {
+        ObsNormalizer {
+            enabled,
+            frozen: false,
+            n: 0.0,
+            mean: vec![0.0; dim],
+            m2: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Update statistics with one raw observation (no-op when frozen or
+    /// disabled).
+    pub fn observe(&mut self, obs: &[f32]) {
+        if !self.enabled || self.frozen {
+            return;
+        }
+        debug_assert_eq!(obs.len(), self.mean.len());
+        self.n += 1.0;
+        for (i, &x) in obs.iter().enumerate() {
+            let d = x as f64 - self.mean[i];
+            self.mean[i] += d / self.n;
+            self.m2[i] += d * (x as f64 - self.mean[i]);
+        }
+    }
+
+    /// Normalize in place: (x - mean) / sqrt(var + 1e-8), clipped to ±10
+    /// (standard running-normalization practice; keeps quantizer scales sane).
+    pub fn normalize(&self, obs: &mut [f32]) {
+        if !self.enabled {
+            return;
+        }
+        for (i, x) in obs.iter_mut().enumerate() {
+            let var = if self.n >= 2.0 {
+                self.m2[i] / (self.n - 1.0)
+            } else {
+                1.0
+            };
+            let z = (*x as f64 - self.mean[i]) / (var + 1e-8).sqrt();
+            *x = z.clamp(-10.0, 10.0) as f32;
+        }
+    }
+
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    /// Serialize to (mean, var) pairs for checkpointing/export.
+    pub fn state(&self) -> (Vec<f64>, Vec<f64>) {
+        let var: Vec<f64> = self
+            .m2
+            .iter()
+            .map(|&m2| if self.n >= 2.0 { m2 / (self.n - 1.0) } else { 1.0 })
+            .collect();
+        (self.mean.clone(), var)
+    }
+
+    pub fn load_state(&mut self, mean: Vec<f64>, var: Vec<f64>, n: f64) {
+        self.m2 = var.iter().map(|v| v * (n - 1.0).max(1.0)).collect();
+        self.mean = mean;
+        self.n = n;
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Linear-interpolation percentile (q in [0,1]) of an unsorted slice.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// "5.1k ± 0.9k"-style formatting used by the paper's tables.
+pub fn fmt_pm(mean: f64, std: f64) -> String {
+    fn k(x: f64) -> String {
+        if x.abs() >= 1000.0 {
+            format!("{:.1}k", x / 1000.0)
+        } else {
+            format!("{x:.0}")
+        }
+    }
+    format!("{} ± {}", k(mean), k(std))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut r = Running::default();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 4.0).abs() < 1e-12);
+        assert!((r.std() - std(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalizer_whitens() {
+        let mut n = ObsNormalizer::new(2, true);
+        let mut rng = crate::util::rng::Rng::new(0);
+        for _ in 0..5000 {
+            let o = [5.0 + 2.0 * rng.normal() as f32,
+                     -3.0 + 0.5 * rng.normal() as f32];
+            n.observe(&o);
+        }
+        let mut probe = [5.0f32, -3.0];
+        n.normalize(&mut probe);
+        assert!(probe[0].abs() < 0.1, "{probe:?}");
+        assert!(probe[1].abs() < 0.1, "{probe:?}");
+        let mut probe2 = [7.0f32, -2.5];
+        n.normalize(&mut probe2);
+        assert!((probe2[0] - 1.0).abs() < 0.1, "{probe2:?}");
+        assert!((probe2[1] - 1.0).abs() < 0.1, "{probe2:?}");
+    }
+
+    #[test]
+    fn normalizer_freeze_stops_updates() {
+        let mut n = ObsNormalizer::new(1, true);
+        for i in 0..100 {
+            n.observe(&[i as f32]);
+        }
+        n.freeze();
+        let (m0, _) = n.state();
+        n.observe(&[1e6]);
+        let (m1, _) = n.state();
+        assert_eq!(m0, m1);
+    }
+
+    #[test]
+    fn disabled_normalizer_is_identity() {
+        let mut n = ObsNormalizer::new(1, false);
+        n.observe(&[100.0]);
+        let mut x = [42.0f32];
+        n.normalize(&mut x);
+        assert_eq!(x[0], 42.0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 3.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+    }
+
+    #[test]
+    fn fmt_paper_style() {
+        assert_eq!(fmt_pm(5100.0, 930.0), "5.1k ± 930");
+        assert_eq!(fmt_pm(12.0, 3.0), "12 ± 3");
+    }
+}

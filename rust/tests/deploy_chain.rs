@@ -1,0 +1,99 @@
+//! Deployment-chain validation (DESIGN.md §6 steps 4-5): for golden
+//! policies, the integer engine must agree with the rust fake-quant mirror
+//! on the output lattice, and both integer requant paths must be identical.
+
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::fakequant::{self, PolicyTensors};
+use qcontrol::quant::{BitCfg, QRange};
+use qcontrol::runtime::default_artifact_dir;
+use qcontrol::util::json::{self, Json};
+use qcontrol::util::rng::Rng;
+
+fn load_policy_cases() -> Json {
+    let path = default_artifact_dir().join("golden/policy_cases.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|_| panic!("{path:?} missing — run `make artifacts`"));
+    json::parse(&text).unwrap()
+}
+
+#[test]
+fn integer_engine_tracks_golden_policies() {
+    let cases = load_policy_cases();
+    for (i, c) in cases.as_arr().unwrap().iter().enumerate() {
+        let p = c.get("params").unwrap();
+        let g = |k: &str| p.get(k).unwrap().as_f32_vec().unwrap();
+        let s = |k: &str| -> f32 {
+            match p.get(k).unwrap() {
+                Json::Arr(_) => p.get(k).unwrap().as_f32_vec().unwrap()[0],
+                v => v.as_f64().unwrap() as f32,
+            }
+        };
+        let (fc1_w, fc1_b) = (g("actor.fc1.w"), g("actor.fc1.b"));
+        let (fc2_w, fc2_b) = (g("actor.fc2.w"), g("actor.fc2.b"));
+        let (mw, mb) = (g("actor.mean.w"), g("actor.mean.b"));
+        let tensors = PolicyTensors {
+            obs_dim: 3, hidden: 16, act_dim: 1,
+            fc1_w: &fc1_w, fc1_b: &fc1_b,
+            fc2_w: &fc2_w, fc2_b: &fc2_b,
+            mean_w: &mw, mean_b: &mb,
+            s_in: s("actor.s_in"), s_h1: s("actor.s_h1"),
+            s_h2: s("actor.s_h2"), s_out: s("actor.s_out"),
+        };
+        let bits_v = c.get("bits").unwrap().as_usize_vec().unwrap();
+        let bits = BitCfg::new(bits_v[0] as u32, bits_v[1] as u32,
+                               bits_v[2] as u32);
+        let obs = c.get("obs").unwrap().as_f32_vec().unwrap();
+        let mut engine =
+            IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+        let lsb = tensors.s_out / QRange::new(bits.b_out, true).qs as f32;
+        for (b, row) in obs.chunks_exact(3).enumerate() {
+            let ai = engine.infer_vec(row);
+            let af = fakequant::policy_forward(&tensors, row, 1, bits);
+            // integer vs f32-fake-quant: equality up to 1 output LSB
+            // (f32 matmul reduction order can flip a rounding at a bin edge)
+            let d = (ai[0].atanh() - af[0].atanh()).abs();
+            assert!(d <= 1.5 * lsb + 1e-5,
+                    "case {i} row {b}: int {} vs fq {} (lsb {lsb})",
+                    ai[0], af[0]);
+        }
+    }
+}
+
+#[test]
+fn threshold_and_rescale_paths_identical_on_golden() {
+    let cases = load_policy_cases();
+    let mut rng = Rng::new(17);
+    for c in cases.as_arr().unwrap() {
+        let p = c.get("params").unwrap();
+        let g = |k: &str| p.get(k).unwrap().as_f32_vec().unwrap();
+        let s = |k: &str| -> f32 {
+            match p.get(k).unwrap() {
+                Json::Arr(_) => p.get(k).unwrap().as_f32_vec().unwrap()[0],
+                v => v.as_f64().unwrap() as f32,
+            }
+        };
+        let (fc1_w, fc1_b) = (g("actor.fc1.w"), g("actor.fc1.b"));
+        let (fc2_w, fc2_b) = (g("actor.fc2.w"), g("actor.fc2.b"));
+        let (mw, mb) = (g("actor.mean.w"), g("actor.mean.b"));
+        let tensors = PolicyTensors {
+            obs_dim: 3, hidden: 16, act_dim: 1,
+            fc1_w: &fc1_w, fc1_b: &fc1_b,
+            fc2_w: &fc2_w, fc2_b: &fc2_b,
+            mean_w: &mw, mean_b: &mb,
+            s_in: s("actor.s_in"), s_h1: s("actor.s_h1"),
+            s_h2: s("actor.s_h2"), s_out: s("actor.s_out"),
+        };
+        let bits_v = c.get("bits").unwrap().as_usize_vec().unwrap();
+        let bits = BitCfg::new(bits_v[0] as u32, bits_v[1] as u32,
+                               bits_v[2] as u32);
+        let ip = IntPolicy::from_tensors(&tensors, bits);
+        for _ in 0..50 {
+            let mut obs = vec![0.0f32; 3];
+            rng.fill_normal(&mut obs);
+            assert_eq!(ip.forward_naive(&obs),
+                       ip.forward_naive_rescale(&obs),
+                       "threshold != rescale at bits {bits:?}");
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Golden parity: the rust quantization mirror vs the L2 (jnp) reference,
+//! pinned through the vectors `python/compile/golden.py` exports at
+//! `make artifacts` time (DESIGN.md §6, steps 2-3).
+
+use qcontrol::quant::fakequant::{self, PolicyTensors};
+use qcontrol::quant::{qdq, quantize, BitCfg, QRange};
+use qcontrol::runtime::default_artifact_dir;
+use qcontrol::util::json::{self, Json};
+
+fn load(name: &str) -> Json {
+    let path = default_artifact_dir().join("golden").join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|_| panic!("{path:?} missing — run `make artifacts`"));
+    json::parse(&text).unwrap()
+}
+
+#[test]
+fn qdq_scalar_cases_bit_for_bit() {
+    let cases = load("qdq_cases.json");
+    let mut n = 0;
+    for c in cases.as_arr().unwrap() {
+        let x = c.get("x").unwrap().as_f64().unwrap() as f32;
+        let scale = c.get("scale").unwrap().as_f64().unwrap() as f32;
+        let bits = c.get("bits").unwrap().as_usize().unwrap() as u32;
+        let signed = c.get("signed").unwrap().as_bool().unwrap();
+        let r = QRange::new(bits, signed);
+        let q_want = c.get("q").unwrap().as_f64().unwrap() as i32;
+        let y_want = c.get("y").unwrap().as_f64().unwrap() as f32;
+        assert_eq!(quantize(x, scale, r), q_want,
+                   "Q mismatch: x={x} s={scale} b={bits} signed={signed}");
+        let y = qdq(x, scale, r);
+        assert!((y - y_want).abs() <= f32::EPSILON * y_want.abs().max(1.0),
+                "QDQ mismatch: {y} vs {y_want}");
+        n += 1;
+    }
+    assert!(n >= 200, "suspiciously few golden cases: {n}");
+}
+
+#[test]
+fn layer_cases_match_jnp_reference() {
+    let cases = load("layer_cases.json");
+    for (i, c) in cases.as_arr().unwrap().iter().enumerate() {
+        let g = |k: &str| c.get(k).unwrap().clone();
+        let x = g("x").as_f32_vec().unwrap();
+        let w = g("w").as_f32_vec().unwrap();
+        let b = g("b").as_f32_vec().unwrap();
+        let y_want = g("y").as_f32_vec().unwrap();
+        let bsz = g("bsz").as_usize().unwrap();
+        let din = g("din").as_usize().unwrap();
+        let dout = g("dout").as_usize().unwrap();
+        let got = fakequant::qdq_linear(
+            &x, bsz, din, &w, &b, dout,
+            g("s_x").as_f64().unwrap() as f32,
+            g("s_a").as_f64().unwrap() as f32,
+            g("bits_x").as_usize().unwrap() as u32,
+            g("bits_w").as_usize().unwrap() as u32,
+            g("bits_a").as_usize().unwrap() as u32,
+            g("signed_in").as_bool().unwrap(),
+            g("relu").as_bool().unwrap(),
+            g("signed_out").as_bool().unwrap(),
+        );
+        assert_eq!(got.len(), y_want.len(), "case {i}");
+        for (a, b) in got.iter().zip(&y_want) {
+            assert!((a - b).abs() < 2e-4,
+                    "case {i}: {a} vs {b} (f32 reduction-order tolerance)");
+        }
+    }
+}
+
+#[test]
+fn full_policy_cases_match_jnp_reference() {
+    let cases = load("policy_cases.json");
+    for (i, c) in cases.as_arr().unwrap().iter().enumerate() {
+        let p = c.get("params").unwrap();
+        let g = |k: &str| p.get(k).unwrap().as_f32_vec().unwrap();
+        let s = |k: &str| -> f32 {
+            match p.get(k).unwrap() {
+                Json::Arr(_) => p.get(k).unwrap().as_f32_vec().unwrap()[0],
+                v => v.as_f64().unwrap() as f32,
+            }
+        };
+        let (fc1_w, fc1_b) = (g("actor.fc1.w"), g("actor.fc1.b"));
+        let (fc2_w, fc2_b) = (g("actor.fc2.w"), g("actor.fc2.b"));
+        let (mw, mb) = (g("actor.mean.w"), g("actor.mean.b"));
+        let tensors = PolicyTensors {
+            obs_dim: c.get("obs_dim").unwrap().as_usize().unwrap(),
+            hidden: c.get("hidden").unwrap().as_usize().unwrap(),
+            act_dim: c.get("act_dim").unwrap().as_usize().unwrap(),
+            fc1_w: &fc1_w, fc1_b: &fc1_b,
+            fc2_w: &fc2_w, fc2_b: &fc2_b,
+            mean_w: &mw, mean_b: &mb,
+            s_in: s("actor.s_in"), s_h1: s("actor.s_h1"),
+            s_h2: s("actor.s_h2"), s_out: s("actor.s_out"),
+        };
+        let bits_v = c.get("bits").unwrap().as_usize_vec().unwrap();
+        let bits = BitCfg::new(bits_v[0] as u32, bits_v[1] as u32,
+                               bits_v[2] as u32);
+        let obs = c.get("obs").unwrap().as_f32_vec().unwrap();
+        let want = c.get("action").unwrap().as_f32_vec().unwrap();
+        let got = fakequant::policy_forward(&tensors, &obs, 8, bits);
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 5e-4,
+                    "case {i} out {j}: rust {a} vs jnp {b} bits={bits:?}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Integration smoke: artifacts load, compile, execute; training loop runs
+//! and learns on pendulum at a tiny budget. Requires `make artifacts`.
+
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
+use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::util::stats::ObsNormalizer;
+
+fn runtime() -> Runtime {
+    Runtime::load(default_artifact_dir()).expect("run `make artifacts`")
+}
+
+#[test]
+fn fwd_artifact_executes_and_is_bounded() {
+    let rt = runtime();
+    let exe = rt.exe_for("sac", "fwd", "pendulum", 16, Some(1)).unwrap();
+    let spec = &rt.manifest.specs[&exe.meta.spec_key];
+    let mut rng = qcontrol::util::rng::Rng::new(0);
+    let flat = rl::init_flat(spec, &mut rng);
+    let obs = vec![0.5f32, -0.5, 0.1];
+    let hyper = rl::fwd_hyper(&rt, BitCfg::new(4, 3, 8), true);
+    let out = exe.run_f32(&[&flat, &obs, &hyper]).unwrap();
+    assert_eq!(out[0].len(), 1);
+    assert!(out[0][0].abs() <= 1.0);
+}
+
+#[test]
+fn pjrt_fwd_matches_rust_fakequant_mirror() {
+    let rt = runtime();
+    let exe = rt.exe_for("sac", "fwd", "pendulum", 16, Some(1)).unwrap();
+    let spec = &rt.manifest.specs[&exe.meta.spec_key];
+    let mut rng = qcontrol::util::rng::Rng::new(3);
+    let flat = rl::init_flat(spec, &mut rng);
+    let bits = BitCfg::new(6, 4, 8);
+    let hyper = rl::fwd_hyper(&rt, bits, true);
+    let tensors = rl::extract_tensors(spec, &flat, 3, 16, 1).unwrap();
+    for i in 0..20 {
+        let obs = vec![(i as f32 * 0.17).sin(), (i as f32 * 0.31).cos(),
+                       (i as f32) * 0.1 - 1.0];
+        let got = exe.run_f32(&[&flat, &obs, &hyper]).unwrap();
+        let want =
+            qcontrol::quant::fakequant::policy_forward(&tensors, &obs, 1,
+                                                       bits);
+        assert!((got[0][0] - want[0]).abs() < 2e-3,
+                "pjrt {} vs rust {}", got[0][0], want[0]);
+    }
+}
+
+#[test]
+fn short_training_run_improves_pendulum() {
+    let rt = runtime();
+    let mut cfg = TrainConfig::new(Algo::Sac, "pendulum");
+    cfg.hidden = 16;
+    cfg.bits = BitCfg::new(8, 4, 8);
+    cfg.total_steps = 3000;
+    cfg.learning_starts = 600;
+    cfg.seed = 7;
+    let res = rl::train(&rt, &cfg).unwrap();
+    assert!(res.steps_per_sec > 10.0, "too slow: {}", res.steps_per_sec);
+
+    // untrained baseline vs trained policy
+    let spec = &rt.manifest.specs["sac_pendulum_h16"];
+    let mut rng = qcontrol::util::rng::Rng::new(1);
+    let fresh = rl::init_flat(spec, &mut rng);
+    let norm_fresh = ObsNormalizer::new(3, false);
+    let opts = EvalOpts {
+        algo: Algo::Sac,
+        env: "pendulum".into(),
+        hidden: 16,
+        bits: cfg.bits,
+        quant_on: true,
+        episodes: 10,
+        noise_std: 0.0,
+        seed: 42,
+        backend: EvalBackend::Pjrt,
+    };
+    let (trained, _) = rl::evaluate(&rt, &opts, &res.flat,
+                                    &res.normalizer).unwrap();
+    let (untrained, _) = rl::evaluate(&rt, &opts, &fresh,
+                                      &norm_fresh).unwrap();
+    println!("trained {trained:.1} vs untrained {untrained:.1}");
+    assert!(trained > untrained + 100.0,
+            "no learning: trained {trained:.1} untrained {untrained:.1}");
+}
