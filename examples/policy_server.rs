@@ -1,17 +1,23 @@
 //! Deployment scenario: serve a quantized integer policy over TCP and
-//! drive it with a client running the live environment — the paper's
-//! sense→infer→act loop with the controller behind a network hop.
+//! drive it with clients running the live environment — the paper's
+//! sense→infer→act loop with the controller behind a network hop, now on
+//! the concurrent batched serving subsystem (`coordinator::serving`).
 //!
 //! Run: `cargo run --release --example policy_server [-- --steps 2000]`
-//! Trains a small policy first (or loads --ckpt), then serves + queries it
-//! and reports per-action latency percentiles.
+//! Trains a small policy first (needs PJRT + artifacts; without them it
+//! falls back to a deterministic toy policy so the serving path still
+//! runs), then:
+//!   1. serves it and drives env episodes through one client, and
+//!   2. hammers it with a concurrent client burst so requests coalesce
+//!      into batched integer passes,
+//! reporting per-action inference latency percentiles for both phases.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use qcontrol::coordinator::server::{serve, ActionClient};
+use qcontrol::coordinator::serving::{serve, ActionClient, ServerConfig};
 use qcontrol::envs;
 use qcontrol::intinfer::IntEngine;
 use qcontrol::quant::export::IntPolicy;
@@ -20,38 +26,68 @@ use qcontrol::rl::{self, Algo, TrainConfig};
 use qcontrol::runtime::{default_artifact_dir, Runtime};
 use qcontrol::util::cli::Args;
 use qcontrol::util::rng::Rng;
+use qcontrol::util::stats::ObsNormalizer;
+use qcontrol::util::testkit;
+
+/// Train over PJRT when available; otherwise a deterministic toy policy
+/// so the serving subsystem is still exercised end-to-end.
+fn build_policy(steps: usize, bits: BitCfg)
+                -> Result<(IntEngine, ObsNormalizer, bool)> {
+    match Runtime::load(default_artifact_dir()) {
+        Ok(rt) => {
+            let mut cfg = TrainConfig::new(Algo::Sac, "pendulum");
+            cfg.hidden = 16;
+            cfg.bits = bits;
+            cfg.total_steps = steps;
+            cfg.learning_starts = (steps / 5).max(200);
+            cfg.seed = 3;
+            let res = rl::train(&rt, &cfg)?;
+            let spec = &rt.manifest.specs["sac_pendulum_h16"];
+            let tensors =
+                rl::extract_tensors(spec, &res.flat, 3, 16, 1)?;
+            let engine =
+                IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+            Ok((engine, res.normalizer.clone(), true))
+        }
+        Err(e) => {
+            println!("(PJRT/artifacts unavailable — {e}; serving a \
+                      deterministic toy policy instead)");
+            let engine =
+                IntEngine::new(testkit::toy_policy(3, 3, 16, 1, bits));
+            Ok((engine, ObsNormalizer::new(3, false), false))
+        }
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let steps = args.usize("steps", 2500)?;
     let episodes = args.usize("episodes", 5)?;
+    let burst_clients = args.usize("burst-clients", 4)?;
+    let burst_reqs = args.usize("burst-reqs", 500)?;
     let bits = BitCfg::new(4, 2, 8);
-    let rt = Runtime::load(default_artifact_dir())?;
 
-    println!("== policy_server: train, deploy as integer TCP service, \
-              drive the env through it ==");
-    let mut cfg = TrainConfig::new(Algo::Sac, "pendulum");
-    cfg.hidden = 16;
-    cfg.bits = bits;
-    cfg.total_steps = steps;
-    cfg.learning_starts = (steps / 5).max(200);
-    cfg.seed = 3;
-    let res = rl::train(&rt, &cfg)?;
-
-    let spec = &rt.manifest.specs["sac_pendulum_h16"];
-    let tensors = rl::extract_tensors(spec, &res.flat, 3, 16, 1)?;
-    let engine = IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+    println!("== policy_server: train, deploy as a concurrent batched \
+              integer TCP service, drive the env through it ==");
+    let (engine, norm, trained) = build_policy(steps, bits)?;
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
-    println!("serving integer policy at {addr}");
+    println!("serving integer policy at {addr} \
+              (pool=16 conns, max_batch=8)");
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
-    let norm = res.normalizer.clone();
-    let server_thread =
-        std::thread::spawn(move || serve(listener, engine, norm, stop2));
+    let server_cfg = ServerConfig {
+        max_connections: 16,
+        max_batch: 8,
+        ..ServerConfig::default()
+    };
+    let server_thread = std::thread::spawn(move || {
+        serve(listener, engine, norm, stop2, server_cfg)
+    });
 
-    // client: run episodes against the live env, actions from the server
+    // phase 1 — control loop: run episodes against the live env, actions
+    // fetched from the server
     let mut client = ActionClient::connect(&addr, 3, 1)?;
     let mut env = envs::make("pendulum")?;
     let mut rng = Rng::new(42);
@@ -68,15 +104,44 @@ fn main() -> Result<()> {
                 break;
             }
         }
-        println!("  episode {ep}: return {total:.1}");
+        println!("  episode {ep}: return {total:.1}{}",
+                 if trained { "" } else { " (untrained toy policy)" });
         returns.push(total);
     }
     drop(client);
+
+    // phase 2 — concurrent burst: several clients at once, so the serving
+    // core coalesces requests into batched integer passes
+    println!("  burst: {burst_clients} concurrent clients x {burst_reqs} \
+              requests");
+    let mut joins = Vec::new();
+    for c in 0..burst_clients {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = ActionClient::connect(&addr, 3, 1)?;
+            let mut obs = [0.0f32; 3];
+            for s in 0..burst_reqs {
+                for (d, o) in obs.iter_mut().enumerate() {
+                    *o = ((c * 13 + s * 3 + d) as f32 * 0.21).sin();
+                }
+                client.act(&obs)?;
+            }
+            Ok(())
+        }));
+    }
+    for j in joins {
+        j.join().expect("burst client panicked")?;
+    }
+
     stop.store(true, Ordering::Relaxed);
     let stats = server_thread.join().unwrap()?;
-    println!("server: {} requests, inference latency p50 {:.2} µs, \
-              p99 {:.2} µs, mean {:.2} µs",
-             stats.requests, stats.p50_us, stats.p99_us, stats.mean_us);
+    println!("server: {} requests over {} connections, {} inference \
+              passes (mean batch {:.2})",
+             stats.requests, stats.connections, stats.batches,
+             stats.requests as f64 / stats.batches.max(1) as f64);
+    println!("inference latency p50 {:.2} µs  p99 {:.2} µs  p99.9 {:.2} \
+              µs  mean {:.2} µs",
+             stats.p50_us, stats.p99_us, stats.p999_us, stats.mean_us);
     println!("mean return over TCP: {:.1}",
              returns.iter().sum::<f64>() / returns.len() as f64);
     Ok(())

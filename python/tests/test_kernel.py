@@ -7,7 +7,8 @@ hypothesis sweeps shapes, bitwidths, signedness and the quantization gate.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.qlinear import qdq_linear, vmem_footprint_bytes
 from compile.kernels.ref import qdq_linear_ref

@@ -1,0 +1,121 @@
+//! Serving throughput/tail-latency bench: requests/s and inference
+//! latency percentiles vs. concurrent client count and batch limit.
+//!
+//! The paper's headline is µs-scale per-action latency; this bench adds
+//! the throughput dimension the serving subsystem unlocks — concurrent
+//! clients coalesced into one integer GEMM-style pass. Self-contained
+//! (toy policy, loopback TCP): no artifacts needed.
+//!
+//! Scale knobs:
+//!   QCONTROL_SERVER_REQS=5000 cargo bench --bench server_throughput
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use qcontrol::coordinator::serving::{serve, ActionClient, ServerConfig,
+                                     ServerStats};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::util::bench::Table;
+use qcontrol::util::stats::ObsNormalizer;
+use qcontrol::util::testkit;
+
+const OBS: usize = 8;
+const ACT: usize = 4;
+const HIDDEN: usize = 32;
+
+fn toy_policy() -> IntPolicy {
+    testkit::toy_policy(7, OBS, HIDDEN, ACT, BitCfg::new(4, 3, 8))
+}
+
+/// One measured serving run; returns (wall seconds, server stats).
+fn run_once(policy: &IntPolicy, clients: usize, max_batch: usize,
+            reqs_per_client: usize) -> (f64, ServerStats) {
+    let engine = IntEngine::new(policy.clone());
+    let norm = ObsNormalizer::new(OBS, false);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let cfg = ServerConfig { max_batch, ..ServerConfig::default() };
+    let server = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            serve(listener, engine, norm, stop, cfg).unwrap()
+        })
+    };
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = ActionClient::connect(&addr, OBS, ACT)
+                .unwrap();
+            let mut obs = vec![0.0f32; OBS];
+            for s in 0..reqs_per_client {
+                for (d, o) in obs.iter_mut().enumerate() {
+                    *o = ((c * 31 + s * 7 + d) as f32 * 0.11).sin();
+                }
+                let act = client.act(&obs).unwrap();
+                std::hint::black_box(&act);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Relaxed);
+    let stats = server.join().unwrap();
+    (wall_s, stats)
+}
+
+fn main() {
+    let reqs_per_client: usize = std::env::var("QCONTROL_SERVER_REQS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let policy = toy_policy();
+
+    println!();
+    println!("=== server_throughput: requests/s and tail latency vs \
+              client count and batch limit ===");
+    println!("toy policy {OBS}->{HIDDEN}->{HIDDEN}->{ACT}, b=(4,3,8), \
+              {reqs_per_client} reqs/client, loopback TCP");
+    println!();
+
+    let mut table = Table::new(&[
+        "clients", "max_batch", "requests", "req/s", "mean batch",
+        "infer p50 µs", "p99 µs", "p99.9 µs",
+    ]);
+    for &clients in &[1usize, 4, 16] {
+        for &max_batch in &[1usize, 32] {
+            let (wall_s, stats) =
+                run_once(&policy, clients, max_batch, reqs_per_client);
+            let mean_batch = if stats.batches == 0 {
+                0.0
+            } else {
+                stats.requests as f64 / stats.batches as f64
+            };
+            table.row(vec![
+                clients.to_string(),
+                max_batch.to_string(),
+                stats.requests.to_string(),
+                format!("{:.0}", stats.requests as f64 / wall_s),
+                format!("{mean_batch:.2}"),
+                format!("{:.2}", stats.p50_us),
+                format!("{:.2}", stats.p99_us),
+                format!("{:.2}", stats.p999_us),
+            ]);
+        }
+    }
+    table.print();
+    println!();
+    println!("batched inference (max_batch=32) coalesces concurrent \
+              requests into one integer pass; batch of 1 isolates the \
+              per-request path.");
+}

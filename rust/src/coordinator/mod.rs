@@ -5,15 +5,19 @@
 //!   FP32 baseline band.
 //! * [`select`] — the paper's §3.2 three-step staged model selection:
 //!   smallest FP32-matching b_core → smallest hidden width → smallest b_in.
-//! * [`server`] — the deployment action server: integer-only inference over
-//!   TCP with µs latency accounting.
+//! * [`serving`] — the deployment serving subsystem: concurrent TCP
+//!   accepts over a bounded worker pool, batched integer-only inference,
+//!   and centralized µs latency accounting.
+//! * [`server`] — back-compat facade over [`serving`] (old entry point).
 //! * [`store`]  — JSON results store, so every bench/experiment appends to
 //!   `results/*.json` reproducibly.
 
 pub mod select;
 pub mod server;
+pub mod serving;
 pub mod store;
 pub mod sweep;
 
 pub use select::{select_model, SelectOutcome, SelectProtocol};
+pub use serving::{ActionClient, ServerConfig, ServerStats};
 pub use sweep::{fp32_band, run_config, Scope, SweepPoint, SweepProtocol};

@@ -1,160 +1,45 @@
-//! Deployment action server: integer-only inference over TCP.
+//! Back-compat facade over the [`super::serving`] subsystem.
 //!
-//! Wire protocol (little-endian, length-free — dims are fixed per policy):
-//!   request  = obs_dim x f32 (raw observation)
-//!   response = act_dim x f32 (action in [-1,1])
-//! One request per round-trip; the server tracks per-request latency
-//! percentiles (µs) of the *inference* portion — the software analogue of
-//! the paper's per-action FPGA latency.
+//! The original single-threaded action server lived here; it accepted
+//! clients strictly sequentially (a second concurrent client starved until
+//! the first disconnected) and could hang shutdown inside a blocking
+//! `read_exact`. Serving now lives in [`crate::coordinator::serving`] —
+//! concurrent accepts, bounded worker pool, read timeouts, and batched
+//! integer inference. This module keeps the old entry point compiling:
+//! [`serve`] forwards with [`ServerConfig::default`], and the client and
+//! stats types are re-exported.
 
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::intinfer::IntEngine;
 use crate::util::stats::ObsNormalizer;
 
-pub struct ServerStats {
-    pub requests: u64,
-    pub mean_us: f64,
-    pub p50_us: f64,
-    pub p99_us: f64,
-}
+pub use super::serving::{ActionClient, ServerConfig, ServerStats};
 
-/// Serve until `stop` flips (or forever). Returns latency stats.
-pub fn serve(listener: TcpListener, mut engine: IntEngine,
+/// Serve until `stop` flips. Forwards to [`super::serving::serve`] with
+/// default tunables; use the serving module directly to configure the
+/// pool/batching.
+pub fn serve(listener: TcpListener, engine: IntEngine,
              norm: ObsNormalizer, stop: Arc<AtomicBool>)
              -> Result<ServerStats> {
-    listener.set_nonblocking(true)?;
-    let obs_dim = engine.policy.obs_dim;
-    let act_dim = engine.policy.act_dim;
-    let mut lat_us: Vec<f64> = Vec::new();
-    let mut obs_buf = vec![0u8; obs_dim * 4];
-    let mut obs = vec![0.0f32; obs_dim];
-    let mut act = vec![0.0f32; act_dim];
-    let mut act_buf = vec![0u8; act_dim * 4];
-
-    while !stop.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                handle_client(stream, &mut engine, &norm, &mut obs_buf,
-                              &mut obs, &mut act, &mut act_buf,
-                              &mut lat_us, &stop)?;
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(1));
-            }
-            Err(e) => return Err(e).context("accept"),
-        }
-    }
-    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = lat_us.len();
-    Ok(ServerStats {
-        requests: n as u64,
-        mean_us: if n == 0 { 0.0 } else {
-            lat_us.iter().sum::<f64>() / n as f64
-        },
-        p50_us: if n == 0 { 0.0 } else { lat_us[n / 2] },
-        p99_us: if n == 0 { 0.0 } else {
-            lat_us[(n as f64 * 0.99) as usize % n]
-        },
-    })
-}
-
-#[allow(clippy::too_many_arguments)]
-fn handle_client(mut stream: TcpStream, engine: &mut IntEngine,
-                 norm: &ObsNormalizer, obs_buf: &mut [u8],
-                 obs: &mut [f32], act: &mut [f32], act_buf: &mut [u8],
-                 lat_us: &mut Vec<f64>, stop: &Arc<AtomicBool>)
-                 -> Result<()> {
-    stream.set_nodelay(true)?;
-    stream.set_nonblocking(false)?;
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        match stream.read_exact(obs_buf) {
-            Ok(()) => {}
-            Err(ref e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-                return Ok(()); // client hung up
-            }
-            Err(e) => return Err(e).context("read"),
-        }
-        for (i, c) in obs_buf.chunks_exact(4).enumerate() {
-            obs[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        }
-        let t0 = Instant::now();
-        norm.normalize(obs);
-        engine.infer(obs, act);
-        lat_us.push(t0.elapsed().as_nanos() as f64 / 1e3);
-        for (i, &a) in act.iter().enumerate() {
-            act_buf[i * 4..(i + 1) * 4].copy_from_slice(&a.to_le_bytes());
-        }
-        stream.write_all(act_buf)?;
-    }
-}
-
-/// Client helper (used by the policy_server example and tests).
-pub struct ActionClient {
-    stream: TcpStream,
-    obs_dim: usize,
-    act_dim: usize,
-}
-
-impl ActionClient {
-    pub fn connect(addr: &str, obs_dim: usize, act_dim: usize)
-                   -> Result<ActionClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(ActionClient { stream, obs_dim, act_dim })
-    }
-
-    pub fn act(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(obs.len() == self.obs_dim, "bad obs dim");
-        let mut buf = Vec::with_capacity(obs.len() * 4);
-        for &x in obs {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-        self.stream.write_all(&buf)?;
-        let mut resp = vec![0u8; self.act_dim * 4];
-        self.stream.read_exact(&mut resp)?;
-        Ok(resp
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
+    super::serving::serve(listener, engine, norm, stop,
+                          ServerConfig::default())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::export::IntPolicy;
-    use crate::quant::fakequant::PolicyTensors;
     use crate::quant::BitCfg;
-    use crate::util::rng::Rng;
+    use crate::util::testkit;
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn round_trip_over_tcp() {
-        // toy engine
-        let mut r = Rng::new(0);
-        let mut mk = |n: usize| -> Vec<f32> {
-            let mut v = vec![0.0f32; n];
-            r.fill_normal(&mut v);
-            v
-        };
-        let (w1, b1, w2, b2, w3, b3) =
-            (mk(8 * 3), mk(8), mk(8 * 8), mk(8), mk(2 * 8), mk(2));
-        let p = PolicyTensors {
-            obs_dim: 3, hidden: 8, act_dim: 2,
-            fc1_w: &w1, fc1_b: &b1, fc2_w: &w2, fc2_b: &b2,
-            mean_w: &w3, mean_b: &b3,
-            s_in: 2.0, s_h1: 1.0, s_h2: 1.0, s_out: 1.0,
-        };
-        let policy = IntPolicy::from_tensors(&p, BitCfg::new(4, 3, 8));
+        let policy = testkit::toy_policy(0, 3, 8, 2, BitCfg::new(4, 3, 8));
         let mut check = IntEngine::new(policy.clone());
         let engine = IntEngine::new(policy);
         let norm = ObsNormalizer::new(3, false);
@@ -178,6 +63,10 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         let stats = h.join().unwrap();
         assert_eq!(stats.requests, 50);
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.io_errors, 0);
+        assert!(stats.batches >= 1 && stats.batches <= 50);
         assert!(stats.p50_us < 1e4, "p50 {} µs", stats.p50_us);
+        assert!(stats.p99_us >= stats.p50_us);
     }
 }

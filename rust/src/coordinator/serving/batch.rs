@@ -1,0 +1,130 @@
+//! The shared inference core: a single thread that drains queued requests,
+//! coalesces them into one row-major observation block, and runs
+//! [`IntEngine::infer_batch`] — one weight-stationary integer pass for the
+//! whole batch.
+//!
+//! Batching is *opportunistic*: a lone request is served immediately
+//! (batch of 1); a batch only forms from requests already queued when the
+//! core picks up work, so coalescing adds no artificial delay and emerges
+//! exactly when concurrency creates it. Since `infer_batch` is
+//! bit-identical to per-observation `infer` (property-tested), clients
+//! cannot observe whether their request was batched.
+//!
+//! Shutdown: the core wakes at least every `batch_idle` to check `stop`;
+//! once stopped (or once every submitter hung up) it drains the queue so
+//! connection threads blocked on a reply always get unblocked — either
+//! with a response or by the reply channel dropping.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::intinfer::IntEngine;
+use crate::util::stats::ObsNormalizer;
+
+use super::latency::{LatencyRecorder, LocalLatency};
+use super::ServerConfig;
+
+/// One queued inference request. The reply sender is per-request and moved
+/// in, so dropping the request (e.g. during shutdown drain races) always
+/// unblocks the waiting connection thread.
+pub(crate) struct Request {
+    pub obs: Vec<f32>,
+    pub resp: Sender<Vec<f32>>,
+}
+
+/// Run the inference core until `stop` flips and the queue is drained, or
+/// until every submit handle is gone. Consumes the engine.
+pub(crate) fn run_inference_core(
+    rx: Receiver<Request>,
+    mut engine: IntEngine,
+    norm: ObsNormalizer,
+    stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
+    recorder: Arc<LatencyRecorder>,
+) {
+    let obs_dim = engine.policy.obs_dim;
+    let act_dim = engine.policy.act_dim;
+    let max_batch = cfg.max_batch.max(1);
+    let mut lat = recorder.local();
+    let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
+    let mut obs_block: Vec<f32> = Vec::new();
+    let mut act_block: Vec<f32> = Vec::new();
+
+    loop {
+        match rx.recv_timeout(cfg.batch_idle) {
+            Ok(first) => pending.push(first),
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        while pending.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        run_batch(&mut engine, &norm, &mut pending, &mut obs_block,
+                  &mut act_block, &mut lat, &recorder, obs_dim, act_dim);
+    }
+
+    // shutdown drain: answer whatever is already queued so no connection
+    // thread is left waiting on a reply that will never come
+    loop {
+        while pending.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        if pending.is_empty() {
+            break;
+        }
+        run_batch(&mut engine, &norm, &mut pending, &mut obs_block,
+                  &mut act_block, &mut lat, &recorder, obs_dim, act_dim);
+    }
+    // `lat` drops here, flushing residual samples into the recorder
+}
+
+/// Normalize + batched integer forward + reply fan-out for one batch.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    engine: &mut IntEngine,
+    norm: &ObsNormalizer,
+    pending: &mut Vec<Request>,
+    obs_block: &mut Vec<f32>,
+    act_block: &mut Vec<f32>,
+    lat: &mut LocalLatency<'_>,
+    recorder: &LatencyRecorder,
+    obs_dim: usize,
+    act_dim: usize,
+) {
+    let n = pending.len();
+    obs_block.clear();
+    for r in pending.iter() {
+        debug_assert_eq!(r.obs.len(), obs_dim);
+        obs_block.extend_from_slice(&r.obs);
+    }
+    act_block.clear();
+    act_block.resize(n * act_dim, 0.0);
+
+    let t0 = Instant::now();
+    for lane in obs_block.chunks_exact_mut(obs_dim) {
+        norm.normalize(lane);
+    }
+    engine.infer_batch(&obs_block[..], &mut act_block[..]);
+    let us = t0.elapsed().as_nanos() as f64 / 1e3;
+
+    recorder.note_batch();
+    for (i, r) in pending.drain(..).enumerate() {
+        lat.record(us);
+        // a send error means the connection died while waiting — fine
+        let _ = r.resp.send(act_block[i * act_dim..(i + 1) * act_dim]
+            .to_vec());
+    }
+}

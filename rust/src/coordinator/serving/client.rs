@@ -1,0 +1,41 @@
+//! Blocking client for the action-server wire protocol (one fixed-size
+//! request/response pair per round trip; see the module doc of
+//! [`super`] for the framing). Used by `examples/policy_server.rs`, the
+//! serving integration tests, and the throughput bench.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::Result;
+
+/// Synchronous round-trip client: one outstanding request per connection.
+pub struct ActionClient {
+    stream: TcpStream,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl ActionClient {
+    pub fn connect(addr: &str, obs_dim: usize, act_dim: usize)
+                   -> Result<ActionClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(ActionClient { stream, obs_dim, act_dim })
+    }
+
+    /// Send one raw observation, block for the action.
+    pub fn act(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(obs.len() == self.obs_dim, "bad obs dim");
+        let mut buf = Vec::with_capacity(obs.len() * 4);
+        for &x in obs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+        let mut resp = vec![0u8; self.act_dim * 4];
+        self.stream.read_exact(&mut resp)?;
+        Ok(resp
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

@@ -1,0 +1,225 @@
+//! Centralized latency accounting for the serving subsystem.
+//!
+//! [`LatencyRecorder`] is the shared sink: recording threads (the inference
+//! core today; sharded cores tomorrow) each hold a [`LocalLatency`] that
+//! buffers samples locally and merges them into the shared vector only
+//! every [`FLUSH_EVERY`] samples (or on drop), so the hot path almost never
+//! touches the mutex. [`ServerStats`] percentiles come from
+//! [`crate::util::stats::percentile`] — linear interpolation, NaN-tolerant
+//! — replacing the ad-hoc index arithmetic the old server used.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{mean, percentile_sorted};
+
+/// Samples buffered per recording thread before a merge into the shared
+/// vector (amortizes the lock to ~one acquisition per 256 requests).
+const FLUSH_EVERY: usize = 256;
+
+/// Retention bound on merged samples (~32 MiB of f64). `requests` stays
+/// exact past this point; percentiles are computed over the first
+/// `MAX_RETAINED` samples so a long-lived server cannot grow without
+/// bound.
+const MAX_RETAINED: usize = 1 << 22;
+
+/// Latency summary of one serving run (all values in µs of the *inference*
+/// portion, the software analogue of the paper's per-action FPGA latency;
+/// for a batched pass every request in the batch records the pass time).
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    /// accepted TCP connections over the server's lifetime
+    pub connections: u64,
+    /// connections that ended with an I/O or protocol error (truncated
+    /// frame, write timeout, …) rather than a clean disconnect
+    pub io_errors: u64,
+    /// inference passes executed (requests / batches = mean batch size)
+    pub batches: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+}
+
+impl ServerStats {
+    /// Summarize a sample set (connection/batch counters left at zero).
+    pub fn from_samples(lat_us: &[f64]) -> ServerStats {
+        let mut sorted = lat_us.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        ServerStats {
+            requests: lat_us.len() as u64,
+            connections: 0,
+            io_errors: 0,
+            batches: 0,
+            mean_us: mean(lat_us),
+            p50_us: percentile_sorted(&sorted, 0.50),
+            p99_us: percentile_sorted(&sorted, 0.99),
+            p999_us: percentile_sorted(&sorted, 0.999),
+        }
+    }
+}
+
+/// Shared, merge-on-drain latency sink.
+#[derive(Default)]
+pub struct LatencyRecorder {
+    shared: Mutex<Vec<f64>>,
+    /// exact count of samples ever recorded (retention-capped `shared`
+    /// may hold fewer)
+    recorded: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    /// A thread-local recording handle; buffered samples merge on flush
+    /// and automatically on drop.
+    pub fn local(&self) -> LocalLatency<'_> {
+        LocalLatency { rec: self, buf: Vec::with_capacity(FLUSH_EVERY) }
+    }
+
+    /// Count one executed inference pass (batch of any size).
+    pub fn note_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn merge(&self, samples: &mut Vec<f64>) {
+        if samples.is_empty() {
+            return;
+        }
+        self.recorded
+            .fetch_add(samples.len() as u64, Ordering::Relaxed);
+        let mut shared = self.shared.lock().unwrap();
+        let room = MAX_RETAINED.saturating_sub(shared.len());
+        shared.extend_from_slice(&samples[..samples.len().min(room)]);
+        drop(shared);
+        samples.clear();
+    }
+
+    /// Summarize everything merged so far (un-flushed thread-local buffers
+    /// are not visible until their handle flushes or drops). `requests`
+    /// is exact; percentiles cover the retained window (`MAX_RETAINED`).
+    pub fn snapshot(&self) -> ServerStats {
+        let samples = self.shared.lock().unwrap();
+        let mut stats = ServerStats::from_samples(&samples);
+        drop(samples);
+        stats.requests = self.recorded.load(Ordering::Relaxed);
+        stats.batches = self.batches.load(Ordering::Relaxed);
+        stats
+    }
+}
+
+/// Per-thread buffered view of a [`LatencyRecorder`].
+pub struct LocalLatency<'a> {
+    rec: &'a LatencyRecorder,
+    buf: Vec<f64>,
+}
+
+impl LocalLatency<'_> {
+    pub fn record(&mut self, us: f64) {
+        self.buf.push(us);
+        if self.buf.len() >= FLUSH_EVERY {
+            self.flush();
+        }
+    }
+
+    pub fn flush(&mut self) {
+        self.rec.merge(&mut self.buf);
+    }
+}
+
+impl Drop for LocalLatency<'_> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_n0_is_all_zero() {
+        let s = ServerStats::from_samples(&[]);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_us, 0.0);
+        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.p99_us, 0.0);
+        assert_eq!(s.p999_us, 0.0);
+    }
+
+    #[test]
+    fn stats_n1_every_percentile_is_the_sample() {
+        let s = ServerStats::from_samples(&[7.5]);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.mean_us, 7.5);
+        assert_eq!(s.p50_us, 7.5);
+        assert_eq!(s.p99_us, 7.5);
+        assert_eq!(s.p999_us, 7.5);
+    }
+
+    #[test]
+    fn stats_n2_interpolates() {
+        // the old server reported lat[n/2] (= the *larger* of two) for p50
+        // and lat[(n*0.99) as usize % n] (= the *smaller*!) for p99; the
+        // percentile-based path interpolates both consistently
+        let s = ServerStats::from_samples(&[1.0, 3.0]);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.mean_us, 2.0);
+        assert_eq!(s.p50_us, 2.0);
+        assert!((s.p99_us - 2.98).abs() < 1e-12, "{}", s.p99_us);
+        assert!(s.p50_us <= s.p99_us && s.p99_us <= s.p999_us);
+    }
+
+    #[test]
+    fn recorder_merges_threads_and_counts_batches() {
+        use std::sync::Arc;
+        let rec = Arc::new(LatencyRecorder::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let rec = rec.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local = rec.local();
+                for i in 0..1000 {
+                    local.record((t * 1000 + i) as f64);
+                }
+                rec.note_batch();
+                // local drops here -> residual samples flushed
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = rec.snapshot();
+        assert_eq!(s.requests, 4000);
+        assert_eq!(s.batches, 4);
+        assert!(s.p50_us > 0.0 && s.p50_us <= s.p99_us);
+    }
+
+    #[test]
+    fn request_count_stays_exact_when_merging_repeatedly() {
+        let rec = LatencyRecorder::new();
+        let mut local = rec.local();
+        for i in 0..10_000 {
+            local.record(i as f64);
+        }
+        local.flush();
+        let s = rec.snapshot();
+        assert_eq!(s.requests, 10_000);
+        assert!(s.p50_us > 0.0);
+    }
+
+    #[test]
+    fn local_buffer_flushes_at_capacity() {
+        let rec = LatencyRecorder::new();
+        let mut local = rec.local();
+        for i in 0..FLUSH_EVERY {
+            local.record(i as f64);
+        }
+        // capacity reached -> samples already visible without drop
+        assert_eq!(rec.snapshot().requests, FLUSH_EVERY as u64);
+    }
+}

@@ -1,0 +1,341 @@
+//! Concurrent, batched deployment serving — integer-only inference over
+//! TCP at production client counts.
+//!
+//! This subsystem replaces the old single-client `coordinator::server`
+//! loop, which accepted connections strictly sequentially (a second client
+//! starved until the first disconnected) and could hang shutdown inside a
+//! blocking `read_exact`. Architecture:
+//!
+//! ```text
+//!  accept loop (caller thread, non-blocking + bounded pool gate)
+//!      ├── connection thread 1 ─┐  (read with timeout → submit → reply)
+//!      ├── connection thread 2 ─┼──> mpsc queue ──> inference core thread
+//!      └── connection thread N ─┘       (coalesce ≤ max_batch, normalize,
+//!                                        IntEngine::infer_batch, fan out)
+//! ```
+//!
+//! ## Wire protocol
+//!
+//! Little-endian, length-free — dimensions are fixed per policy:
+//!
+//! * request  = `obs_dim × f32` (raw, un-normalized observation)
+//! * response = `act_dim × f32` (action in `[-1, 1]`)
+//!
+//! One request outstanding per connection; responses preserve request
+//! order within a connection trivially (the connection thread is
+//! synchronous). Partial frames are accumulated across read timeouts, so
+//! slow writers are fine.
+//!
+//! ## Concurrency model
+//!
+//! Thread-per-connection, bounded by [`ServerConfig::max_connections`]
+//! (the accept loop blocks — backpressure — when the pool is full).
+//! Connection threads do only I/O and framing; all inference funnels
+//! through one shared core so the engine's scratch buffers and the policy
+//! stay single-threaded.
+//!
+//! ## Batching semantics
+//!
+//! The core coalesces whatever is queued at pickup time, up to
+//! [`ServerConfig::max_batch`] — a lone request is never delayed to wait
+//! for peers. [`IntEngine::infer_batch`] is bit-identical to
+//! per-observation [`IntEngine::infer`], so batching is invisible to
+//! clients. Recorded per-request latency of a batched pass is the pass
+//! time (every rider pays the full batch).
+//!
+//! Deliberate tradeoff: each request costs three small heap allocations
+//! (owned obs, reply channel, reply vec). The per-request reply channel —
+//! its sender *moved* into the queue — is what makes the shutdown drain
+//! race-free (a dropped request always unblocks its connection thread); a
+//! persistent per-connection channel would leave `recv` blocked, because
+//! the connection's own live sender keeps that channel open. The engine
+//! hot path itself stays zero-allocation.
+//!
+//! ## Shutdown contract
+//!
+//! Flip `stop`, then join the thread running [`serve`]. Bounds: the accept
+//! loop notices within [`ServerConfig::accept_poll`]; every connection
+//! thread notices within [`ServerConfig::read_timeout`] even while idle
+//! mid-read (the bug the old server had); the core notices within
+//! [`ServerConfig::batch_idle`] and then drains the queue so no connection
+//! thread is left waiting on a reply. Requests arriving during the drain
+//! race may be dropped — their clients observe a closed connection, never
+//! a corrupt response. [`serve`] returns aggregate [`ServerStats`].
+
+mod batch;
+mod client;
+mod latency;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::intinfer::IntEngine;
+use crate::util::stats::ObsNormalizer;
+
+use batch::Request;
+pub use client::ActionClient;
+pub use latency::{LatencyRecorder, LocalLatency, ServerStats};
+
+/// Tunables of the serving subsystem. Defaults favor fast shutdown and
+/// low per-request latency; raise `max_batch` for throughput workloads.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// connection-thread pool bound; accepts block when it is exhausted
+    pub max_connections: usize,
+    /// max requests coalesced into one inference pass
+    pub max_batch: usize,
+    /// socket read timeout — the bound on noticing `stop` mid-read
+    pub read_timeout: Duration,
+    /// socket write timeout — bounds shutdown against stalled readers
+    pub write_timeout: Duration,
+    /// inference-core wake interval while the queue is idle
+    pub batch_idle: Duration,
+    /// accept-loop poll interval (listener is non-blocking)
+    pub accept_poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_connections: 64,
+            max_batch: 32,
+            read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+            batch_idle: Duration::from_millis(2),
+            accept_poll: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Serve until `stop` flips. Accepts clients concurrently, coalesces
+/// their requests into batched integer inference, returns latency stats.
+///
+/// Blocks the calling thread; run it on a dedicated thread and use the
+/// shutdown contract in the module doc to stop it.
+pub fn serve(listener: TcpListener, engine: IntEngine, norm: ObsNormalizer,
+             stop: Arc<AtomicBool>, cfg: ServerConfig)
+             -> Result<ServerStats> {
+    listener.set_nonblocking(true)?;
+    let obs_dim = engine.policy.obs_dim;
+    let act_dim = engine.policy.act_dim;
+    let recorder = Arc::new(LatencyRecorder::new());
+
+    let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+    let core = {
+        let recorder = recorder.clone();
+        let stop = stop.clone();
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name("qserve-infer".into())
+            .spawn(move || {
+                batch::run_inference_core(submit_rx, engine, norm, stop,
+                                          cfg, recorder)
+            })
+            .context("spawn inference core")?
+    };
+
+    let gate = Arc::new(Gate::new(cfg.max_connections.max(1)));
+    let io_errors = Arc::new(AtomicU64::new(0));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut accepted: u64 = 0;
+
+    let mut accept_loop = || -> Result<()> {
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // bounded pool: wait for a slot (backpressure) unless
+                    // stop flips while we wait
+                    if !gate.wait_for_slot(&stop) {
+                        return Ok(());
+                    }
+                    let permit = Permit(gate.clone());
+                    accepted += 1;
+                    reap_finished(&mut conns);
+                    let tx = submit_tx.clone();
+                    let stop = stop.clone();
+                    let cfg = cfg.clone();
+                    let errs = io_errors.clone();
+                    let h = std::thread::Builder::new()
+                        .name(format!("qserve-conn-{accepted}"))
+                        .spawn(move || {
+                            let _permit = permit;
+                            // io errors end the connection, not the
+                            // server — but they must stay diagnosable
+                            if let Err(e) = handle_connection(
+                                stream, obs_dim, act_dim, tx, &stop, &cfg)
+                            {
+                                errs.fetch_add(1, Ordering::Relaxed);
+                                eprintln!("qserve: connection error: {e}");
+                            }
+                        })
+                        .context("spawn connection thread")?;
+                    conns.push(h);
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(cfg.accept_poll);
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+    };
+    let accept_res = accept_loop();
+
+    // shutdown sequence (also taken on accept errors): make sure every
+    // helper thread observes stop, then join in dependency order
+    stop.store(true, Ordering::Relaxed);
+    for h in conns {
+        let _ = h.join();
+    }
+    drop(submit_tx);
+    core.join()
+        .map_err(|_| anyhow::anyhow!("inference core panicked"))?;
+    accept_res?;
+
+    let mut stats = recorder.snapshot();
+    stats.connections = accepted;
+    stats.io_errors = io_errors.load(Ordering::Relaxed);
+    Ok(stats)
+}
+
+/// Join connection threads that already exited, keeping the handle list
+/// from growing without bound on long-lived servers.
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// One connection: framed reads with timeout (so `stop` is honored even
+/// mid-request), submit to the core, relay the reply.
+fn handle_connection(mut stream: TcpStream, obs_dim: usize, act_dim: usize,
+                     submit: Sender<Request>, stop: &AtomicBool,
+                     cfg: &ServerConfig) -> Result<()> {
+    // accepted sockets inherit the listener's non-blocking flag on some
+    // platforms (Windows); timeouts below need a blocking socket
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
+    let mut obs_buf = vec![0u8; obs_dim * 4];
+    let mut act_buf = vec![0u8; act_dim * 4];
+    loop {
+        if !read_frame(&mut stream, &mut obs_buf, stop)? {
+            return Ok(()); // disconnect or stop
+        }
+        let obs: Vec<f32> = obs_buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        // per-request reply channel, sender *moved* into the request:
+        // whatever happens to the request, recv below unblocks
+        let (tx, rx) = mpsc::channel();
+        if submit.send(Request { obs, resp: tx }).is_err() {
+            return Ok(()); // core gone — shutting down
+        }
+        let act = match rx.recv() {
+            Ok(a) => a,
+            Err(_) => return Ok(()), // request dropped in shutdown drain
+        };
+        for (i, &a) in act.iter().enumerate() {
+            act_buf[i * 4..(i + 1) * 4].copy_from_slice(&a.to_le_bytes());
+        }
+        stream.write_all(&act_buf).context("write response")?;
+    }
+}
+
+/// Read one fixed-size frame, preserving partial progress across read
+/// timeouts. Returns `Ok(false)` on clean disconnect or stop.
+fn read_frame(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool)
+              -> Result<bool> {
+    use std::io::ErrorKind::*;
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(false);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(false),
+            Ok(0) => anyhow::bail!("eof mid-request ({filled}/{} bytes)",
+                                   buf.len()),
+            Ok(n) => filled += n,
+            Err(ref e)
+                if matches!(e.kind(),
+                            WouldBlock | TimedOut | Interrupted) =>
+            {
+                continue;
+            }
+            Err(ref e)
+                if matches!(e.kind(),
+                            ConnectionReset | ConnectionAborted
+                            | BrokenPipe) =>
+            {
+                return Ok(false);
+            }
+            Err(e) => return Err(e).context("read request"),
+        }
+    }
+    Ok(true)
+}
+
+/// Counting gate bounding the connection-thread pool.
+struct Gate {
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(slots: usize) -> Gate {
+        Gate { free: Mutex::new(slots), cv: Condvar::new() }
+    }
+
+    /// Claim a slot, waiting while the pool is full. Returns `false` if
+    /// `stop` flips during the wait. On `true` the caller owns one slot
+    /// and must wrap it in a [`Permit`] to release it.
+    fn wait_for_slot(&self, stop: &AtomicBool) -> bool {
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            if *free > 0 {
+                *free -= 1;
+                return true;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(free, Duration::from_millis(10))
+                .unwrap();
+            free = guard;
+        }
+    }
+
+    fn release(&self) {
+        *self.free.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// RAII slot of the [`Gate`]; releases on drop (connection thread exit).
+struct Permit(Arc<Gate>);
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}

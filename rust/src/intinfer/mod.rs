@@ -13,14 +13,17 @@ use crate::quant::export::IntPolicy;
 /// Reusable integer inference engine over a fixed [`IntPolicy`].
 pub struct IntEngine {
     pub policy: IntPolicy,
-    // ping-pong activation buffers (i32 lattice values)
+    /// per-lane stride of the scratch buffers: max dim of any activation
+    lane: usize,
+    // ping-pong activation buffers (i32 lattice values); grown on demand
+    // to `lane * batch` so batched inference reuses them per batch lane
     buf_a: Vec<i32>,
     buf_b: Vec<i32>,
 }
 
 impl IntEngine {
     pub fn new(policy: IntPolicy) -> IntEngine {
-        let maxdim = policy
+        let lane = policy
             .layers
             .iter()
             .map(|l| l.rows.max(l.cols))
@@ -29,8 +32,9 @@ impl IntEngine {
             .max(policy.obs_dim);
         IntEngine {
             policy,
-            buf_a: vec![0; maxdim],
-            buf_b: vec![0; maxdim],
+            lane,
+            buf_a: vec![0; lane],
+            buf_b: vec![0; lane],
         }
     }
 
@@ -78,6 +82,81 @@ impl IntEngine {
     pub fn infer_vec(&mut self, obs: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0f32; self.policy.act_dim];
         self.infer(obs, &mut out);
+        out
+    }
+
+    /// Batched integer forward over a row-major observation block.
+    ///
+    /// `obs` is `[batch, obs_dim]` row-major (already normalized),
+    /// `actions_out` is `[batch, act_dim]` row-major. Lanes are laid out at
+    /// a fixed stride in the ping-pong scratch buffers (grown on demand,
+    /// then reused), and each layer walks weight rows in the outer loop so
+    /// one row services every lane — a weight-stationary integer GEMM pass.
+    ///
+    /// Per lane the accumulation order, threshold search, and tanh lookup
+    /// are exactly those of [`IntEngine::infer`], so results are
+    /// bit-identical to per-observation inference (pinned by a property
+    /// test); concurrent serving may therefore coalesce requests freely.
+    pub fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32]) {
+        let obs_dim = self.policy.obs_dim;
+        let act_dim = self.policy.act_dim;
+        assert_eq!(obs.len() % obs_dim, 0, "obs block not [batch, obs_dim]");
+        let batch = obs.len() / obs_dim;
+        assert_eq!(actions_out.len(), batch * act_dim,
+                   "out block not [batch, act_dim]");
+        if batch == 0 {
+            return;
+        }
+        let lane = self.lane;
+        let need = lane * batch;
+        if self.buf_a.len() < need {
+            self.buf_a.resize(need, 0);
+            self.buf_b.resize(need, 0);
+        }
+
+        let p = &self.policy;
+        for b in 0..batch {
+            p.quantize_input(&obs[b * obs_dim..(b + 1) * obs_dim],
+                             &mut self.buf_a[b * lane..b * lane + obs_dim]);
+        }
+
+        let (mut cur, mut nxt) = (&mut self.buf_a, &mut self.buf_b);
+        for layer in &p.layers {
+            let nthr = layer.out_range.levels() - 1;
+            for j in 0..layer.rows {
+                let wrow =
+                    &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
+                let t = &layer.thresholds[j * nthr..(j + 1) * nthr];
+                for b in 0..batch {
+                    let x = &cur[b * lane..b * lane + layer.cols];
+                    let acc: i32 = wrow
+                        .iter()
+                        .zip(x)
+                        .map(|(&w, &xv)| w as i32 * xv)
+                        .sum();
+                    let cnt = t.partition_point(|&th| th <= acc);
+                    nxt[b * lane + j] = layer.out_range.qmin + cnt as i32;
+                }
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        let last = p.layers.last().unwrap();
+        let qmin = last.out_range.qmin;
+        for b in 0..batch {
+            let lanes = &cur[b * lane..b * lane + act_dim];
+            let out = &mut actions_out[b * act_dim..(b + 1) * act_dim];
+            for (o, &q) in out.iter_mut().zip(lanes) {
+                *o = p.tanh_lut[(q - qmin) as usize];
+            }
+        }
+    }
+
+    /// Convenience allocating wrapper around [`IntEngine::infer_batch`].
+    pub fn infer_batch_vec(&mut self, obs: &[f32]) -> Vec<f32> {
+        let batch = obs.len() / self.policy.obs_dim;
+        let mut out = vec![0.0f32; batch * self.policy.act_dim];
+        self.infer_batch(obs, &mut out);
         out
     }
 
@@ -156,6 +235,48 @@ mod tests {
             assert!(a.iter().all(|x| x.is_finite() && x.abs() <= 1.0),
                     "{a:?} for input {v}");
         }
+    }
+
+    #[test]
+    fn infer_batch_bit_identical_across_bitcfg_matrix() {
+        for bits in [BitCfg::new(3, 2, 4), BitCfg::new(4, 3, 8),
+                     BitCfg::new(8, 8, 8)] {
+            let (mut single, _keep) = build(11, 7, 24, 3, bits);
+            let (mut batched, _keep2) = build(11, 7, 24, 3, bits);
+            let mut rng = Rng::new(5);
+            for &batch in &[1usize, 2, 3, 5, 8, 17] {
+                let mut block = vec![0.0f32; batch * 7];
+                rng.fill_normal(&mut block);
+                let got = batched.infer_batch_vec(&block);
+                for b in 0..batch {
+                    let want = single.infer_vec(&block[b * 7..(b + 1) * 7]);
+                    assert_eq!(&got[b * 3..(b + 1) * 3], &want[..],
+                               "bits={bits:?} batch={batch} lane={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infer_batch_empty_block_is_noop() {
+        let (mut eng, _keep) = build(1, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let out = eng.infer_batch_vec(&[]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn interleaving_single_and_batched_is_consistent() {
+        // batched calls grow the scratch buffers; single-obs inference
+        // must be unaffected before, between, and after
+        let (mut eng, _keep) = build(2, 6, 16, 2, BitCfg::new(5, 3, 6));
+        let mut rng = Rng::new(8);
+        let mut obs = vec![0.0f32; 6];
+        rng.fill_normal(&mut obs);
+        let before = eng.infer_vec(&obs);
+        let mut block = vec![0.0f32; 12 * 6];
+        rng.fill_normal(&mut block);
+        let _ = eng.infer_batch_vec(&block);
+        assert_eq!(eng.infer_vec(&obs), before);
     }
 
     #[test]

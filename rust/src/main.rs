@@ -285,8 +285,10 @@ fn cmd_serve(a: &Args) -> Result<()> {
               (obs={}, act={})", dims.obs_dim, dims.act_dim);
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stats = server::serve(listener, engine, norm, stop)?;
-    println!("served {} requests, p50 {:.1} µs", stats.requests,
-             stats.p50_us);
+    println!("served {} requests over {} connections ({} batched passes), \
+              inference p50 {:.1} µs  p99 {:.1} µs  p99.9 {:.1} µs",
+             stats.requests, stats.connections, stats.batches,
+             stats.p50_us, stats.p99_us, stats.p999_us);
     Ok(())
 }
 

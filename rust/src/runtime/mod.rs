@@ -17,7 +17,24 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+// The `xla` PJRT bindings are optional: they need native XLA libraries that
+// offline build environments don't have. Without the `pjrt` feature an
+// inert stub with the same surface takes their place — `Runtime::load`
+// fails with a clear message and nothing else is reachable, while the rest
+// of the crate (quantization, integer inference, serving) builds and runs.
+#[cfg(feature = "pjrt")]
+use xla::{
+    ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+#[cfg(not(feature = "pjrt"))]
+use pjrt_stub::{
+    ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub;
 
 pub use manifest::{ArtifactMeta, EnvDims, Manifest, ParamSpec, SpecEntry};
 
@@ -70,9 +87,9 @@ impl Runtime {
             .clone();
         let t0 = Instant::now();
         let path = meta.file.to_string_lossy().to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path)
+        let proto = HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
+        let comp = XlaComputation::from_proto(&proto);
         let raw = self
             .client
             .compile(&comp)

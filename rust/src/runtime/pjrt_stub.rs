@@ -1,0 +1,120 @@
+//! Inert stand-in for the `xla` PJRT bindings, used when the crate is
+//! built without the `pjrt` feature (the default in offline environments).
+//!
+//! Every constructor returns an error, so the executable types below are
+//! uninhabited: `Runtime::load` fails up front with a clear message and no
+//! method body past construction is ever reachable (`match *self {}`).
+//! The surface mirrors exactly the calls `runtime::Exe::run_f32` and
+//! `Runtime::exe` make against the real crate.
+
+// empty matches on `*self` of an uninhabited type are the point here
+#![allow(unknown_lints)]
+#![allow(clippy::uninhabited_references)]
+
+use std::fmt;
+
+const MSG: &str = "qcontrol was built without the `pjrt` feature; \
+                   rebuild with `--features pjrt` (and the `xla` bindings \
+                   crate available) to load and execute HLO artifacts";
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub struct XlaError(&'static str);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(MSG))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    pub fn primitive_type(self) -> i32 {
+        // numeric tag only flows back into the stub's own `convert`
+        11
+    }
+}
+
+pub enum PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable, XlaError> {
+        match *self {}
+    }
+}
+
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T])
+                      -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        match *self {}
+    }
+}
+
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        match *self {}
+    }
+}
+
+pub enum Literal {}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType, _shape: &[usize], _data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self {}
+    }
+
+    pub fn element_type(&self) -> Result<ElementType, XlaError> {
+        match *self {}
+    }
+
+    pub fn convert(&self, _primitive: i32) -> Result<Literal, XlaError> {
+        match *self {}
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        match *self {}
+    }
+}
+
+pub enum HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+/// Placeholder computation handle (constructible, but only from an
+/// uninhabited proto, so it can never actually exist at runtime).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

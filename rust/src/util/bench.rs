@@ -61,7 +61,7 @@ pub fn run<F: FnMut()>(name: &str, warmup: usize, min_time_s: f64,
             break;
         }
     }
-    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples_ns.sort_by(f64::total_cmp);
     let n = samples_ns.len();
     let mean = samples_ns.iter().sum::<f64>() / n as f64;
     let r = BenchResult {

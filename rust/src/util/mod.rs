@@ -11,6 +11,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod testkit;
 
 /// Round half-to-even, matching XLA's `round_nearest_even` and therefore the
 /// L2 graphs bit-for-bit. (`f32::round` rounds half away from zero, which

@@ -135,19 +135,34 @@ pub fn std(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolation percentile (q in [0,1]) of an unsorted slice.
+///
+/// NaN-tolerant: samples are ordered with `f64::total_cmp`, so stray NaNs
+/// can never panic the sort (the old `partial_cmp().unwrap()` did). Note
+/// total order places positive NaN above +inf but *negative* NaN below
+/// -inf, so a quantile landing on a NaN sample returns NaN — the guarantee
+/// here is no-panic, not NaN-free output.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    v.sort_by(f64::total_cmp);
+    percentile_sorted(&v, q)
+}
+
+/// [`percentile`] over an already `total_cmp`-sorted slice — lets callers
+/// that need several quantiles sort once instead of once per quantile.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 
@@ -225,6 +240,27 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 3.0);
         assert_eq!(percentile(&xs, 0.5), 2.0);
+    }
+
+    #[test]
+    fn percentile_small_n_edge_cases() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[5.0], 0.5), 5.0);
+        assert_eq!(percentile(&[5.0], 0.99), 5.0);
+        // n = 2: linear interpolation between the two samples
+        assert_eq!(percentile(&[1.0, 3.0], 0.5), 2.0);
+        assert!((percentile(&[1.0, 3.0], 0.99) - 2.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // a NaN sample must not panic the sort (total_cmp orders it last)
+        let xs = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        // the top quantile lands on the NaN itself — defined, not a panic
+        assert!(percentile(&xs, 1.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,53 @@
+//! Deterministic toy policies for tests, benches, and example fallbacks.
+//!
+//! Several surfaces need a self-contained [`IntPolicy`] with no trained
+//! artifacts — the serving integration tests, the throughput bench, the
+//! back-compat server test, and `examples/policy_server.rs` when PJRT is
+//! unavailable. One builder here keeps them from drifting apart.
+
+use crate::quant::export::IntPolicy;
+use crate::quant::fakequant::PolicyTensors;
+use crate::quant::BitCfg;
+use crate::util::rng::Rng;
+
+/// Build a deterministic random 3-layer integer policy of the given
+/// dimensions (same seed + dims + bits → identical policy).
+pub fn toy_policy(seed: u64, obs_dim: usize, hidden: usize,
+                  act_dim: usize, bits: BitCfg) -> IntPolicy {
+    let mut r = Rng::new(seed);
+    let mut mk = |n: usize, s: f32| -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        r.fill_normal(&mut v);
+        v.iter_mut().for_each(|x| *x *= s);
+        v
+    };
+    let bufs = [
+        mk(hidden * obs_dim, 0.5), mk(hidden, 0.1),
+        mk(hidden * hidden, 0.3), mk(hidden, 0.1),
+        mk(act_dim * hidden, 0.3), mk(act_dim, 0.1),
+    ];
+    let p = PolicyTensors {
+        obs_dim, hidden, act_dim,
+        fc1_w: &bufs[0], fc1_b: &bufs[1],
+        fc2_w: &bufs[2], fc2_b: &bufs[3],
+        mean_w: &bufs[4], mean_b: &bufs[5],
+        s_in: 2.0, s_h1: 1.2, s_h2: 1.2, s_out: 1.0,
+    };
+    IntPolicy::from_tensors(&p, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::intinfer::IntEngine;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = toy_policy(9, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let b = toy_policy(9, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let mut ea = IntEngine::new(a);
+        let mut eb = IntEngine::new(b);
+        let obs = [0.3f32, -1.1, 0.0, 2.0];
+        assert_eq!(ea.infer_vec(&obs), eb.infer_vec(&obs));
+    }
+}

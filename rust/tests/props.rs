@@ -90,6 +90,35 @@ fn prop_int_engine_equals_naive_paths() {
 }
 
 #[test]
+fn prop_infer_batch_bit_identical_to_infer() {
+    // batched serving coalesces requests into one integer GEMM pass; the
+    // coalescing is only sound if batching never changes a single bit
+    check("infer-batch-bit-identical", 40, 909, |g| {
+        let b = gen_policy(g);
+        let bits = gen_bits(g);
+        let ip = IntPolicy::from_tensors(&tensors(&b), bits);
+        let mut single = IntEngine::new(ip.clone());
+        let mut batched = IntEngine::new(ip);
+        let batch = g.usize_in(1, 17);
+        let block = g.vec_normal(batch * b.obs, 2.0);
+        let got = batched.infer_batch_vec(&block);
+        if got.len() != batch * b.act {
+            return Err(format!("bad out len {}", got.len()));
+        }
+        for lane in 0..batch {
+            let want =
+                single.infer_vec(&block[lane * b.obs..(lane + 1) * b.obs]);
+            if got[lane * b.act..(lane + 1) * b.act] != want[..] {
+                return Err(format!(
+                    "lane {lane}/{batch} differs (bits={bits:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_thresholds_sorted() {
     check("thresholds-sorted", 40, 303, |g| {
         let b = gen_policy(g);

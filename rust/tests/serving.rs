@@ -1,0 +1,187 @@
+//! Integration tests for the concurrent serving subsystem: multi-client
+//! correctness (responses must equal `IntEngine::infer_vec` bit-for-bit),
+//! the two-client starvation regression, and the bounded-shutdown
+//! contract with an idle-but-connected client.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use qcontrol::coordinator::serving::{serve, ActionClient, ServerConfig,
+                                     ServerStats};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::util::stats::ObsNormalizer;
+use qcontrol::util::testkit;
+
+const OBS: usize = 5;
+const ACT: usize = 3;
+
+fn toy_policy(seed: u64) -> IntPolicy {
+    testkit::toy_policy(seed, OBS, 16, ACT, BitCfg::new(4, 3, 8))
+}
+
+struct Harness {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<ServerStats>,
+    policy: IntPolicy,
+}
+
+fn start_server(cfg: ServerConfig) -> Harness {
+    let policy = toy_policy(42);
+    let engine = IntEngine::new(policy.clone());
+    let norm = ObsNormalizer::new(OBS, false);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        serve(listener, engine, norm, stop2, cfg).unwrap()
+    });
+    Harness { addr, stop, handle, policy }
+}
+
+fn client_obs(client: usize, step: usize) -> Vec<f32> {
+    (0..OBS)
+        .map(|d| {
+            ((client * 131 + step * 17 + d * 7) as f32 * 0.23).sin() * 2.0
+        })
+        .collect()
+}
+
+/// N concurrent clients, each doing `rounds` synchronous round-trips with
+/// client-distinct observations, each verifying bit-exactness locally.
+fn run_clients(addr: &str, policy: &IntPolicy, n: usize, rounds: usize) {
+    let (done_tx, done_rx) = mpsc::channel();
+    let mut joins = Vec::new();
+    for c in 0..n {
+        let addr = addr.to_string();
+        let policy = policy.clone();
+        let done = done_tx.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut check = IntEngine::new(policy);
+            let mut client = ActionClient::connect(&addr, OBS, ACT)
+                .unwrap();
+            for s in 0..rounds {
+                let obs = client_obs(c, s);
+                let got = client.act(&obs).unwrap();
+                let want = check.infer_vec(&obs);
+                assert_eq!(got, want, "client {c} step {s}");
+            }
+            done.send(c).unwrap();
+        }));
+    }
+    drop(done_tx);
+    // bounded wait: every client must finish — under the old sequential
+    // accept loop, all clients after the first starved forever
+    for _ in 0..n {
+        done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("a client starved: did not finish within 30 s");
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn two_simultaneous_clients_both_complete_50_round_trips() {
+    let h = start_server(ServerConfig::default());
+    run_clients(&h.addr, &h.policy, 2, 50);
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 100);
+    assert_eq!(stats.connections, 2);
+}
+
+#[test]
+fn four_concurrent_clients_served_exactly() {
+    let cfg = ServerConfig { max_batch: 8, ..ServerConfig::default() };
+    let h = start_server(cfg);
+    run_clients(&h.addr, &h.policy, 4, 60);
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 4 * 60);
+    assert_eq!(stats.connections, 4);
+    assert_eq!(stats.io_errors, 0);
+    assert!(stats.batches >= 1 && stats.batches <= stats.requests);
+    assert!(stats.p50_us <= stats.p99_us
+            && stats.p99_us <= stats.p999_us);
+}
+
+#[test]
+fn batch_of_one_pool_still_serves_many_clients() {
+    // max_batch = 1 disables coalescing entirely; concurrency must still
+    // be correct because the core serializes inference
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_connections: 4,
+        ..ServerConfig::default()
+    };
+    let h = start_server(cfg);
+    run_clients(&h.addr, &h.policy, 4, 25);
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 100);
+    assert_eq!(stats.batches, 100, "max_batch=1 must not coalesce");
+}
+
+#[test]
+fn shutdown_with_idle_connected_client_is_bounded() {
+    let h = start_server(ServerConfig::default());
+    // hold an open connection and go idle: the old server sat in a
+    // blocking read_exact here and made the serve thread unjoinable
+    let _idle = ActionClient::connect(&h.addr, OBS, ACT).unwrap();
+    // let the accept loop pick the connection up
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    let waited = t0.elapsed();
+    assert!(waited < Duration::from_secs(5),
+            "shutdown took {waited:?} with an idle client connected");
+    assert_eq!(stats.connections, 1);
+    assert_eq!(stats.requests, 0);
+}
+
+#[test]
+fn shutdown_mid_request_is_bounded_and_clean() {
+    use std::io::Write;
+    let h = start_server(ServerConfig::default());
+    // write half a request frame, then stall: stop must still win
+    let mut raw = std::net::TcpStream::connect(&h.addr).unwrap();
+    raw.write_all(&[0u8; OBS * 2]).unwrap(); // half of OBS*4 bytes
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    assert_eq!(stats.requests, 0, "partial frame must not be served");
+    assert_eq!(stats.io_errors, 0,
+               "stop during a partial frame is not an I/O error");
+}
+
+#[test]
+fn sequential_clients_reuse_pool_slots() {
+    let cfg = ServerConfig {
+        max_connections: 2,
+        ..ServerConfig::default()
+    };
+    let h = start_server(cfg);
+    // more sequential clients than pool slots: permits must recycle
+    for c in 0..6 {
+        let mut check = IntEngine::new(h.policy.clone());
+        let mut client = ActionClient::connect(&h.addr, OBS, ACT).unwrap();
+        for s in 0..5 {
+            let obs = client_obs(c, s);
+            assert_eq!(client.act(&obs).unwrap(), check.infer_vec(&obs));
+        }
+    }
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 30);
+    assert_eq!(stats.connections, 6);
+}

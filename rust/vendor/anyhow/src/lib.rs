@@ -1,0 +1,154 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the error-handling surface the codebase relies on is vendored here as a
+//! path dependency. Only the subset actually used is implemented:
+//!
+//! * [`Error`] — an opaque error carrying a message and an optional source.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `context` / `with_context` on `Result` and `Option`.
+//! * `anyhow!`, `bail!`, `ensure!` — the formatting macros.
+//!
+//! Semantics match upstream `anyhow` for these uses: any
+//! `std::error::Error + Send + Sync + 'static` converts into [`Error`] via
+//! `?`, context wraps are prepended to the display message, and the
+//! original source is preserved for `Debug` output.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque application error: a display message plus an optional source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`; that keeps
+// this blanket conversion coherent (the same trick upstream anyhow uses).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("not an integer")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversion_context_and_macros() {
+        assert_eq!(parse("3").unwrap(), 3);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not an integer"), "{e}");
+        assert!(format!("{e:?}").contains("Caused by"), "{e:?}");
+        let e = parse("-2").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "thing"))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+}
