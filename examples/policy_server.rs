@@ -1,25 +1,30 @@
-//! Deployment scenario: serve a quantized integer policy over TCP and
-//! drive it with clients running the live environment — the paper's
-//! sense→infer→act loop with the controller behind a network hop, now on
-//! the concurrent batched serving subsystem (`coordinator::serving`).
+//! Deployment scenario: multi-tenant policy serving. Several quantized
+//! integer policies are registered in one process and served over one
+//! TCP port, requests routed to the right policy by id (v2 wire
+//! protocol) while a legacy header-less v1 client keeps working against
+//! the default policy — the paper's sense→infer→act loop with the
+//! controller behind a network hop.
 //!
 //! Run: `cargo run --release --example policy_server [-- --steps 2000]`
-//! Trains a small policy first (needs PJRT + artifacts; without them it
-//! falls back to a deterministic toy policy so the serving path still
-//! runs), then:
-//!   1. serves it and drives env episodes through one client, and
-//!   2. hammers it with a concurrent client burst so requests coalesce
-//!      into batched integer passes,
-//! reporting per-action inference latency percentiles for both phases.
+//! Trains a small pendulum policy first (needs PJRT + artifacts; without
+//! them it falls back to a deterministic toy policy so the serving path
+//! still runs), registers it alongside a second, differently-shaped toy
+//! policy, then:
+//!   1. drives live env episodes through a routed client (`id =
+//!      "pendulum"`),
+//!   2. hammers both policies with a concurrent client burst so each
+//!      core coalesces its own batched integer passes, and
+//!   3. round-trips a legacy v1 client to show the header-less fallback.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use qcontrol::coordinator::serving::{serve, ActionClient, ServerConfig};
+use qcontrol::coordinator::serving::{serve_registry, ActionClient,
+                                     RoutedClient, ServerConfig};
 use qcontrol::envs;
-use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
 use qcontrol::rl::{self, Algo, TrainConfig};
@@ -31,8 +36,8 @@ use qcontrol::util::testkit;
 
 /// Train over PJRT when available; otherwise a deterministic toy policy
 /// so the serving subsystem is still exercised end-to-end.
-fn build_policy(steps: usize, bits: BitCfg)
-                -> Result<(IntEngine, ObsNormalizer, bool)> {
+fn pendulum_artifact(steps: usize, bits: BitCfg)
+                     -> Result<(PolicyArtifact, bool)> {
     match Runtime::load(default_artifact_dir()) {
         Ok(rt) => {
             let mut cfg = TrainConfig::new(Algo::Sac, "pendulum");
@@ -45,16 +50,19 @@ fn build_policy(steps: usize, bits: BitCfg)
             let spec = &rt.manifest.specs["sac_pendulum_h16"];
             let tensors =
                 rl::extract_tensors(spec, &res.flat, 3, 16, 1)?;
-            let engine =
-                IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
-            Ok((engine, res.normalizer.clone(), true))
+            let mut art = PolicyArtifact::new(
+                "pendulum", IntPolicy::from_tensors(&tensors, bits))
+                .with_normalizer(&res.normalizer);
+            art.env = "pendulum".into();
+            Ok((art, true))
         }
         Err(e) => {
             println!("(PJRT/artifacts unavailable — {e}; serving a \
                       deterministic toy policy instead)");
-            let engine =
-                IntEngine::new(testkit::toy_policy(3, 3, 16, 1, bits));
-            Ok((engine, ObsNormalizer::new(3, false), false))
+            let art = PolicyArtifact::new(
+                "pendulum", testkit::toy_policy(3, 3, 16, 1, bits))
+                .with_normalizer(&ObsNormalizer::new(3, false));
+            Ok((art, false))
         }
     }
 }
@@ -67,28 +75,39 @@ fn main() -> Result<()> {
     let burst_reqs = args.usize("burst-reqs", 500)?;
     let bits = BitCfg::new(4, 2, 8);
 
-    println!("== policy_server: train, deploy as a concurrent batched \
-              integer TCP service, drive the env through it ==");
-    let (engine, norm, trained) = build_policy(steps, bits)?;
+    println!("== policy_server: multi-tenant integer serving — two \
+              policies, one port, routed by id ==");
+    let (pendulum, trained) = pendulum_artifact(steps, bits)?;
+    // a second tenant with a different shape (obs 8 → act 2), as a
+    // sweep/select job would export it
+    let wide_bits = BitCfg::new(4, 3, 8);
+    let wide = PolicyArtifact::new(
+        "wide-toy", testkit::toy_policy(11, 8, 32, 2, wide_bits));
+
+    let mut registry = PolicyRegistry::new();
+    registry.insert(pendulum)?;
+    registry.insert(wide)?;
 
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
-    println!("serving integer policy at {addr} \
-              (pool=16 conns, max_batch=8)");
+    println!("serving {:?} at {addr} (pool=16 conns, max_batch=8, \
+              default policy `pendulum` for v1 clients)",
+             registry.ids());
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
     let server_cfg = ServerConfig {
         max_connections: 16,
         max_batch: 8,
+        default_policy: Some("pendulum".into()),
         ..ServerConfig::default()
     };
     let server_thread = std::thread::spawn(move || {
-        serve(listener, engine, norm, stop2, server_cfg)
+        serve_registry(listener, registry, stop2, server_cfg)
     });
 
     // phase 1 — control loop: run episodes against the live env, actions
-    // fetched from the server
-    let mut client = ActionClient::connect(&addr, 3, 1)?;
+    // fetched from the server by policy id
+    let mut client = RoutedClient::connect(&addr)?;
     let mut env = envs::make("pendulum")?;
     let mut rng = Rng::new(42);
     let mut returns = Vec::new();
@@ -96,7 +115,7 @@ fn main() -> Result<()> {
         let mut obs = env.reset(&mut rng);
         let mut total = 0.0;
         loop {
-            let action = client.act(&obs)?;
+            let action = client.act("pendulum", &obs)?;
             let out = env.step(&action);
             total += out.reward;
             obs = out.obs;
@@ -110,21 +129,28 @@ fn main() -> Result<()> {
     }
     drop(client);
 
-    // phase 2 — concurrent burst: several clients at once, so the serving
-    // core coalesces requests into batched integer passes
+    // phase 2 — concurrent burst across *both* tenants: each policy's
+    // core coalesces its own requests into batched integer passes
     println!("  burst: {burst_clients} concurrent clients x {burst_reqs} \
-              requests");
+              requests, alternating tenants");
     let mut joins = Vec::new();
     for c in 0..burst_clients {
         let addr = addr.clone();
         joins.push(std::thread::spawn(move || -> Result<()> {
-            let mut client = ActionClient::connect(&addr, 3, 1)?;
-            let mut obs = [0.0f32; 3];
+            let mut client = RoutedClient::connect(&addr)?;
+            let (id, obs_dim) = if c % 2 == 0 {
+                ("pendulum", 3)
+            } else {
+                ("wide-toy", 8)
+            };
+            let mut obs = vec![0.0f32; obs_dim];
             for s in 0..burst_reqs {
                 for (d, o) in obs.iter_mut().enumerate() {
                     *o = ((c * 13 + s * 3 + d) as f32 * 0.21).sin();
                 }
-                client.act(&obs)?;
+                let act = client.act(id, &obs)?;
+                anyhow::ensure!(act.len() == if c % 2 == 0 { 1 } else { 2 },
+                                "wrong action dim from `{id}`");
             }
             Ok(())
         }));
@@ -133,11 +159,20 @@ fn main() -> Result<()> {
         j.join().expect("burst client panicked")?;
     }
 
+    // phase 3 — legacy fallback: a header-less v1 client lands on the
+    // default policy
+    let mut v1 = ActionClient::connect(&addr, 3, 1)?;
+    let act = v1.act(&[0.1, -0.4, 0.7])?;
+    println!("  v1 fallback: header-less client got action {act:?} from \
+              the default policy");
+    drop(v1);
+
     stop.store(true, Ordering::Relaxed);
     let stats = server_thread.join().unwrap()?;
     println!("server: {} requests over {} connections, {} inference \
-              passes (mean batch {:.2})",
+              passes across {} policy cores (mean batch {:.2})",
              stats.requests, stats.connections, stats.batches,
+             stats.policies,
              stats.requests as f64 / stats.batches.max(1) as f64);
     println!("inference latency p50 {:.2} µs  p99 {:.2} µs  p99.9 {:.2} \
               µs  mean {:.2} µs",

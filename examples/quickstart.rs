@@ -28,8 +28,7 @@ fn main() -> Result<()> {
     let hidden = 16;
 
     println!("== qcontrol quickstart: QAT SAC on pendulum, {steps} steps, \
-              h={hidden}, bits=({},{},{}) ==",
-             bits.b_in, bits.b_core, bits.b_out);
+              h={hidden}, bits={bits} ==");
     let rt = Runtime::load(default_artifact_dir())?;
 
     // -- 1. train ----------------------------------------------------------

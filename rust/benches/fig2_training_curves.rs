@@ -31,8 +31,7 @@ fn main() {
         cfg.eval_episodes = proto.eval_episodes;
         cfg.seed = 5;
         let res = rl::train(&rt, &cfg).unwrap();
-        println!("{label} (h={hidden}, bits=({},{},{})):", bits.b_in,
-                 bits.b_core, bits.b_out);
+        println!("{label} (h={hidden}, bits={bits}):");
         for p in &res.curve {
             println!("  step {:>7}  {:>9.1} ± {:>7.1}", p.step,
                      p.mean_return, p.std_return);

@@ -6,6 +6,10 @@
 //! clients coalesced into one integer GEMM-style pass. Self-contained
 //! (toy policy, loopback TCP): no artifacts needed.
 //!
+//! Besides the human-readable table, every run writes
+//! `BENCH_serving.json` (req/s, p50/p99 µs per configuration) so the
+//! serving perf trajectory is machine-trackable across PRs.
+//!
 //! Scale knobs:
 //!   QCONTROL_SERVER_REQS=5000 cargo bench --bench server_throughput
 
@@ -20,6 +24,7 @@ use qcontrol::intinfer::IntEngine;
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
 use qcontrol::util::bench::Table;
+use qcontrol::util::json::Json;
 use qcontrol::util::stats::ObsNormalizer;
 use qcontrol::util::testkit;
 
@@ -92,6 +97,7 @@ fn main() {
         "clients", "max_batch", "requests", "req/s", "mean batch",
         "infer p50 µs", "p99 µs", "p99.9 µs",
     ]);
+    let mut rows: Vec<Json> = Vec::new();
     for &clients in &[1usize, 4, 16] {
         for &max_batch in &[1usize, 32] {
             let (wall_s, stats) =
@@ -101,16 +107,27 @@ fn main() {
             } else {
                 stats.requests as f64 / stats.batches as f64
             };
+            let req_s = stats.requests as f64 / wall_s;
             table.row(vec![
                 clients.to_string(),
                 max_batch.to_string(),
                 stats.requests.to_string(),
-                format!("{:.0}", stats.requests as f64 / wall_s),
+                format!("{req_s:.0}"),
                 format!("{mean_batch:.2}"),
                 format!("{:.2}", stats.p50_us),
                 format!("{:.2}", stats.p99_us),
                 format!("{:.2}", stats.p999_us),
             ]);
+            rows.push(Json::obj(vec![
+                ("clients", Json::num(clients as f64)),
+                ("max_batch", Json::num(max_batch as f64)),
+                ("requests", Json::num(stats.requests as f64)),
+                ("req_per_s", Json::num(req_s)),
+                ("mean_batch", Json::num(mean_batch)),
+                ("p50_us", Json::num(stats.p50_us)),
+                ("p99_us", Json::num(stats.p99_us)),
+                ("p999_us", Json::num(stats.p999_us)),
+            ]));
         }
     }
     table.print();
@@ -118,4 +135,17 @@ fn main() {
     println!("batched inference (max_batch=32) coalesces concurrent \
               requests into one integer pass; batch of 1 isolates the \
               per-request path.");
+
+    // machine-readable perf trajectory, tracked across PRs
+    let report = Json::obj(vec![
+        ("bench", Json::str("server_throughput")),
+        ("policy", Json::str(format!(
+            "{OBS}x{HIDDEN}x{HIDDEN}x{ACT} b=4,3,8"))),
+        ("reqs_per_client", Json::num(reqs_per_client as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_serving.json", report.to_string()) {
+        Ok(()) => println!("wrote BENCH_serving.json"),
+        Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
+    }
 }

@@ -6,7 +6,10 @@
 //! * [`select`] — the paper's §3.2 three-step staged model selection:
 //!   smallest FP32-matching b_core → smallest hidden width → smallest b_in.
 //! * [`serving`] — the deployment serving subsystem: concurrent TCP
-//!   accepts over a bounded worker pool, batched integer-only inference,
+//!   accepts over a bounded worker pool, a [`crate::policy::PolicyRegistry`]
+//!   of `.qpol` artifacts served by per-policy inference cores (requests
+//!   routed by id over the framed v2 protocol, header-less v1 clients
+//!   falling back to the default policy), batched integer-only inference,
 //!   and centralized µs latency accounting.
 //! * [`server`] — back-compat facade over [`serving`] (old entry point).
 //! * [`store`]  — JSON results store, so every bench/experiment appends to
@@ -19,5 +22,5 @@ pub mod store;
 pub mod sweep;
 
 pub use select::{select_model, SelectOutcome, SelectProtocol};
-pub use serving::{ActionClient, ServerConfig, ServerStats};
+pub use serving::{ActionClient, RoutedClient, ServerConfig, ServerStats};
 pub use sweep::{fp32_band, run_config, Scope, SweepPoint, SweepProtocol};

@@ -70,9 +70,9 @@ pub fn select_model(rt: &Runtime, env: &str, proto: &SelectProtocol)
     for &b in &proto.core_bits {
         let bits = BitCfg::new(8, b, 8);
         let p = run_config(rt, algo, env, sp, h0, bits, true,
-                           &format!("core{b}"))?;
+                           &bits.to_string())?;
         let ok = matches_fp32(&p, &fp32);
-        trail.push(("core".into(), format!("b_core={b}"), p.mean, p.std,
+        trail.push(("core".into(), format!("b={bits}"), p.mean, p.std,
                     ok));
         if ok {
             b_core = b;
@@ -87,9 +87,10 @@ pub fn select_model(rt: &Runtime, env: &str, proto: &SelectProtocol)
     for &h in &widths {
         let bits = BitCfg::new(8, b_core, 8);
         let p = run_config(rt, algo, env, sp, h, bits, true,
-                           &format!("h{h}"))?;
+                           &format!("h{h}-{bits}"))?;
         let ok = matches_fp32(&p, &fp32);
-        trail.push(("width".into(), format!("h={h}"), p.mean, p.std, ok));
+        trail.push(("width".into(), format!("h={h} b={bits}"), p.mean,
+                    p.std, ok));
         if ok {
             hidden = h;
             best_point = Some(p);
@@ -101,9 +102,9 @@ pub fn select_model(rt: &Runtime, env: &str, proto: &SelectProtocol)
     for &b in &proto.input_bits {
         let bits = BitCfg::new(b, b_core, 8);
         let p = run_config(rt, algo, env, sp, hidden, bits, true,
-                           &format!("bin{b}"))?;
+                           &bits.to_string())?;
         let ok = matches_fp32(&p, &fp32);
-        trail.push(("input".into(), format!("b_in={b}"), p.mean, p.std,
+        trail.push(("input".into(), format!("b={bits}"), p.mean, p.std,
                     ok));
         if ok {
             b_in = b;

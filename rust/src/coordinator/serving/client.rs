@@ -1,14 +1,23 @@
-//! Blocking client for the action-server wire protocol (one fixed-size
-//! request/response pair per round trip; see the module doc of
-//! [`super`] for the framing). Used by `examples/policy_server.rs`, the
-//! serving integration tests, and the throughput bench.
+//! Blocking clients for the serving wire protocols (see the module doc
+//! of [`super`] for the framing):
+//!
+//! * [`ActionClient`] — the legacy v1 header-less protocol: fixed-size
+//!   request/response pairs against the server's *default* policy.
+//! * [`RoutedClient`] — the v2 framed protocol: every request names a
+//!   policy id, so one connection can drive any registered policy.
+//!
+//! Used by `examples/policy_server.rs`, the serving integration tests,
+//! and the throughput bench.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
 use anyhow::Result;
 
-/// Synchronous round-trip client: one outstanding request per connection.
+use super::{MAX_WIRE_OBS, V2_MAGIC, V2_VERSION};
+
+/// Synchronous v1 round-trip client: one outstanding request per
+/// connection, dimensions fixed at connect time.
 pub struct ActionClient {
     stream: TcpStream,
     obs_dim: usize,
@@ -37,5 +46,62 @@ impl ActionClient {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+}
+
+/// Synchronous v2 client: requests carry a policy id; the action length
+/// comes back on the wire, so no dimensions are needed up front. Routing
+/// errors (unknown id, wrong obs count) surface as `Err` with the
+/// server's message; the connection stays usable afterwards.
+pub struct RoutedClient {
+    stream: TcpStream,
+}
+
+impl RoutedClient {
+    pub fn connect(addr: &str) -> Result<RoutedClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(RoutedClient { stream })
+    }
+
+    /// Send one observation to the policy `id` (`""` = server default),
+    /// block for the action.
+    pub fn act(&mut self, id: &str, obs: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(id.len() <= u8::MAX as usize,
+                        "policy id longer than 255 bytes");
+        anyhow::ensure!(obs.len() <= MAX_WIRE_OBS, "observation too large");
+        let mut buf =
+            Vec::with_capacity(4 + 2 + id.len() + 4 + obs.len() * 4);
+        buf.extend_from_slice(&V2_MAGIC);
+        buf.push(V2_VERSION);
+        buf.push(id.len() as u8);
+        buf.extend_from_slice(id.as_bytes());
+        buf.extend_from_slice(&(obs.len() as u32).to_le_bytes());
+        for &x in obs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+
+        let mut head = [0u8; 5];
+        self.stream.read_exact(&mut head)?;
+        let n = u32::from_le_bytes([head[1], head[2], head[3], head[4]])
+            as usize;
+        anyhow::ensure!(n <= MAX_WIRE_OBS * 4, "implausible reply length");
+        match head[0] {
+            0 => {
+                let mut payload = vec![0u8; n * 4];
+                self.stream.read_exact(&mut payload)?;
+                Ok(payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            1 => {
+                let mut msg = vec![0u8; n];
+                self.stream.read_exact(&mut msg)?;
+                anyhow::bail!("server: {}", String::from_utf8_lossy(&msg));
+            }
+            s => anyhow::bail!("bad reply status {s}"),
+        }
     }
 }

@@ -36,6 +36,8 @@ pub struct ServerStats {
     pub io_errors: u64,
     /// inference passes executed (requests / batches = mean batch size)
     pub batches: u64,
+    /// registered policies (= independent inference cores) this run served
+    pub policies: u64,
     pub mean_us: f64,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -52,6 +54,7 @@ impl ServerStats {
             connections: 0,
             io_errors: 0,
             batches: 0,
+            policies: 0,
             mean_us: mean(lat_us),
             p50_us: percentile_sorted(&sorted, 0.50),
             p99_us: percentile_sorted(&sorted, 0.99),

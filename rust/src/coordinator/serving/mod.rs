@@ -1,71 +1,78 @@
-//! Concurrent, batched deployment serving — integer-only inference over
-//! TCP at production client counts.
+//! Concurrent, batched, multi-policy deployment serving — integer-only
+//! inference over TCP at production client counts.
 //!
-//! This subsystem replaces the old single-client `coordinator::server`
-//! loop, which accepted connections strictly sequentially (a second client
-//! starved until the first disconnected) and could hang shutdown inside a
-//! blocking `read_exact`. Architecture:
+//! Serving is built on the policy API ([`crate::policy`]): a
+//! [`PolicyRegistry`] of loaded `.qpol` artifacts, one inference core
+//! *per registered policy* (so the old single-core bottleneck becomes N
+//! independent shards), and a router that dispatches each request to its
+//! policy's core by id:
 //!
 //! ```text
 //!  accept loop (caller thread, non-blocking + bounded pool gate)
-//!      ├── connection thread 1 ─┐  (read with timeout → submit → reply)
-//!      ├── connection thread 2 ─┼──> mpsc queue ──> inference core thread
-//!      └── connection thread N ─┘       (coalesce ≤ max_batch, normalize,
-//!                                        IntEngine::infer_batch, fan out)
+//!      ├── connection thread 1 ─┐  (sniff v1/v2 → route by policy id)
+//!      ├── connection thread 2 ─┼──> per-policy mpsc queues
+//!      └── connection thread N ─┘      ├─> core "walker"  (coalesce ≤
+//!                                      ├─> core "hopper"   max_batch,
+//!                                      └─> core "pend."    infer_batch)
 //! ```
 //!
-//! ## Wire protocol
+//! ## Wire protocols
 //!
-//! Little-endian, length-free — dimensions are fixed per policy:
+//! All integers and floats little-endian.
 //!
-//! * request  = `obs_dim × f32` (raw, un-normalized observation)
-//! * response = `act_dim × f32` (action in `[-1, 1]`)
+//! **v2 (framed, routed).** Each request carries a header:
 //!
-//! One request outstanding per connection; responses preserve request
-//! order within a connection trivially (the connection thread is
-//! synchronous). Partial frames are accumulated across read timeouts, so
-//! slow writers are fine.
+//! ```text
+//! magic  [0x51 0x50 0xC0 0x7F]   4 bytes ("QP" + NaN tail, see below)
+//! ver    u8 = 2
+//! id_len u8, id bytes            policy id ("" = server default)
+//! n_obs  u32                     observation f32 count (must equal the
+//! obs    n_obs × f32             policy's obs_dim)
+//! ```
+//!
+//! Response: `status u8` (0 = ok, 1 = error), `n u32`, then `n × f32`
+//! actions (ok) or `n` UTF-8 error bytes (error). Routing errors
+//! (unknown id, wrong obs count) are error replies, not disconnects.
+//!
+//! **v1 (header-less, legacy).** Raw `obs_dim × f32` request, raw
+//! `act_dim × f32` response, dimensions fixed by the *default* policy.
+//! The server sniffs the first 4 bytes of each connection: the v2 magic
+//! decodes as an f32 NaN, so no finite v1 observation can be mistaken
+//! for a v2 header. Each connection speaks one protocol for its
+//! lifetime.
 //!
 //! ## Concurrency model
 //!
 //! Thread-per-connection, bounded by [`ServerConfig::max_connections`]
 //! (the accept loop blocks — backpressure — when the pool is full).
-//! Connection threads do only I/O and framing; all inference funnels
-//! through one shared core so the engine's scratch buffers and the policy
-//! stay single-threaded.
+//! Connection threads do only I/O and framing; inference funnels through
+//! the per-policy cores, so each engine's scratch buffers stay
+//! single-threaded while distinct policies run fully in parallel.
 //!
 //! ## Batching semantics
 //!
-//! The core coalesces whatever is queued at pickup time, up to
-//! [`ServerConfig::max_batch`] — a lone request is never delayed to wait
-//! for peers. [`IntEngine::infer_batch`] is bit-identical to
+//! Each core coalesces whatever is queued for *its* policy at pickup
+//! time, up to [`ServerConfig::max_batch`] — a lone request is never
+//! delayed. [`IntEngine::infer_batch`] is bit-identical to
 //! per-observation [`IntEngine::infer`], so batching is invisible to
-//! clients. Recorded per-request latency of a batched pass is the pass
-//! time (every rider pays the full batch).
-//!
-//! Deliberate tradeoff: each request costs three small heap allocations
-//! (owned obs, reply channel, reply vec). The per-request reply channel —
-//! its sender *moved* into the queue — is what makes the shutdown drain
-//! race-free (a dropped request always unblocks its connection thread); a
-//! persistent per-connection channel would leave `recv` blocked, because
-//! the connection's own live sender keeps that channel open. The engine
-//! hot path itself stays zero-allocation.
+//! clients.
 //!
 //! ## Shutdown contract
 //!
-//! Flip `stop`, then join the thread running [`serve`]. Bounds: the accept
-//! loop notices within [`ServerConfig::accept_poll`]; every connection
-//! thread notices within [`ServerConfig::read_timeout`] even while idle
-//! mid-read (the bug the old server had); the core notices within
-//! [`ServerConfig::batch_idle`] and then drains the queue so no connection
-//! thread is left waiting on a reply. Requests arriving during the drain
-//! race may be dropped — their clients observe a closed connection, never
-//! a corrupt response. [`serve`] returns aggregate [`ServerStats`].
+//! Flip `stop`, then join the thread running [`serve`] /
+//! [`serve_registry`]. Bounds: the accept loop notices within
+//! [`ServerConfig::accept_poll`]; every connection thread notices within
+//! [`ServerConfig::read_timeout`] even mid-read; every core notices
+//! within [`ServerConfig::batch_idle`] and then drains its queue so no
+//! connection thread is left waiting on a reply. Requests arriving
+//! during the drain race may be dropped — their clients observe a closed
+//! connection, never a corrupt response.
 
 mod batch;
 mod client;
 mod latency;
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -76,11 +83,22 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::intinfer::IntEngine;
+use crate::policy::{PolicyArtifact, PolicyRegistry};
 use crate::util::stats::ObsNormalizer;
 
 use batch::Request;
-pub use client::ActionClient;
+pub use client::{ActionClient, RoutedClient};
 pub use latency::{LatencyRecorder, LocalLatency, ServerStats};
+
+/// v2 frame magic. Interpreted as a little-endian f32 this is a quiet
+/// NaN (0x7FC05051), so the first component of a sane header-less v1
+/// observation can never collide with it.
+pub const V2_MAGIC: [u8; 4] = [0x51, 0x50, 0xC0, 0x7F];
+/// Wire protocol revision carried in every v2 frame.
+pub const V2_VERSION: u8 = 2;
+/// Upper bound on the per-request observation count a server will
+/// accept (guards allocations against garbage length fields).
+pub const MAX_WIRE_OBS: usize = 1 << 16;
 
 /// Tunables of the serving subsystem. Defaults favor fast shutdown and
 /// low per-request latency; raise `max_batch` for throughput workloads.
@@ -98,6 +116,9 @@ pub struct ServerConfig {
     pub batch_idle: Duration,
     /// accept-loop poll interval (listener is non-blocking)
     pub accept_poll: Duration,
+    /// policy served to v1 (header-less) clients and to v2 requests with
+    /// an empty id; `None` = the registry's first id in sorted order
+    pub default_policy: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -109,38 +130,106 @@ impl Default for ServerConfig {
             write_timeout: Duration::from_secs(5),
             batch_idle: Duration::from_millis(2),
             accept_poll: Duration::from_millis(1),
+            default_policy: None,
         }
     }
 }
 
-/// Serve until `stop` flips. Accepts clients concurrently, coalesces
-/// their requests into batched integer inference, returns latency stats.
-///
-/// Blocks the calling thread; run it on a dedicated thread and use the
-/// shutdown contract in the module doc to stop it.
+impl ServerConfig {
+    /// Reject configurations that would otherwise hang or starve at
+    /// runtime; called by [`serve_registry`] before binding anything.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.max_connections > 0,
+                        "max_connections must be >= 1 (0 would deadlock \
+                         the accept loop: no slot can ever be claimed)");
+        anyhow::ensure!(self.max_batch > 0,
+                        "max_batch must be >= 1 (0 can never coalesce a \
+                         request)");
+        anyhow::ensure!(!self.read_timeout.is_zero()
+                        && !self.batch_idle.is_zero()
+                        && !self.accept_poll.is_zero(),
+                        "timeouts must be non-zero");
+        Ok(())
+    }
+}
+
+/// Routing table shared with connection threads: one inference core per
+/// registered policy.
+struct CoreHandle {
+    tx: Sender<Request>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+struct Router {
+    cores: BTreeMap<String, CoreHandle>,
+    default_id: String,
+}
+
+impl Router {
+    fn resolve(&self, id: &str) -> Option<&CoreHandle> {
+        if id.is_empty() {
+            self.cores.get(&self.default_id)
+        } else {
+            self.cores.get(id)
+        }
+    }
+}
+
+/// Single-policy compatibility entry point: wraps the engine + normalizer
+/// into a one-entry registry served under the id `"default"`.
 pub fn serve(listener: TcpListener, engine: IntEngine, norm: ObsNormalizer,
              stop: Arc<AtomicBool>, cfg: ServerConfig)
              -> Result<ServerStats> {
+    let mut registry = PolicyRegistry::new();
+    registry.insert(
+        PolicyArtifact::new("default", engine.policy).with_normalizer(&norm),
+    )?;
+    serve_registry(listener, registry, stop, cfg)
+}
+
+/// Serve every policy in the registry until `stop` flips: one inference
+/// core per policy, requests routed by id (v2) or to the default policy
+/// (v1). Returns aggregate latency stats across all cores.
+///
+/// Blocks the calling thread; run it on a dedicated thread and use the
+/// shutdown contract in the module doc to stop it.
+pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
+                      stop: Arc<AtomicBool>, cfg: ServerConfig)
+                      -> Result<ServerStats> {
+    cfg.validate()?;
+    let default_id = registry.default_id(cfg.default_policy.as_deref())?;
     listener.set_nonblocking(true)?;
-    let obs_dim = engine.policy.obs_dim;
-    let act_dim = engine.policy.act_dim;
     let recorder = Arc::new(LatencyRecorder::new());
 
-    let (submit_tx, submit_rx) = mpsc::channel::<Request>();
-    let core = {
+    let mut cores = BTreeMap::new();
+    let mut core_threads = Vec::new();
+    // consume the registry: each policy is *moved* into its core, so
+    // the weights live exactly once per core for the serving lifetime
+    for (id, artifact) in registry.into_entries() {
+        let norm = artifact.normalizer();
+        let obs_dim = artifact.policy.obs_dim;
+        let act_dim = artifact.policy.act_dim;
+        let engine = IntEngine::new(artifact.policy);
+        let (tx, rx) = mpsc::channel::<Request>();
+        cores.insert(id.clone(), CoreHandle { tx, obs_dim, act_dim });
         let recorder = recorder.clone();
         let stop = stop.clone();
-        let cfg = cfg.clone();
-        std::thread::Builder::new()
-            .name("qserve-infer".into())
-            .spawn(move || {
-                batch::run_inference_core(submit_rx, engine, norm, stop,
-                                          cfg, recorder)
-            })
-            .context("spawn inference core")?
-    };
+        let cfg2 = cfg.clone();
+        core_threads.push(
+            std::thread::Builder::new()
+                .name(format!("qserve-core-{id}"))
+                .spawn(move || {
+                    batch::run_inference_core(rx, engine, norm, stop, cfg2,
+                                              recorder)
+                })
+                .context("spawn inference core")?,
+        );
+    }
+    let n_policies = cores.len() as u64;
+    let router = Arc::new(Router { cores, default_id });
 
-    let gate = Arc::new(Gate::new(cfg.max_connections.max(1)));
+    let gate = Arc::new(Gate::new(cfg.max_connections));
     let io_errors = Arc::new(AtomicU64::new(0));
     let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut accepted: u64 = 0;
@@ -160,7 +249,7 @@ pub fn serve(listener: TcpListener, engine: IntEngine, norm: ObsNormalizer,
                     let permit = Permit(gate.clone());
                     accepted += 1;
                     reap_finished(&mut conns);
-                    let tx = submit_tx.clone();
+                    let router = router.clone();
                     let stop = stop.clone();
                     let cfg = cfg.clone();
                     let errs = io_errors.clone();
@@ -171,7 +260,7 @@ pub fn serve(listener: TcpListener, engine: IntEngine, norm: ObsNormalizer,
                             // io errors end the connection, not the
                             // server — but they must stay diagnosable
                             if let Err(e) = handle_connection(
-                                stream, obs_dim, act_dim, tx, &stop, &cfg)
+                                stream, &router, &stop, &cfg)
                             {
                                 errs.fetch_add(1, Ordering::Relaxed);
                                 eprintln!("qserve: connection error: {e}");
@@ -192,19 +281,24 @@ pub fn serve(listener: TcpListener, engine: IntEngine, norm: ObsNormalizer,
     let accept_res = accept_loop();
 
     // shutdown sequence (also taken on accept errors): make sure every
-    // helper thread observes stop, then join in dependency order
+    // helper thread observes stop, then join in dependency order —
+    // connections first, then (dropping our router clone closes the
+    // submit channels) the per-policy cores
     stop.store(true, Ordering::Relaxed);
     for h in conns {
         let _ = h.join();
     }
-    drop(submit_tx);
-    core.join()
-        .map_err(|_| anyhow::anyhow!("inference core panicked"))?;
+    drop(router);
+    for h in core_threads {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("inference core panicked"))?;
+    }
     accept_res?;
 
     let mut stats = recorder.snapshot();
     stats.connections = accepted;
     stats.io_errors = io_errors.load(Ordering::Relaxed);
+    stats.policies = n_policies;
     Ok(stats)
 }
 
@@ -221,36 +315,50 @@ fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
     }
 }
 
-/// One connection: framed reads with timeout (so `stop` is honored even
-/// mid-request), submit to the core, relay the reply.
-fn handle_connection(mut stream: TcpStream, obs_dim: usize, act_dim: usize,
-                     submit: Sender<Request>, stop: &AtomicBool,
-                     cfg: &ServerConfig) -> Result<()> {
+/// One connection: sniff the protocol from the first 4 bytes, then run
+/// the matching request loop until disconnect or stop.
+fn handle_connection(mut stream: TcpStream, router: &Router,
+                     stop: &AtomicBool, cfg: &ServerConfig) -> Result<()> {
     // accepted sockets inherit the listener's non-blocking flag on some
     // platforms (Windows); timeouts below need a blocking socket
     stream.set_nonblocking(false)?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(cfg.read_timeout))?;
     stream.set_write_timeout(Some(cfg.write_timeout))?;
-    let mut obs_buf = vec![0u8; obs_dim * 4];
-    let mut act_buf = vec![0u8; act_dim * 4];
+
+    let mut head = [0u8; 4];
+    if !read_frame(&mut stream, &mut head, stop, 0)? {
+        return Ok(()); // disconnect or stop before the first byte
+    }
+    if head == V2_MAGIC {
+        serve_v2(stream, router, stop)
+    } else {
+        serve_v1(stream, router, stop, head)
+    }
+}
+
+/// Legacy header-less loop: fixed-size frames against the default policy.
+fn serve_v1(mut stream: TcpStream, router: &Router, stop: &AtomicBool,
+            head: [u8; 4]) -> Result<()> {
+    let core = router
+        .resolve("")
+        .expect("router always contains the default policy");
+    let mut obs_buf = vec![0u8; core.obs_dim * 4];
+    let mut act_buf = vec![0u8; core.act_dim * 4];
+    // the 4 sniffed bytes are the head of the first observation frame
+    obs_buf[..4].copy_from_slice(&head);
+    let mut prefilled = 4;
     loop {
-        if !read_frame(&mut stream, &mut obs_buf, stop)? {
+        if !read_frame(&mut stream, &mut obs_buf, stop, prefilled)? {
             return Ok(()); // disconnect or stop
         }
+        prefilled = 0;
         let obs: Vec<f32> = obs_buf
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        // per-request reply channel, sender *moved* into the request:
-        // whatever happens to the request, recv below unblocks
-        let (tx, rx) = mpsc::channel();
-        if submit.send(Request { obs, resp: tx }).is_err() {
-            return Ok(()); // core gone — shutting down
-        }
-        let act = match rx.recv() {
-            Ok(a) => a,
-            Err(_) => return Ok(()), // request dropped in shutdown drain
+        let Some(act) = submit(core, obs)? else {
+            return Ok(()); // shutting down
         };
         for (i, &a) in act.iter().enumerate() {
             act_buf[i * 4..(i + 1) * 4].copy_from_slice(&a.to_le_bytes());
@@ -259,12 +367,121 @@ fn handle_connection(mut stream: TcpStream, obs_dim: usize, act_dim: usize,
     }
 }
 
+/// v2 framed loop: per-request header routes to the policy's core;
+/// routing problems are error replies, protocol violations end the
+/// connection.
+fn serve_v2(mut stream: TcpStream, router: &Router, stop: &AtomicBool)
+            -> Result<()> {
+    // a disconnect after part of a request was consumed is a protocol
+    // error, not a clean close — unless the server is stopping
+    let mid_request = |stop: &AtomicBool| -> Result<()> {
+        if stop.load(Ordering::Relaxed) {
+            Ok(())
+        } else {
+            Err(anyhow::anyhow!("disconnect mid-request (truncated v2 \
+                                 header or payload)"))
+        }
+    };
+    // the first request's magic was consumed by the sniff
+    let mut need_magic = false;
+    loop {
+        if need_magic {
+            let mut magic = [0u8; 4];
+            if !read_frame(&mut stream, &mut magic, stop, 0)? {
+                return Ok(()); // clean disconnect at a frame boundary
+            }
+            anyhow::ensure!(magic == V2_MAGIC,
+                            "bad v2 frame magic {magic:02x?}");
+        }
+        need_magic = true;
+
+        let mut hdr = [0u8; 2]; // ver, id_len
+        if !read_frame(&mut stream, &mut hdr, stop, 0)? {
+            return mid_request(stop);
+        }
+        anyhow::ensure!(hdr[0] == V2_VERSION,
+                        "unsupported wire version {} (server speaks \
+                         {V2_VERSION})", hdr[0]);
+        let mut id_buf = vec![0u8; hdr[1] as usize];
+        if !read_frame(&mut stream, &mut id_buf, stop, 0)? {
+            return mid_request(stop);
+        }
+        let mut n_buf = [0u8; 4];
+        if !read_frame(&mut stream, &mut n_buf, stop, 0)? {
+            return mid_request(stop);
+        }
+        let n_obs = u32::from_le_bytes(n_buf) as usize;
+        anyhow::ensure!(n_obs <= MAX_WIRE_OBS,
+                        "request claims {n_obs} observation values");
+        let mut payload = vec![0u8; n_obs * 4];
+        if !read_frame(&mut stream, &mut payload, stop, 0)? {
+            return mid_request(stop);
+        }
+
+        let Ok(id) = std::str::from_utf8(&id_buf) else {
+            write_v2_error(&mut stream, "policy id is not UTF-8")?;
+            continue;
+        };
+        let Some(core) = router.resolve(id) else {
+            write_v2_error(&mut stream,
+                           &format!("unknown policy id `{id}`"))?;
+            continue;
+        };
+        if n_obs != core.obs_dim {
+            write_v2_error(&mut stream,
+                           &format!("policy `{id}` expects {} observation \
+                                     values, got {n_obs}", core.obs_dim))?;
+            continue;
+        }
+        let obs: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let Some(act) = submit(core, obs)? else {
+            return Ok(()); // shutting down
+        };
+        let mut reply = Vec::with_capacity(5 + act.len() * 4);
+        reply.push(0u8);
+        reply.extend_from_slice(&(act.len() as u32).to_le_bytes());
+        for &a in &act {
+            reply.extend_from_slice(&a.to_le_bytes());
+        }
+        stream.write_all(&reply).context("write response")?;
+    }
+}
+
+fn write_v2_error(stream: &mut TcpStream, msg: &str) -> Result<()> {
+    let bytes = msg.as_bytes();
+    let mut reply = Vec::with_capacity(5 + bytes.len());
+    reply.push(1u8);
+    reply.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    reply.extend_from_slice(bytes);
+    stream.write_all(&reply).context("write error response")
+}
+
+/// Submit one observation to a core and wait for the action.
+/// `Ok(None)` means the server is draining — close the connection.
+fn submit(core: &CoreHandle, obs: Vec<f32>) -> Result<Option<Vec<f32>>> {
+    // per-request reply channel, sender *moved* into the request:
+    // whatever happens to the request, recv below unblocks
+    let (tx, rx) = mpsc::channel();
+    if core.tx.send(Request { obs, resp: tx }).is_err() {
+        return Ok(None); // core gone — shutting down
+    }
+    match rx.recv() {
+        Ok(a) => Ok(Some(a)),
+        Err(_) => Ok(None), // request dropped in shutdown drain
+    }
+}
+
 /// Read one fixed-size frame, preserving partial progress across read
-/// timeouts. Returns `Ok(false)` on clean disconnect or stop.
-fn read_frame(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool)
-              -> Result<bool> {
+/// timeouts. Returns `Ok(false)` on stop, or on a clean disconnect at a
+/// frame boundary (`prefilled == 0` and no bytes read); EOF after any
+/// bytes of the frame arrived is an error.
+fn read_frame(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool,
+              prefilled: usize) -> Result<bool> {
     use std::io::ErrorKind::*;
-    let mut filled = 0;
+    let mut filled = prefilled;
     while filled < buf.len() {
         if stop.load(Ordering::Relaxed) {
             return Ok(false);

@@ -8,6 +8,7 @@
 //! benchmarked against this engine (`benches/intinfer_latency.rs`) while
 //! the cycle-accurate FPGA numbers come from `synth`.
 
+use crate::policy::{PolicyBackend, PolicyDescriptor};
 use crate::quant::export::IntPolicy;
 
 /// Reusable integer inference engine over a fixed [`IntPolicy`].
@@ -167,6 +168,43 @@ impl IntEngine {
             .iter()
             .map(|l| (l.rows * l.cols) as u64)
             .sum()
+    }
+}
+
+/// The integer engine behind the unified inference API: dimension errors
+/// surface as `Err` (the inherent methods assert instead, for the
+/// zero-overhead hot path).
+impl PolicyBackend for IntEngine {
+    fn obs_dim(&self) -> usize {
+        self.policy.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.policy.act_dim
+    }
+
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> anyhow::Result<()> {
+        crate::policy::check_block(obs, actions_out, self.policy.obs_dim,
+                                   self.policy.act_dim)?;
+        IntEngine::infer_batch(self, obs, actions_out);
+        Ok(())
+    }
+
+    fn macs(&self) -> u64 {
+        IntEngine::macs(self)
+    }
+
+    fn descriptor(&self) -> PolicyDescriptor {
+        PolicyDescriptor {
+            id: format!("int-{}x{}x{}", self.policy.obs_dim,
+                        self.policy.hidden, self.policy.act_dim),
+            kind: "int",
+            obs_dim: self.policy.obs_dim,
+            act_dim: self.policy.act_dim,
+            hidden: self.policy.hidden,
+            bits: Some(self.policy.bits),
+        }
     }
 }
 

@@ -6,36 +6,41 @@
 //!   sweep    Fig.1-style bitwidth sweep for one env
 //!   select   staged model selection (paper §3.2)
 //!   synth    synthesize a config to the XC7A15T model (Table 3 row)
-//!   serve    run the integer action server over TCP
+//!   export   convert a checkpoint into a deployable .qpol artifact
+//!   serve    run the integer action server over TCP (ckpt or artifact dir)
 //!   info     artifact/manifest summary
 //!
 //! Examples:
 //!   qcontrol train --env pendulum --hidden 16 --bits 4,3,8 --steps 3000
-//!   qcontrol synth --env hopper
-//!   qcontrol serve --ckpt results/pendulum.ckpt --port 7777
+//!   qcontrol export --ckpt results/pendulum_sac.ckpt --out pols/pend.qpol
+//!   qcontrol serve --dir pols --default pend --port 7777
 
 use anyhow::{Context, Result};
 
 use qcontrol::coordinator::select::{paper_table1, SelectProtocol};
+use qcontrol::coordinator::serving;
 use qcontrol::coordinator::store::{now_secs, Store};
 use qcontrol::coordinator::sweep::{fp32_band, run_config, Scope,
                                    SweepProtocol};
-use qcontrol::coordinator::{select_model, server};
-use qcontrol::intinfer::IntEngine;
+use qcontrol::coordinator::select_model;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
 use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
-use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::runtime::{default_artifact_dir, Manifest, Runtime};
 use qcontrol::synth::{synthesize, XC7A15T};
 use qcontrol::util::bench::Table;
 use qcontrol::util::cli::Args;
 use qcontrol::util::json::Json;
 use qcontrol::util::stats::ObsNormalizer;
 
+/// Parse + validate `--bits b_in,b_core,b_out`; a bad width is a CLI
+/// error here, not a `QRange` assert deep inside export.
 fn parse_bits(a: &Args) -> Result<BitCfg> {
-    let v = a.usize_list("bits", &[8, 8, 8])?;
-    anyhow::ensure!(v.len() == 3, "--bits b_in,b_core,b_out");
-    Ok(BitCfg::new(v[0] as u32, v[1] as u32, v[2] as u32))
+    match a.str_opt("bits") {
+        None => Ok(BitCfg::uniform(8)),
+        Some(s) => BitCfg::parse(s).context("--bits"),
+    }
 }
 
 fn main() -> Result<()> {
@@ -51,6 +56,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "select" => cmd_select(&args),
         "synth" => cmd_synth(&args),
+        "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         "help" | _ => {
@@ -68,11 +74,16 @@ usage: qcontrol <cmd> [--flags]
   train   --env E [--algo sac|ddpg] [--hidden H] [--bits i,c,o]
           [--fp32] [--steps N] [--seed S] [--ckpt PATH] [--verbose]
   eval    --ckpt PATH [--episodes N] [--noise SIGMA]
-          [--backend pjrt|fakequant|int]
+          [--backend pjrt|fakequant|fp32|int]
   sweep   --env E [--scopes all,input,output,core] [--bits 8,6,4,3,2]
   select  --env E
   synth   --env E [--hidden H] [--bits i,c,o]  (defaults: paper Table 1)
-  serve   --ckpt PATH [--port P]
+  export  --ckpt PATH [--out FILE.qpol] [--id ID]
+          (checkpoint -> versioned integer .qpol artifact)
+  serve   --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
+          [--max-batch N] [--max-connections N]
+          (--dir serves every .qpol in ARTIFACTS, routed by policy id
+           over the v2 wire protocol; v1 clients get the default policy)
   info";
 
 fn cmd_train(a: &Args) -> Result<()> {
@@ -91,7 +102,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     cfg.eval_every = a.usize("eval-every", (cfg.total_steps / 5).max(1))?;
     cfg.verbose = a.has("verbose");
 
-    println!("training {algo:?} on {env} h={} bits={:?} quant={} \
+    println!("training {algo:?} on {env} h={} bits={} quant={} \
               steps={}", cfg.hidden, cfg.bits, cfg.quant_on,
              cfg.total_steps);
     let res = rl::train(&rt, &cfg)?;
@@ -140,7 +151,8 @@ fn load_ckpt(a: &Args) -> Result<(Json, Vec<f32>, ObsNormalizer, String,
     let quant_on = meta.get("quant_on")?.as_bool()?;
     let dim = mean.len();
     let mut norm = ObsNormalizer::new(dim, dim > 0);
-    norm.load_state(mean, var, 1e6);
+    // n = 2.0: var round-trips bit-exactly through load_state/normalize
+    norm.load_state(mean, var, 2.0);
     norm.freeze();
     Ok((meta, flat, norm, env, algo, hidden, bits, quant_on))
 }
@@ -180,19 +192,34 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         .map(|s| Scope::parse(s))
         .collect::<Result<_>>()?;
     let bits = a.usize_list("bits", &[8, 4, 2])?;
+    // swept widths reach b_core only under the all/core scopes; there
+    // the tighter i8-weight bound applies, else the I/O lattice bound
+    let range = if scopes.iter().any(|s| matches!(s, Scope::All
+                                                  | Scope::Core)) {
+        BitCfg::CORE_RANGE
+    } else {
+        BitCfg::BITS_RANGE
+    };
+    for &b in &bits {
+        anyhow::ensure!(range.contains(&(b as u32)),
+                        "--bits: width {b} out of range ({}..={})",
+                        range.start(), range.end());
+    }
 
     println!("sweep {env} ({})", proto.describe());
     let fp32 = fp32_band(&rt, algo, &env, &proto, true)?;
     println!("FP32 band: {:.1} ± {:.1}", fp32.mean, fp32.std);
-    let mut table = Table::new(&["scope", "bits", "return", "matches FP32"]);
+    let mut table = Table::new(&["scope", "bits (i,c,o)", "return",
+                                 "matches FP32"]);
     let store = Store::open(Store::default_dir())?;
     for scope in scopes {
         for &b in &bits {
+            let cfg = scope.bits(b as u32);
             let p = run_config(&rt, algo, &env, &proto, proto.hidden,
-                               scope.bits(b as u32), true,
-                               &format!("{}-{b}", scope.name()))?;
+                               cfg, true,
+                               &format!("{}-{cfg}", scope.name()))?;
             let ok = qcontrol::coordinator::sweep::matches_fp32(&p, &fp32);
-            table.row(vec![scope.name().into(), b.to_string(),
+            table.row(vec![scope.name().into(), cfg.to_string(),
                            format!("{:.1} ± {:.1}", p.mean, p.std),
                            if ok { "yes" } else { "no" }.into()]);
             store.append("sweep", Json::obj(vec![
@@ -224,8 +251,7 @@ fn cmd_select(a: &Args) -> Result<()> {
         println!("  [{stage:>5}] {label:<12} {mean:>9.1} ± {std:<8.1} {}",
                  if *ok { "match" } else { "below band" });
     }
-    println!("selected: h={} bits=({},{},{})", out.hidden,
-             out.bits.b_in, out.bits.b_core, out.bits.b_out);
+    println!("selected: h={} bits={}", out.hidden, out.bits);
     Ok(())
 }
 
@@ -255,8 +281,7 @@ fn cmd_synth(a: &Args) -> Result<()> {
                                       dims.act_dim)?;
     let policy = IntPolicy::from_tensors(&tensors, bits);
     let report = synthesize(&policy, &XC7A15T, 1e8)?;
-    println!("{env} h={hidden} bits=({},{},{}) on {}:",
-             bits.b_in, bits.b_core, bits.b_out, XC7A15T.name);
+    println!("{env} h={hidden} bits={bits} on {}:", XC7A15T.name);
     println!("  LUT {:>6}/{}   FF {:>6}/{}   BRAM {:>5.1}/{}   DSP {:>3}/{}",
              report.design.luts(), XC7A15T.luts,
              report.design.ffs(), XC7A15T.ffs,
@@ -270,25 +295,93 @@ fn cmd_synth(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(a: &Args) -> Result<()> {
-    let rt = Runtime::load(default_artifact_dir())?;
-    let (_, flat, norm, env, _algo, hidden, bits, quant_on) = load_ckpt(a)?;
-    anyhow::ensure!(quant_on, "serve requires a quantized checkpoint");
-    let dims = rt.manifest.envs[&env];
-    let spec = &rt.manifest.specs[&format!("sac_{env}_h{hidden}")];
+/// Build the deployable integer artifact for a checkpoint. Needs only
+/// the manifest (tensor layout), not the PJRT runtime — export works in
+/// a fully offline deployment environment.
+fn artifact_from_ckpt(a: &Args) -> Result<PolicyArtifact> {
+    let (_, flat, norm, env, algo, hidden, bits, quant_on) = load_ckpt(a)?;
+    anyhow::ensure!(quant_on,
+                    "export/serve requires a quantized checkpoint");
+    bits.validate()?;
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let dims = *manifest
+        .envs
+        .get(&env)
+        .with_context(|| format!("unknown env {env}"))?;
+    let spec = manifest
+        .specs
+        .get(&format!("{}_{env}_h{hidden}", algo.name()))
+        .with_context(|| format!("no spec for {env} h={hidden}"))?;
     let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim, hidden,
                                       dims.act_dim)?;
-    let engine = IntEngine::new(IntPolicy::from_tensors(&tensors, bits));
+    // id precedence: explicit --id, then the --out file stem (so
+    // `export --out pols/pend.qpol` is addressable as `pend`), then a
+    // descriptive default
+    let id = match a.str_opt("id") {
+        Some(id) => id.to_string(),
+        None => a
+            .str_opt("out")
+            .and_then(|o| std::path::Path::new(o).file_stem())
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| format!("{env}_{}_b{}-{}-{}", algo.name(),
+                                       bits.b_in, bits.b_core,
+                                       bits.b_out)),
+    };
+    let mut art = PolicyArtifact::new(
+        id, IntPolicy::from_tensors(&tensors, bits))
+        .with_normalizer(&norm);
+    art.env = env;
+    Ok(art)
+}
+
+fn cmd_export(a: &Args) -> Result<()> {
+    let art = artifact_from_ckpt(a)?;
+    let out = a.str("out", &format!("results/{}.qpol", art.id));
+    art.save(&out)?;
+    let p = &art.policy;
+    println!("exported `{}` ({} obs={} h={} act={} bits={}, {} weight \
+              bits, {} threshold bits) -> {out}",
+             art.id, art.env, p.obs_dim, p.hidden, p.act_dim, p.bits,
+             p.weight_bits_total(), p.threshold_bits_total());
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    // assemble the registry: every .qpol in --dir, or one checkpoint
+    let registry = if let Some(dir) = a.str_opt("dir") {
+        PolicyRegistry::load_dir(dir)?
+    } else {
+        let mut reg = PolicyRegistry::new();
+        reg.insert(artifact_from_ckpt(a)?)?;
+        reg
+    };
+    let cfg = serving::ServerConfig {
+        max_connections: a.usize("max-connections", 64)?,
+        max_batch: a.usize("max-batch", 32)?,
+        default_policy: a.str_opt("default").map(|s| s.to_string()),
+        ..serving::ServerConfig::default()
+    };
+    cfg.validate()?;
+    let default_id = registry.default_id(cfg.default_policy.as_deref())?;
+
     let port = a.usize("port", 7777)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
-    println!("serving {env} integer policy on 127.0.0.1:{port} \
-              (obs={}, act={})", dims.obs_dim, dims.act_dim);
+    println!("serving {} integer policy(ies) on 127.0.0.1:{port}:",
+             registry.len());
+    for (id, art) in registry.iter() {
+        let p = &art.policy;
+        println!("  {id:<24} env={:<12} obs={} act={} bits={}{}",
+                 if art.env.is_empty() { "?" } else { art.env.as_str() },
+                 p.obs_dim, p.act_dim, p.bits,
+                 if id == default_id { "  (default / v1)" } else { "" });
+    }
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let stats = server::serve(listener, engine, norm, stop)?;
-    println!("served {} requests over {} connections ({} batched passes), \
-              inference p50 {:.1} µs  p99 {:.1} µs  p99.9 {:.1} µs",
+    let stats = serving::serve_registry(listener, registry, stop, cfg)?;
+    println!("served {} requests over {} connections ({} batched passes, \
+              {} policy cores), inference p50 {:.1} µs  p99 {:.1} µs  \
+              p99.9 {:.1} µs",
              stats.requests, stats.connections, stats.batches,
-             stats.p50_us, stats.p99_us, stats.p999_us);
+             stats.policies, stats.p50_us, stats.p99_us, stats.p999_us);
     Ok(())
 }
 

@@ -1,0 +1,665 @@
+//! The `.qpol` on-disk policy artifact — the paper's deployable integer
+//! controller (lattice weights, FINN-style thresholds, tanh LUT, §2.3)
+//! as a versioned, endian-explicit, checksummed binary file.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! ```text
+//! magic   b"QPOL"                          4 bytes
+//! version u16 (currently 1)                2 bytes
+//! flags   u16 (reserved, 0)                2 bytes
+//! section*                                 tag u16 | len u64 | body
+//! END     tag 0xFFFF | len 4 | crc32       crc over every preceding byte
+//! ```
+//!
+//! Sections (`tag`):
+//!
+//! | tag | name  | body                                                  |
+//! |-----|-------|-------------------------------------------------------|
+//! | 1   | META  | id, env (u16-len strings), obs/hidden/act dims (u32)  |
+//! | 2   | BITS  | b_in,b_core,b_out (u32), s_in (f32), in_range (3×i32) |
+//! | 3   | NORM  | dim u32, mean f64×dim, var f64×dim (dim 0 = disabled) |
+//! | 4   | LAYER | one per layer, in forward order (see `put_layer`)     |
+//! | 5   | TANH  | n u32, LUT f32×n                                      |
+//!
+//! **Forward compatibility:** a reader MUST skip sections with unknown
+//! tags (they are covered by the CRC, so corruption is still caught).
+//! **Versioning:** a `version` bump means the *known* sections changed
+//! incompatibly; readers reject versions they don't know. Loading is
+//! fully bounds-checked: malformed files are errors, never panics.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::quant::export::{IntLayer, IntPolicy};
+use crate::quant::{BitCfg, QRange};
+use crate::util::stats::ObsNormalizer;
+
+pub const MAGIC: [u8; 4] = *b"QPOL";
+pub const VERSION: u16 = 1;
+
+const SEC_META: u16 = 1;
+const SEC_BITS: u16 = 2;
+const SEC_NORM: u16 = 3;
+const SEC_LAYER: u16 = 4;
+const SEC_TANH: u16 = 5;
+const SEC_END: u16 = 0xFFFF;
+
+/// Caps that bound allocations while parsing untrusted files.
+const MAX_DIM: usize = 1 << 16;
+const MAX_LEVELS: usize = 1 << 16;
+const MAX_LAYERS: usize = 64;
+
+/// A deployable policy artifact: the integer policy plus everything the
+/// serving path needs (frozen normalizer stats, identity metadata).
+#[derive(Clone, Debug)]
+pub struct PolicyArtifact {
+    /// registry/routing id (defaults to the file stem on load if empty)
+    pub id: String,
+    /// source environment name ("" when unknown)
+    pub env: String,
+    pub policy: IntPolicy,
+    /// per-dimension normalizer mean/var; empty = normalization disabled
+    pub norm_mean: Vec<f64>,
+    pub norm_var: Vec<f64>,
+}
+
+impl PolicyArtifact {
+    /// Wrap a bare policy (no normalization, id only).
+    pub fn new(id: impl Into<String>, policy: IntPolicy) -> PolicyArtifact {
+        PolicyArtifact {
+            id: id.into(),
+            env: String::new(),
+            policy,
+            norm_mean: Vec::new(),
+            norm_var: Vec::new(),
+        }
+    }
+
+    /// Attach normalizer state (only kept when the normalizer is enabled —
+    /// a disabled normalizer round-trips as identity).
+    pub fn with_normalizer(mut self, norm: &ObsNormalizer) -> PolicyArtifact {
+        if norm.enabled {
+            let (mean, var) = norm.state();
+            self.norm_mean = mean;
+            self.norm_var = var;
+        } else {
+            self.norm_mean.clear();
+            self.norm_var.clear();
+        }
+        self
+    }
+
+    /// Reconstruct the frozen deployment normalizer.
+    pub fn normalizer(&self) -> ObsNormalizer {
+        if self.norm_mean.is_empty() {
+            return ObsNormalizer::new(self.policy.obs_dim, false);
+        }
+        let mut n = ObsNormalizer::new(self.norm_mean.len(), true);
+        // n = 2.0 makes load_state store m2 = var * 1.0 and normalize
+        // divide by 1.0 again — the stored variance round-trips *bit-
+        // exactly* (a fabricated large count would double-round by 1 ulp)
+        n.load_state(self.norm_mean.clone(), self.norm_var.clone(), 2.0);
+        n.freeze();
+        n
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes()?)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<PolicyArtifact> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut art = PolicyArtifact::from_bytes(&bytes)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        if art.id.is_empty() {
+            art.id = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+        }
+        Ok(art)
+    }
+
+    // ---- serialization -------------------------------------------------
+
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        // the string fields are u16-length-prefixed on disk; erroring
+        // here beats silently truncating and breaking the round-trip
+        for (name, s) in [("id", &self.id), ("env", &self.env)] {
+            ensure!(s.len() <= u16::MAX as usize,
+                    "{name} is {} bytes (format caps strings at {})",
+                    s.len(), u16::MAX);
+        }
+        let p = &self.policy;
+        let mut w = Writer::default();
+        w.buf.extend_from_slice(&MAGIC);
+        w.put_u16(VERSION);
+        w.put_u16(0); // flags (reserved)
+
+        w.section(SEC_META, |w| {
+            w.put_str(&self.id);
+            w.put_str(&self.env);
+            w.put_u32(p.obs_dim as u32);
+            w.put_u32(p.hidden as u32);
+            w.put_u32(p.act_dim as u32);
+        });
+        w.section(SEC_BITS, |w| {
+            w.put_u32(p.bits.b_in);
+            w.put_u32(p.bits.b_core);
+            w.put_u32(p.bits.b_out);
+            w.put_f32(p.s_in);
+            w.put_range(p.in_range);
+        });
+        w.section(SEC_NORM, |w| {
+            w.put_u32(self.norm_mean.len() as u32);
+            for &x in &self.norm_mean {
+                w.put_f64(x);
+            }
+            for &x in &self.norm_var {
+                w.put_f64(x);
+            }
+        });
+        for layer in &p.layers {
+            w.section(SEC_LAYER, |w| put_layer(w, layer));
+        }
+        w.section(SEC_TANH, |w| {
+            w.put_u32(p.tanh_lut.len() as u32);
+            for &x in &p.tanh_lut {
+                w.put_f32(x);
+            }
+        });
+
+        let crc = crc32(&w.buf);
+        w.put_u16(SEC_END);
+        w.put_u64(4);
+        w.put_u32(crc);
+        Ok(w.buf)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<PolicyArtifact> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(4)?;
+        ensure!(magic == MAGIC, "bad magic {magic:02x?} (not a .qpol file)");
+        let version = r.u16()?;
+        ensure!(version == VERSION,
+                "unsupported .qpol version {version} (reader supports \
+                 {VERSION})");
+        let _flags = r.u16()?;
+
+        let mut meta: Option<(String, String, usize, usize, usize)> = None;
+        let mut bits_sec: Option<(BitCfg, f32, QRange)> = None;
+        let mut norm: Option<(Vec<f64>, Vec<f64>)> = None;
+        let mut layers: Vec<IntLayer> = Vec::new();
+        let mut tanh_lut: Option<Vec<f32>> = None;
+
+        loop {
+            let tag = r.u16().context("reading section tag")?;
+            let len = r.u64().context("reading section length")? as usize;
+            if tag == SEC_END {
+                ensure!(len == 4, "END section length {len} != 4");
+                let crc_start = r.pos - 10; // before END tag + len
+                let want = crc32(&bytes[..crc_start]);
+                let got = r.u32()?;
+                ensure!(got == want,
+                        "checksum mismatch: file {got:#010x}, computed \
+                         {want:#010x}");
+                ensure!(r.pos == bytes.len(),
+                        "{} trailing bytes after END section",
+                        bytes.len() - r.pos);
+                break;
+            }
+            let body = r.take(len).with_context(|| {
+                format!("section tag {tag}: truncated body (wanted {len} \
+                         bytes)")
+            })?;
+            let mut s = Reader { bytes: body, pos: 0 };
+            match tag {
+                SEC_META => {
+                    ensure!(meta.is_none(), "duplicate META section");
+                    let id = s.str()?;
+                    let env = s.str()?;
+                    let obs = s.u32()? as usize;
+                    let hidden = s.u32()? as usize;
+                    let act = s.u32()? as usize;
+                    ensure!(obs >= 1 && obs <= MAX_DIM
+                            && hidden >= 1 && hidden <= MAX_DIM
+                            && act >= 1 && act <= MAX_DIM,
+                            "implausible dims {obs}x{hidden}x{act}");
+                    meta = Some((id, env, obs, hidden, act));
+                }
+                SEC_BITS => {
+                    ensure!(bits_sec.is_none(), "duplicate BITS section");
+                    let bits = BitCfg::new(s.u32()?, s.u32()?, s.u32()?);
+                    bits.validate()?;
+                    let s_in = s.f32()?;
+                    let in_range = s.range()?;
+                    bits_sec = Some((bits, s_in, in_range));
+                }
+                SEC_NORM => {
+                    ensure!(norm.is_none(), "duplicate NORM section");
+                    let dim = s.u32()? as usize;
+                    ensure!(dim <= MAX_DIM, "implausible norm dim {dim}");
+                    let mut mean = Vec::with_capacity(dim);
+                    let mut var = Vec::with_capacity(dim);
+                    for _ in 0..dim {
+                        mean.push(s.f64()?);
+                    }
+                    for _ in 0..dim {
+                        var.push(s.f64()?);
+                    }
+                    norm = Some((mean, var));
+                }
+                SEC_LAYER => {
+                    ensure!(layers.len() < MAX_LAYERS,
+                            "more than {MAX_LAYERS} layer sections");
+                    layers.push(read_layer(&mut s)?);
+                }
+                SEC_TANH => {
+                    ensure!(tanh_lut.is_none(), "duplicate TANH section");
+                    let n = s.u32()? as usize;
+                    ensure!(n >= 1 && n <= MAX_LEVELS,
+                            "implausible tanh LUT size {n}");
+                    let mut lut = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        lut.push(s.f32()?);
+                    }
+                    tanh_lut = Some(lut);
+                }
+                // forward compat: unknown sections are skipped (the CRC
+                // still covers them)
+                _ => continue,
+            }
+            ensure!(s.pos == s.bytes.len(),
+                    "section tag {tag}: {} unread bytes",
+                    s.bytes.len() - s.pos);
+        }
+
+        let (id, env, obs_dim, hidden, act_dim) =
+            meta.context("missing META section")?;
+        let (bits, s_in, in_range) =
+            bits_sec.context("missing BITS section")?;
+        let (norm_mean, norm_var) = norm.context("missing NORM section")?;
+        let tanh_lut = tanh_lut.context("missing TANH section")?;
+        ensure!(!layers.is_empty(), "no LAYER sections");
+        ensure!(norm_mean.is_empty() || norm_mean.len() == obs_dim,
+                "normalizer dim {} != obs_dim {obs_dim}", norm_mean.len());
+
+        // cross-section consistency: the chain must actually compose
+        ensure!(layers[0].cols == obs_dim,
+                "first layer cols {} != obs_dim {obs_dim}", layers[0].cols);
+        for w in layers.windows(2) {
+            ensure!(w[1].cols == w[0].rows,
+                    "layer chain mismatch: {} rows feed {} cols",
+                    w[0].rows, w[1].cols);
+        }
+        let last = layers.last().unwrap();
+        ensure!(last.rows == act_dim,
+                "last layer rows {} != act_dim {act_dim}", last.rows);
+        ensure!(tanh_lut.len() == last.out_range.levels(),
+                "tanh LUT size {} != output levels {}", tanh_lut.len(),
+                last.out_range.levels());
+
+        Ok(PolicyArtifact {
+            id,
+            env,
+            policy: IntPolicy {
+                obs_dim,
+                hidden,
+                act_dim,
+                bits,
+                s_in,
+                in_range,
+                layers,
+                tanh_lut,
+            },
+            norm_mean,
+            norm_var,
+        })
+    }
+}
+
+impl IntPolicy {
+    /// Save as a bare `.qpol` artifact (id = file stem, no normalizer).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let id = path
+            .as_ref()
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        PolicyArtifact::new(id, self.clone()).save(path)
+    }
+
+    /// Load the policy out of a `.qpol` artifact (drops metadata).
+    pub fn load(path: impl AsRef<Path>) -> Result<IntPolicy> {
+        Ok(PolicyArtifact::load(path)?.policy)
+    }
+}
+
+fn put_layer(w: &mut Writer, l: &IntLayer) {
+    w.put_u32(l.rows as u32);
+    w.put_u32(l.cols as u32);
+    w.put_u8(l.relu as u8);
+    w.put_u32(l.w_bits);
+    w.put_u32(l.acc_bits);
+    w.put_range(l.in_range);
+    w.put_range(l.out_range);
+    w.put_f64(l.a);
+    w.put_f64(l.delta_out);
+    for &x in &l.w_int {
+        w.put_u8(x as u8);
+    }
+    for &x in &l.bias_fq {
+        w.put_f64(x);
+    }
+    for &x in &l.thresholds {
+        w.put_i32(x);
+    }
+}
+
+fn read_layer(s: &mut Reader) -> Result<IntLayer> {
+    let rows = s.u32()? as usize;
+    let cols = s.u32()? as usize;
+    ensure!(rows >= 1 && rows <= MAX_DIM && cols >= 1 && cols <= MAX_DIM,
+            "implausible layer dims {rows}x{cols}");
+    let relu = match s.u8()? {
+        0 => false,
+        1 => true,
+        v => bail!("bad relu flag {v}"),
+    };
+    let w_bits = s.u32()?;
+    let acc_bits = s.u32()?;
+    // w_int is Vec<i8>, so weight widths beyond 8 cannot be legitimate
+    ensure!(w_bits >= 1 && w_bits <= 8 && acc_bits >= 1 && acc_bits <= 64,
+            "implausible bit widths w={w_bits} acc={acc_bits}");
+    let in_range = s.range()?;
+    let out_range = s.range()?;
+    ensure!(out_range.levels() >= 2 && out_range.levels() <= MAX_LEVELS,
+            "implausible output levels {}", out_range.levels());
+    let a = s.f64()?;
+    let delta_out = s.f64()?;
+    ensure!(a.is_finite() && delta_out.is_finite() && delta_out != 0.0,
+            "non-finite rescale constants");
+    // size the remaining body before reserving, so a hostile header can't
+    // force a huge allocation that the per-read bounds checks never reach
+    let nthr = rows * (out_range.levels() - 1);
+    let need = rows * cols + rows * 8 + nthr * 4;
+    ensure!(s.bytes.len() - s.pos == need,
+            "layer body size mismatch: {} bytes left, layout needs {need}",
+            s.bytes.len() - s.pos);
+    let mut w_int = Vec::with_capacity(rows * cols);
+    for _ in 0..rows * cols {
+        w_int.push(s.u8()? as i8);
+    }
+    let mut bias_fq = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let b = s.f64()?;
+        ensure!(b.is_finite(), "non-finite bias");
+        bias_fq.push(b);
+    }
+    let mut thresholds = Vec::with_capacity(nthr);
+    for _ in 0..nthr {
+        thresholds.push(s.i32()?);
+    }
+    Ok(IntLayer {
+        rows,
+        cols,
+        w_int,
+        in_range,
+        out_range,
+        thresholds,
+        a,
+        bias_fq,
+        delta_out,
+        relu,
+        acc_bits,
+        w_bits,
+    })
+}
+
+// ---- byte-level plumbing -----------------------------------------------
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    fn put_u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_i32(&mut self, x: i32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_range(&mut self, r: QRange) {
+        self.put_i32(r.qmin);
+        self.put_i32(r.qmax);
+        self.put_i32(r.qs);
+    }
+
+    /// Length-prefixed string; `to_bytes` has already bounded the length
+    /// to u16.
+    fn put_str(&mut self, s: &str) {
+        let bytes = s.as_bytes();
+        self.put_u16(bytes.len() as u16);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append one `tag | len | body` section, with `len` back-patched
+    /// after the body closure runs.
+    fn section(&mut self, tag: u16, body: impl FnOnce(&mut Writer)) {
+        self.put_u16(tag);
+        let len_at = self.buf.len();
+        self.put_u64(0);
+        let start = self.buf.len();
+        body(self);
+        let len = (self.buf.len() - start) as u64;
+        self.buf[len_at..len_at + 8].copy_from_slice(&len.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader: every primitive read can fail,
+/// so truncated/corrupt files surface as errors, never panics.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.bytes.len() - self.pos >= n,
+                "unexpected end of file at byte {} (wanted {n} more, {} \
+                 left)", self.pos, self.bytes.len() - self.pos);
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(self.u32()? as i32)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn range(&mut self) -> Result<QRange> {
+        let qmin = self.i32()?;
+        let qmax = self.i32()?;
+        let qs = self.i32()?;
+        ensure!(qmax >= qmin && qs >= 1
+                && (qmax as i64 - qmin as i64) < MAX_LEVELS as i64,
+                "implausible QRange [{qmin}, {qmax}] qs={qs}");
+        Ok(QRange { qmin, qmax, qs })
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .context("non-UTF-8 string")?
+            .to_string())
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected); bitwise — artifact files are small and
+/// written once, so simplicity beats a table here.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn bytes_roundtrip_preserves_everything() {
+        let policy = testkit::toy_policy(5, 6, 10, 2, BitCfg::new(4, 3, 8));
+        let mut norm = ObsNormalizer::new(6, true);
+        for i in 0..100 {
+            let o: Vec<f32> =
+                (0..6).map(|d| (i * 7 + d) as f32 * 0.13 - 2.0).collect();
+            norm.observe(&o);
+        }
+        let art = PolicyArtifact::new("pendulum-a", policy.clone())
+            .with_normalizer(&norm);
+        let bytes = art.to_bytes().unwrap();
+        let back = PolicyArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.id, "pendulum-a");
+        assert_eq!(back.norm_mean, art.norm_mean);
+        assert_eq!(back.norm_var, art.norm_var);
+        let (p, q) = (&policy, &back.policy);
+        assert_eq!((p.obs_dim, p.hidden, p.act_dim),
+                   (q.obs_dim, q.hidden, q.act_dim));
+        assert_eq!(p.bits, q.bits);
+        assert_eq!(p.s_in.to_bits(), q.s_in.to_bits());
+        assert_eq!(p.in_range, q.in_range);
+        assert_eq!(p.layers.len(), q.layers.len());
+        for (a, b) in p.layers.iter().zip(&q.layers) {
+            assert_eq!(a.w_int, b.w_int);
+            assert_eq!(a.thresholds, b.thresholds);
+            assert_eq!(a.a.to_bits(), b.a.to_bits());
+            assert_eq!(a.delta_out.to_bits(), b.delta_out.to_bits());
+            assert_eq!(a.bias_fq.len(), b.bias_fq.len());
+            for (x, y) in a.bias_fq.iter().zip(&b.bias_fq) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!((a.rows, a.cols, a.relu, a.w_bits, a.acc_bits),
+                       (b.rows, b.cols, b.relu, b.w_bits, b.acc_bits));
+            assert_eq!((a.in_range, a.out_range),
+                       (b.in_range, b.out_range));
+        }
+        let lut_bits: Vec<u32> =
+            p.tanh_lut.iter().map(|x| x.to_bits()).collect();
+        let lut_bits2: Vec<u32> =
+            q.tanh_lut.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(lut_bits, lut_bits2);
+    }
+
+    #[test]
+    fn disabled_normalizer_roundtrips_as_identity() {
+        let policy = testkit::toy_policy(1, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let art = PolicyArtifact::new("x", policy)
+            .with_normalizer(&ObsNormalizer::new(4, false));
+        let back = PolicyArtifact::from_bytes(&art.to_bytes().unwrap()).unwrap();
+        let norm = back.normalizer();
+        assert!(!norm.enabled);
+        let mut probe = [1.5f32, -2.0, 0.0, 3.0];
+        let want = probe;
+        norm.normalize(&mut probe);
+        assert_eq!(probe, want);
+    }
+
+    #[test]
+    fn unknown_sections_are_skipped() {
+        let policy = testkit::toy_policy(2, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let art = PolicyArtifact::new("fwd-compat", policy);
+        let bytes = art.to_bytes().unwrap();
+        // splice an unknown section in front of END, re-seal the CRC
+        let end_at = bytes.len() - (2 + 8 + 4);
+        let mut patched = bytes[..end_at].to_vec();
+        patched.extend_from_slice(&0x7777u16.to_le_bytes());
+        patched.extend_from_slice(&5u64.to_le_bytes());
+        patched.extend_from_slice(b"hello");
+        let crc = crc32(&patched);
+        patched.extend_from_slice(&SEC_END.to_le_bytes());
+        patched.extend_from_slice(&4u64.to_le_bytes());
+        patched.extend_from_slice(&crc.to_le_bytes());
+        let back = PolicyArtifact::from_bytes(&patched).unwrap();
+        assert_eq!(back.id, "fwd-compat");
+    }
+}

@@ -1,0 +1,403 @@
+//! The unified policy inference API — the deployment half's public
+//! surface.
+//!
+//! Everything that *executes* a trained controller now goes through one
+//! object-safe trait, [`PolicyBackend`]: the integer engine
+//! ([`crate::intinfer::IntEngine`], what the FPGA runs), the fake-quant
+//! mirror ([`FakeQuantBackend`]), the FP32 reference ([`Fp32Backend`]),
+//! and the PJRT path (wrapped in `rl::eval`). Callers — evaluation
+//! rollouts, sweeps, serving — hold a `Box<dyn PolicyBackend>` and never
+//! dispatch on an enum.
+//!
+//! Policies are also first-class *artifacts*, not trainer-resident state:
+//!
+//! * [`artifact`] — the versioned, checksummed `.qpol` binary format
+//!   ([`PolicyArtifact`]): lattice weights, thresholds, tanh LUT,
+//!   normalizer stats, endian-explicit, with a forward-compat
+//!   unknown-section skip rule.
+//! * [`registry`] — [`PolicyRegistry`]: a directory of `.qpol` artifacts
+//!   loaded and exposed by id, the substrate of multi-policy serving.
+
+pub mod artifact;
+pub mod registry;
+
+use anyhow::Result;
+
+use crate::quant::fakequant::{self, PolicyTensors};
+use crate::quant::BitCfg;
+
+pub use artifact::PolicyArtifact;
+pub use registry::PolicyRegistry;
+
+/// Identity card of a backend instance (for logs, routing tables, and the
+/// `qcontrol info`/`serve` output).
+#[derive(Clone, Debug)]
+pub struct PolicyDescriptor {
+    /// stable label ("default", an artifact id, an executable name, …)
+    pub id: String,
+    /// execution path: "int" | "fakequant" | "fp32" | "pjrt"
+    pub kind: &'static str,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    /// quantization config, when the path is quantized
+    pub bits: Option<BitCfg>,
+}
+
+impl std::fmt::Display for PolicyDescriptor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}] {}x{}x{}", self.id, self.kind, self.obs_dim,
+               self.hidden, self.act_dim)?;
+        if let Some(b) = self.bits {
+            write!(f, " bits={b}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One inference-capable policy, independent of how it executes.
+///
+/// Contract:
+/// * `infer_batch` takes a row-major `[batch, obs_dim]` block of
+///   *already normalized* observations and fills a row-major
+///   `[batch, act_dim]` block of actions in `[-1, 1]`; dimension
+///   mismatches are errors, never panics. A batch of zero rows is a
+///   no-op.
+/// * Implementations may keep internal scratch state (hence `&mut
+///   self`), but results must not depend on call history: the same
+///   observation block always yields the same actions.
+/// * `macs()` is the multiply-accumulate count of one single-observation
+///   forward (for ops/s and synthesis reporting).
+///
+/// The trait is object-safe; `rl::eval`, `coordinator::sweep`, and the
+/// serving subsystem all drive inference through `Box<dyn
+/// PolicyBackend>`.
+pub trait PolicyBackend {
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+
+    /// Batched forward over `[batch, obs_dim]` → `[batch, act_dim]`.
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> Result<()>;
+
+    /// Multiply-accumulates per single-observation inference.
+    fn macs(&self) -> u64;
+
+    fn descriptor(&self) -> PolicyDescriptor;
+
+    /// Single-observation convenience (a batch of one).
+    fn infer(&mut self, obs: &[f32], action_out: &mut [f32]) -> Result<()> {
+        self.infer_batch(obs, action_out)
+    }
+
+    /// Allocating convenience wrapper.
+    fn infer_vec(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.obs_dim() > 0, "backend has zero obs_dim");
+        anyhow::ensure!(obs.len() % self.obs_dim() == 0,
+                        "obs block of {} not a multiple of obs_dim {}",
+                        obs.len(), self.obs_dim());
+        let batch = obs.len() / self.obs_dim();
+        let mut out = vec![0.0f32; batch * self.act_dim()];
+        self.infer_batch(obs, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Multiply-accumulates of one forward through the paper's fixed
+/// obs→hidden→hidden→act MLP (shared by every dense-topology backend).
+pub fn mlp_macs(obs_dim: usize, hidden: usize, act_dim: usize) -> u64 {
+    (hidden * obs_dim + hidden * hidden + act_dim * hidden) as u64
+}
+
+/// Shared shape check for `infer_batch` implementations.
+pub(crate) fn check_block(obs: &[f32], out: &[f32], obs_dim: usize,
+                          act_dim: usize) -> Result<usize> {
+    anyhow::ensure!(obs_dim > 0 && act_dim > 0, "degenerate policy dims");
+    anyhow::ensure!(obs.len() % obs_dim == 0,
+                    "obs block of {} not [batch, {obs_dim}]", obs.len());
+    let batch = obs.len() / obs_dim;
+    anyhow::ensure!(out.len() == batch * act_dim,
+                    "action block of {} not [{batch}, {act_dim}]",
+                    out.len());
+    Ok(batch)
+}
+
+/// Owned copy of the actor tensors, so long-lived backends don't borrow
+/// the trainer's flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct OwnedTensors {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub act_dim: usize,
+    pub fc1_w: Vec<f32>,
+    pub fc1_b: Vec<f32>,
+    pub fc2_w: Vec<f32>,
+    pub fc2_b: Vec<f32>,
+    pub mean_w: Vec<f32>,
+    pub mean_b: Vec<f32>,
+    pub s_in: f32,
+    pub s_h1: f32,
+    pub s_h2: f32,
+    pub s_out: f32,
+}
+
+impl OwnedTensors {
+    pub fn from_views(p: &PolicyTensors) -> OwnedTensors {
+        p.validate();
+        OwnedTensors {
+            obs_dim: p.obs_dim,
+            hidden: p.hidden,
+            act_dim: p.act_dim,
+            fc1_w: p.fc1_w.to_vec(),
+            fc1_b: p.fc1_b.to_vec(),
+            fc2_w: p.fc2_w.to_vec(),
+            fc2_b: p.fc2_b.to_vec(),
+            mean_w: p.mean_w.to_vec(),
+            mean_b: p.mean_b.to_vec(),
+            s_in: p.s_in,
+            s_h1: p.s_h1,
+            s_h2: p.s_h2,
+            s_out: p.s_out,
+        }
+    }
+
+    pub fn views(&self) -> PolicyTensors<'_> {
+        PolicyTensors {
+            obs_dim: self.obs_dim,
+            hidden: self.hidden,
+            act_dim: self.act_dim,
+            fc1_w: &self.fc1_w,
+            fc1_b: &self.fc1_b,
+            fc2_w: &self.fc2_w,
+            fc2_b: &self.fc2_b,
+            mean_w: &self.mean_w,
+            mean_b: &self.mean_b,
+            s_in: self.s_in,
+            s_h1: self.s_h1,
+            s_h2: self.s_h2,
+            s_out: self.s_out,
+        }
+    }
+}
+
+/// Fake-quant execution of the trained tensors — the rust mirror of the
+/// L2 QDQ graph, behind the unified trait.
+pub struct FakeQuantBackend {
+    tensors: OwnedTensors,
+    bits: BitCfg,
+}
+
+impl FakeQuantBackend {
+    pub fn new(p: &PolicyTensors, bits: BitCfg) -> FakeQuantBackend {
+        FakeQuantBackend { tensors: OwnedTensors::from_views(p), bits }
+    }
+}
+
+impl PolicyBackend for FakeQuantBackend {
+    fn obs_dim(&self) -> usize {
+        self.tensors.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.tensors.act_dim
+    }
+
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> Result<()> {
+        let batch = check_block(obs, actions_out, self.tensors.obs_dim,
+                                self.tensors.act_dim)?;
+        if batch == 0 {
+            return Ok(());
+        }
+        let acts = fakequant::policy_forward(&self.tensors.views(), obs,
+                                             batch, self.bits);
+        actions_out.copy_from_slice(&acts);
+        Ok(())
+    }
+
+    fn macs(&self) -> u64 {
+        let t = &self.tensors;
+        mlp_macs(t.obs_dim, t.hidden, t.act_dim)
+    }
+
+    fn descriptor(&self) -> PolicyDescriptor {
+        PolicyDescriptor {
+            id: format!("fakequant-{}", self.bits),
+            kind: "fakequant",
+            obs_dim: self.tensors.obs_dim,
+            act_dim: self.tensors.act_dim,
+            hidden: self.tensors.hidden,
+            bits: Some(self.bits),
+        }
+    }
+}
+
+/// Plain FP32 reference execution (quantization bypassed entirely) — the
+/// baseline every quantized path is compared against.
+pub struct Fp32Backend {
+    tensors: OwnedTensors,
+}
+
+impl Fp32Backend {
+    pub fn new(p: &PolicyTensors) -> Fp32Backend {
+        Fp32Backend { tensors: OwnedTensors::from_views(p) }
+    }
+
+    fn matvec(w: &[f32], b: &[f32], x: &[f32], dout: usize, relu: bool)
+              -> Vec<f32> {
+        let din = x.len();
+        (0..dout)
+            .map(|j| {
+                let mut acc = b[j];
+                for k in 0..din {
+                    acc += w[j * din + k] * x[k];
+                }
+                if relu { acc.max(0.0) } else { acc }
+            })
+            .collect()
+    }
+}
+
+impl PolicyBackend for Fp32Backend {
+    fn obs_dim(&self) -> usize {
+        self.tensors.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.tensors.act_dim
+    }
+
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> Result<()> {
+        let t = &self.tensors;
+        check_block(obs, actions_out, t.obs_dim, t.act_dim)?;
+        for (x, out) in obs
+            .chunks_exact(t.obs_dim)
+            .zip(actions_out.chunks_exact_mut(t.act_dim))
+        {
+            let h1 = Self::matvec(&t.fc1_w, &t.fc1_b, x, t.hidden, true);
+            let h2 = Self::matvec(&t.fc2_w, &t.fc2_b, &h1, t.hidden, true);
+            let pre = Self::matvec(&t.mean_w, &t.mean_b, &h2, t.act_dim,
+                                   false);
+            for (o, v) in out.iter_mut().zip(pre) {
+                *o = v.tanh();
+            }
+        }
+        Ok(())
+    }
+
+    fn macs(&self) -> u64 {
+        let t = &self.tensors;
+        mlp_macs(t.obs_dim, t.hidden, t.act_dim)
+    }
+
+    fn descriptor(&self) -> PolicyDescriptor {
+        PolicyDescriptor {
+            id: "fp32".into(),
+            kind: "fp32",
+            obs_dim: self.tensors.obs_dim,
+            act_dim: self.tensors.act_dim,
+            hidden: self.tensors.hidden,
+            bits: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::intinfer::IntEngine;
+    use crate::quant::export::IntPolicy;
+    use crate::util::rng::Rng;
+    use crate::util::testkit;
+
+    fn toy_tensors(seed: u64) -> OwnedTensors {
+        let mut r = Rng::new(seed);
+        let mut mk = |n: usize, s: f32| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            r.fill_normal(&mut v);
+            v.iter_mut().for_each(|x| *x *= s);
+            v
+        };
+        OwnedTensors {
+            obs_dim: 5,
+            hidden: 12,
+            act_dim: 3,
+            fc1_w: mk(12 * 5, 0.5),
+            fc1_b: mk(12, 0.1),
+            fc2_w: mk(12 * 12, 0.3),
+            fc2_b: mk(12, 0.1),
+            mean_w: mk(3 * 12, 0.3),
+            mean_b: mk(3, 0.1),
+            s_in: 2.0,
+            s_h1: 1.2,
+            s_h2: 1.2,
+            s_out: 1.0,
+        }
+    }
+
+    #[test]
+    fn all_backends_share_the_trait_contract() {
+        let t = toy_tensors(3);
+        let bits = BitCfg::new(4, 3, 8);
+        let int_engine =
+            IntEngine::new(IntPolicy::from_tensors(&t.views(), bits));
+        let mut backends: Vec<Box<dyn PolicyBackend>> = vec![
+            Box::new(int_engine),
+            Box::new(FakeQuantBackend::new(&t.views(), bits)),
+            Box::new(Fp32Backend::new(&t.views())),
+        ];
+        let mut rng = Rng::new(1);
+        let mut obs = vec![0.0f32; 3 * 5];
+        rng.fill_normal(&mut obs);
+        for b in backends.iter_mut() {
+            assert_eq!(b.obs_dim(), 5);
+            assert_eq!(b.act_dim(), 3);
+            assert!(b.macs() > 0);
+            let acts = b.infer_vec(&obs).unwrap();
+            assert_eq!(acts.len(), 3 * 3, "{}", b.descriptor());
+            assert!(acts.iter().all(|a| a.is_finite() && a.abs() <= 1.0),
+                    "{}: {acts:?}", b.descriptor());
+            // bad shapes are errors, not panics
+            assert!(b.infer_batch(&obs[..4], &mut [0.0; 3]).is_err());
+            let mut short = [0.0f32; 2];
+            assert!(b.infer_batch(&obs[..5], &mut short).is_err());
+            // empty batch is a no-op
+            b.infer_batch(&[], &mut []).unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_equals_per_row_for_every_backend() {
+        let t = toy_tensors(7);
+        let bits = BitCfg::new(5, 3, 6);
+        let mut backends: Vec<Box<dyn PolicyBackend>> = vec![
+            Box::new(IntEngine::new(IntPolicy::from_tensors(&t.views(),
+                                                            bits))),
+            Box::new(FakeQuantBackend::new(&t.views(), bits)),
+            Box::new(Fp32Backend::new(&t.views())),
+        ];
+        let mut rng = Rng::new(2);
+        let mut block = vec![0.0f32; 7 * 5];
+        rng.fill_normal(&mut block);
+        for b in backends.iter_mut() {
+            let batched = b.infer_vec(&block).unwrap();
+            for i in 0..7 {
+                let one = b.infer_vec(&block[i * 5..(i + 1) * 5]).unwrap();
+                assert_eq!(&batched[i * 3..(i + 1) * 3], &one[..],
+                           "{} row {i}", b.descriptor());
+            }
+        }
+    }
+
+    #[test]
+    fn int_engine_descriptor_reports_bits() {
+        let bits = BitCfg::new(4, 3, 8);
+        let eng = IntEngine::new(testkit::toy_policy(1, 4, 8, 2, bits));
+        let d = eng.descriptor();
+        assert_eq!(d.kind, "int");
+        assert_eq!(d.bits, Some(bits));
+        assert_eq!((d.obs_dim, d.hidden, d.act_dim), (4, 8, 2));
+        assert!(d.to_string().contains("4,3,8"));
+    }
+}

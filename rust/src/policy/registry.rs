@@ -1,0 +1,209 @@
+//! [`PolicyRegistry`] — a set of loadable policy artifacts exposed by id.
+//!
+//! The registry is the bridge between the `.qpol` artifact format and
+//! multi-policy serving: `qcontrol serve --dir ARTIFACTS` loads every
+//! `*.qpol` in a directory, and the v2 wire protocol routes each request
+//! to the core serving that id. Ids are unique; a duplicate (two files
+//! exporting the same id) is a hard error rather than a silent shadow.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifact::PolicyArtifact;
+use super::PolicyBackend;
+use crate::intinfer::IntEngine;
+
+/// Policies keyed by id, in deterministic (sorted) order.
+#[derive(Default)]
+pub struct PolicyRegistry {
+    entries: BTreeMap<String, PolicyArtifact>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry::default()
+    }
+
+    /// Register one artifact. Duplicate ids, empty ids, and ids longer
+    /// than 255 bytes are errors — the v2 wire protocol carries the id
+    /// in a u8-length field, so a longer id would be servable but
+    /// unaddressable by any conforming client.
+    pub fn insert(&mut self, artifact: PolicyArtifact) -> Result<()> {
+        anyhow::ensure!(!artifact.id.is_empty(),
+                        "artifact has an empty id");
+        anyhow::ensure!(artifact.id.len() <= u8::MAX as usize,
+                        "policy id `{}` is {} bytes; the wire protocol \
+                         caps ids at 255", artifact.id, artifact.id.len());
+        anyhow::ensure!(!self.entries.contains_key(&artifact.id),
+                        "duplicate policy id `{}`", artifact.id);
+        // artifact::from_bytes enforces this for loaded files; enforce it
+        // here too for programmatic inserts, or the mismatch would panic
+        // the inference core at request time instead of erroring now
+        anyhow::ensure!(artifact.norm_mean.is_empty()
+                        || artifact.norm_mean.len()
+                            == artifact.policy.obs_dim,
+                        "policy `{}`: normalizer dim {} != obs_dim {}",
+                        artifact.id, artifact.norm_mean.len(),
+                        artifact.policy.obs_dim);
+        self.entries.insert(artifact.id.clone(), artifact);
+        Ok(())
+    }
+
+    /// Load every `*.qpol` file in `dir`. A directory with no artifacts
+    /// or any unloadable artifact is an error — a serving fleet must not
+    /// come up silently missing policies.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<PolicyRegistry> {
+        let dir = dir.as_ref();
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "qpol").unwrap_or(false))
+            .collect();
+        paths.sort();
+        anyhow::ensure!(!paths.is_empty(),
+                        "no .qpol artifacts in {}", dir.display());
+        let mut reg = PolicyRegistry::new();
+        for p in paths {
+            reg.insert(PolicyArtifact::load(&p)?)
+                .with_context(|| format!("registering {}", p.display()))?;
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&PolicyArtifact> {
+        self.entries.get(id)
+    }
+
+    pub fn ids(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &PolicyArtifact)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Consume the registry, yielding the owned artifacts (lets serving
+    /// move each policy into its inference core instead of cloning —
+    /// the weights then live exactly once per core).
+    pub fn into_entries(self) -> BTreeMap<String, PolicyArtifact> {
+        self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resolve the serving default: an explicit preference must exist;
+    /// otherwise the first id in sorted order.
+    pub fn default_id(&self, preferred: Option<&str>) -> Result<String> {
+        match preferred {
+            Some(id) => {
+                anyhow::ensure!(self.entries.contains_key(id),
+                                "default policy `{id}` not in registry \
+                                 (have: {})", self.ids().join(", "));
+                Ok(id.to_string())
+            }
+            None => self
+                .entries
+                .keys()
+                .next()
+                .cloned()
+                .context("registry is empty"),
+        }
+    }
+
+    /// Instantiate an integer inference backend for one policy.
+    pub fn backend(&self, id: &str) -> Option<Box<dyn PolicyBackend>> {
+        self.entries
+            .get(id)
+            .map(|a| Box::new(IntEngine::new(a.policy.clone()))
+                as Box<dyn PolicyBackend>)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    fn art(id: &str, seed: u64) -> PolicyArtifact {
+        PolicyArtifact::new(id, testkit::toy_policy(seed, 4, 8, 2,
+                                                    BitCfg::new(4, 3, 8)))
+    }
+
+    #[test]
+    fn insert_get_and_default() {
+        let mut reg = PolicyRegistry::new();
+        reg.insert(art("b", 1)).unwrap();
+        reg.insert(art("a", 2)).unwrap();
+        assert_eq!(reg.ids(), vec!["a", "b"]);
+        assert_eq!(reg.default_id(None).unwrap(), "a");
+        assert_eq!(reg.default_id(Some("b")).unwrap(), "b");
+        assert!(reg.default_id(Some("zzz")).is_err());
+        assert!(reg.get("a").is_some());
+        assert!(reg.backend("a").is_some());
+        assert!(reg.backend("zzz").is_none());
+    }
+
+    #[test]
+    fn duplicate_empty_and_overlong_ids_rejected() {
+        let mut reg = PolicyRegistry::new();
+        reg.insert(art("a", 1)).unwrap();
+        assert!(reg.insert(art("a", 2)).is_err());
+        assert!(reg.insert(art("", 3)).is_err());
+        // the v2 wire id_len is u8: longer ids would be unaddressable
+        let long = "x".repeat(256);
+        assert!(reg.insert(art(&long, 4)).is_err());
+        assert!(reg.insert(art(&"y".repeat(255), 5)).is_ok());
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn mismatched_normalizer_dim_rejected() {
+        use crate::util::stats::ObsNormalizer;
+        // policy has obs_dim 4; a 3-dim normalizer would panic the
+        // inference core at request time — must be an insert error
+        let mut norm = ObsNormalizer::new(3, true);
+        norm.observe(&[1.0, 2.0, 3.0]);
+        norm.observe(&[2.0, 3.0, 4.0]);
+        let bad = art("m", 9).with_normalizer(&norm);
+        let mut reg = PolicyRegistry::new();
+        let err = reg.insert(bad).unwrap_err();
+        assert!(err.to_string().contains("normalizer dim"), "{err}");
+    }
+
+    #[test]
+    fn load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join("qcontrol_registry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        art("p1", 1).save(dir.join("p1.qpol")).unwrap();
+        art("p2", 2).save(dir.join("p2.qpol")).unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let reg = PolicyRegistry::load_dir(&dir).unwrap();
+        assert_eq!(reg.ids(), vec!["p1", "p2"]);
+
+        // a corrupt artifact fails the whole load, loudly
+        std::fs::write(dir.join("bad.qpol"), b"not a qpol").unwrap();
+        assert!(PolicyRegistry::load_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_dir_empty_is_error() {
+        let dir = std::env::temp_dir().join("qcontrol_registry_empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(PolicyRegistry::load_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -14,6 +14,11 @@
 //! function* so the threshold path equals the arithmetic rescale path on
 //! every integer accumulator value — making "thresholds ≡ requantization"
 //! a checked invariant rather than an assumption.
+//!
+//! Persistence: [`IntPolicy::save`]/[`IntPolicy::load`] (implemented in
+//! [`crate::policy::artifact`]) round-trip the policy through the
+//! versioned, checksummed `.qpol` binary format bit-identically; see the
+//! `policy` module for the deployable-artifact and registry layer.
 
 use super::{absmax_scale, quantize, BitCfg, QRange};
 use super::fakequant::PolicyTensors;

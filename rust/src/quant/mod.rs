@@ -66,7 +66,7 @@ pub fn absmax_scale(w: &[f32]) -> f32 {
 }
 
 /// Bitwidth configuration of a deployed policy (paper notation).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BitCfg {
     pub b_in: u32,
     pub b_core: u32,
@@ -74,12 +74,65 @@ pub struct BitCfg {
 }
 
 impl BitCfg {
+    /// I/O widths [`QRange::new`] accepts; anything outside trips its
+    /// assert deep inside export, so user-facing paths must
+    /// [`BitCfg::validate`] first.
+    pub const BITS_RANGE: std::ops::RangeInclusive<u32> = 1..=16;
+    /// Core (weight) widths: lattice weights are stored as `i8` by the
+    /// integer exporter, so b_core beyond 8 would silently wrap in
+    /// release builds — reject it at the validation boundary instead.
+    pub const CORE_RANGE: std::ops::RangeInclusive<u32> = 1..=8;
+
     pub fn new(b_in: u32, b_core: u32, b_out: u32) -> BitCfg {
         BitCfg { b_in, b_core, b_out }
     }
 
     pub fn uniform(b: u32) -> BitCfg {
         BitCfg::new(b, b, b)
+    }
+
+    /// Every width must be representable on its storage type: I/O
+    /// lattices in [`BitCfg::BITS_RANGE`], the weight/core lattice in
+    /// [`BitCfg::CORE_RANGE`] (`i8` storage). Call this at
+    /// parse/construction boundaries so bad configs surface as errors
+    /// instead of asserts (or, worse, release-mode `as i8` wraparound)
+    /// inside the export pipeline.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, b) in [("b_in", self.b_in), ("b_out", self.b_out)] {
+            anyhow::ensure!(Self::BITS_RANGE.contains(&b),
+                            "{name}={b} out of range (expected {}..={} bits)",
+                            Self::BITS_RANGE.start(), Self::BITS_RANGE.end());
+        }
+        anyhow::ensure!(Self::CORE_RANGE.contains(&self.b_core),
+                        "b_core={} out of range (expected {}..={} bits — \
+                         lattice weights are stored as i8)", self.b_core,
+                        Self::CORE_RANGE.start(), Self::CORE_RANGE.end());
+        Ok(())
+    }
+
+    /// Parse the canonical `"b_in,b_core,b_out"` form (the inverse of
+    /// [`std::fmt::Display`]), validated.
+    pub fn parse(s: &str) -> anyhow::Result<BitCfg> {
+        let parts: Vec<&str> = s.split(',').map(|t| t.trim()).collect();
+        anyhow::ensure!(parts.len() == 3,
+                        "bit config `{s}`: expected b_in,b_core,b_out");
+        let mut v = [0u32; 3];
+        for (slot, part) in v.iter_mut().zip(&parts) {
+            *slot = part
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bit config `{s}`: {e}"))?;
+        }
+        let bits = BitCfg::new(v[0], v[1], v[2]);
+        bits.validate()?;
+        Ok(bits)
+    }
+}
+
+/// Canonical `"4,3,8"` form, used in trail labels, synth reports, and CLI
+/// output (and parsed back by [`BitCfg::parse`]).
+impl std::fmt::Display for BitCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{},{},{}", self.b_in, self.b_core, self.b_out)
     }
 }
 
@@ -133,5 +186,27 @@ mod tests {
     #[test]
     fn absmax() {
         assert!((absmax_scale(&[1.0, -3.5, 2.0]) - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bitcfg_display_parse_roundtrip() {
+        let b = BitCfg::new(4, 3, 8);
+        assert_eq!(b.to_string(), "4,3,8");
+        assert_eq!(BitCfg::parse("4,3,8").unwrap(), b);
+        assert_eq!(BitCfg::parse(" 4 , 3 , 8 ").unwrap(), b);
+    }
+
+    #[test]
+    fn bitcfg_validate_rejects_out_of_range() {
+        assert!(BitCfg::new(0, 3, 8).validate().is_err());
+        assert!(BitCfg::new(4, 17, 8).validate().is_err());
+        // b_core 9..=16 would wrap the i8 weight export in release mode
+        assert!(BitCfg::new(8, 12, 8).validate().is_err());
+        assert!(BitCfg::parse("8,12,8").is_err());
+        assert!(BitCfg::new(16, 8, 16).validate().is_ok());
+        assert!(BitCfg::new(4, 3, 8).validate().is_ok());
+        assert!(BitCfg::parse("0,3,8").is_err());
+        assert!(BitCfg::parse("4,3").is_err());
+        assert!(BitCfg::parse("a,b,c").is_err());
     }
 }

@@ -1,21 +1,30 @@
-//! Deterministic policy evaluation: rollouts, input-noise injection
-//! (Fig. 3), and three interchangeable policy backends whose agreement is
-//! itself a validation of the deployment chain:
+//! Deterministic policy evaluation: rollouts with input-noise injection
+//! (Fig. 3), driven through the unified [`PolicyBackend`] trait.
 //!
-//! * `Pjrt`      — the AOT `*_fwd_*` artifact (L2 graph incl. the Pallas
-//!                 kernel path),
-//! * `FakeQuant` — the pure-rust fake-quant mirror (`quant::fakequant`),
-//! * `Integer`   — the integer-only engine (`intinfer`), i.e. exactly what
-//!                 the FPGA executes.
+//! The interchangeable execution paths — whose agreement is itself a
+//! validation of the deployment chain — are resolved *once* into a
+//! `Box<dyn PolicyBackend>` before the rollout loop:
+//!
+//! * `pjrt`      — the AOT `*_fwd_*` artifact (L2 graph incl. the Pallas
+//!                 kernel path), wrapped in [`PjrtBackend`],
+//! * `fakequant` — the pure-rust fake-quant mirror
+//!                 ([`crate::policy::FakeQuantBackend`]),
+//! * `fp32`      — the plain FP32 reference
+//!                 ([`crate::policy::Fp32Backend`]),
+//! * `int`       — the integer-only engine (`intinfer`), i.e. exactly
+//!                 what the FPGA executes.
 
 use anyhow::Result;
 
 use super::{fwd_hyper, policy::extract_tensors, Algo};
 use crate::envs;
 use crate::intinfer::IntEngine;
+use crate::policy::{FakeQuantBackend, Fp32Backend, PolicyBackend,
+                    PolicyDescriptor};
 use crate::quant::export::IntPolicy;
-use crate::quant::{fakequant, BitCfg};
-use crate::runtime::Runtime;
+use crate::quant::fakequant::PolicyTensors;
+use crate::quant::BitCfg;
+use crate::runtime::{Exe, Runtime};
 use crate::util::rng::Rng;
 use crate::util::stats::{self, ObsNormalizer};
 
@@ -23,6 +32,7 @@ use crate::util::stats::{self, ObsNormalizer};
 pub enum EvalBackend {
     Pjrt,
     FakeQuant,
+    Fp32,
     Integer,
 }
 
@@ -31,8 +41,10 @@ impl EvalBackend {
         Ok(match s {
             "pjrt" => EvalBackend::Pjrt,
             "fakequant" => EvalBackend::FakeQuant,
+            "fp32" => EvalBackend::Fp32,
             "integer" | "int" => EvalBackend::Integer,
-            _ => anyhow::bail!("unknown backend `{s}` (pjrt|fakequant|int)"),
+            _ => anyhow::bail!(
+                "unknown backend `{s}` (pjrt|fakequant|fp32|int)"),
         })
     }
 }
@@ -52,6 +64,41 @@ pub struct EvalOpts {
     pub backend: EvalBackend,
 }
 
+/// Resolve the requested execution path into a trait object over the
+/// checkpoint's tensors. `flat` must outlive the backend (the PJRT path
+/// borrows it as a graph input).
+pub fn make_backend<'a>(rt: &Runtime, opts: &EvalOpts, flat: &'a [f32],
+                        tensors: &PolicyTensors) -> Result<Box<dyn PolicyBackend + 'a>> {
+    Ok(match opts.backend {
+        EvalBackend::Pjrt => {
+            let exe = rt.exe_for(opts.algo.name(), "fwd", &opts.env,
+                                 opts.hidden, Some(1))?;
+            let hyper = fwd_hyper(rt, opts.bits, opts.quant_on);
+            Box::new(PjrtBackend {
+                exe,
+                flat,
+                hyper,
+                obs_dim: tensors.obs_dim,
+                act_dim: tensors.act_dim,
+                hidden: tensors.hidden,
+            })
+        }
+        // the fake-quant mirror with the quant gate off *is* FP32
+        EvalBackend::FakeQuant if opts.quant_on => {
+            Box::new(FakeQuantBackend::new(tensors, opts.bits))
+        }
+        EvalBackend::FakeQuant | EvalBackend::Fp32 => {
+            Box::new(Fp32Backend::new(tensors))
+        }
+        EvalBackend::Integer => {
+            anyhow::ensure!(opts.quant_on,
+                            "integer backend requires a quantized policy");
+            Box::new(IntEngine::new(IntPolicy::from_tensors(tensors,
+                                                            opts.bits)))
+        }
+    })
+}
+
 /// Roll out the deterministic policy; returns (mean, std) of episode
 /// returns.
 pub fn evaluate(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
@@ -67,13 +114,6 @@ pub fn evaluate_returns(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
     let (obs_dim, act_dim) = (env.obs_dim(), env.act_dim());
     let mut rng = Rng::new(opts.seed);
 
-    // backend setup
-    let exe_fwd = match opts.backend {
-        EvalBackend::Pjrt => Some(rt.exe_for(opts.algo.name(), "fwd",
-                                             &opts.env, opts.hidden,
-                                             Some(1))?),
-        _ => None,
-    };
     let spec = rt
         .manifest
         .specs
@@ -81,16 +121,7 @@ pub fn evaluate_returns(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
         .ok_or_else(|| anyhow::anyhow!("no spec for eval config"))?;
     let tensors = extract_tensors(spec, flat, obs_dim, opts.hidden,
                                   act_dim)?;
-    let mut int_engine = match opts.backend {
-        EvalBackend::Integer => {
-            anyhow::ensure!(opts.quant_on,
-                            "integer backend requires a quantized policy");
-            Some(IntEngine::new(IntPolicy::from_tensors(&tensors,
-                                                        opts.bits)))
-        }
-        _ => None,
-    };
-    let hyper = fwd_hyper(rt, opts.bits, opts.quant_on);
+    let mut backend = make_backend(rt, opts, flat, &tensors)?;
 
     let mut returns = Vec::with_capacity(opts.episodes);
     let mut action = vec![0.0f32; act_dim];
@@ -105,26 +136,7 @@ pub fn evaluate_returns(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
                     *v += (rng.normal() * opts.noise_std) as f32;
                 }
             }
-            match opts.backend {
-                EvalBackend::Pjrt => {
-                    let out = exe_fwd.as_ref().unwrap().run_f32(&[
-                        flat, &x, &hyper,
-                    ])?;
-                    action.copy_from_slice(&out[0]);
-                }
-                EvalBackend::FakeQuant => {
-                    if opts.quant_on {
-                        let a = fakequant::policy_forward(&tensors, &x, 1,
-                                                          opts.bits);
-                        action.copy_from_slice(&a);
-                    } else {
-                        fp32_forward(&tensors, &x, &mut action);
-                    }
-                }
-                EvalBackend::Integer => {
-                    int_engine.as_mut().unwrap().infer(&x, &mut action);
-                }
-            }
+            backend.infer(&x, &mut action)?;
             let out = env.step(&action);
             ep += out.reward;
             obs = out.obs;
@@ -137,25 +149,55 @@ pub fn evaluate_returns(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
     Ok(returns)
 }
 
-/// Plain FP32 forward (quant gate off) for the FakeQuant backend.
-fn fp32_forward(p: &fakequant::PolicyTensors, x: &[f32], out: &mut [f32]) {
-    let matvec = |w: &[f32], b: &[f32], x: &[f32], dout: usize,
-                  relu: bool| -> Vec<f32> {
-        let din = x.len();
-        (0..dout)
-            .map(|j| {
-                let mut acc = b[j];
-                for k in 0..din {
-                    acc += w[j * din + k] * x[k];
-                }
-                if relu { acc.max(0.0) } else { acc }
-            })
-            .collect()
-    };
-    let h1 = matvec(p.fc1_w, p.fc1_b, x, p.hidden, true);
-    let h2 = matvec(p.fc2_w, p.fc2_b, &h1, p.hidden, true);
-    let pre = matvec(p.mean_w, p.mean_b, &h2, p.act_dim, false);
-    for (o, v) in out.iter_mut().zip(pre) {
-        *o = v.tanh();
+/// The AOT-compiled forward graph behind the unified trait: runs the
+/// batch-1 `*_fwd_*` executable row by row.
+pub struct PjrtBackend<'a> {
+    exe: std::sync::Arc<Exe>,
+    flat: &'a [f32],
+    hyper: Vec<f32>,
+    obs_dim: usize,
+    act_dim: usize,
+    hidden: usize,
+}
+
+impl PolicyBackend for PjrtBackend<'_> {
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> Result<()> {
+        crate::policy::check_block(obs, actions_out, self.obs_dim,
+                                   self.act_dim)?;
+        for (x, out) in obs
+            .chunks_exact(self.obs_dim)
+            .zip(actions_out.chunks_exact_mut(self.act_dim))
+        {
+            let res = self.exe.run_f32(&[self.flat, x, &self.hyper])?;
+            anyhow::ensure!(res[0].len() == self.act_dim,
+                            "fwd graph returned {} values, expected {}",
+                            res[0].len(), self.act_dim);
+            out.copy_from_slice(&res[0]);
+        }
+        Ok(())
+    }
+
+    fn macs(&self) -> u64 {
+        crate::policy::mlp_macs(self.obs_dim, self.hidden, self.act_dim)
+    }
+
+    fn descriptor(&self) -> PolicyDescriptor {
+        PolicyDescriptor {
+            id: self.exe.meta.name.clone(),
+            kind: "pjrt",
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+            hidden: self.hidden,
+            bits: None,
+        }
     }
 }

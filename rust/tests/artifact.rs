@@ -1,0 +1,172 @@
+//! Integration tests for the versioned `.qpol` policy artifact:
+//! `save → load → infer_batch` must be *bit-identical* to the in-memory
+//! policy across the `BitCfg` matrix (property-tested), and corrupted
+//! files — bad magic, wrong version, truncations at every byte, flipped
+//! bytes, trailing garbage — must error, never panic.
+
+use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::BitCfg;
+use qcontrol::util::prop;
+use qcontrol::util::stats::ObsNormalizer;
+use qcontrol::util::testkit;
+
+const BIT_MATRIX: [BitCfg; 3] = [
+    BitCfg { b_in: 3, b_core: 2, b_out: 4 },
+    BitCfg { b_in: 4, b_core: 3, b_out: 8 },
+    BitCfg { b_in: 8, b_core: 8, b_out: 8 },
+];
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("qcontrol_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn save_load_infer_batch_bit_identical_across_bitcfg_matrix() {
+    // the acceptance property: a policy that went through the disk format
+    // is indistinguishable from the in-memory one, for every BitCfg and
+    // random dims/batches
+    let dir = tmp_dir("artifact_prop");
+    let mut case = 0u64;
+    prop::check("qpol-roundtrip-bit-identical", 24, 2024, |g| {
+        let bits = BIT_MATRIX[g.usize_in(0, BIT_MATRIX.len() - 1)];
+        let obs = g.usize_in(1, 12);
+        let hidden = g.usize_in(2, 24);
+        let act = g.usize_in(1, 6);
+        let seed = g.rng().next_u64();
+        let policy = testkit::toy_policy(seed, obs, hidden, act, bits);
+
+        case += 1;
+        let path = dir.join(format!("p{case}.qpol"));
+        policy.save(&path).map_err(|e| format!("save: {e}"))?;
+        let loaded = IntPolicy::load(&path)
+            .map_err(|e| format!("load: {e}"))?;
+
+        let mut orig = IntEngine::new(policy);
+        let mut back = IntEngine::new(loaded);
+        for &batch in &[1usize, 3, 7] {
+            let block = g.vec_normal(batch * obs, 1.5);
+            let a = orig.infer_batch_vec(&block);
+            let b = back.infer_batch_vec(&block);
+            // bit-identical, not approximately equal
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            if ab != bb {
+                return Err(format!(
+                    "bits={bits} dims={obs}x{hidden}x{act} batch={batch}: \
+                     {a:?} != {b:?}"));
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn normalizer_stats_survive_the_roundtrip() {
+    let policy = testkit::toy_policy(3, 6, 16, 2, BitCfg::new(4, 3, 8));
+    let mut norm = ObsNormalizer::new(6, true);
+    for i in 0..500 {
+        let o: Vec<f32> =
+            (0..6).map(|d| ((i * 13 + d * 5) as f32 * 0.03).sin() * 4.0)
+                  .collect();
+        norm.observe(&o);
+    }
+    let dir = tmp_dir("artifact_norm");
+    let path = dir.join("n.qpol");
+    PolicyArtifact::new("n", policy)
+        .with_normalizer(&norm)
+        .save(&path)
+        .unwrap();
+    let back = PolicyArtifact::load(&path).unwrap();
+    let loaded_norm = back.normalizer();
+    assert!(loaded_norm.enabled && loaded_norm.frozen);
+    let mut a = vec![1.0f32, -0.5, 2.0, 0.0, 3.0, -1.0];
+    let mut b = a.clone();
+    norm.normalize(&mut a);
+    loaded_norm.normalize(&mut b);
+    // bit-exact, not approximately equal: the reconstruction must not
+    // perturb the deployed quantization inputs by even 1 ulp
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_files_error_never_panic() {
+    let policy = testkit::toy_policy(11, 5, 12, 3, BitCfg::new(4, 3, 8));
+    let good = PolicyArtifact::new("c", policy).to_bytes().unwrap();
+    assert!(PolicyArtifact::from_bytes(&good).is_ok());
+
+    // bad magic
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    let err = PolicyArtifact::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+
+    // wrong (future) version
+    let mut bad = good.clone();
+    bad[4] = 99;
+    let err = PolicyArtifact::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+
+    // truncation at *every* prefix length: always Err, never panic
+    for n in 0..good.len() {
+        assert!(PolicyArtifact::from_bytes(&good[..n]).is_err(),
+                "prefix of {n}/{} bytes parsed successfully", good.len());
+    }
+
+    // trailing garbage after the END section
+    let mut bad = good.clone();
+    bad.extend_from_slice(b"junk");
+    assert!(PolicyArtifact::from_bytes(&bad).is_err());
+
+    // a flipped byte anywhere in a section body trips the checksum (or a
+    // structural check — either way: an error); sample a spread of
+    // offsets past the header
+    let step = (good.len() / 97).max(1);
+    for i in (8..good.len()).step_by(step) {
+        let mut bad = good.clone();
+        bad[i] ^= 0x40;
+        assert!(PolicyArtifact::from_bytes(&bad).is_err(),
+                "flip at byte {i} parsed successfully");
+    }
+}
+
+#[test]
+fn truncated_layer_section_is_an_error() {
+    // shrink one LAYER section's payload but keep the declared length:
+    // the reader must report truncation, not panic or misparse
+    let policy = testkit::toy_policy(2, 4, 8, 2, BitCfg::new(3, 2, 4));
+    let good = PolicyArtifact::new("t", policy).to_bytes().unwrap();
+    // chop 64 bytes out of the middle (inside some layer's weights)
+    let mid = good.len() / 2;
+    let mut bad = good[..mid].to_vec();
+    bad.extend_from_slice(&good[mid + 64..]);
+    assert!(PolicyArtifact::from_bytes(&bad).is_err());
+}
+
+#[test]
+fn registry_loads_saved_artifacts_by_id() {
+    let dir = tmp_dir("artifact_registry");
+    for (id, seed, bits) in [("walker", 1u64, BitCfg::new(4, 3, 8)),
+                             ("hopper", 2, BitCfg::new(3, 2, 4))] {
+        PolicyArtifact::new(id, testkit::toy_policy(seed, 5, 8, 2, bits))
+            .save(dir.join(format!("{id}.qpol")))
+            .unwrap();
+    }
+    let reg = PolicyRegistry::load_dir(&dir).unwrap();
+    assert_eq!(reg.ids(), vec!["hopper", "walker"]);
+    assert_eq!(reg.get("walker").unwrap().policy.bits,
+               BitCfg::new(4, 3, 8));
+    let mut backend = reg.backend("hopper").unwrap();
+    assert_eq!(backend.obs_dim(), 5);
+    let acts = backend.infer_vec(&[0.1, -0.2, 0.3, 0.0, 1.0]).unwrap();
+    assert_eq!(acts.len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

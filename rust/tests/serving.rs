@@ -1,16 +1,20 @@
 //! Integration tests for the concurrent serving subsystem: multi-client
 //! correctness (responses must equal `IntEngine::infer_vec` bit-for-bit),
-//! the two-client starvation regression, and the bounded-shutdown
-//! contract with an idle-but-connected client.
+//! the two-client starvation regression, the bounded-shutdown contract
+//! with an idle-but-connected client, and the registry path — multiple
+//! policies served from one process, routed by id over the v2 protocol,
+//! with header-less v1 clients falling back to the default policy.
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use qcontrol::coordinator::serving::{serve, ActionClient, ServerConfig,
+use qcontrol::coordinator::serving::{serve, serve_registry, ActionClient,
+                                     RoutedClient, ServerConfig,
                                      ServerStats};
 use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
 use qcontrol::util::stats::ObsNormalizer;
@@ -162,6 +166,144 @@ fn shutdown_mid_request_is_bounded_and_clean() {
     assert_eq!(stats.requests, 0, "partial frame must not be served");
     assert_eq!(stats.io_errors, 0,
                "stop during a partial frame is not an I/O error");
+}
+
+// ---- registry path: multi-policy routed serving ------------------------
+
+/// Two policies with *different shapes* from one process: requests routed
+/// by id must each be bit-exact against their own policy's engine. The
+/// differing dims prove actual routing — a misrouted request could not
+/// even produce the right output length.
+struct RegistryHarness {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<ServerStats>,
+    pol_a: IntPolicy, // obs 5 act 3 (the default)
+    pol_b: IntPolicy, // obs 4 act 2
+}
+
+fn start_registry_server(cfg: ServerConfig) -> RegistryHarness {
+    let pol_a = testkit::toy_policy(42, OBS, 16, ACT, BitCfg::new(4, 3, 8));
+    let pol_b = testkit::toy_policy(7, 4, 12, 2, BitCfg::new(3, 2, 4));
+    let mut reg = PolicyRegistry::new();
+    reg.insert(PolicyArtifact::new("alpha", pol_a.clone())).unwrap();
+    reg.insert(PolicyArtifact::new("beta", pol_b.clone())).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        serve_registry(listener, reg, stop2, cfg).unwrap()
+    });
+    RegistryHarness { addr, stop, handle, pol_a, pol_b }
+}
+
+#[test]
+fn two_policies_routed_by_id_from_one_process() {
+    let h = start_registry_server(ServerConfig::default());
+    let (addr_a, addr_b) = (h.addr.clone(), h.addr.clone());
+    let (pa, pb) = (h.pol_a.clone(), h.pol_b.clone());
+    let ta = std::thread::spawn(move || {
+        let mut check = IntEngine::new(pa);
+        let mut client = RoutedClient::connect(&addr_a).unwrap();
+        for s in 0..40 {
+            let obs = client_obs(1, s);
+            let got = client.act("alpha", &obs).unwrap();
+            assert_eq!(got, check.infer_vec(&obs), "alpha step {s}");
+        }
+    });
+    let tb = std::thread::spawn(move || {
+        let mut check = IntEngine::new(pb);
+        let mut client = RoutedClient::connect(&addr_b).unwrap();
+        for s in 0..40 {
+            let obs: Vec<f32> = (0..4)
+                .map(|d| ((s * 11 + d * 3) as f32 * 0.19).cos() * 1.5)
+                .collect();
+            let got = client.act("beta", &obs).unwrap();
+            assert_eq!(got, check.infer_vec(&obs), "beta step {s}");
+        }
+    });
+    ta.join().unwrap();
+    tb.join().unwrap();
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 80);
+    assert_eq!(stats.policies, 2);
+    assert_eq!(stats.io_errors, 0);
+}
+
+#[test]
+fn v1_client_reaches_default_policy_on_v2_server() {
+    // backward compat: a header-less v1 client against the multi-policy
+    // server must get the configured default policy's actions, bit-exact
+    let cfg = ServerConfig {
+        default_policy: Some("alpha".into()),
+        ..ServerConfig::default()
+    };
+    let h = start_registry_server(cfg);
+    let mut check = IntEngine::new(h.pol_a.clone());
+    let mut v1 = ActionClient::connect(&h.addr, OBS, ACT).unwrap();
+    for s in 0..30 {
+        let obs = client_obs(3, s);
+        assert_eq!(v1.act(&obs).unwrap(), check.infer_vec(&obs),
+                   "v1 step {s}");
+    }
+    // and a v2 client with an empty id lands on the same default
+    let mut v2 = RoutedClient::connect(&h.addr).unwrap();
+    let obs = client_obs(4, 0);
+    assert_eq!(v2.act("", &obs).unwrap(), check.infer_vec(&obs));
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 31);
+    assert_eq!(stats.io_errors, 0);
+}
+
+#[test]
+fn routing_errors_are_replies_not_disconnects() {
+    let h = start_registry_server(ServerConfig::default());
+    let mut client = RoutedClient::connect(&h.addr).unwrap();
+    // unknown id: an error reply naming the id, connection stays usable
+    let err = client.act("gamma", &client_obs(0, 0)).unwrap_err();
+    assert!(err.to_string().contains("gamma"), "{err}");
+    // wrong obs count for a known policy: error reply, still usable
+    let err = client.act("beta", &client_obs(0, 0)).unwrap_err();
+    assert!(err.to_string().contains("beta"), "{err}");
+    // the same connection then serves a correct request
+    let mut check = IntEngine::new(h.pol_a.clone());
+    let obs = client_obs(0, 1);
+    assert_eq!(client.act("alpha", &obs).unwrap(), check.infer_vec(&obs));
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 1, "rejected requests must not be served");
+    assert_eq!(stats.io_errors, 0,
+               "routing errors are protocol replies, not I/O errors");
+}
+
+#[test]
+fn degenerate_configs_are_rejected_up_front() {
+    let mk = || {
+        let mut reg = PolicyRegistry::new();
+        reg.insert(PolicyArtifact::new("p", toy_policy(1))).unwrap();
+        reg
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    for cfg in [
+        ServerConfig { max_batch: 0, ..ServerConfig::default() },
+        ServerConfig { max_connections: 0, ..ServerConfig::default() },
+    ] {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = serve_registry(listener, mk(), stop.clone(), cfg)
+            .expect_err("zero-sized limits must be rejected");
+        assert!(err.to_string().contains(">= 1"), "{err}");
+    }
+    // an unknown default policy is rejected before any thread spawns
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let cfg = ServerConfig {
+        default_policy: Some("missing".into()),
+        ..ServerConfig::default()
+    };
+    let err = serve_registry(listener, mk(), stop, cfg).unwrap_err();
+    assert!(err.to_string().contains("missing"), "{err}");
 }
 
 #[test]
