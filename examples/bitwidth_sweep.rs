@@ -1,13 +1,15 @@
 //! Mini Fig. 1: bitwidth sensitivity on one environment, four quantization
-//! scopes, against the FP32 band.
+//! scopes, against the FP32 band — run in parallel on the trial executor
+//! and resumable from `results/runs/`.
 //!
 //! Run: `cargo run --release --example bitwidth_sweep -- \
-//!         [--env pendulum] [--bits 8,4,2] [--steps 1200]`
+//!         [--env pendulum] [--bits 8,4,2] [--steps 1200] [--jobs 4]`
 
 use anyhow::Result;
 
-use qcontrol::coordinator::sweep::{fp32_band, matches_fp32, run_config,
-                                   Scope, SweepProtocol};
+use qcontrol::coordinator::sweep::{run_sweep, sweep_run_name, Scope,
+                                   SweepProtocol};
+use qcontrol::experiment::{Executor, RlRunner, RunStore};
 use qcontrol::rl::Algo;
 use qcontrol::runtime::{default_artifact_dir, Runtime};
 use qcontrol::util::bench::Table;
@@ -16,31 +18,39 @@ use qcontrol::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let env = args.str("env", "pendulum");
-    let bits = args.usize_list("bits", &[8, 4, 2])?;
+    let bits: Vec<u32> = args
+        .usize_list("bits", &[8, 4, 2])?
+        .into_iter()
+        .map(|b| b as u32)
+        .collect();
     let rt = Runtime::load(default_artifact_dir())?;
-    let mut proto = SweepProtocol::from_env();
+    let mut proto = SweepProtocol::from_env()?;
     proto.steps = args.usize("steps", 1200)?;
     proto.learning_starts = (proto.steps / 5).max(200);
     proto.hidden = args.usize("hidden", 16)?;
+    let exec = Executor::from_flag_or_env(args.str_opt("jobs"))?;
 
-    println!("== Fig.1-style sweep on {env} ({}) ==", proto.describe());
-    let fp32 = fp32_band(&rt, Algo::Sac, &env, &proto, true)?;
-    println!("FP32 band: {:.1} ± {:.1}\n", fp32.mean, fp32.std);
+    println!("== Fig.1-style sweep on {env} ({}, {} jobs) ==",
+             proto.describe(), exec.jobs());
+    let store = RunStore::for_run(&sweep_run_name(
+        Algo::Sac, &env, &proto, &Scope::ALL, &bits))?;
+    let report = run_sweep(&RlRunner::new(&rt), Algo::Sac, &env, &proto,
+                           &Scope::ALL, &bits, &exec, Some(&store))?;
+    println!("FP32 band: {:.1} ± {:.1}\n", report.fp32.mean,
+             report.fp32.std);
 
     let mut table = Table::new(&["scope", "bits", "return", "in band"]);
-    for scope in Scope::ALL {
-        for &b in &bits {
-            let p = run_config(&rt, Algo::Sac, &env, &proto, proto.hidden,
-                               scope.bits(b as u32), true,
-                               &format!("{}{b}", scope.name()))?;
-            table.row(vec![
-                scope.name().into(),
-                b.to_string(),
-                format!("{:.1} ± {:.1}", p.mean, p.std),
-                if matches_fp32(&p, &fp32) { "yes" } else { "no" }.into(),
-            ]);
-        }
+    for row in &report.rows {
+        table.row(vec![
+            row.scope.name().into(),
+            row.width.to_string(),
+            format!("{:.1} ± {:.1}", row.point.mean, row.point.std),
+            if row.in_band { "yes" } else { "no" }.into(),
+        ]);
     }
     table.print();
+    let stats = exec.stats();
+    println!("\n{} trial(s) trained, {} resumed from {}", stats.executed,
+             stats.cached, store.dir().display());
     Ok(())
 }

@@ -3,10 +3,13 @@
 //! Every bench prints the corresponding paper table/figure structure under
 //! a *reduced protocol* (this is a single-core box; the paper's full
 //! protocol is 1M steps x 10 seeds). Scale up via:
-//!   QCONTROL_STEPS=25000 QCONTROL_SEEDS=3 cargo bench --bench fig1_bitwidth
+//!   QCONTROL_STEPS=25000 QCONTROL_SEEDS=3 QCONTROL_JOBS=8 \
+//!     cargo bench --bench fig1_bitwidth
 
 use qcontrol::coordinator::sweep::SweepProtocol;
+use qcontrol::experiment::{Executor, RunStore};
 use qcontrol::runtime::{default_artifact_dir, Runtime};
+use qcontrol::util::json::Json;
 
 /// Default training budget for bench runs (env var overridable).
 pub const BENCH_STEPS: usize = 250;
@@ -17,13 +20,25 @@ pub fn runtime() -> Runtime {
 }
 
 pub fn proto() -> SweepProtocol {
-    let mut p = SweepProtocol::from_env();
+    let mut p = SweepProtocol::from_env()
+        .expect("QCONTROL_STEPS / QCONTROL_SEEDS");
     if std::env::var("QCONTROL_STEPS").is_err() {
         p.steps = BENCH_STEPS;
         p.learning_starts = (p.steps / 4).max(100);
     }
     p.eval_episodes = 5;
     p
+}
+
+/// Parallel trial executor for training benches (QCONTROL_JOBS knob).
+pub fn executor() -> Executor {
+    Executor::from_env().expect("QCONTROL_JOBS")
+}
+
+/// Resumable run store for a bench: an interrupted bench re-run skips
+/// its finished trials.
+pub fn run_store(run_name: &str) -> RunStore {
+    RunStore::for_run(run_name).expect("open run store")
 }
 
 pub fn banner(what: &str, paper: &str, proto_desc: &str) {
@@ -34,6 +49,15 @@ pub fn banner(what: &str, paper: &str, proto_desc: &str) {
     println!();
 }
 
+/// Write a machine-readable `BENCH_<name>.json` next to the text table.
+pub fn write_bench_report(name: &str, report: &Json) {
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, report.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 /// Benches that train use pendulum by default (episodes are 200 steps, so
 /// tiny budgets still produce learning signal on this 1-core box); pass
 /// QCONTROL_ENV to regenerate the table for any paper env.
@@ -42,9 +66,12 @@ pub fn bench_env() -> String {
 }
 
 /// Hidden width used by training benches (pendulum-sized by default).
+/// Same rule as the other `QCONTROL_*` knobs: malformed values are loud.
 pub fn bench_hidden() -> usize {
-    std::env::var("QCONTROL_HIDDEN")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(16)
+    match std::env::var("QCONTROL_HIDDEN") {
+        Err(_) => 16,
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|e| panic!("QCONTROL_HIDDEN=`{s}`: {e}")),
+    }
 }

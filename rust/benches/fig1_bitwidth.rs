@@ -1,11 +1,15 @@
 //! Fig. 1: reward vs bitwidth for the four quantization scopes
 //! (all / input / output / core) against the FP32 band, SAC.
+//!
+//! Runs the whole (scope × bits × seed) grid as one parallel executor
+//! wave (QCONTROL_JOBS), resumes from `results/runs/` if interrupted,
+//! and emits the typed report as `BENCH_fig1.json`.
 
 #[path = "common.rs"]
 mod common;
 
-use qcontrol::coordinator::sweep::{fp32_band, matches_fp32, run_config,
-                                   Scope};
+use qcontrol::coordinator::sweep::{run_sweep, sweep_run_name, Scope};
+use qcontrol::experiment::RlRunner;
 use qcontrol::rl::Algo;
 use qcontrol::util::bench::Table;
 
@@ -21,22 +25,28 @@ fn main() {
     common::banner("Fig. 1 — reward vs bitwidth per quantization scope",
                    "Figure 1 (SAC rows)", &proto.describe());
 
-    let fp32 = fp32_band(&rt, Algo::Sac, &env, &proto, true).unwrap();
-    println!("{env} FP32 band: {:.1} ± {:.1}", fp32.mean, fp32.std);
+    let exec = common::executor();
+    let store = common::run_store(
+        &sweep_run_name(Algo::Sac, &env, &proto, &Scope::ALL, &bits));
+    let report = run_sweep(&RlRunner::new(&rt), Algo::Sac, &env, &proto,
+                           &Scope::ALL, &bits, &exec, Some(&store))
+        .unwrap();
+
+    println!("{env} FP32 band: {:.1} ± {:.1}", report.fp32.mean,
+             report.fp32.std);
     let mut t = Table::new(&["env", "scope", "bits", "return", "in band"]);
-    for scope in Scope::ALL {
-        for &b in &bits {
-            let p = run_config(&rt, Algo::Sac, &env, &proto, proto.hidden,
-                               scope.bits(b), true,
-                               &format!("{}{b}", scope.name()))
-                .unwrap();
-            t.row(vec![env.clone(), scope.name().into(), b.to_string(),
-                       format!("{:.1} ± {:.1}", p.mean, p.std),
-                       if matches_fp32(&p, &fp32) { "yes" } else { "no" }
-                           .into()]);
-        }
+    for row in &report.rows {
+        t.row(vec![env.clone(), row.scope.name().into(),
+                   row.width.to_string(),
+                   format!("{:.1} ± {:.1}", row.point.mean, row.point.std),
+                   if row.in_band { "yes" } else { "no" }.into()]);
     }
     t.print();
+    let stats = exec.stats();
+    println!("\n{} jobs: {} trial(s) trained, {} resumed from {}",
+             stats.jobs, stats.executed, stats.cached,
+             store.dir().display());
+    common::write_bench_report("fig1", &report.to_json());
     println!("\npaper shape: parity down to 3 bits in most scopes; the \
               input scope is the bottleneck at very low bits.");
 }

@@ -1,13 +1,17 @@
 //! Fig. 4 (appendix B): return vs hidden width under the minimal
-//! FP32-matching core precision.
+//! FP32-matching core precision. All widths (× seeds) run as one
+//! parallel executor wave; `BENCH_fig4.json` carries the typed points.
 
 #[path = "common.rs"]
 mod common;
 
-use qcontrol::coordinator::sweep::{fp32_band, matches_fp32, run_config};
+use qcontrol::coordinator::sweep::{fp32_spec, matches_fp32, run_points,
+                                   PointSpec};
+use qcontrol::experiment::{fingerprint, RlRunner};
 use qcontrol::quant::BitCfg;
 use qcontrol::rl::Algo;
 use qcontrol::util::bench::Table;
+use qcontrol::util::json::Json;
 
 fn main() {
     let rt = common::runtime();
@@ -21,18 +25,47 @@ fn main() {
     common::banner("Fig. 4 — return vs hidden width at minimal b_core",
                    "Appendix B Figure 4", &proto.describe());
 
-    let fp32 = fp32_band(&rt, Algo::Sac, &env, &proto, true).unwrap();
+    let mut specs = vec![fp32_spec(proto.hidden).with_normalize(true)];
+    for &h in &widths {
+        specs.push(PointSpec::new(format!("h{h}"), h,
+                                  BitCfg::new(8, b_core, 8), true));
+    }
+    let widths_str: Vec<String> =
+        widths.iter().map(|h| h.to_string()).collect();
+    let exec = common::executor();
+    let store = common::run_store(&format!(
+        "fig4-{env}-{}",
+        fingerprint(&[&proto.fingerprint(Algo::Sac, &env),
+                      &widths_str.join(",")])));
+    let mut points = run_points(&RlRunner::new(&rt), Algo::Sac, &env,
+                                &proto, &specs, &exec, Some(&store))
+        .unwrap()
+        .into_iter();
+    let fp32 = points.next().unwrap();
+
     println!("{env} FP32 band: {:.1} ± {:.1}", fp32.mean, fp32.std);
     let mut t = Table::new(&["h", "return", "in band"]);
-    for &h in &widths {
-        let p = run_config(&rt, Algo::Sac, &env, &proto, h,
-                           BitCfg::new(8, b_core, 8), true,
-                           &format!("h{h}")).unwrap();
+    let mut rows = Vec::new();
+    for (&h, p) in widths.iter().zip(points) {
+        let ok = matches_fp32(&p, &fp32);
         t.row(vec![h.to_string(), format!("{:.1} ± {:.1}", p.mean, p.std),
-                   if matches_fp32(&p, &fp32) { "yes" } else { "no" }
-                       .into()]);
+                   if ok { "yes" } else { "no" }.into()]);
+        rows.push(Json::obj(vec![
+            ("hidden", Json::num(h as f64)),
+            ("mean", Json::num(p.mean)),
+            ("std", Json::num(p.std)),
+            ("in_band", Json::Bool(ok)),
+        ]));
     }
     t.print();
+    common::write_bench_report("fig4", &Json::obj(vec![
+        ("env", Json::str(&env)),
+        ("b_core", Json::num(b_core as f64)),
+        ("protocol", Json::str(proto.describe())),
+        ("fp32_mean", Json::num(fp32.mean)),
+        ("fp32_std", Json::num(fp32.std)),
+        ("rows", Json::Arr(rows)),
+    ]));
     println!("\npaper shape: width can shrink substantially before \
               returns drop out of the FP32 band (env-dependent knee).");
 }

@@ -1,13 +1,17 @@
 //! Fig. 5 (appendix B): return vs input bitwidth under the selected
-//! (h, b_core) configuration.
+//! (h, b_core) configuration. All input widths (× seeds) run as one
+//! parallel executor wave; `BENCH_fig5.json` carries the typed points.
 
 #[path = "common.rs"]
 mod common;
 
-use qcontrol::coordinator::sweep::{fp32_band, matches_fp32, run_config};
+use qcontrol::coordinator::sweep::{fp32_spec, matches_fp32, run_points,
+                                   PointSpec};
+use qcontrol::experiment::{fingerprint, RlRunner};
 use qcontrol::quant::BitCfg;
 use qcontrol::rl::Algo;
 use qcontrol::util::bench::Table;
+use qcontrol::util::json::Json;
 
 fn main() {
     let rt = common::runtime();
@@ -22,19 +26,49 @@ fn main() {
     common::banner("Fig. 5 — return vs input bits at selected (h, b_core)",
                    "Appendix B Figure 5", &proto.describe());
 
-    let fp32 = fp32_band(&rt, Algo::Sac, &env, &proto, true).unwrap();
+    let mut specs = vec![fp32_spec(proto.hidden).with_normalize(true)];
+    for &b in &input_bits {
+        specs.push(PointSpec::new(format!("bin{b}"), hidden,
+                                  BitCfg::new(b, b_core, 8), true));
+    }
+    let bits_str: Vec<String> =
+        input_bits.iter().map(|b| b.to_string()).collect();
+    let exec = common::executor();
+    let store = common::run_store(&format!(
+        "fig5-{env}-{}",
+        fingerprint(&[&proto.fingerprint(Algo::Sac, &env),
+                      &hidden.to_string(), &bits_str.join(",")])));
+    let mut points = run_points(&RlRunner::new(&rt), Algo::Sac, &env,
+                                &proto, &specs, &exec, Some(&store))
+        .unwrap()
+        .into_iter();
+    let fp32 = points.next().unwrap();
+
     println!("{env} FP32 band: {:.1} ± {:.1}  (h={hidden}, core={b_core})",
              fp32.mean, fp32.std);
     let mut t = Table::new(&["b_in", "return", "in band"]);
-    for &b in &input_bits {
-        let p = run_config(&rt, Algo::Sac, &env, &proto, hidden,
-                           BitCfg::new(b, b_core, 8), true,
-                           &format!("bin{b}")).unwrap();
+    let mut rows = Vec::new();
+    for (&b, p) in input_bits.iter().zip(points) {
+        let ok = matches_fp32(&p, &fp32);
         t.row(vec![b.to_string(), format!("{:.1} ± {:.1}", p.mean, p.std),
-                   if matches_fp32(&p, &fp32) { "yes" } else { "no" }
-                       .into()]);
+                   if ok { "yes" } else { "no" }.into()]);
+        rows.push(Json::obj(vec![
+            ("b_in", Json::num(b as f64)),
+            ("mean", Json::num(p.mean)),
+            ("std", Json::num(p.std)),
+            ("in_band", Json::Bool(ok)),
+        ]));
     }
     t.print();
+    common::write_bench_report("fig5", &Json::obj(vec![
+        ("env", Json::str(&env)),
+        ("hidden", Json::num(hidden as f64)),
+        ("b_core", Json::num(b_core as f64)),
+        ("protocol", Json::str(proto.describe())),
+        ("fp32_mean", Json::num(fp32.mean)),
+        ("fp32_std", Json::num(fp32.std)),
+        ("rows", Json::Arr(rows)),
+    ]));
     println!("\npaper shape: attainable input precision shrinks once core \
               precision and width are already minimal (compare Fig. 1 \
               input sweep vs Table 1).");

@@ -1,15 +1,19 @@
 //! Table 1: staged model selection (b_core → h → b_in) under the
-//! FP32-parity criterion.
+//! FP32-parity criterion — each stage a parallel executor wave,
+//! resumable, with the typed report emitted as `BENCH_table1.json`.
 
 #[path = "common.rs"]
 mod common;
 
-use qcontrol::coordinator::select::{select_model, SelectProtocol};
+use qcontrol::coordinator::select::{select_model_on, select_run_name,
+                                    usable_widths, SelectProtocol};
+use qcontrol::experiment::RlRunner;
 use qcontrol::util::bench::Table;
 
 fn main() {
     let rt = common::runtime();
-    let mut proto = SelectProtocol::from_env();
+    let mut proto = SelectProtocol::from_env()
+        .expect("QCONTROL_STEPS / QCONTROL_SEEDS");
     proto.sweep = common::proto();
     proto.sweep.hidden = common::bench_hidden();
     // reduced stage grids for the bench box; env vars widen them
@@ -17,21 +21,31 @@ fn main() {
     proto.widths = vec![64, 16];
     proto.input_bits = vec![8, 4, 2];
     let env = common::bench_env();
+    proto.widths = usable_widths(&rt, &env, &proto.widths).unwrap();
 
     common::banner("Table 1 — staged selection (h, b_core, b_in)",
                    "Table 1", &proto.sweep.describe());
 
-    let out = select_model(&rt, &env, &proto).unwrap();
+    let exec = common::executor();
+    let store = common::run_store(&select_run_name(&env, &proto));
+    let out = select_model_on(&RlRunner::new(&rt), &env, &proto, &exec,
+                              Some(&store))
+        .unwrap();
     println!("FP32 band: {:.1} ± {:.1}", out.fp32.mean, out.fp32.std);
     println!("audit trail:");
-    for (stage, label, mean, std, ok) in &out.trail {
-        println!("  [{stage:>5}] {label:<10} {mean:>9.1} ± {std:<8.1} {}",
-                 if *ok { "match" } else { "below band" });
+    for o in &out.trail {
+        println!("  [{:>5}] {:<12} {:>9.1} ± {:<8.1} {}",
+                 o.stage.name(), o.label, o.point.mean, o.point.std,
+                 if o.matched { "match" } else { "below band" });
     }
     let mut t = Table::new(&["Environment", "h", "b_core", "b_in"]);
     t.row(vec![out.env.clone(), out.hidden.to_string(),
                out.bits.b_core.to_string(), out.bits.b_in.to_string()]);
     t.print();
+    let stats = exec.stats();
+    println!("\n{} jobs: {} trial(s) trained, {} resumed, {} deduped",
+             stats.jobs, stats.executed, stats.cached, stats.deduped);
+    common::write_bench_report("table1", &out.to_json());
     println!("\npaper shape: FP32 parity reached with 2-3 core bits; \
               tolerable h and b_in are environment-dependent (paper \
               Table 1: hopper h=16 b_core=2 b_in=6, etc.)");

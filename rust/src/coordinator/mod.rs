@@ -2,9 +2,17 @@
 //!
 //! * [`sweep`]  — multi-seed bitwidth/width sweeps over the four
 //!   quantization scopes of Fig. 1 (all / input / output / core), with the
-//!   FP32 baseline band.
+//!   FP32 baseline band. Built on the typed experiment API
+//!   ([`crate::experiment`]): one [`crate::experiment::ExperimentPlan`]
+//!   per sweep, run by the parallel executor, aggregated into a typed
+//!   [`sweep::SweepReport`].
 //! * [`select`] — the paper's §3.2 three-step staged model selection:
-//!   smallest FP32-matching b_core → smallest hidden width → smallest b_in.
+//!   smallest FP32-matching b_core → smallest hidden width → smallest b_in,
+//!   each stage one parallel trial wave, audited by typed
+//!   [`select::StageOutcome`]s in a [`select::SelectReport`].
+//! * [`pipeline`] — the one-shot learning-to-hardware chain: selection →
+//!   `.qpol` export → Artix-7 synthesis, emitting a single
+//!   `pipeline.json` report in a resumable run directory.
 //! * [`serving`] — the deployment serving subsystem: concurrent TCP
 //!   accepts over a bounded worker pool, a [`crate::policy::PolicyRegistry`]
 //!   of `.qpol` artifacts served by per-policy inference cores (requests
@@ -13,14 +21,19 @@
 //!   and centralized µs latency accounting.
 //! * [`server`] — back-compat facade over [`serving`] (old entry point).
 //! * [`store`]  — JSON results store, so every bench/experiment appends to
-//!   `results/*.json` reproducibly.
+//!   `results/*.json` reproducibly. Trial-granular, resumable state lives
+//!   in [`crate::experiment::RunStore`] under `results/runs/`.
 
+pub mod pipeline;
 pub mod select;
 pub mod server;
 pub mod serving;
 pub mod store;
 pub mod sweep;
 
-pub use select::{select_model, SelectOutcome, SelectProtocol};
+pub use pipeline::{run_pipeline, PipelineRun};
+pub use select::{select_model, select_model_on, SelectProtocol,
+                 SelectReport, Stage, StageOutcome};
 pub use serving::{ActionClient, RoutedClient, ServerConfig, ServerStats};
-pub use sweep::{fp32_band, run_config, Scope, SweepPoint, SweepProtocol};
+pub use sweep::{fp32_band, run_config, run_points, run_sweep, PointSpec,
+                Scope, SweepPoint, SweepProtocol, SweepReport};

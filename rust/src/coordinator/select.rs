@@ -1,18 +1,28 @@
-//! Staged model selection (paper §3.2, Table 1).
+//! Staged model selection (paper §3.2, Table 1), as parallel trial waves.
 //!
 //! Three stages under the FP32-parity criterion (mean within the FP32 band):
 //!   1. smallest b_core (weights + internal activations), I/O pinned at 8;
 //!   2. smallest hidden width h at that b_core;
 //!   3. smallest b_in at (b_core, h).
 //! b_out stays at 8 throughout (paper: negligible quality/area effect).
+//!
+//! Each stage expands its whole candidate grid into one executor wave
+//! (every candidate × every seed trains in parallel), then a pure
+//! decision function picks the stage winner from the complete wave — so
+//! `--jobs` changes wall-clock time, never the selected configuration.
+//! The audit trail is typed ([`StageOutcome`]) and covers every
+//! candidate the stage evaluated.
 
 use anyhow::Result;
 
-use super::sweep::{fp32_band, matches_fp32, run_config, SweepPoint,
-                   SweepProtocol};
+use super::sweep::{fp32_spec, matches_fp32, point_json, run_points,
+                   PointSpec, SweepPoint, SweepProtocol};
+use crate::experiment::{fingerprint, Executor, RlRunner, RunStore,
+                        TrialRunner};
 use crate::quant::BitCfg;
 use crate::rl::Algo;
 use crate::runtime::Runtime;
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct SelectProtocol {
@@ -23,106 +33,288 @@ pub struct SelectProtocol {
 }
 
 impl SelectProtocol {
-    pub fn from_env() -> SelectProtocol {
-        SelectProtocol {
-            sweep: SweepProtocol::from_env(),
+    pub fn from_env() -> Result<SelectProtocol> {
+        Ok(SelectProtocol {
+            sweep: SweepProtocol::from_env()?,
             core_bits: vec![8, 4, 3, 2],
             widths: vec![256, 128, 64, 32, 16],
             input_bits: vec![8, 6, 4, 3, 2],
+        })
+    }
+
+    /// Stable fingerprint of the full selection configuration (protocol
+    /// plus stage grids) — names the resumable run directory.
+    pub fn fingerprint(&self, env: &str) -> String {
+        let join_u32 = |v: &[u32]| -> String {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let widths: Vec<String> =
+            self.widths.iter().map(|x| x.to_string()).collect();
+        fingerprint(&[&self.sweep.fingerprint(Algo::Sac, env),
+                      &join_u32(&self.core_bits), &widths.join(","),
+                      &join_u32(&self.input_bits)])
+    }
+}
+
+/// Deterministic run-directory name for a selection configuration.
+pub fn select_run_name(env: &str, proto: &SelectProtocol) -> String {
+    format!("select-{env}-{}", proto.fingerprint(env))
+}
+
+/// Which selection stage a trail entry belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Core,
+    Width,
+    Input,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Core => "core",
+            Stage::Width => "width",
+            Stage::Input => "input",
         }
     }
 }
 
+/// One evaluated candidate in the selection audit trail.
 #[derive(Clone, Debug)]
-pub struct SelectOutcome {
+pub struct StageOutcome {
+    pub stage: Stage,
+    pub label: String,
+    pub hidden: usize,
+    pub bits: BitCfg,
+    pub point: SweepPoint,
+    pub matched: bool,
+}
+
+impl StageOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str(self.stage.name())),
+            ("label", Json::str(&self.label)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("bits", Json::str(self.bits.to_string())),
+            ("point", point_json(&self.point)),
+            ("matched", Json::Bool(self.matched)),
+        ])
+    }
+}
+
+/// Typed result of a staged selection (replaces the old
+/// `Vec<(String, String, f64, f64, bool)>` audit trail).
+#[derive(Clone, Debug)]
+pub struct SelectReport {
     pub env: String,
+    pub protocol: String,
+    pub jobs: usize,
+    /// selected configuration
     pub hidden: usize,
     pub bits: BitCfg,
     pub fp32: SweepPoint,
     pub selected: SweepPoint,
-    /// (stage, label, mean, std, matched) audit trail
-    pub trail: Vec<(String, String, f64, f64, bool)>,
+    pub trail: Vec<StageOutcome>,
+}
+
+impl SelectReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("env", Json::str(&self.env)),
+            ("protocol", Json::str(&self.protocol)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("bits", Json::str(self.bits.to_string())),
+            ("fp32", point_json(&self.fp32)),
+            ("selected", point_json(&self.selected)),
+            ("trail", Json::Arr(
+                self.trail.iter().map(|o| o.to_json()).collect())),
+        ])
+    }
+}
+
+/// Decision rule for the core-bit stage (coarse→fine swept list): keep
+/// tightening while parity holds, stop at the first break after a match
+/// — i.e. the last match of the *first* matching run.
+pub fn pick_descending(matched: &[bool]) -> Option<usize> {
+    let first = matched.iter().position(|&m| m)?;
+    let mut last = first;
+    for (i, &m) in matched.iter().enumerate().skip(first + 1) {
+        if m {
+            last = i;
+        } else {
+            break;
+        }
+    }
+    Some(last)
+}
+
+/// Decision rule for the width stage (historical semantics): the last
+/// matching candidate anywhere in the list.
+pub fn pick_last(matched: &[bool]) -> Option<usize> {
+    matched.iter().rposition(|&m| m)
+}
+
+/// Decision rule for the input stage (historical semantics): keep the
+/// last match while scanning, but a miss only ends the scan once a
+/// *non-default* (b_in ≠ 8) match is held — a dip right after the
+/// pinned-default b_in=8 match does not stop the search for a smaller
+/// width.
+pub fn pick_input(bits: &[u32], matched: &[bool]) -> Option<usize> {
+    let mut pick: Option<usize> = None;
+    for (i, &ok) in matched.iter().enumerate() {
+        if ok {
+            pick = Some(i);
+        } else if matches!(pick, Some(j) if bits[j] != 8) {
+            break;
+        }
+    }
+    pick
 }
 
 /// Run the staged selection for one environment with SAC (the paper uses
-/// SAC for selection since it dominates DDPG).
-pub fn select_model(rt: &Runtime, env: &str, proto: &SelectProtocol)
-                    -> Result<SelectOutcome> {
+/// SAC for selection since it dominates DDPG), on any runner/executor.
+///
+/// `proto.widths` must already be restricted to usable widths (see
+/// [`usable_widths`] for the manifest-backed filter); this function is
+/// deliberately runtime-agnostic so surrogate runners exercise the whole
+/// selection machinery without PJRT artifacts.
+pub fn select_model_on(runner: &dyn TrialRunner, env: &str,
+                       proto: &SelectProtocol, exec: &Executor,
+                       store: Option<&RunStore>) -> Result<SelectReport> {
     let algo = Algo::Sac;
     let sp = &proto.sweep;
-    let fp32 = fp32_band(rt, algo, env, sp, true)?;
-    let mut trail = Vec::new();
+    anyhow::ensure!(!proto.widths.is_empty(),
+                    "selection needs at least one candidate width");
+    anyhow::ensure!(!proto.core_bits.is_empty(),
+                    "selection needs at least one core-bit candidate");
+    let h0 = proto.widths[0];
+    let mut trail: Vec<StageOutcome> = Vec::new();
 
-    // honour the manifest: only widths that were AOT-compiled are usable
-    let widths: Vec<usize> = proto
+    // --- wave 1: FP32 band + every b_core candidate at h0 -----------------
+    // the band is always trained WITH input normalization (historical
+    // fp32_band(.., true)), even if the candidate protocol disables it
+    let mut specs = vec![fp32_spec(sp.hidden).with_normalize(true)];
+    for &b in &proto.core_bits {
+        let bits = BitCfg::new(8, b, 8);
+        specs.push(PointSpec::new(format!("b={bits}"), h0, bits, true));
+    }
+    let mut points = run_points(runner, algo, env, sp, &specs, exec,
+                                store)?
+        .into_iter();
+    let fp32 = points.next().expect("fp32 first");
+    let wave: Vec<SweepPoint> = points.collect();
+    let matched: Vec<bool> =
+        wave.iter().map(|p| matches_fp32(p, &fp32)).collect();
+    for ((&b, point), &ok) in
+        proto.core_bits.iter().zip(&wave).zip(&matched)
+    {
+        trail.push(StageOutcome {
+            stage: Stage::Core,
+            label: format!("b={}", BitCfg::new(8, b, 8)),
+            hidden: h0,
+            bits: BitCfg::new(8, b, 8),
+            point: point.clone(),
+            matched: ok,
+        });
+    }
+    let core_pick = pick_descending(&matched);
+    let b_core = core_pick.map_or(proto.core_bits[0],
+                                  |i| proto.core_bits[i]);
+    let mut best: Option<SweepPoint> = core_pick.map(|i| wave[i].clone());
+
+    // --- wave 2: every width at the chosen b_core -------------------------
+    let bits = BitCfg::new(8, b_core, 8);
+    let specs: Vec<PointSpec> = proto
         .widths
+        .iter()
+        .map(|&h| PointSpec::new(format!("h{h}-{bits}"), h, bits, true))
+        .collect();
+    let wave = run_points(runner, algo, env, sp, &specs, exec, store)?;
+    let matched: Vec<bool> =
+        wave.iter().map(|p| matches_fp32(p, &fp32)).collect();
+    for ((&h, point), &ok) in proto.widths.iter().zip(&wave).zip(&matched)
+    {
+        trail.push(StageOutcome {
+            stage: Stage::Width,
+            label: format!("h={h} b={bits}"),
+            hidden: h,
+            bits,
+            point: point.clone(),
+            matched: ok,
+        });
+    }
+    let width_pick = pick_last(&matched);
+    let hidden = width_pick.map_or(h0, |i| proto.widths[i]);
+    if let Some(i) = width_pick {
+        best = Some(wave[i].clone());
+    }
+
+    // --- wave 3: every b_in at (b_core, hidden) ---------------------------
+    let specs: Vec<PointSpec> = proto
+        .input_bits
+        .iter()
+        .map(|&b| {
+            let bits = BitCfg::new(b, b_core, 8);
+            PointSpec::new(format!("b={bits}"), hidden, bits, true)
+        })
+        .collect();
+    let wave = run_points(runner, algo, env, sp, &specs, exec, store)?;
+    let matched: Vec<bool> =
+        wave.iter().map(|p| matches_fp32(p, &fp32)).collect();
+    for ((&b, point), &ok) in
+        proto.input_bits.iter().zip(&wave).zip(&matched)
+    {
+        trail.push(StageOutcome {
+            stage: Stage::Input,
+            label: format!("b={}", BitCfg::new(b, b_core, 8)),
+            hidden,
+            bits: BitCfg::new(b, b_core, 8),
+            point: point.clone(),
+            matched: ok,
+        });
+    }
+    let input_pick = pick_input(&proto.input_bits, &matched);
+    let b_in = input_pick.map_or(8, |i| proto.input_bits[i]);
+    if let Some(i) = input_pick {
+        best = Some(wave[i].clone());
+    }
+
+    Ok(SelectReport {
+        env: env.to_string(),
+        protocol: sp.describe(),
+        jobs: exec.jobs(),
+        hidden,
+        bits: BitCfg::new(b_in, b_core, 8),
+        selected: best.unwrap_or_else(|| fp32.clone()),
+        fp32,
+        trail,
+    })
+}
+
+/// Restrict candidate widths to those with AOT-compiled artifacts in the
+/// manifest; selecting an uncompiled width would fail mid-run.
+pub fn usable_widths(rt: &Runtime, env: &str, widths: &[usize])
+                     -> Result<Vec<usize>> {
+    let usable: Vec<usize> = widths
         .iter()
         .copied()
         .filter(|&h| rt.manifest.artifact("sac", "train", env, h, None)
                 .is_ok())
         .collect();
-    anyhow::ensure!(!widths.is_empty(), "no artifacts for env {env}");
-    let h0 = widths[0];
+    anyhow::ensure!(!usable.is_empty(), "no artifacts for env {env}");
+    Ok(usable)
+}
 
-    // --- stage 1: smallest matching b_core at h0, I/O at 8 ----------------
-    let mut b_core = *proto.core_bits.first().unwrap_or(&8);
-    let mut best_point: Option<SweepPoint> = None;
-    for &b in &proto.core_bits {
-        let bits = BitCfg::new(8, b, 8);
-        let p = run_config(rt, algo, env, sp, h0, bits, true,
-                           &bits.to_string())?;
-        let ok = matches_fp32(&p, &fp32);
-        trail.push(("core".into(), format!("b={bits}"), p.mean, p.std,
-                    ok));
-        if ok {
-            b_core = b;
-            best_point = Some(p);
-        } else if best_point.is_some() {
-            break; // bits are swept descending; stop at first failure
-        }
-    }
-
-    // --- stage 2: smallest matching hidden width at b_core ---------------
-    let mut hidden = h0;
-    for &h in &widths {
-        let bits = BitCfg::new(8, b_core, 8);
-        let p = run_config(rt, algo, env, sp, h, bits, true,
-                           &format!("h{h}-{bits}"))?;
-        let ok = matches_fp32(&p, &fp32);
-        trail.push(("width".into(), format!("h={h} b={bits}"), p.mean,
-                    p.std, ok));
-        if ok {
-            hidden = h;
-            best_point = Some(p);
-        }
-    }
-
-    // --- stage 3: smallest matching b_in at (b_core, hidden) -------------
-    let mut b_in = 8;
-    for &b in &proto.input_bits {
-        let bits = BitCfg::new(b, b_core, 8);
-        let p = run_config(rt, algo, env, sp, hidden, bits, true,
-                           &bits.to_string())?;
-        let ok = matches_fp32(&p, &fp32);
-        trail.push(("input".into(), format!("b={bits}"), p.mean, p.std,
-                    ok));
-        if ok {
-            b_in = b;
-            best_point = Some(p);
-        } else if b_in != 8 {
-            break;
-        }
-    }
-
-    let bits = BitCfg::new(b_in, b_core, 8);
-    Ok(SelectOutcome {
-        env: env.to_string(),
-        hidden,
-        bits,
-        selected: best_point.unwrap_or_else(|| fp32.clone()),
-        fp32,
-        trail,
-    })
+/// Serial single-process facade over [`select_model_on`] with the
+/// PJRT-backed runner (the historical entry point).
+pub fn select_model(rt: &Runtime, env: &str, proto: &SelectProtocol)
+                    -> Result<SelectReport> {
+    let mut proto = proto.clone();
+    proto.widths = usable_widths(rt, env, &proto.widths)?;
+    select_model_on(&RlRunner::new(rt), env, &proto, &Executor::serial(),
+                    None)
 }
 
 /// The paper's published Table 1 selections (for reports / comparisons and
@@ -143,6 +335,7 @@ pub fn paper_table1(env: &str) -> Option<(usize, BitCfg)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiment::{Trial, TrialResult};
 
     #[test]
     fn table1_configs_present() {
@@ -153,5 +346,108 @@ mod tests {
                     "paper: 2-3 core bits suffice");
         }
         assert!(paper_table1("nonexistent").is_none());
+    }
+
+    #[test]
+    fn decision_rules() {
+        assert_eq!(pick_descending(&[true, true, true, false]), Some(2));
+        assert_eq!(pick_descending(&[false, true, false, true]), Some(1));
+        assert_eq!(pick_descending(&[false, false]), None);
+        assert_eq!(pick_descending(&[true]), Some(0));
+        assert_eq!(pick_last(&[true, false, true, false]), Some(2));
+        assert_eq!(pick_last(&[false, false]), None);
+        // input stage: a dip after the default b_in=8 match does not end
+        // the scan (historical `else if b_in != 8 { break }` semantics)
+        let bits = [8, 6, 4, 3, 2];
+        assert_eq!(pick_input(&bits, &[true, false, true, true, false]),
+                   Some(3));
+        assert_eq!(pick_input(&bits, &[false, false, true, false, true]),
+                   Some(2));
+        assert_eq!(pick_input(&bits, &[true, false, false, false, false]),
+                   Some(0));
+        assert_eq!(pick_input(&bits, &[false; 5]), None);
+    }
+
+    /// Surrogate environment with a known selection optimum: parity
+    /// holds iff b_core ≥ 3, h ≥ 16, and b_in ≥ 4.
+    fn surrogate(t: &Trial) -> anyhow::Result<TrialResult> {
+        let base = if !t.quant_on {
+            1000.0
+        } else {
+            let mut r = 1000.0;
+            if t.bits.b_core < 3 {
+                r -= 50.0;
+            }
+            if t.hidden < 16 {
+                r -= 50.0;
+            }
+            if t.bits.b_in < 4 {
+                r -= 50.0;
+            }
+            r
+        };
+        Ok(TrialResult {
+            trial_id: t.id(),
+            eval_mean: base + t.seed as f64, // per-seed spread → band > 0
+            eval_std: 1.0,
+            ckpt: None,
+        })
+    }
+
+    fn proto() -> SelectProtocol {
+        let mut sweep =
+            SweepProtocol::from_parts(Some("500"), Some("3")).unwrap();
+        sweep.hidden = 64;
+        SelectProtocol {
+            sweep,
+            core_bits: vec![8, 4, 3, 2],
+            widths: vec![64, 32, 16, 8],
+            input_bits: vec![8, 6, 4, 3],
+        }
+    }
+
+    #[test]
+    fn staged_selection_finds_the_knee() {
+        let rep = select_model_on(&surrogate, "pendulum", &proto(),
+                                  &Executor::serial(), None)
+            .unwrap();
+        assert_eq!(rep.bits, BitCfg::new(4, 3, 8));
+        assert_eq!(rep.hidden, 16);
+        // trail covers every candidate of every stage
+        assert_eq!(rep.trail.len(), 4 + 4 + 4);
+        assert_eq!(rep.trail[0].stage, Stage::Core);
+        assert_eq!(rep.trail[4].stage, Stage::Width);
+        assert_eq!(rep.trail[8].stage, Stage::Input);
+        assert!(rep.trail[0].matched && !rep.trail[3].matched);
+        // report JSON parses
+        crate::util::json::parse(&rep.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn selection_is_jobs_invariant() {
+        let serial = select_model_on(&surrogate, "pendulum", &proto(),
+                                     &Executor::serial(), None)
+            .unwrap();
+        let par = select_model_on(&surrogate, "pendulum", &proto(),
+                                  &Executor::new(8).unwrap(), None)
+            .unwrap();
+        assert_eq!(serial.bits, par.bits);
+        assert_eq!(serial.hidden, par.hidden);
+        assert_eq!(serial.selected.per_seed, par.selected.per_seed);
+        assert_eq!(serial.fp32.per_seed, par.fp32.per_seed);
+        for (a, b) in serial.trail.iter().zip(&par.trail) {
+            assert_eq!(a.point.per_seed, b.point.per_seed);
+            assert_eq!(a.matched, b.matched);
+        }
+    }
+
+    #[test]
+    fn run_name_derives_from_grids() {
+        let a = select_run_name("pendulum", &proto());
+        let mut p2 = proto();
+        p2.core_bits = vec![8, 2];
+        let b = select_run_name("pendulum", &p2);
+        assert_ne!(a, b);
+        assert!(a.starts_with("select-pendulum-"), "{a}");
     }
 }

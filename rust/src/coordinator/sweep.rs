@@ -1,11 +1,18 @@
 //! Multi-seed sweep machinery for the Fig. 1 / Fig. 4 / Fig. 5 / Fig. 6
-//! experiments.
+//! experiments, built on the typed experiment API: a sweep is an
+//! [`ExperimentPlan`] of (config × seed) trials run by the parallel
+//! [`Executor`], aggregated into [`SweepPoint`]s and a typed
+//! [`SweepReport`]. Attach a [`RunStore`] and an interrupted sweep
+//! resumes by skipping completed trials.
 
 use anyhow::Result;
 
+use crate::experiment::{fingerprint, Executor, ExperimentPlan, RlRunner,
+                        RunStore, TrialRunner, TrialTemplate};
 use crate::quant::BitCfg;
-use crate::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
+use crate::rl::Algo;
 use crate::runtime::Runtime;
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// The four quantization scopes of Fig. 1. Non-swept components stay at
@@ -67,30 +74,76 @@ pub struct SweepProtocol {
 
 impl SweepProtocol {
     /// Tiny default sized for the single-core CI box; override via
-    /// QCONTROL_STEPS / QCONTROL_SEEDS env vars or bench flags.
-    pub fn from_env() -> SweepProtocol {
-        let steps = std::env::var("QCONTROL_STEPS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(1500);
-        let n_seeds: u64 = std::env::var("QCONTROL_SEEDS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(1);
-        SweepProtocol {
+    /// QCONTROL_STEPS / QCONTROL_SEEDS env vars or bench/CLI flags. A
+    /// malformed env value is a descriptive error, never a silent
+    /// fallback to the default.
+    pub fn from_env() -> Result<SweepProtocol> {
+        SweepProtocol::from_parts(
+            std::env::var("QCONTROL_STEPS").ok().as_deref(),
+            std::env::var("QCONTROL_SEEDS").ok().as_deref())
+    }
+
+    /// Strict construction from raw knob strings (`None` = unset).
+    pub fn from_parts(steps_raw: Option<&str>, seeds_raw: Option<&str>)
+                      -> Result<SweepProtocol> {
+        let steps: usize = match steps_raw {
+            None => 1500,
+            Some(s) => s.trim().parse().map_err(|e| anyhow::anyhow!(
+                "QCONTROL_STEPS=`{s}` is not a step count: {e}"))?,
+        };
+        anyhow::ensure!(steps >= 1, "QCONTROL_STEPS must be >= 1");
+        let n_seeds: u64 = match seeds_raw {
+            None => 1,
+            Some(s) => s.trim().parse().map_err(|e| anyhow::anyhow!(
+                "QCONTROL_SEEDS=`{s}` is not a seed count: {e}"))?,
+        };
+        anyhow::ensure!(n_seeds >= 1, "QCONTROL_SEEDS must be >= 1");
+        Ok(SweepProtocol {
             steps,
             learning_starts: (steps / 5).max(200),
             seeds: (1..=n_seeds).collect(),
             eval_episodes: 5,
             hidden: 256,
             normalize: true,
-        }
+        })
+    }
+
+    /// Use seeds `1..=n` (the `--seeds N` CLI knob).
+    pub fn with_seed_count(mut self, n: u64) -> Result<SweepProtocol> {
+        anyhow::ensure!(n >= 1, "--seeds must be >= 1 (got {n})");
+        self.seeds = (1..=n).collect();
+        Ok(self)
     }
 
     pub fn describe(&self) -> String {
         format!("{} steps, {} seed(s), {} eval episodes, h={}",
                 self.steps, self.seeds.len(), self.eval_episodes,
                 self.hidden)
+    }
+
+    /// Trial template for this protocol.
+    pub fn template(&self, algo: Algo, env: &str) -> TrialTemplate {
+        TrialTemplate {
+            env: env.to_string(),
+            algo,
+            steps: self.steps,
+            learning_starts: self.learning_starts,
+            eval_episodes: self.eval_episodes,
+            normalize: self.normalize,
+        }
+    }
+
+    /// Stable fingerprint of everything that affects trial identity
+    /// (used to name run directories: same protocol → same directory →
+    /// resume; any change → a fresh one).
+    pub fn fingerprint(&self, algo: Algo, env: &str) -> String {
+        let seeds: Vec<String> =
+            self.seeds.iter().map(|s| s.to_string()).collect();
+        fingerprint(&[algo.name(), env, &self.steps.to_string(),
+                      &self.learning_starts.to_string(), &seeds.join(","),
+                      &self.eval_episodes.to_string(),
+                      &self.hidden.to_string(),
+                      &(self.normalize as u8).to_string()])
     }
 }
 
@@ -103,41 +156,85 @@ pub struct SweepPoint {
     pub per_seed: Vec<f64>,
 }
 
-/// Train + evaluate one configuration over the protocol's seeds.
+/// One configuration to aggregate over the protocol's seeds.
+#[derive(Clone, Debug)]
+pub struct PointSpec {
+    pub label: String,
+    pub hidden: usize,
+    pub bits: BitCfg,
+    pub quant_on: bool,
+    /// per-config override of the protocol's input normalization
+    /// (`None` = inherit). The selection FP32 band pins this to `true`
+    /// (paper Appendix C) even under no-normalization ablations.
+    pub normalize: Option<bool>,
+}
+
+impl PointSpec {
+    pub fn new(label: impl Into<String>, hidden: usize, bits: BitCfg,
+               quant_on: bool) -> PointSpec {
+        PointSpec { label: label.into(), hidden, bits, quant_on,
+                    normalize: None }
+    }
+
+    pub fn with_normalize(mut self, on: bool) -> PointSpec {
+        self.normalize = Some(on);
+        self
+    }
+}
+
+/// Run a batch of configurations as **one** executor wave (all configs ×
+/// all seeds scheduled together — independent trials fill every worker),
+/// aggregating per-config seed results into [`SweepPoint`]s in spec
+/// order.
+pub fn run_points(runner: &dyn TrialRunner, algo: Algo, env: &str,
+                  proto: &SweepProtocol, specs: &[PointSpec],
+                  exec: &Executor, store: Option<&RunStore>)
+                  -> Result<Vec<SweepPoint>> {
+    let mut plan = ExperimentPlan::new(format!("points-{env}"));
+    for spec in specs {
+        let mut tmpl = proto.template(algo, env);
+        if let Some(on) = spec.normalize {
+            tmpl.normalize = on;
+        }
+        plan.grid(&tmpl, &[(spec.hidden, spec.bits, spec.quant_on)],
+                  &proto.seeds);
+    }
+    let results = exec.run(&plan, runner, store)?;
+    let n_seeds = proto.seeds.len();
+    Ok(specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let per_seed: Vec<f64> = results[i * n_seeds..(i + 1) * n_seeds]
+                .iter()
+                .map(|r| r.eval_mean)
+                .collect();
+            SweepPoint {
+                label: spec.label.clone(),
+                mean: stats::mean(&per_seed),
+                std: stats::std(&per_seed),
+                per_seed,
+            }
+        })
+        .collect())
+}
+
+/// Train + evaluate one configuration over the protocol's seeds
+/// (single-config facade over [`run_points`], serial, no store — the
+/// shape the fig2/fig3/fig6 benches and examples consume).
 #[allow(clippy::too_many_arguments)]
 pub fn run_config(rt: &Runtime, algo: Algo, env: &str, proto: &SweepProtocol,
                   hidden: usize, bits: BitCfg, quant_on: bool,
                   label: &str) -> Result<SweepPoint> {
-    let mut per_seed = Vec::with_capacity(proto.seeds.len());
-    for &seed in &proto.seeds {
-        let mut cfg = TrainConfig::new(algo, env);
-        cfg.hidden = hidden;
-        cfg.bits = bits;
-        cfg.quant_on = quant_on;
-        cfg.normalize = proto.normalize;
-        cfg.total_steps = proto.steps;
-        cfg.learning_starts = proto.learning_starts;
-        cfg.seed = seed;
-        let res = rl::train(rt, &cfg)?;
-        let (mean, _) = rl::evaluate(rt, &EvalOpts {
-            algo,
-            env: env.to_string(),
-            hidden,
-            bits,
-            quant_on,
-            episodes: proto.eval_episodes,
-            noise_std: 0.0,
-            seed: seed ^ 0xe7a1,
-            backend: EvalBackend::Pjrt,
-        }, &res.flat, &res.normalizer)?;
-        per_seed.push(mean);
-    }
-    Ok(SweepPoint {
-        label: label.to_string(),
-        mean: stats::mean(&per_seed),
-        std: stats::std(&per_seed),
-        per_seed,
-    })
+    let points = run_points(&RlRunner::new(rt), algo, env, proto,
+                            &[PointSpec::new(label, hidden, bits, quant_on)],
+                            &Executor::serial(), None)?;
+    Ok(points.into_iter().next().expect("one spec in, one point out"))
+}
+
+/// The FP32 baseline band's [`PointSpec`] (quant gate off).
+pub fn fp32_spec(hidden: usize) -> PointSpec {
+    PointSpec::new("fp32", hidden, BitCfg::new(8, 8, 8), false)
 }
 
 /// Train the FP32 baseline band (quant gate off): returns (mean, std).
@@ -155,9 +252,116 @@ pub fn matches_fp32(point: &SweepPoint, fp32: &SweepPoint) -> bool {
     point.mean >= fp32.mean - fp32.std
 }
 
+/// One (scope × bitwidth) row of a sweep report.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scope: Scope,
+    pub width: u32,
+    pub cfg: BitCfg,
+    pub point: SweepPoint,
+    pub in_band: bool,
+}
+
+/// Typed result of a full Fig. 1-style sweep (replaces the stdout-only
+/// table + untyped store rows).
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub env: String,
+    pub algo: Algo,
+    pub protocol: String,
+    pub jobs: usize,
+    pub fp32: SweepPoint,
+    pub rows: Vec<SweepRow>,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("env", Json::str(&self.env)),
+            ("algo", Json::str(self.algo.name())),
+            ("protocol", Json::str(&self.protocol)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("fp32", point_json(&self.fp32)),
+            ("rows", Json::Arr(self.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("scope", Json::str(r.scope.name())),
+                    ("width", Json::num(r.width as f64)),
+                    ("bits", Json::str(r.cfg.to_string())),
+                    ("point", point_json(&r.point)),
+                    ("in_band", Json::Bool(r.in_band)),
+                ])
+            }).collect())),
+        ])
+    }
+}
+
+pub(crate) fn point_json(p: &SweepPoint) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&p.label)),
+        ("mean", Json::num(p.mean)),
+        ("std", Json::num(p.std)),
+        ("per_seed", Json::Arr(
+            p.per_seed.iter().map(|&x| Json::num(x)).collect())),
+    ])
+}
+
+/// Deterministic run-directory name for a sweep configuration.
+pub fn sweep_run_name(algo: Algo, env: &str, proto: &SweepProtocol,
+                      scopes: &[Scope], bits: &[u32]) -> String {
+    let scopes: Vec<&str> = scopes.iter().map(|s| s.name()).collect();
+    let bits: Vec<String> = bits.iter().map(|b| b.to_string()).collect();
+    format!("sweep-{env}-{}",
+            fingerprint(&[&proto.fingerprint(algo, env),
+                          &scopes.join(","), &bits.join(",")]))
+}
+
+/// The full Fig. 1 grid — FP32 band plus every (scope × width) config —
+/// as one executor wave.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep(runner: &dyn TrialRunner, algo: Algo, env: &str,
+                 proto: &SweepProtocol, scopes: &[Scope], bits: &[u32],
+                 exec: &Executor, store: Option<&RunStore>)
+                 -> Result<SweepReport> {
+    // band pinned to normalized training (historical fp32_band(.., true))
+    let mut specs = vec![fp32_spec(proto.hidden).with_normalize(true)];
+    for &scope in scopes {
+        for &b in bits {
+            specs.push(PointSpec::new(
+                format!("{}-{}", scope.name(), scope.bits(b)),
+                proto.hidden, scope.bits(b), true));
+        }
+    }
+    let mut points = run_points(runner, algo, env, proto, &specs, exec,
+                                store)?
+        .into_iter();
+    let fp32 = points.next().expect("fp32 spec first");
+    let mut rows = Vec::new();
+    for &scope in scopes {
+        for &b in bits {
+            let point = points.next().expect("one point per spec");
+            rows.push(SweepRow {
+                scope,
+                width: b,
+                cfg: scope.bits(b),
+                in_band: matches_fp32(&point, &fp32),
+                point,
+            });
+        }
+    }
+    Ok(SweepReport {
+        env: env.to_string(),
+        algo,
+        protocol: proto.describe(),
+        jobs: exec.jobs(),
+        fp32,
+        rows,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiment::{fnv1a64, Trial, TrialResult};
 
     #[test]
     fn scope_bit_configs() {
@@ -180,9 +384,127 @@ mod tests {
     }
 
     #[test]
-    fn protocol_env_default() {
-        let p = SweepProtocol::from_env();
+    fn protocol_defaults() {
+        let p = SweepProtocol::from_parts(None, None).unwrap();
         assert!(p.steps >= 100);
         assert!(!p.seeds.is_empty());
+    }
+
+    #[test]
+    fn protocol_rejects_malformed_knobs() {
+        // `.parse().ok()` used to silently fall back to defaults here;
+        // a malformed knob must be a descriptive error instead
+        let err = SweepProtocol::from_parts(Some("12k"), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("QCONTROL_STEPS") && err.contains("12k"),
+                "{err}");
+        let err = SweepProtocol::from_parts(None, Some("three"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("QCONTROL_SEEDS"), "{err}");
+        assert!(SweepProtocol::from_parts(Some("0"), None).is_err());
+        assert!(SweepProtocol::from_parts(None, Some("0")).is_err());
+        // valid values still parse
+        let p = SweepProtocol::from_parts(Some("800"), Some("3")).unwrap();
+        assert_eq!(p.steps, 800);
+        assert_eq!(p.seeds, vec![1, 2, 3]);
+    }
+
+    /// Deterministic surrogate runner for executor-level tests.
+    fn fake(t: &Trial) -> Result<TrialResult> {
+        let h = fnv1a64(&t.id());
+        Ok(TrialResult {
+            trial_id: t.id(),
+            eval_mean: (h % 1000) as f64,
+            eval_std: 1.0,
+            ckpt: None,
+        })
+    }
+
+    #[test]
+    fn run_points_aggregates_per_spec() {
+        let proto = SweepProtocol::from_parts(Some("300"), Some("3"))
+            .unwrap();
+        let specs = vec![
+            PointSpec::new("a", 16, BitCfg::uniform(8), true),
+            PointSpec::new("b", 16, BitCfg::uniform(4), true),
+        ];
+        let serial = run_points(&fake, Algo::Sac, "pendulum", &proto,
+                                &specs, &Executor::serial(), None)
+            .unwrap();
+        assert_eq!(serial.len(), 2);
+        assert_eq!(serial[0].per_seed.len(), 3);
+        // spec label carried through; aggregation is over that spec's
+        // own seeds only
+        assert_eq!(serial[0].label, "a");
+        assert!((serial[0].mean
+                 - stats::mean(&serial[0].per_seed)).abs() < 1e-12);
+        // parallel execution yields bit-identical points
+        let par = run_points(&fake, Algo::Sac, "pendulum", &proto, &specs,
+                             &Executor::new(4).unwrap(), None)
+            .unwrap();
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.per_seed, p.per_seed);
+        }
+    }
+
+    #[test]
+    fn normalize_override_reaches_the_trial() {
+        let mut proto =
+            SweepProtocol::from_parts(Some("300"), Some("1")).unwrap();
+        proto.normalize = false; // ablation protocol
+        let specs = vec![
+            fp32_spec(16).with_normalize(true),
+            PointSpec::new("q", 16, BitCfg::uniform(4), true),
+        ];
+        // encode the trial's normalize flag in the surrogate result
+        let probe = |t: &Trial| -> Result<TrialResult> {
+            Ok(TrialResult {
+                trial_id: t.id(),
+                eval_mean: t.normalize as u8 as f64,
+                eval_std: 0.0,
+                ckpt: None,
+            })
+        };
+        let pts = run_points(&probe, Algo::Sac, "pendulum", &proto,
+                             &specs, &Executor::serial(), None)
+            .unwrap();
+        assert_eq!(pts[0].per_seed, vec![1.0], "band stays normalized");
+        assert_eq!(pts[1].per_seed, vec![0.0], "candidate inherits");
+    }
+
+    #[test]
+    fn sweep_report_shape() {
+        let proto = SweepProtocol::from_parts(Some("300"), Some("2"))
+            .unwrap();
+        let scopes = [Scope::All, Scope::Core];
+        let bits = [4, 2];
+        let rep = run_sweep(&fake, Algo::Sac, "pendulum", &proto, &scopes,
+                            &bits, &Executor::new(3).unwrap(), None)
+            .unwrap();
+        assert_eq!(rep.rows.len(), 4);
+        assert_eq!(rep.rows[0].scope, Scope::All);
+        assert_eq!(rep.rows[0].cfg, BitCfg::uniform(4));
+        assert_eq!(rep.rows[3].cfg, BitCfg::new(8, 2, 8));
+        // report serializes and round-trips structurally
+        let j = rep.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("env").unwrap().as_str().unwrap(), "pendulum");
+        crate::util::json::parse(&j.to_string()).unwrap();
+    }
+
+    #[test]
+    fn run_names_are_config_derived() {
+        let p1 = SweepProtocol::from_parts(Some("300"), Some("2")).unwrap();
+        let p2 = SweepProtocol::from_parts(Some("400"), Some("2")).unwrap();
+        let n1 = sweep_run_name(Algo::Sac, "pendulum", &p1, &[Scope::All],
+                                &[4, 2]);
+        let n2 = sweep_run_name(Algo::Sac, "pendulum", &p2, &[Scope::All],
+                                &[4, 2]);
+        assert_ne!(n1, n2);
+        assert_eq!(n1, sweep_run_name(Algo::Sac, "pendulum", &p1,
+                                      &[Scope::All], &[4, 2]));
+        assert!(n1.starts_with("sweep-pendulum-"), "{n1}");
     }
 }

@@ -1,0 +1,342 @@
+//! Parallel trial executor: a self-scheduling worker pool over a shared
+//! work queue.
+//!
+//! Workers claim the next unclaimed trial index atomically (work
+//! stealing degenerates to exactly this when every task is visible in
+//! one shared queue), run it, and write the result back at its plan
+//! index. Because every trial seeds its own randomness from its content
+//! (see [`Trial::id`]) and results land by index, the output is
+//! **bit-identical at any worker count** — `--jobs` changes wall-clock
+//! time, never results.
+//!
+//! With a [`RunStore`] attached the executor first loads every already-
+//! completed trial record and only schedules the missing ones, which is
+//! what makes an interrupted sweep/selection resume where it died
+//! instead of restarting from zero. Duplicate trials inside one plan
+//! (selection waves re-probe earlier configs) are executed once and
+//! fanned out to every plan index that asked for them.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::experiment::plan::ExperimentPlan;
+use crate::experiment::store::RunStore;
+use crate::experiment::trial::{Trial, TrialResult, TrialRunner};
+
+/// Worker-count knob. One instance is typically threaded through a whole
+/// command (sweep, select, pipeline); its counters accumulate across
+/// waves so the final summary covers the entire run.
+pub struct Executor {
+    jobs: usize,
+    executed: AtomicUsize,
+    cached: AtomicUsize,
+    deduped: AtomicUsize,
+}
+
+/// Cumulative scheduling counters (deterministic; no wall-clock).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecStats {
+    pub jobs: usize,
+    /// trials actually trained in this process
+    pub executed: usize,
+    /// trials satisfied from the run store (resume)
+    pub cached: usize,
+    /// duplicate in-plan trials satisfied from an earlier plan index
+    pub deduped: usize,
+}
+
+impl Executor {
+    /// `jobs` parallel workers; 0 is a configuration error.
+    pub fn new(jobs: usize) -> Result<Executor> {
+        anyhow::ensure!(jobs >= 1, "--jobs must be >= 1 (got {jobs})");
+        Ok(Executor {
+            jobs,
+            executed: AtomicUsize::new(0),
+            cached: AtomicUsize::new(0),
+            deduped: AtomicUsize::new(0),
+        })
+    }
+
+    /// Single-worker executor (the deterministic reference schedule).
+    pub fn serial() -> Executor {
+        Executor::new(1).expect("1 >= 1")
+    }
+
+    /// Worker count from `QCONTROL_JOBS`, defaulting to the machine's
+    /// available parallelism. Like every `QCONTROL_*` knob, a malformed
+    /// value is a descriptive error — never a silent fallback.
+    pub fn from_env() -> Result<Executor> {
+        Executor::new(Self::parse_jobs(
+            std::env::var("QCONTROL_JOBS").ok().as_deref())?)
+    }
+
+    /// Resolve a `--jobs` flag value, falling back to the
+    /// `QCONTROL_JOBS` environment (the one resolution order every CLI
+    /// entry point shares). Malformed values error in both places.
+    pub fn from_flag_or_env(flag: Option<&str>) -> Result<Executor> {
+        match flag {
+            Some(s) => {
+                let jobs: usize = s.trim().parse().map_err(|e| {
+                    anyhow::anyhow!("--jobs=`{s}` is not a worker \
+                                     count: {e}")
+                })?;
+                Executor::new(jobs)
+            }
+            None => Executor::from_env(),
+        }
+    }
+
+    /// Strict parse of a jobs knob (`None` = unset → default).
+    pub fn parse_jobs(raw: Option<&str>) -> Result<usize> {
+        match raw {
+            None => Ok(std::thread::available_parallelism()
+                       .map(|n| n.get())
+                       .unwrap_or(1)),
+            Some(s) => {
+                let jobs: usize = s.trim().parse().map_err(|e| {
+                    anyhow::anyhow!(
+                        "QCONTROL_JOBS=`{s}` is not a worker count: {e}")
+                })?;
+                anyhow::ensure!(jobs >= 1,
+                                "QCONTROL_JOBS=`{s}`: must be >= 1");
+                Ok(jobs)
+            }
+        }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats {
+            jobs: self.jobs,
+            executed: self.executed.load(Ordering::Relaxed),
+            cached: self.cached.load(Ordering::Relaxed),
+            deduped: self.deduped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run every trial of `plan`, returning results in plan order.
+    ///
+    /// With `store`, completed trials are loaded instead of re-run and
+    /// fresh completions are persisted as they finish (a crash loses at
+    /// most the trials in flight). The first trial error aborts
+    /// scheduling of not-yet-claimed trials and is returned with the
+    /// failing trial's id; already-finished results are still persisted.
+    pub fn run(&self, plan: &ExperimentPlan, runner: &dyn TrialRunner,
+               store: Option<&RunStore>) -> Result<Vec<TrialResult>> {
+        let trials = plan.trials();
+        let n = trials.len();
+        let mut slots: Vec<Option<TrialResult>> = vec![None; n];
+        // plan index this slot mirrors (in-plan duplicate trials)
+        let mut alias: Vec<usize> = (0..n).collect();
+        let mut seen: HashMap<String, usize> = HashMap::new();
+        let mut pending: Vec<usize> = Vec::new();
+
+        for (i, t) in trials.iter().enumerate() {
+            let id = t.id();
+            if let Some(&first) = seen.get(&id) {
+                alias[i] = first;
+                self.deduped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            seen.insert(id, i);
+            match store {
+                Some(s) => match s.load(t)? {
+                    Some(r) => {
+                        slots[i] = Some(r);
+                        self.cached.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => pending.push(i),
+                },
+                None => pending.push(i),
+            }
+        }
+
+        let workers = self.jobs.min(pending.len());
+        if workers <= 1 {
+            for &i in &pending {
+                slots[i] = Some(self.run_one(runner, &trials[i], store)?);
+            }
+        } else {
+            self.run_parallel(trials, &pending, workers, runner, store,
+                              &mut slots)?;
+        }
+
+        Ok((0..n)
+            .map(|i| slots[alias[i]].clone().expect("slot filled"))
+            .collect())
+    }
+
+    fn run_one(&self, runner: &dyn TrialRunner, trial: &Trial,
+               store: Option<&RunStore>) -> Result<TrialResult> {
+        let res = runner
+            .run(trial)
+            .with_context(|| format!("trial `{}` failed", trial.id()))?;
+        if let Some(s) = store {
+            s.save(trial, &res)?;
+        }
+        self.executed.fetch_add(1, Ordering::Relaxed);
+        Ok(res)
+    }
+
+    fn run_parallel(&self, trials: &[Trial], pending: &[usize],
+                    workers: usize, runner: &dyn TrialRunner,
+                    store: Option<&RunStore>,
+                    slots: &mut [Option<TrialResult>]) -> Result<()> {
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let done: Vec<Mutex<Option<TrialResult>>> =
+            pending.iter().map(|_| Mutex::new(None)).collect();
+        // keep the error at the smallest queue position: the same error
+        // a --jobs 1 run of this plan would have hit first
+        let first_err: Mutex<Option<(usize, anyhow::Error)>> =
+            Mutex::new(None);
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= pending.len() {
+                        break;
+                    }
+                    match self.run_one(runner, &trials[pending[k]], store) {
+                        Ok(r) => *done[k].lock().unwrap() = Some(r),
+                        Err(e) => {
+                            abort.store(true, Ordering::Relaxed);
+                            let mut g = first_err.lock().unwrap();
+                            let earlier = match g.as_ref() {
+                                None => true,
+                                Some((j, _)) => k < *j,
+                            };
+                            if earlier {
+                                *g = Some((k, e));
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some((_, e)) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        for (k, cell) in done.into_iter().enumerate() {
+            slots[pending[k]] =
+                Some(cell.into_inner().unwrap().expect("no abort"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::plan::TrialTemplate;
+    use crate::experiment::trial::fnv1a64;
+    use crate::quant::BitCfg;
+    use crate::rl::Algo;
+
+    fn plan(n_cfg: usize, seeds: u64) -> ExperimentPlan {
+        let tmpl = TrialTemplate {
+            env: "pendulum".into(),
+            algo: Algo::Sac,
+            steps: 100,
+            learning_starts: 20,
+            eval_episodes: 3,
+            normalize: true,
+        };
+        let cfgs: Vec<(usize, BitCfg, bool)> = (0..n_cfg)
+            .map(|i| (16 << (i % 3), BitCfg::uniform(2 + i as u32 % 7),
+                      true))
+            .collect();
+        let seeds: Vec<u64> = (1..=seeds).collect();
+        let mut p = ExperimentPlan::new("exec-test");
+        p.grid(&tmpl, &cfgs, &seeds);
+        p
+    }
+
+    /// Deterministic surrogate: result is a pure function of the trial.
+    fn fake(t: &Trial) -> Result<TrialResult> {
+        let h = fnv1a64(&t.id());
+        Ok(TrialResult {
+            trial_id: t.id(),
+            eval_mean: (h % 2000) as f64 - 1000.0,
+            eval_std: (h % 97) as f64 * 0.5,
+            ckpt: None,
+        })
+    }
+
+    #[test]
+    fn jobs_validation() {
+        assert!(Executor::new(0).is_err());
+        assert_eq!(Executor::new(4).unwrap().jobs(), 4);
+        assert_eq!(Executor::parse_jobs(Some("3")).unwrap(), 3);
+        assert!(Executor::parse_jobs(Some("0")).is_err());
+        assert!(Executor::parse_jobs(Some("four")).is_err());
+        assert!(Executor::parse_jobs(Some("-2")).is_err());
+        assert!(Executor::parse_jobs(None).unwrap() >= 1);
+        assert_eq!(Executor::from_flag_or_env(Some("5")).unwrap().jobs(),
+                   5);
+        let err = Executor::from_flag_or_env(Some("x"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--jobs") && err.contains('x'), "{err}");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let p = plan(4, 3);
+        let serial = Executor::serial().run(&p, &fake, None).unwrap();
+        for jobs in [2, 4, 16] {
+            let par = Executor::new(jobs)
+                .unwrap()
+                .run(&p, &fake, None)
+                .unwrap();
+            assert_eq!(serial, par, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn duplicates_run_once() {
+        let mut p = plan(2, 2); // 4 trials
+        let dup = p.trials()[1].clone();
+        p.push(dup.clone());
+        let calls = AtomicUsize::new(0);
+        let counting = |t: &Trial| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            fake(t)
+        };
+        let ex = Executor::new(4).unwrap();
+        let res = ex.run(&p, &counting, None).unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 4);
+        assert_eq!(res[1], res[4]);
+        assert_eq!(ex.stats().deduped, 1);
+        assert_eq!(ex.stats().executed, 4);
+    }
+
+    #[test]
+    fn error_carries_trial_id() {
+        let p = plan(3, 2);
+        let bad_id = p.trials()[3].id();
+        let failing = |t: &Trial| -> Result<TrialResult> {
+            if t.id() == bad_id {
+                anyhow::bail!("injected failure");
+            }
+            fake(t)
+        };
+        for ex in [Executor::serial(), Executor::new(4).unwrap()] {
+            let err = format!("{:#}", ex.run(&p, &failing, None)
+                              .unwrap_err());
+            assert!(err.contains(&bad_id), "{err}");
+            assert!(err.contains("injected failure"), "{err}");
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Typed experiment API — experiments as first-class values.
+//!
+//! * [`trial`]    — [`Trial`] (env × algo × hidden × bits × quant gate ×
+//!   seed × step budget) with a deterministic content-derived id,
+//!   [`TrialResult`], and the [`TrialRunner`] execution trait.
+//! * [`plan`]     — [`ExperimentPlan`]: grid/wave expansion into ordered
+//!   trial sets with a content-derived run id.
+//! * [`executor`] — [`Executor`]: a self-scheduling parallel worker pool
+//!   (`--jobs N` / `QCONTROL_JOBS`). Bit-identical results at any worker
+//!   count; in-plan duplicates run once.
+//! * [`store`]    — [`RunStore`]: one atomic JSON record per completed
+//!   trial under `results/runs/<run-id>/`, so re-invoking an interrupted
+//!   experiment resumes by skipping finished trials.
+//!
+//! The executor is generic over [`TrialRunner`], so the scheduling and
+//! resume machinery is fully testable without PJRT artifacts; [`RlRunner`]
+//! is the production implementation that trains with [`crate::rl`].
+
+pub mod executor;
+pub mod plan;
+pub mod store;
+pub mod trial;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+pub use executor::{ExecStats, Executor};
+pub use plan::{ExperimentPlan, TrialTemplate};
+pub use store::RunStore;
+pub use trial::{fingerprint, fnv1a64, Trial, TrialResult, TrialRunner};
+
+use crate::rl;
+use crate::runtime::Runtime;
+
+/// The production [`TrialRunner`]: train + evaluate via the PJRT
+/// runtime. Safe to share across executor workers — each trial builds
+/// its own env/replay/RNG state and the runtime's executable cache is
+/// internally synchronized.
+pub struct RlRunner<'a> {
+    rt: &'a Runtime,
+    ckpt_dir: Option<PathBuf>,
+    ckpt_seed: Option<u64>,
+}
+
+impl<'a> RlRunner<'a> {
+    pub fn new(rt: &'a Runtime) -> RlRunner<'a> {
+        RlRunner { rt, ckpt_dir: None, ckpt_seed: None }
+    }
+
+    /// Also persist trained weights as `<dir>/<trial-id>.ckpt` (the
+    /// pipeline needs the selected checkpoint for export; plain sweeps
+    /// skip the disk cost).
+    pub fn with_ckpt_dir(mut self, dir: impl Into<PathBuf>)
+                         -> RlRunner<'a> {
+        self.ckpt_dir = Some(dir.into());
+        self
+    }
+
+    /// Restrict checkpointing to trials with this seed. The pipeline
+    /// only ever exports a first-seed checkpoint, so persisting the
+    /// other seeds' weights would be pure write amplification.
+    pub fn with_ckpt_seed(mut self, seed: u64) -> RlRunner<'a> {
+        self.ckpt_seed = Some(seed);
+        self
+    }
+}
+
+impl TrialRunner for RlRunner<'_> {
+    fn run(&self, trial: &Trial) -> Result<TrialResult> {
+        let run = rl::run_trial(self.rt, trial)?;
+        let mut result = run.result;
+        let keep_ckpt = match self.ckpt_seed {
+            None => true,
+            Some(s) => s == trial.seed,
+        };
+        if let (Some(dir), true) = (&self.ckpt_dir, keep_ckpt) {
+            let path = dir.join(format!("{}.ckpt", trial.id()));
+            rl::policy::save_checkpoint(&path, &run.train.flat,
+                                        &run.train.normalizer.state(),
+                                        &trial.ckpt_meta())
+                .with_context(|| format!("checkpoint {}", path.display()))?;
+            result.ckpt = Some(path.to_string_lossy().into_owned());
+        }
+        Ok(result)
+    }
+}

@@ -1,0 +1,149 @@
+//! Experiment plans: trial-set expansion for sweep grids and selection
+//! waves.
+//!
+//! A plan is an ordered list of [`Trial`]s. Order fixes how results are
+//! reported, *not* how trials are scheduled — the executor may run them
+//! in any interleaving and the results still land at their plan index.
+
+use crate::experiment::trial::{fnv1a64, Trial};
+use crate::quant::BitCfg;
+use crate::rl::Algo;
+
+/// Shared per-plan trial parameters; `trial()` stamps out grid points.
+#[derive(Clone, Debug)]
+pub struct TrialTemplate {
+    pub env: String,
+    pub algo: Algo,
+    pub steps: usize,
+    pub learning_starts: usize,
+    pub eval_episodes: usize,
+    pub normalize: bool,
+}
+
+impl TrialTemplate {
+    pub fn trial(&self, hidden: usize, bits: BitCfg, quant_on: bool,
+                 seed: u64) -> Trial {
+        Trial {
+            env: self.env.clone(),
+            algo: self.algo,
+            hidden,
+            bits,
+            quant_on,
+            normalize: self.normalize,
+            steps: self.steps,
+            learning_starts: self.learning_starts,
+            eval_episodes: self.eval_episodes,
+            seed,
+        }
+    }
+}
+
+/// An ordered set of trials (one executor wave).
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentPlan {
+    pub name: String,
+    trials: Vec<Trial>,
+}
+
+impl ExperimentPlan {
+    pub fn new(name: impl Into<String>) -> ExperimentPlan {
+        ExperimentPlan { name: name.into(), trials: Vec::new() }
+    }
+
+    /// Append one trial; returns its plan index.
+    pub fn push(&mut self, t: Trial) -> usize {
+        self.trials.push(t);
+        self.trials.len() - 1
+    }
+
+    /// Expand a (config × seed) grid, seed-minor (all seeds of one config
+    /// are adjacent, so per-config aggregation is a contiguous chunk).
+    /// Returns the index range the grid occupies.
+    pub fn grid(&mut self, tmpl: &TrialTemplate,
+                configs: &[(usize, BitCfg, bool)], seeds: &[u64])
+                -> std::ops::Range<usize> {
+        let start = self.trials.len();
+        for &(hidden, bits, quant_on) in configs {
+            for &seed in seeds {
+                self.push(tmpl.trial(hidden, bits, quant_on, seed));
+            }
+        }
+        start..self.trials.len()
+    }
+
+    pub fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    /// Content-derived plan id (name + every trial id, order-
+    /// insensitive): two identical plans get the same id regardless of
+    /// the process that built them. The built-in commands name their run
+    /// directories from *protocol* fingerprints instead (`sweep_run_name`
+    /// / `select_run_name` / `pipeline_run_name`), because selection
+    /// expands adaptively and the full trial set isn't known up front;
+    /// `run_id` is for ad-hoc plans whose directory should be keyed by
+    /// the exact trial set.
+    pub fn run_id(&self) -> String {
+        let mut ids: Vec<String> =
+            self.trials.iter().map(|t| t.id()).collect();
+        ids.sort_unstable(); // order-insensitive: same set → same run
+        let digest = fnv1a64(&format!("{}|{}", self.name, ids.join(",")));
+        format!("{}-{:08x}", self.name, digest as u32 as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpl() -> TrialTemplate {
+        TrialTemplate {
+            env: "pendulum".into(),
+            algo: Algo::Sac,
+            steps: 500,
+            learning_starts: 100,
+            eval_episodes: 5,
+            normalize: true,
+        }
+    }
+
+    #[test]
+    fn grid_expansion_order() {
+        let mut p = ExperimentPlan::new("t");
+        let cfgs = [(16, BitCfg::uniform(8), true),
+                    (16, BitCfg::uniform(4), true)];
+        let r = p.grid(&tmpl(), &cfgs, &[1, 2, 3]);
+        assert_eq!(r, 0..6);
+        assert_eq!(p.len(), 6);
+        // seed-minor: seeds of one config are adjacent
+        assert_eq!(p.trials()[0].seed, 1);
+        assert_eq!(p.trials()[2].seed, 3);
+        assert_eq!(p.trials()[2].bits, BitCfg::uniform(8));
+        assert_eq!(p.trials()[3].bits, BitCfg::uniform(4));
+    }
+
+    #[test]
+    fn run_id_content_derived() {
+        let mut a = ExperimentPlan::new("x");
+        let mut b = ExperimentPlan::new("x");
+        let cfgs = [(16, BitCfg::uniform(8), true)];
+        a.grid(&tmpl(), &cfgs, &[1, 2]);
+        b.grid(&tmpl(), &cfgs, &[1, 2]);
+        assert_eq!(a.run_id(), b.run_id());
+        b.push(tmpl().trial(32, BitCfg::uniform(8), true, 1));
+        assert_ne!(a.run_id(), b.run_id());
+        // order-insensitive over the trial *set*
+        let mut c = ExperimentPlan::new("x");
+        c.push(tmpl().trial(16, BitCfg::uniform(8), true, 2));
+        c.push(tmpl().trial(16, BitCfg::uniform(8), true, 1));
+        assert_eq!(a.run_id(), c.run_id());
+    }
+}

@@ -1,0 +1,242 @@
+//! Resumable run store: one JSON record per completed trial.
+//!
+//! Layout (under `results/runs/` by default, `QCONTROL_RESULTS`
+//! honoured):
+//!
+//! ```text
+//! results/runs/<run-id>/
+//!   <trial-id>.json    one record per completed trial
+//!   <trial-id>.ckpt    trained weights (only when the runner keeps them)
+//!   pipeline.json      end-to-end report (pipeline runs)
+//! ```
+//!
+//! Records are written atomically (temp file + rename), so a killed
+//! worker can never leave a half-written record that later resumes as
+//! "complete": after a crash a trial either has a full record or none.
+//! Loading is strict — unparseable or mismatched records are *errors*
+//! naming the offending file, never silently treated as complete or
+//! silently re-run (a corrupt record usually means disk trouble or a
+//! concurrent writer; both deserve a human).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::store::{now_secs, Store};
+use crate::experiment::trial::{Trial, TrialResult};
+use crate::util::json::{self, Json};
+
+pub struct RunStore {
+    dir: PathBuf,
+}
+
+impl RunStore {
+    /// Open (creating if needed) a run directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<RunStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create run dir {}", dir.display()))?;
+        Ok(RunStore { dir })
+    }
+
+    /// The shared root for run directories: `<results>/runs`.
+    pub fn runs_root() -> PathBuf {
+        Store::default_dir().join("runs")
+    }
+
+    /// Open `<results>/runs/<run-id>` — the standard place a named run
+    /// lives, and where a re-invocation looks to resume it.
+    pub fn for_run(run_id: &str) -> Result<RunStore> {
+        RunStore::open(Self::runs_root().join(run_id))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn trial_path(&self, trial: &Trial) -> PathBuf {
+        self.dir.join(format!("{}.json", trial.id()))
+    }
+
+    /// Path where a runner should persist this trial's checkpoint.
+    pub fn ckpt_path(&self, trial: &Trial) -> PathBuf {
+        self.dir.join(format!("{}.ckpt", trial.id()))
+    }
+
+    /// Load the record for `trial` if one exists.
+    ///
+    /// * no record       → `Ok(None)` (the executor will run it)
+    /// * intact record   → `Ok(Some(result))` (the executor skips it)
+    /// * corrupt record  → `Err` naming the file — truncated JSON, a
+    ///   record for a *different* trial under this name, or any parse
+    ///   failure. Deleting the named file re-runs the trial.
+    pub fn load(&self, trial: &Trial) -> Result<Option<TrialResult>> {
+        let path = self.trial_path(trial);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("read trial record {}", path.display())
+                })
+            }
+        };
+        let rec = self
+            .parse_record(trial, &text)
+            .with_context(|| {
+                format!("corrupt trial record {} (delete it to re-run \
+                         the trial)", path.display())
+            })?;
+        Ok(Some(rec))
+    }
+
+    fn parse_record(&self, trial: &Trial, text: &str)
+                    -> Result<TrialResult> {
+        let j = json::parse(text)?;
+        let rec_trial = Trial::from_json(j.get("trial")?)?;
+        anyhow::ensure!(
+            rec_trial.id() == trial.id(),
+            "record is for trial `{}`, expected `{}`",
+            rec_trial.id(), trial.id());
+        let result = TrialResult::from_json(j.get("result")?)?;
+        anyhow::ensure!(result.trial_id == trial.id(),
+                        "result trial_id `{}` does not match `{}`",
+                        result.trial_id, trial.id());
+        Ok(result)
+    }
+
+    /// Persist a completed trial atomically (temp file + rename).
+    ///
+    /// Non-finite results are refused: the JSON emitter would write a
+    /// bare `NaN`/`inf` token that no later load can parse, permanently
+    /// wedging the run directory. A diverged trial should fail loudly
+    /// here, not poison resume.
+    pub fn save(&self, trial: &Trial, result: &TrialResult) -> Result<()> {
+        anyhow::ensure!(
+            result.eval_mean.is_finite() && result.eval_std.is_finite(),
+            "trial `{}` produced a non-finite eval result (mean {}, std \
+             {}) — refusing to persist an unparseable record",
+            trial.id(), result.eval_mean, result.eval_std);
+        let record = Json::obj(vec![
+            ("id", Json::str(trial.id())),
+            ("trial", trial.to_json()),
+            ("result", result.to_json()),
+            ("time", Json::num(now_secs() as f64)),
+        ]);
+        let path = self.trial_path(trial);
+        self.write_atomic(&path, &record.to_string())
+    }
+
+    /// Write a named report (e.g. `pipeline.json`) into the run dir.
+    pub fn write_report(&self, name: &str, report: &Json)
+                        -> Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.json"));
+        self.write_atomic(&path, &report.to_string())?;
+        Ok(path)
+    }
+
+    fn write_atomic(&self, path: &Path, text: &str) -> Result<()> {
+        // unique temp per process: concurrent same-trial writers (two
+        // resumed runs racing) each rename a fully-written file
+        let tmp = path.with_extension(
+            format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitCfg;
+    use crate::rl::Algo;
+
+    fn trial(seed: u64) -> Trial {
+        Trial {
+            env: "pendulum".into(),
+            algo: Algo::Sac,
+            hidden: 16,
+            bits: BitCfg::new(4, 3, 8),
+            quant_on: true,
+            normalize: true,
+            steps: 500,
+            learning_starts: 100,
+            eval_episodes: 5,
+            seed,
+        }
+    }
+
+    fn tmp_store(tag: &str) -> (RunStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "qcontrol_runstore_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        (RunStore::open(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (s, dir) = tmp_store("rt");
+        let t = trial(1);
+        assert!(s.load(&t).unwrap().is_none());
+        let r = TrialResult { trial_id: t.id(), eval_mean: -150.5,
+                              eval_std: 12.25, ckpt: None };
+        s.save(&t, &r).unwrap();
+        assert_eq!(s.load(&t).unwrap().unwrap(), r);
+        // a different trial still reports no record
+        assert!(s.load(&trial(2)).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_finite_results_are_refused() {
+        let (s, dir) = tmp_store("nan");
+        let t = trial(1);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let r = TrialResult { trial_id: t.id(), eval_mean: bad,
+                                  eval_std: 0.0, ckpt: None };
+            let err = s.save(&t, &r).unwrap_err().to_string();
+            assert!(err.contains("non-finite"), "{err}");
+        }
+        // nothing was written — the trial still reads as not-yet-run
+        assert!(s.load(&t).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_record_is_an_error() {
+        let (s, dir) = tmp_store("corrupt");
+        let t = trial(1);
+        let r = TrialResult { trial_id: t.id(), eval_mean: 1.0,
+                              eval_std: 0.0, ckpt: None };
+        s.save(&t, &r).unwrap();
+        let path = dir.join(format!("{}.json", t.id()));
+
+        // truncation
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = s.load(&t).unwrap_err().to_string();
+        assert!(err.contains(&t.id()), "{err}");
+
+        // garbage
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(s.load(&t).is_err());
+
+        // a record for a *different* trial stored under this name
+        let other = trial(9);
+        let rec = Json::obj(vec![
+            ("id", Json::str(other.id())),
+            ("trial", other.to_json()),
+            ("result", TrialResult { trial_id: other.id(), eval_mean: 2.0,
+                                     eval_std: 0.0, ckpt: None }.to_json()),
+        ]);
+        std::fs::write(&path, rec.to_string()).unwrap();
+        let err = s.load(&t).unwrap_err();
+        assert!(format!("{err:#}").contains("is for trial"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

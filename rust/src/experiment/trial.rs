@@ -1,0 +1,273 @@
+//! First-class experiment trials.
+//!
+//! A [`Trial`] is one (env × algo × hidden × bits × quant gate × seed ×
+//! step budget) training-plus-evaluation point. Its identity is derived
+//! entirely from its content — [`Trial::id`] hashes a canonical
+//! descriptor — so two trials with the same configuration are the *same*
+//! trial no matter which plan, process, or worker thread produced them.
+//! That content-derived identity is what makes the executor's resume and
+//! deduplication safe, and what keeps results bit-identical at any
+//! `--jobs` value: every source of randomness in a trial run is seeded
+//! from the trial itself, never from execution order.
+
+use anyhow::{Context, Result};
+
+use crate::quant::BitCfg;
+use crate::rl::Algo;
+use crate::util::json::Json;
+
+/// FNV-1a 64-bit over a descriptor string (stable across platforms and
+/// releases; no dependency on `DefaultHasher`'s unspecified algorithm).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Short stable fingerprint for naming run directories after a
+/// configuration: same parts → same name, any change → a new directory.
+pub fn fingerprint(parts: &[&str]) -> String {
+    format!("{:08x}", fnv1a64(&parts.join("|")) as u32 as u64)
+}
+
+/// One trainable + evaluable experiment point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trial {
+    pub env: String,
+    pub algo: Algo,
+    pub hidden: usize,
+    pub bits: BitCfg,
+    /// false = FP32 baseline (QDQ gate bypassed exactly)
+    pub quant_on: bool,
+    /// running input normalization (paper Appendix C)
+    pub normalize: bool,
+    pub steps: usize,
+    pub learning_starts: usize,
+    pub eval_episodes: usize,
+    /// training seed; the eval seed is derived from it (`seed ^ 0xe7a1`,
+    /// matching the historical sweep protocol)
+    pub seed: u64,
+}
+
+impl Trial {
+    /// Canonical content descriptor — every field, one stable format.
+    /// This is the hashed identity; extend it whenever `Trial` grows a
+    /// field that affects results.
+    fn descriptor(&self) -> String {
+        format!("v1|{}|{}|h{}|b{},{},{}|q{}|n{}|s{}|t{}|ls{}|e{}",
+                self.algo.name(), self.env, self.hidden, self.bits.b_in,
+                self.bits.b_core, self.bits.b_out, self.quant_on as u8,
+                self.normalize as u8, self.seed, self.steps,
+                self.learning_starts, self.eval_episodes)
+    }
+
+    /// Deterministic content-derived id: a human-readable prefix plus the
+    /// 64-bit descriptor hash. Filename-safe (used as the trial's record
+    /// name inside a run directory).
+    pub fn id(&self) -> String {
+        format!("{}-{}-h{}-b{}-{}-{}-{}-s{}-{:016x}",
+                self.algo.name(), self.env, self.hidden, self.bits.b_in,
+                self.bits.b_core, self.bits.b_out,
+                if self.quant_on { "q" } else { "fp32" }, self.seed,
+                fnv1a64(&self.descriptor()))
+    }
+
+    /// Seed for the post-training evaluation rollouts, derived from the
+    /// trial (never from execution order).
+    pub fn eval_seed(&self) -> u64 {
+        self.seed ^ 0xe7a1
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("env", Json::str(&self.env)),
+            ("algo", Json::str(self.algo.name())),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("b_in", Json::num(self.bits.b_in as f64)),
+            ("b_core", Json::num(self.bits.b_core as f64)),
+            ("b_out", Json::num(self.bits.b_out as f64)),
+            ("quant_on", Json::Bool(self.quant_on)),
+            ("normalize", Json::Bool(self.normalize)),
+            ("steps", Json::num(self.steps as f64)),
+            ("learning_starts", Json::num(self.learning_starts as f64)),
+            ("eval_episodes", Json::num(self.eval_episodes as f64)),
+            // string, not number: u64 seeds above 2^53 would round
+            // through the f64 JSON number and break the record's
+            // identity check on resume
+            ("seed", Json::str(self.seed.to_string())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trial> {
+        Ok(Trial {
+            env: j.get("env")?.as_str()?.to_string(),
+            algo: Algo::parse(j.get("algo")?.as_str()?)?,
+            hidden: j.get("hidden")?.as_usize()?,
+            bits: BitCfg::new(j.get("b_in")?.as_usize()? as u32,
+                              j.get("b_core")?.as_usize()? as u32,
+                              j.get("b_out")?.as_usize()? as u32),
+            quant_on: j.get("quant_on")?.as_bool()?,
+            normalize: j.get("normalize")?.as_bool()?,
+            steps: j.get("steps")?.as_usize()?,
+            learning_starts: j.get("learning_starts")?.as_usize()?,
+            eval_episodes: j.get("eval_episodes")?.as_usize()?,
+            seed: j
+                .get("seed")?
+                .as_str()?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trial seed: {e}"))?,
+        })
+    }
+
+    /// Checkpoint header for this trial, shaped exactly like the one
+    /// `qcontrol train` writes so `export`/`serve --ckpt` accept trial
+    /// checkpoints unchanged.
+    pub fn ckpt_meta(&self) -> Json {
+        Json::obj(vec![
+            ("env", Json::str(&self.env)),
+            ("algo", Json::str(self.algo.name())),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("b_in", Json::num(self.bits.b_in as f64)),
+            ("b_core", Json::num(self.bits.b_core as f64)),
+            ("b_out", Json::num(self.bits.b_out as f64)),
+            ("quant_on", Json::Bool(self.quant_on)),
+            ("steps", Json::num(self.steps as f64)),
+            ("trial", Json::str(self.id())),
+        ])
+    }
+}
+
+/// What a completed trial hands back. Deliberately *only* deterministic
+/// quantities — wall-clock rates live in the executor's stats, so two
+/// runs of the same trial compare equal byte-for-byte.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialResult {
+    pub trial_id: String,
+    /// mean return of the post-training evaluation rollouts
+    pub eval_mean: f64,
+    /// std of the evaluation rollouts
+    pub eval_std: f64,
+    /// checkpoint path, when the runner was asked to persist weights
+    pub ckpt: Option<String>,
+}
+
+impl TrialResult {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("trial_id", Json::str(&self.trial_id)),
+            ("eval_mean", Json::num(self.eval_mean)),
+            ("eval_std", Json::num(self.eval_std)),
+        ];
+        if let Some(c) = &self.ckpt {
+            pairs.push(("ckpt", Json::str(c)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrialResult> {
+        Ok(TrialResult {
+            trial_id: j.get("trial_id")?.as_str()?.to_string(),
+            eval_mean: j.get("eval_mean")?.as_f64()?,
+            eval_std: j.get("eval_std")?.as_f64()?,
+            ckpt: match j.opt("ckpt") {
+                Some(c) => Some(c.as_str().context("ckpt")?.to_string()),
+                None => None,
+            },
+        })
+    }
+}
+
+/// How trials get executed. The executor is generic over this so the
+/// scheduling/resume machinery is testable without PJRT artifacts, and so
+/// surrogate runners (benches, CI smoke) can drive the identical code
+/// path as real training.
+///
+/// `Sync` because one runner instance is shared by every worker thread.
+/// Implementations must derive all randomness from the trial itself.
+pub trait TrialRunner: Sync {
+    fn run(&self, trial: &Trial) -> Result<TrialResult>;
+}
+
+impl<F> TrialRunner for F
+where
+    F: Fn(&Trial) -> Result<TrialResult> + Sync,
+{
+    fn run(&self, trial: &Trial) -> Result<TrialResult> {
+        self(trial)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(seed: u64) -> Trial {
+        Trial {
+            env: "pendulum".into(),
+            algo: Algo::Sac,
+            hidden: 16,
+            bits: BitCfg::new(4, 3, 8),
+            quant_on: true,
+            normalize: true,
+            steps: 1500,
+            learning_starts: 300,
+            eval_episodes: 5,
+            seed,
+        }
+    }
+
+    #[test]
+    fn id_is_content_derived() {
+        assert_eq!(trial(1).id(), trial(1).id());
+        assert_ne!(trial(1).id(), trial(2).id());
+        let mut t = trial(1);
+        t.bits = BitCfg::new(4, 2, 8);
+        assert_ne!(t.id(), trial(1).id());
+        let mut t = trial(1);
+        t.quant_on = false;
+        assert_ne!(t.id(), trial(1).id());
+    }
+
+    #[test]
+    fn id_shape_stable() {
+        // the id doubles as an on-disk filename; keep its shape pinned
+        let id = trial(3).id();
+        assert!(id.starts_with("sac-pendulum-h16-b4-3-8-q-s3-"), "{id}");
+        assert!(id.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'),
+                "{id}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = trial(7);
+        let back = Trial::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.id(), back.id());
+
+        // seeds above 2^53 must survive (they'd round through an f64
+        // JSON number and poison the record identity check on resume)
+        let t = trial(9_234_567_890_123_456_789);
+        let back = Trial::from_json(&t.to_json()).unwrap();
+        assert_eq!(t.seed, back.seed);
+        assert_eq!(t.id(), back.id());
+
+        let r = TrialResult {
+            trial_id: t.id(),
+            eval_mean: -123.456789,
+            eval_std: 0.25,
+            ckpt: Some("runs/x.ckpt".into()),
+        };
+        let back = TrialResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // reference vectors for the standard FNV-1a 64 parameters
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -24,4 +24,5 @@ pub mod policy;
 pub mod synth;
 pub mod runtime;
 pub mod rl;
+pub mod experiment;
 pub mod coordinator;

@@ -1,28 +1,34 @@
 //! `qcontrol` — leader entrypoint for the learning-to-hardware pipeline.
 //!
 //! Subcommands:
-//!   train    train one policy (SAC/DDPG, quantized or FP32) and checkpoint
-//!   eval     evaluate a checkpoint (optionally with input noise / backends)
-//!   sweep    Fig.1-style bitwidth sweep for one env
-//!   select   staged model selection (paper §3.2)
-//!   synth    synthesize a config to the XC7A15T model (Table 3 row)
-//!   export   convert a checkpoint into a deployable .qpol artifact
-//!   serve    run the integer action server over TCP (ckpt or artifact dir)
-//!   info     artifact/manifest summary
+//!   train     train one policy (SAC/DDPG, quantized or FP32) and checkpoint
+//!   eval      evaluate a checkpoint (optionally with input noise / backends)
+//!   sweep     Fig.1-style bitwidth sweep for one env (parallel, resumable)
+//!   select    staged model selection (paper §3.2; parallel, resumable)
+//!   pipeline  one-shot select → export → synth, emits pipeline.json
+//!   synth     synthesize a config to the XC7A15T model (Table 3 row)
+//!   export    convert a checkpoint into a deployable .qpol artifact
+//!   serve     run the integer action server over TCP (ckpt or artifact dir)
+//!   info      artifact/manifest summary
 //!
 //! Examples:
 //!   qcontrol train --env pendulum --hidden 16 --bits 4,3,8 --steps 3000
+//!   qcontrol pipeline --env pendulum --seeds 3 --jobs 8
 //!   qcontrol export --ckpt results/pendulum_sac.ckpt --out pols/pend.qpol
 //!   qcontrol serve --dir pols --default pend --port 7777
 
 use anyhow::{Context, Result};
 
-use qcontrol::coordinator::select::{paper_table1, SelectProtocol};
+use qcontrol::coordinator::pipeline::{build_artifact, pipeline_run_name,
+                                      run_pipeline};
+use qcontrol::coordinator::select::{paper_table1, select_model_on,
+                                    select_run_name, usable_widths,
+                                    SelectProtocol, SelectReport};
 use qcontrol::coordinator::serving;
 use qcontrol::coordinator::store::{now_secs, Store};
-use qcontrol::coordinator::sweep::{fp32_band, run_config, Scope,
+use qcontrol::coordinator::sweep::{run_sweep, sweep_run_name, Scope,
                                    SweepProtocol};
-use qcontrol::coordinator::select_model;
+use qcontrol::experiment::{Executor, RlRunner, RunStore};
 use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
@@ -43,6 +49,25 @@ fn parse_bits(a: &Args) -> Result<BitCfg> {
     }
 }
 
+/// Worker pool for the experiment commands: `--jobs N`, falling back to
+/// `QCONTROL_JOBS`, falling back to the machine's parallelism. Malformed
+/// values are errors in all three places.
+fn executor_from(a: &Args) -> Result<Executor> {
+    Executor::from_flag_or_env(a.str_opt("jobs"))
+}
+
+/// Shared `--steps` / `--seeds` overrides for sweep/select/pipeline
+/// (env vars `QCONTROL_STEPS` / `QCONTROL_SEEDS` stay as the fallback).
+fn apply_protocol_flags(a: &Args, proto: &mut SweepProtocol) -> Result<()> {
+    proto.steps = a.usize("steps", proto.steps)?;
+    proto.learning_starts = (proto.steps / 5).max(200);
+    if let Some(s) = a.str_opt("seeds") {
+        let n: u64 = s.parse().with_context(|| format!("--seeds={s}"))?;
+        *proto = proto.clone().with_seed_count(n)?;
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let cmd = args
@@ -55,13 +80,20 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
         "select" => cmd_select(&args),
+        "pipeline" => cmd_pipeline(&args),
         "synth" => cmd_synth(&args),
         "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
-        "help" | _ => {
+        // (`--help` never reaches here: `--`-prefixed tokens are flags,
+        // so `qcontrol --help` lands on the empty-positional default)
+        "help" | "-h" => {
             println!("{}", HELP);
             Ok(())
+        }
+        other => {
+            // nonzero exit: an unknown subcommand is an error, not help
+            anyhow::bail!("unknown command `{other}`, see `qcontrol help`")
         }
     }
 }
@@ -71,20 +103,29 @@ qcontrol — quantized continuous controllers for integer hardware
 
 usage: qcontrol <cmd> [--flags]
 
-  train   --env E [--algo sac|ddpg] [--hidden H] [--bits i,c,o]
-          [--fp32] [--steps N] [--seed S] [--ckpt PATH] [--verbose]
-  eval    --ckpt PATH [--episodes N] [--noise SIGMA]
-          [--backend pjrt|fakequant|fp32|int]
-  sweep   --env E [--scopes all,input,output,core] [--bits 8,6,4,3,2]
-  select  --env E
-  synth   --env E [--hidden H] [--bits i,c,o]  (defaults: paper Table 1)
-  export  --ckpt PATH [--out FILE.qpol] [--id ID]
-          (checkpoint -> versioned integer .qpol artifact)
-  serve   --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
-          [--max-batch N] [--max-connections N]
-          (--dir serves every .qpol in ARTIFACTS, routed by policy id
-           over the v2 wire protocol; v1 clients get the default policy)
-  info";
+  train    --env E [--algo sac|ddpg] [--hidden H] [--bits i,c,o]
+           [--fp32] [--steps N] [--seed S] [--ckpt PATH] [--verbose]
+  eval     --ckpt PATH [--episodes N] [--noise SIGMA]
+           [--backend pjrt|fakequant|fp32|int]
+  sweep    --env E [--scopes all,input,output,core] [--bits 8,6,4,3,2]
+           [--steps N] [--seeds N] [--jobs N]
+  select   --env E [--steps N] [--seeds N] [--jobs N]
+  pipeline --env E [--steps N] [--seeds N] [--jobs N] [--clock-hz HZ]
+           (staged selection -> .qpol export -> XC7A15T synthesis at
+            HZ (default 1e8); emits results/runs/<run-id>/pipeline.json)
+  synth    --env E [--hidden H] [--bits i,c,o]  (defaults: paper Table 1)
+  export   --ckpt PATH [--out FILE.qpol] [--id ID]
+           (checkpoint -> versioned integer .qpol artifact)
+  serve    --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
+           [--max-batch N] [--max-connections N]
+           (--dir serves every .qpol in ARTIFACTS, routed by policy id
+            over the v2 wire protocol; v1 clients get the default policy)
+  info
+
+sweep/select/pipeline run trials on a parallel executor (--jobs /
+QCONTROL_JOBS, default: all cores; results are bit-identical at any
+jobs value) and persist one record per trial under results/runs/ —
+re-running the same configuration resumes, skipping finished trials.";
 
 fn cmd_train(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
@@ -182,8 +223,8 @@ fn cmd_sweep(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
     let env = a.str("env", "pendulum");
     let algo = Algo::parse(&a.str("algo", "sac"))?;
-    let mut proto = SweepProtocol::from_env();
-    proto.steps = a.usize("steps", proto.steps)?;
+    let mut proto = SweepProtocol::from_env()?;
+    apply_protocol_flags(a, &mut proto)?;
     proto.hidden = a.usize("hidden",
                            if env == "pendulum" { 64 } else { 256 })?;
     let scopes: Vec<Scope> = a
@@ -205,53 +246,116 @@ fn cmd_sweep(a: &Args) -> Result<()> {
                         "--bits: width {b} out of range ({}..={})",
                         range.start(), range.end());
     }
+    let bits: Vec<u32> = bits.into_iter().map(|b| b as u32).collect();
 
-    println!("sweep {env} ({})", proto.describe());
-    let fp32 = fp32_band(&rt, algo, &env, &proto, true)?;
-    println!("FP32 band: {:.1} ± {:.1}", fp32.mean, fp32.std);
+    let exec = executor_from(a)?;
+    let run_store = RunStore::for_run(
+        &sweep_run_name(algo, &env, &proto, &scopes, &bits))?;
+    println!("sweep {env} ({}, {} jobs)", proto.describe(), exec.jobs());
+    println!("run dir {} (completed trials are skipped on re-run)",
+             run_store.dir().display());
+
+    let report = run_sweep(&RlRunner::new(&rt), algo, &env, &proto,
+                           &scopes, &bits, &exec, Some(&run_store))?;
+    println!("FP32 band: {:.1} ± {:.1}", report.fp32.mean,
+             report.fp32.std);
     let mut table = Table::new(&["scope", "bits (i,c,o)", "return",
                                  "matches FP32"]);
     let store = Store::open(Store::default_dir())?;
-    for scope in scopes {
-        for &b in &bits {
-            let cfg = scope.bits(b as u32);
-            let p = run_config(&rt, algo, &env, &proto, proto.hidden,
-                               cfg, true,
-                               &format!("{}-{cfg}", scope.name()))?;
-            let ok = qcontrol::coordinator::sweep::matches_fp32(&p, &fp32);
-            table.row(vec![scope.name().into(), cfg.to_string(),
-                           format!("{:.1} ± {:.1}", p.mean, p.std),
-                           if ok { "yes" } else { "no" }.into()]);
-            store.append("sweep", Json::obj(vec![
-                ("env", Json::str(&env)),
-                ("scope", Json::str(scope.name())),
-                ("bits", Json::num(b as f64)),
-                ("mean", Json::num(p.mean)),
-                ("std", Json::num(p.std)),
-                ("fp32_mean", Json::num(fp32.mean)),
-                ("fp32_std", Json::num(fp32.std)),
-                ("steps", Json::num(proto.steps as f64)),
-                ("time", Json::num(now_secs() as f64)),
-            ]))?;
-        }
+    for row in &report.rows {
+        table.row(vec![row.scope.name().into(), row.cfg.to_string(),
+                       format!("{:.1} ± {:.1}", row.point.mean,
+                               row.point.std),
+                       if row.in_band { "yes" } else { "no" }.into()]);
+        store.append("sweep", Json::obj(vec![
+            ("env", Json::str(&env)),
+            ("scope", Json::str(row.scope.name())),
+            ("bits", Json::num(row.width as f64)),
+            ("mean", Json::num(row.point.mean)),
+            ("std", Json::num(row.point.std)),
+            ("fp32_mean", Json::num(report.fp32.mean)),
+            ("fp32_std", Json::num(report.fp32.std)),
+            ("steps", Json::num(proto.steps as f64)),
+            ("time", Json::num(now_secs() as f64)),
+        ]))?;
     }
     table.print();
+    let report_path = run_store.write_report("sweep", &report.to_json())?;
+    let stats = exec.stats();
+    println!("{} trial(s) trained, {} resumed from run dir; report -> {}",
+             stats.executed, stats.cached, report_path.display());
     Ok(())
+}
+
+fn print_select_report(out: &SelectReport) {
+    println!("FP32: {:.1} ± {:.1}", out.fp32.mean, out.fp32.std);
+    for o in &out.trail {
+        println!("  [{:>5}] {:<14} {:>9.1} ± {:<8.1} {}",
+                 o.stage.name(), o.label, o.point.mean, o.point.std,
+                 if o.matched { "match" } else { "below band" });
+    }
+    println!("selected: h={} bits={}", out.hidden, out.bits);
 }
 
 fn cmd_select(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
     let env = a.str("env", "pendulum");
-    let mut proto = SelectProtocol::from_env();
-    proto.sweep.steps = a.usize("steps", proto.sweep.steps)?;
-    println!("staged selection on {env} ({})", proto.sweep.describe());
-    let out = select_model(&rt, &env, &proto)?;
-    println!("FP32: {:.1} ± {:.1}", out.fp32.mean, out.fp32.std);
-    for (stage, label, mean, std, ok) in &out.trail {
-        println!("  [{stage:>5}] {label:<12} {mean:>9.1} ± {std:<8.1} {}",
-                 if *ok { "match" } else { "below band" });
-    }
-    println!("selected: h={} bits={}", out.hidden, out.bits);
+    let mut proto = SelectProtocol::from_env()?;
+    apply_protocol_flags(a, &mut proto.sweep)?;
+    proto.widths = usable_widths(&rt, &env, &proto.widths)?;
+    let exec = executor_from(a)?;
+    let run_store = RunStore::for_run(&select_run_name(&env, &proto))?;
+    println!("staged selection on {env} ({}, {} jobs)",
+             proto.sweep.describe(), exec.jobs());
+    println!("run dir {} (completed trials are skipped on re-run)",
+             run_store.dir().display());
+    let out = select_model_on(&RlRunner::new(&rt), &env, &proto, &exec,
+                              Some(&run_store))?;
+    print_select_report(&out);
+    let report_path = run_store.write_report("select", &out.to_json())?;
+    let stats = exec.stats();
+    println!("{} trial(s) trained, {} resumed, {} deduped; report -> {}",
+             stats.executed, stats.cached, stats.deduped,
+             report_path.display());
+    Ok(())
+}
+
+fn cmd_pipeline(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let env = a.str("env", "pendulum");
+    let mut proto = SelectProtocol::from_env()?;
+    apply_protocol_flags(a, &mut proto.sweep)?;
+    // filter before naming the run dir: the fingerprint must match the
+    // widths the pipeline actually sweeps
+    proto.widths = usable_widths(&rt, &env, &proto.widths)?;
+    let exec = executor_from(a)?;
+    let clock_hz = a.f64("clock-hz", 1e8)?;
+    println!("pipeline {env}: select -> export -> synth ({}, {} jobs)",
+             proto.sweep.describe(), exec.jobs());
+    println!("run dir {} (completed trials are skipped on re-run)",
+             RunStore::runs_root()
+                 .join(pipeline_run_name(&env, &proto))
+                 .display());
+
+    let run = run_pipeline(&rt, &env, &proto, &exec, clock_hz)?;
+    print_select_report(&run.select);
+    println!("exported `{}` -> {}", run.policy_id,
+             run.qpol_path.display());
+    println!("synthesis on {}:", XC7A15T.name);
+    println!("  LUT {:>6}/{}   FF {:>6}/{}   BRAM {:>5.1}/{}   DSP {:>3}/{}",
+             run.synth.design.luts(), XC7A15T.luts,
+             run.synth.design.ffs(), XC7A15T.ffs,
+             run.synth.design.bram36(), XC7A15T.bram36,
+             run.synth.design.dsps(), XC7A15T.dsps);
+    println!("  latency {}   throughput {:.1e} actions/s   P {:.2} W   \
+              E/action {:.2e} J",
+             qcontrol::util::human_time(run.synth.latency_s),
+             run.synth.throughput, run.synth.power.total_w,
+             run.synth.energy_per_action);
+    let stats = exec.stats();
+    println!("{} trial(s) trained, {} resumed, {} deduped",
+             stats.executed, stats.cached, stats.deduped);
+    println!("pipeline report -> {}", run.report_path.display());
     Ok(())
 }
 
@@ -302,18 +406,7 @@ fn artifact_from_ckpt(a: &Args) -> Result<PolicyArtifact> {
     let (_, flat, norm, env, algo, hidden, bits, quant_on) = load_ckpt(a)?;
     anyhow::ensure!(quant_on,
                     "export/serve requires a quantized checkpoint");
-    bits.validate()?;
     let manifest = Manifest::load(&default_artifact_dir())?;
-    let dims = *manifest
-        .envs
-        .get(&env)
-        .with_context(|| format!("unknown env {env}"))?;
-    let spec = manifest
-        .specs
-        .get(&format!("{}_{env}_h{hidden}", algo.name()))
-        .with_context(|| format!("no spec for {env} h={hidden}"))?;
-    let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim, hidden,
-                                      dims.act_dim)?;
     // id precedence: explicit --id, then the --out file stem (so
     // `export --out pols/pend.qpol` is addressable as `pend`), then a
     // descriptive default
@@ -327,11 +420,7 @@ fn artifact_from_ckpt(a: &Args) -> Result<PolicyArtifact> {
                                        bits.b_in, bits.b_core,
                                        bits.b_out)),
     };
-    let mut art = PolicyArtifact::new(
-        id, IntPolicy::from_tensors(&tensors, bits))
-        .with_normalizer(&norm);
-    art.env = env;
-    Ok(art)
+    build_artifact(&manifest, &env, algo, hidden, bits, &flat, &norm, id)
 }
 
 fn cmd_export(a: &Args) -> Result<()> {

@@ -12,6 +12,7 @@ pub mod policy;
 use anyhow::Result;
 
 use crate::envs;
+use crate::experiment::{Trial, TrialResult};
 use crate::quant::BitCfg;
 use crate::replay::Replay;
 use crate::runtime::Runtime;
@@ -342,5 +343,49 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainResult> {
         train_episode_returns,
         last_metrics,
         steps_per_sec,
+    })
+}
+
+/// A finished trial: the deterministic result record plus the full
+/// training output (weights + normalizer) for callers that export or
+/// checkpoint.
+pub struct TrialRun {
+    pub result: TrialResult,
+    pub train: TrainResult,
+}
+
+/// Trial-granular entry point: train one [`Trial`] and evaluate it with
+/// the trial-derived eval seed. Every source of randomness comes from
+/// the trial's own fields, so the outcome is independent of which
+/// executor worker (or process) runs it.
+pub fn run_trial(rt: &Runtime, trial: &Trial) -> Result<TrialRun> {
+    let mut cfg = TrainConfig::new(trial.algo, &trial.env);
+    cfg.hidden = trial.hidden;
+    cfg.bits = trial.bits;
+    cfg.quant_on = trial.quant_on;
+    cfg.normalize = trial.normalize;
+    cfg.total_steps = trial.steps;
+    cfg.learning_starts = trial.learning_starts;
+    cfg.seed = trial.seed;
+    let train = self::train(rt, &cfg)?;
+    let (eval_mean, eval_std) = evaluate(rt, &EvalOpts {
+        algo: trial.algo,
+        env: trial.env.clone(),
+        hidden: trial.hidden,
+        bits: trial.bits,
+        quant_on: trial.quant_on,
+        episodes: trial.eval_episodes,
+        noise_std: 0.0,
+        seed: trial.eval_seed(),
+        backend: EvalBackend::Pjrt,
+    }, &train.flat, &train.normalizer)?;
+    Ok(TrialRun {
+        result: TrialResult {
+            trial_id: trial.id(),
+            eval_mean,
+            eval_std,
+            ckpt: None,
+        },
+        train,
     })
 }

@@ -1,0 +1,222 @@
+//! Integration tests for the typed experiment API: executor determinism
+//! across worker counts, run-store resume, and corrupt-record handling.
+//! All artifact-free — a surrogate [`TrialRunner`] stands in for PJRT
+//! training, exercising the identical scheduling/persistence paths.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use qcontrol::experiment::{fnv1a64, Executor, ExperimentPlan, RunStore,
+                           Trial, TrialResult, TrialRunner,
+                           TrialTemplate};
+use qcontrol::quant::BitCfg;
+use qcontrol::rl::Algo;
+
+fn template() -> TrialTemplate {
+    TrialTemplate {
+        env: "pendulum".into(),
+        algo: Algo::Sac,
+        steps: 700,
+        learning_starts: 140,
+        eval_episodes: 5,
+        normalize: true,
+    }
+}
+
+/// (2 widths × 2 bit configs) × `seeds` grid.
+fn plan(seeds: u64) -> ExperimentPlan {
+    let mut p = ExperimentPlan::new("itest");
+    let cfgs = [
+        (16, BitCfg::new(8, 3, 8), true),
+        (16, BitCfg::new(8, 2, 8), true),
+        (32, BitCfg::new(8, 3, 8), true),
+        (32, BitCfg::new(4, 3, 8), true),
+    ];
+    let seeds: Vec<u64> = (1..=seeds).collect();
+    p.grid(&template(), &cfgs, &seeds);
+    p
+}
+
+/// Deterministic surrogate: the result is a pure function of the trial
+/// content, like real training with trial-derived seeding.
+fn fake(t: &Trial) -> anyhow::Result<TrialResult> {
+    let h = fnv1a64(&t.id());
+    Ok(TrialResult {
+        trial_id: t.id(),
+        eval_mean: (h % 4000) as f64 * 0.5 - 1000.0,
+        eval_std: (h % 31) as f64,
+        ckpt: None,
+    })
+}
+
+/// Runner that counts invocations (and optionally staggers completion
+/// order so parallel schedules genuinely interleave).
+struct Counting {
+    calls: AtomicUsize,
+    stagger: bool,
+}
+
+impl Counting {
+    fn new(stagger: bool) -> Counting {
+        Counting { calls: AtomicUsize::new(0), stagger }
+    }
+
+    fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl TrialRunner for Counting {
+    fn run(&self, t: &Trial) -> anyhow::Result<TrialResult> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        if self.stagger {
+            // trial-derived (not order-derived) delay: late seeds finish
+            // first, so a naive order-dependent collector would scramble
+            std::thread::sleep(std::time::Duration::from_millis(
+                fnv1a64(&t.id()) % 7,
+            ));
+        }
+        fake(t)
+    }
+}
+
+fn tmp_store(tag: &str) -> (RunStore, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "qcontrol_exp_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    (RunStore::open(&dir).unwrap(), dir)
+}
+
+/// (a) same plan at --jobs 1 vs --jobs N ⇒ bit-identical per-trial
+/// returns, including whatever QCONTROL_JOBS the CI matrix configured.
+#[test]
+fn results_identical_at_any_worker_count() {
+    let p = plan(3); // 12 trials
+    let reference = Executor::serial()
+        .run(&p, &Counting::new(false), None)
+        .unwrap();
+    assert_eq!(reference.len(), 12);
+    let env_jobs = Executor::from_env().unwrap().jobs();
+    for jobs in [2, 4, 16, env_jobs] {
+        let runner = Counting::new(true);
+        let got = Executor::new(jobs).unwrap().run(&p, &runner, None)
+            .unwrap();
+        assert_eq!(reference, got, "per-trial results diverged at \
+                                    jobs={jobs}");
+        assert_eq!(runner.calls(), 12);
+    }
+}
+
+/// (b) a store pre-seeded with half the records ⇒ only the missing half
+/// executes, and the combined results are identical to a cold run.
+#[test]
+fn resume_runs_only_missing_trials() {
+    let p = plan(2); // 8 trials
+    let (store, dir) = tmp_store("resume");
+    for t in &p.trials()[..4] {
+        store.save(t, &fake(t).unwrap()).unwrap();
+    }
+    let runner = Counting::new(true);
+    let exec = Executor::new(4).unwrap();
+    let got = exec.run(&p, &runner, Some(&store)).unwrap();
+    assert_eq!(runner.calls(), 4, "only the missing half may run");
+    assert_eq!(exec.stats().cached, 4);
+    assert_eq!(exec.stats().executed, 4);
+    let cold = Executor::serial().run(&p, &Counting::new(false), None)
+        .unwrap();
+    assert_eq!(cold, got);
+    // second invocation: everything cached, nothing runs
+    let runner2 = Counting::new(false);
+    let again = Executor::new(4).unwrap()
+        .run(&p, &runner2, Some(&store))
+        .unwrap();
+    assert_eq!(runner2.calls(), 0);
+    assert_eq!(again, got);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A run killed mid-way resumes exactly where it died: completed trials
+/// have atomic records, the failed one has none.
+#[test]
+fn interrupted_run_resumes_where_it_died() {
+    let p = plan(2); // 8 trials
+    let (store, dir) = tmp_store("interrupt");
+    let die_at = p.trials()[5].id();
+    let dying = |t: &Trial| -> anyhow::Result<TrialResult> {
+        if t.id() == die_at {
+            anyhow::bail!("simulated crash");
+        }
+        fake(t)
+    };
+    // serial: trials 0..5 complete and persist, then the run dies
+    let err = Executor::serial().run(&p, &dying, Some(&store))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("simulated crash"));
+
+    let runner = Counting::new(false);
+    let exec = Executor::new(3).unwrap();
+    let got = exec.run(&p, &runner, Some(&store)).unwrap();
+    assert_eq!(runner.calls(), 3, "five records survived; three to go");
+    assert_eq!(exec.stats().cached, 5);
+    assert_eq!(got, Executor::serial()
+               .run(&p, &Counting::new(false), None)
+               .unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// (c) corrupt / truncated trial records are reported with the file
+/// path — never silently treated as complete, never silently re-run.
+#[test]
+fn corrupt_record_reported_not_skipped() {
+    let p = plan(1); // 4 trials
+    let (store, dir) = tmp_store("corrupt");
+    let victim = &p.trials()[0];
+    store.save(victim, &fake(victim).unwrap()).unwrap();
+    let path = dir.join(format!("{}.json", victim.id()));
+
+    let full = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 3]).unwrap();
+
+    let runner = Counting::new(false);
+    let err = Executor::serial()
+        .run(&p, &runner, Some(&store))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&victim.id()), "error must name the record: \
+                                         {msg}");
+    assert!(msg.contains("delete it to re-run"), "{msg}");
+    assert_eq!(runner.calls(), 0,
+               "corruption is detected before anything runs");
+
+    // an intact store heals the run after the operator deletes the file
+    std::fs::remove_file(&path).unwrap();
+    let runner = Counting::new(false);
+    Executor::new(2).unwrap().run(&p, &runner, Some(&store)).unwrap();
+    assert_eq!(runner.calls(), 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Malformed protocol / executor env knobs are descriptive errors (the
+/// old behaviour silently fell back to defaults).
+#[test]
+fn env_knobs_are_strict() {
+    use qcontrol::coordinator::sweep::SweepProtocol;
+
+    for bad in ["12k", "abc", "-3", "1.5", ""] {
+        let err = SweepProtocol::from_parts(Some(bad), None);
+        assert!(err.is_err(), "QCONTROL_STEPS=`{bad}` must error");
+        let err = SweepProtocol::from_parts(None, Some(bad));
+        assert!(err.is_err(), "QCONTROL_SEEDS=`{bad}` must error");
+        assert!(Executor::parse_jobs(Some(bad)).is_err(),
+                "QCONTROL_JOBS=`{bad}` must error");
+    }
+    let msg = SweepProtocol::from_parts(Some("12k"), None)
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("QCONTROL_STEPS") && msg.contains("12k"),
+            "{msg}");
+    let msg = Executor::parse_jobs(Some("abc")).unwrap_err().to_string();
+    assert!(msg.contains("QCONTROL_JOBS") && msg.contains("abc"), "{msg}");
+    // unset and valid still work
+    assert!(SweepProtocol::from_parts(None, None).is_ok());
+    assert_eq!(Executor::parse_jobs(Some("6")).unwrap(), 6);
+}
