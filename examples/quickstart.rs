@@ -56,12 +56,11 @@ fn main() -> Result<()> {
                     EvalBackend::Integer] {
         let (mean, std) = rl::evaluate(&rt, &EvalOpts {
             algo: Algo::Sac,
-            env: "pendulum".into(),
+            scenario: qcontrol::envs::Scenario::bare("pendulum"),
             hidden,
             bits,
             quant_on: true,
             episodes: 10,
-            noise_std: 0.0,
             seed: 99,
             backend,
         }, &res.flat, &res.normalizer)?;

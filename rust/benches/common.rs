@@ -6,6 +6,9 @@
 //!   QCONTROL_STEPS=25000 QCONTROL_SEEDS=3 QCONTROL_JOBS=8 \
 //!     cargo bench --bench fig1_bitwidth
 
+// each bench includes this module and uses a different subset of it
+#![allow(dead_code)]
+
 use qcontrol::coordinator::sweep::SweepProtocol;
 use qcontrol::experiment::{Executor, RunStore};
 use qcontrol::runtime::{default_artifact_dir, Runtime};

@@ -130,6 +130,7 @@ impl SweepProtocol {
             learning_starts: self.learning_starts,
             eval_episodes: self.eval_episodes,
             normalize: self.normalize,
+            scenario: None,
         }
     }
 

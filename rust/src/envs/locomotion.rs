@@ -270,11 +270,9 @@ impl Env for Locomotion {
         self.obs()
     }
 
-    fn step(&mut self, action: &[f32]) -> StepOut {
-        let act: Vec<f64> = action
-            .iter()
-            .map(|&a| (a as f64).clamp(-1.0, 1.0))
-            .collect();
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        // [-1,1] is guaranteed by the Env::step boundary
+        let act: Vec<f64> = action.iter().map(|&a| a as f64).collect();
         let vx = self.sim.step(&act);
         self.steps += 1;
 

@@ -14,9 +14,15 @@
 
 pub mod locomotion;
 pub mod pendulum;
+pub mod scenario;
+pub mod vecpool;
+pub mod wrappers;
 
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+
+pub use scenario::{Perturb, Scenario};
+pub use vecpool::VecEnv;
 
 /// Step outcome (gym-style terminated/truncated split).
 #[derive(Clone, Debug)]
@@ -27,6 +33,18 @@ pub struct StepOut {
     pub truncated: bool,
 }
 
+/// One action component as the physics may see it: finite and in
+/// [-1,1]. Non-finite wire floats (a corrupt serving client can feed
+/// anything) become 0 rather than poisoning the simulation state.
+#[inline]
+fn sanitize_component(x: f32) -> f32 {
+    if x.is_finite() {
+        x.clamp(-1.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
 pub trait Env: Send {
     fn name(&self) -> &'static str;
     fn obs_dim(&self) -> usize;
@@ -34,8 +52,22 @@ pub trait Env: Send {
     fn max_steps(&self) -> usize;
     /// Reset with the given RNG; returns the initial observation.
     fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
-    /// Apply an action in [-1,1]^act_dim.
-    fn step(&mut self, action: &[f32]) -> StepOut;
+    /// Apply an action; implementations may assume every component is
+    /// finite and in [-1,1] — [`Env::step`] is the single boundary that
+    /// guarantees it.
+    fn step_raw(&mut self, action: &[f32]) -> StepOut;
+    /// Apply an action. Clamps each component to [-1,1] (non-finite → 0)
+    /// exactly once at the environment boundary, so neither the base
+    /// physics nor any wrapper ever sees an out-of-range actuator
+    /// command.
+    fn step(&mut self, action: &[f32]) -> StepOut {
+        if action.iter().all(|a| a.is_finite() && a.abs() <= 1.0) {
+            return self.step_raw(action);
+        }
+        let a: Vec<f32> =
+            action.iter().map(|&x| sanitize_component(x)).collect();
+        self.step_raw(&a)
+    }
 }
 
 /// All environment names, in the paper's table order.
@@ -102,6 +134,39 @@ mod tests {
                 }
                 assert!(steps <= env.max_steps(), "{name} never ends");
             }
+        }
+    }
+
+    #[test]
+    fn step_boundary_clamps_actions() {
+        // regression: serving can feed arbitrary wire floats into the
+        // physics; the Env::step boundary must sanitize them exactly once
+        for name in ENV_NAMES {
+            let mut a = make(name).unwrap();
+            let mut b = make(name).unwrap();
+            let mut ra = Rng::new(9);
+            let mut rb = Rng::new(9);
+            a.reset(&mut ra);
+            b.reset(&mut rb);
+            let n = a.act_dim();
+            // wild action and its hand-sanitized counterpart
+            let mut wild = vec![7.5f32; n];
+            let mut tame = vec![1.0f32; n];
+            wild[0] = f32::NAN;
+            tame[0] = 0.0;
+            if n > 1 {
+                wild[1] = f32::NEG_INFINITY;
+                tame[1] = 0.0;
+            }
+            if n > 2 {
+                wild[2] = -9.0;
+                tame[2] = -1.0;
+            }
+            let oa = a.step(&wild);
+            let ob = b.step(&tame);
+            assert_eq!(oa.obs, ob.obs, "{name}");
+            assert_eq!(oa.reward, ob.reward, "{name}");
+            assert!(oa.obs.iter().all(|v| v.is_finite()), "{name}");
         }
     }
 

@@ -69,8 +69,9 @@ impl Env for Pendulum {
         self.obs()
     }
 
-    fn step(&mut self, action: &[f32]) -> StepOut {
-        let u = (action[0] as f64).clamp(-1.0, 1.0) * MAX_TORQUE;
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        // [-1,1] is guaranteed by the Env::step boundary
+        let u = action[0] as f64 * MAX_TORQUE;
         let th = angle_normalize(self.theta);
         let cost = th * th + 0.1 * self.theta_dot * self.theta_dot
             + 0.001 * u * u;

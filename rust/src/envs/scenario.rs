@@ -1,0 +1,377 @@
+//! Composable evaluation scenarios: a typed perturbation spec with a
+//! parse/Display round-trip grammar.
+//!
+//! ## Grammar
+//!
+//! ```text
+//! scenario  := env ( '+' atom )*
+//! atom      := op ':' value | preset
+//! op        := obsnoise | dropout | obsquant | delay | hold
+//!            | actscale | domainrand
+//! ```
+//!
+//! e.g. `hopper+obsnoise:0.05+delay:2+actscale:0.8`, or with a preset,
+//! `hopper+flaky-sensors`. Presets expand at parse time, so
+//! `Display` always prints the fully expanded canonical form and
+//! `Scenario::parse ∘ Display` is the identity on values.
+//!
+//! A scenario *builds* an environment: the base env wrapped by one
+//! [`wrappers`] layer per atom, applied left to right (leftmost atom is
+//! the innermost wrapper). Observation atoms conventionally sit above
+//! the evaluation normalizer (see [`crate::rl::evaluate`]), so
+//! `obsnoise:σ` reproduces the paper's §3.3 convention of noise on the
+//! *normalized* state.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{wrappers, Env};
+
+/// One perturbation atom of the scenario grammar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Perturb {
+    /// Gaussian noise on every observation component: ε ~ N(0, σ²).
+    ObsNoise(f64),
+    /// Each observation component reads 0 with probability p per step.
+    Dropout(f64),
+    /// Observations snapped to a signed b-bit lattice over ±10.
+    ObsQuant(u32),
+    /// Actions applied k steps late (zeros for the first k).
+    Delay(usize),
+    /// Actions latched every k-th step (zero-order hold).
+    Hold(usize),
+    /// Fixed actuator gain on every action component.
+    ActScale(f64),
+    /// Per-episode random sensor/actuator gains in [1-s, 1+s].
+    DomainRand(f64),
+}
+
+impl Perturb {
+    /// Parse one `op:value` atom.
+    pub fn parse(atom: &str) -> Result<Perturb> {
+        let (op, val) = atom.split_once(':').with_context(|| {
+            format!("scenario atom `{atom}` is not `op:value` or a \
+                     preset name ({})", preset_names().join("|"))
+        })?;
+        let f = || -> Result<f64> {
+            let v: f64 = val
+                .parse()
+                .with_context(|| format!("scenario atom `{atom}`"))?;
+            ensure!(v.is_finite(), "scenario atom `{atom}`: non-finite");
+            Ok(v)
+        };
+        let k = || -> Result<usize> {
+            val.parse()
+                .with_context(|| format!("scenario atom `{atom}`"))
+        };
+        let p = match op {
+            "obsnoise" => {
+                let v = f()?;
+                ensure!(v >= 0.0, "obsnoise: σ must be ≥ 0, got {v}");
+                Perturb::ObsNoise(v)
+            }
+            "dropout" => {
+                let v = f()?;
+                ensure!((0.0..=1.0).contains(&v),
+                        "dropout: p must be in [0,1], got {v}");
+                Perturb::Dropout(v)
+            }
+            "obsquant" => {
+                let b = k()?;
+                ensure!((1..=16).contains(&b),
+                        "obsquant: bits must be in 1..=16, got {b}");
+                Perturb::ObsQuant(b as u32)
+            }
+            "delay" => {
+                let v = k()?;
+                ensure!((1..=64).contains(&v),
+                        "delay: steps must be in 1..=64, got {v}");
+                Perturb::Delay(v)
+            }
+            "hold" => {
+                let v = k()?;
+                ensure!((1..=64).contains(&v),
+                        "hold: steps must be in 1..=64, got {v}");
+                Perturb::Hold(v)
+            }
+            "actscale" => {
+                let v = f()?;
+                ensure!(v > 0.0 && v <= 4.0,
+                        "actscale: gain must be in (0,4], got {v}");
+                Perturb::ActScale(v)
+            }
+            "domainrand" => {
+                let v = f()?;
+                ensure!((0.0..1.0).contains(&v),
+                        "domainrand: spread must be in [0,1), got {v}");
+                Perturb::DomainRand(v)
+            }
+            other => bail!(
+                "unknown scenario op `{other}` \
+                 (obsnoise|dropout|obsquant|delay|hold|actscale|domainrand)"
+            ),
+        };
+        Ok(p)
+    }
+
+    /// Stack this atom's wrapper over `env`.
+    pub fn wrap(&self, env: Box<dyn Env>) -> Box<dyn Env> {
+        match *self {
+            Perturb::ObsNoise(s) => wrappers::ObsNoise::wrap(env, s),
+            Perturb::Dropout(p) => wrappers::SensorDropout::wrap(env, p),
+            Perturb::ObsQuant(b) => wrappers::ObsQuant::wrap(env, b),
+            Perturb::Delay(k) => wrappers::ActDelay::wrap(env, k),
+            Perturb::Hold(k) => wrappers::ActHold::wrap(env, k),
+            Perturb::ActScale(g) => wrappers::ActScale::wrap(env, g),
+            Perturb::DomainRand(s) => wrappers::DomainRand::wrap(env, s),
+        }
+    }
+}
+
+impl std::fmt::Display for Perturb {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Perturb::ObsNoise(v) => write!(f, "obsnoise:{v}"),
+            Perturb::Dropout(v) => write!(f, "dropout:{v}"),
+            Perturb::ObsQuant(b) => write!(f, "obsquant:{b}"),
+            Perturb::Delay(k) => write!(f, "delay:{k}"),
+            Perturb::Hold(k) => write!(f, "hold:{k}"),
+            Perturb::ActScale(v) => write!(f, "actscale:{v}"),
+            Perturb::DomainRand(v) => write!(f, "domainrand:{v}"),
+        }
+    }
+}
+
+/// Named perturbation presets (env-independent): `(name, suffix)`.
+/// `hopper+flaky-sensors` parses as `hopper+dropout:0.05+obsnoise:0.05`.
+pub const PRESETS: &[(&str, &str)] = &[
+    ("nominal", ""),
+    ("sensor-noise", "obsnoise:0.1"),
+    ("flaky-sensors", "dropout:0.05+obsnoise:0.05"),
+    ("coarse-adc", "obsquant:4"),
+    ("laggy-actuators", "delay:2"),
+    ("slow-controller", "hold:4"),
+    ("weak-motors", "actscale:0.7"),
+    ("sim2real", "domainrand:0.1+obsnoise:0.05+delay:1"),
+];
+
+fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|&(n, _)| n).collect()
+}
+
+/// Look up a preset's perturbation list by name.
+pub fn preset(name: &str) -> Option<Vec<Perturb>> {
+    let (_, suffix) = PRESETS.iter().find(|&&(n, _)| n == name)?;
+    Some(parse_atoms(suffix).expect("built-in preset must parse"))
+}
+
+/// Parse a `+`-joined atom list ("" → empty). Presets expand in place.
+fn parse_atoms(suffix: &str) -> Result<Vec<Perturb>> {
+    let mut out = Vec::new();
+    if suffix.is_empty() {
+        return Ok(out);
+    }
+    for atom in suffix.split('+') {
+        ensure!(!atom.is_empty(), "empty scenario atom in `{suffix}`");
+        if let Some(ps) = preset(atom) {
+            out.extend(ps);
+        } else {
+            out.push(Perturb::parse(atom)?);
+        }
+    }
+    Ok(out)
+}
+
+/// A fully specified evaluation condition: which environment, under
+/// which perturbation stack. The canonical string form round-trips
+/// through [`Scenario::parse`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub env: String,
+    pub perturbs: Vec<Perturb>,
+}
+
+impl Scenario {
+    /// The unperturbed environment.
+    pub fn bare(env: &str) -> Scenario {
+        Scenario { env: env.to_string(), perturbs: Vec::new() }
+    }
+
+    /// Parse the full grammar: `env(+atom)*`.
+    pub fn parse(s: &str) -> Result<Scenario> {
+        let s = s.trim();
+        ensure!(!s.is_empty(), "empty scenario spec");
+        let (env, suffix) = match s.split_once('+') {
+            None => (s, ""),
+            Some((e, rest)) => (e, rest),
+        };
+        ensure!(!env.is_empty() && !env.contains(':'),
+                "scenario `{s}` must start with an env name");
+        Ok(Scenario {
+            env: env.to_string(),
+            perturbs: parse_atoms(suffix)?,
+        })
+    }
+
+    /// Parse a perturbation-only suffix against a known env.
+    /// `""` and `"nominal"` both mean the bare environment.
+    pub fn parse_suffix(env: &str, suffix: &str) -> Result<Scenario> {
+        Ok(Scenario {
+            env: env.to_string(),
+            perturbs: parse_atoms(suffix.trim())?,
+        })
+    }
+
+    pub fn is_bare(&self) -> bool {
+        self.perturbs.is_empty()
+    }
+
+    /// Canonical `+`-joined atom list, without the env ("" when bare).
+    /// This is what [`crate::experiment::Trial`] stores and folds into
+    /// its content-derived id.
+    pub fn suffix(&self) -> String {
+        self.perturbs
+            .iter()
+            .map(|p| p.to_string())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Stack the perturbation wrappers over an already-built env
+    /// (leftmost atom innermost).
+    pub fn apply(&self, mut env: Box<dyn Env>) -> Box<dyn Env> {
+        for p in &self.perturbs {
+            env = p.wrap(env);
+        }
+        env
+    }
+
+    /// Build the scenario from scratch: base env + wrapper stack.
+    pub fn build(&self) -> Result<Box<dyn Env>> {
+        Ok(self.apply(super::make(&self.env)?))
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.env)?;
+        for p in &self.perturbs {
+            write!(f, "+{p}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn parses_the_doc_example() {
+        let sc =
+            Scenario::parse("hopper+obsnoise:0.05+delay:2+actscale:0.8")
+                .unwrap();
+        assert_eq!(sc.env, "hopper");
+        assert_eq!(sc.perturbs, vec![
+            Perturb::ObsNoise(0.05),
+            Perturb::Delay(2),
+            Perturb::ActScale(0.8),
+        ]);
+        assert_eq!(sc.to_string(),
+                   "hopper+obsnoise:0.05+delay:2+actscale:0.8");
+    }
+
+    #[test]
+    fn bare_and_suffix_forms() {
+        let sc = Scenario::parse("pendulum").unwrap();
+        assert!(sc.is_bare());
+        assert_eq!(sc.to_string(), "pendulum");
+        assert_eq!(sc.suffix(), "");
+        assert_eq!(Scenario::parse_suffix("ant", "").unwrap(),
+                   Scenario::bare("ant"));
+        assert_eq!(Scenario::parse_suffix("ant", "nominal").unwrap(),
+                   Scenario::bare("ant"));
+    }
+
+    #[test]
+    fn presets_expand_and_roundtrip() {
+        for &(name, suffix) in PRESETS {
+            let via_preset =
+                Scenario::parse(&format!("walker2d+{name}")).unwrap();
+            let expanded =
+                Scenario::parse_suffix("walker2d", suffix).unwrap();
+            assert_eq!(via_preset, expanded, "{name}");
+            // parse ∘ Display is the identity on the expanded form
+            let back = Scenario::parse(&via_preset.to_string()).unwrap();
+            assert_eq!(back, via_preset, "{name}");
+            // every preset builds a working env
+            via_preset.build().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "",
+            "+obsnoise:0.1",
+            "obsnoise:0.1",          // no env
+            "hopper+obsnose:0.1",    // typo op
+            "hopper+obsnoise",       // missing value
+            "hopper+obsnoise:x",     // bad number
+            "hopper+obsnoise:-0.1",  // σ < 0
+            "hopper+dropout:1.5",    // p > 1
+            "hopper+obsquant:0",     // bits out of range
+            "hopper+obsquant:17",
+            "hopper+delay:0",
+            "hopper+delay:65",
+            "hopper+actscale:0",
+            "hopper+actscale:nan",
+            "hopper+domainrand:1",
+            "hopper++delay:2",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted `{bad}`");
+        }
+        assert!(Scenario::parse("nosuchenv+delay:2").unwrap().build()
+                    .is_err());
+    }
+
+    fn gen_perturb(g: &mut Gen) -> Perturb {
+        match g.usize_in(0, 6) {
+            0 => Perturb::ObsNoise(g.f32_in(0.0, 2.0) as f64),
+            1 => Perturb::Dropout(g.f32_in(0.0, 1.0) as f64),
+            2 => Perturb::ObsQuant(g.usize_in(1, 16) as u32),
+            3 => Perturb::Delay(g.usize_in(1, 64)),
+            4 => Perturb::Hold(g.usize_in(1, 64)),
+            5 => Perturb::ActScale(g.f32_in(0.01, 4.0) as f64),
+            _ => Perturb::DomainRand(g.f32_in(0.0, 0.99) as f64),
+        }
+    }
+
+    #[test]
+    fn prop_parse_display_roundtrip() {
+        // acceptance: Scenario::parse ∘ Display round-trips for every
+        // wrapper kind (random values and stack depths) and every preset
+        check("scenario-roundtrip", 300, 808, |g| {
+            let envs = ["pendulum", "hopper", "walker2d", "halfcheetah",
+                        "ant", "humanoid"];
+            let mut sc = Scenario::bare(envs[g.usize_in(0, 5)]);
+            for _ in 0..g.usize_in(0, 5) {
+                sc.perturbs.push(gen_perturb(g));
+            }
+            let text = sc.to_string();
+            let back = Scenario::parse(&text)
+                .map_err(|e| format!("`{text}`: {e}"))?;
+            if back != sc {
+                return Err(format!("`{text}` -> {back:?} != {sc:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn suffix_roundtrips_through_parse_suffix() {
+        let sc = Scenario::parse("ant+sim2real").unwrap();
+        let back = Scenario::parse_suffix("ant", &sc.suffix()).unwrap();
+        assert_eq!(back, sc);
+    }
+}

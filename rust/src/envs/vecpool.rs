@@ -1,0 +1,221 @@
+//! `VecEnv`: a vectorized evaluation pool that runs many episodes in
+//! lockstep and drives [`PolicyBackend::infer_batch`] with one gathered
+//! observation block per step — the same batched inference path the
+//! serving subsystem uses, instead of the historical one-env-at-a-time
+//! `infer` loop.
+//!
+//! ## Bit-identical to serial evaluation, at any pool size
+//!
+//! The pool owns one RNG stream, consumed **only at episode resets, in
+//! episode-index order**: episode k's reset is always the (k+1)-th
+//! reset drawn from the stream, whether the pool is 1 wide or 64 wide.
+//! (Slots take new episodes in ascending index order, and slot
+//! completions within a step are processed in fixed slot order, so the
+//! assignment order — and therefore the reset order — is the episode
+//! order, not the arrival order.) All in-episode randomness lives in
+//! the wrappers' private per-episode streams, each seeded from its
+//! episode's reset draw (see [`crate::envs::wrappers`]). Together with
+//! the [`PolicyBackend`] contract that `infer_batch` is row-wise
+//! independent, every episode's trajectory is a pure function of
+//! `(scenario, seed, episode index, backend)` — so pool sizes 1, 8, N
+//! produce identical per-episode returns, and `pool = 1` reproduces the
+//! classic serial rollout exactly.
+
+use anyhow::{ensure, Result};
+
+use super::Env;
+use crate::policy::PolicyBackend;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// A fixed-width pool of identically-constructed environments.
+pub struct VecEnv {
+    envs: Vec<Box<dyn Env>>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+/// Per-slot episode state during a rollout.
+struct Slot {
+    /// index into the returns vector
+    ep: usize,
+    ret: f64,
+    obs: Vec<f32>,
+    alive: bool,
+}
+
+impl VecEnv {
+    /// Build a pool of `pool` environments from a factory (typically
+    /// [`crate::envs::Scenario::build`] plus a normalizer layer). Every
+    /// instance must agree on dimensions.
+    pub fn new<F>(make_env: F, pool: usize) -> Result<VecEnv>
+    where
+        F: Fn() -> Result<Box<dyn Env>>,
+    {
+        ensure!(pool >= 1, "VecEnv pool must be ≥ 1");
+        let envs: Vec<Box<dyn Env>> =
+            (0..pool).map(|_| make_env()).collect::<Result<_>>()?;
+        let (obs_dim, act_dim) = (envs[0].obs_dim(), envs[0].act_dim());
+        Ok(VecEnv { envs, obs_dim, act_dim })
+    }
+
+    /// Pool built straight from a scenario spec (no normalization
+    /// layer — callers that evaluate trained policies insert one; see
+    /// `rl::evaluate`).
+    pub fn from_scenario(sc: &super::Scenario, pool: usize)
+                         -> Result<VecEnv> {
+        Self::new(|| sc.build(), pool)
+    }
+
+    pub fn pool(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// Roll out `episodes` deterministic-policy episodes, gathering the
+    /// live slots' observations into one `[live, obs_dim]` block per
+    /// step and batching inference through the backend. Returns the
+    /// per-episode returns **indexed by episode, not completion order**.
+    pub fn rollout_returns<B>(&mut self, backend: &mut B,
+                              episodes: usize, seed: u64)
+                              -> Result<Vec<f64>>
+    where
+        B: PolicyBackend + ?Sized,
+    {
+        ensure!(backend.obs_dim() == self.obs_dim
+                    && backend.act_dim() == self.act_dim,
+                "backend {}x{} does not fit env {}x{}",
+                backend.obs_dim(), backend.act_dim(), self.obs_dim,
+                self.act_dim);
+        let mut returns = vec![0.0f64; episodes];
+        if episodes == 0 {
+            return Ok(returns);
+        }
+
+        // the shared stream: consumed only here and in slot refills,
+        // always in episode-index order
+        let mut reset_rng = Rng::new(seed);
+        let width = self.envs.len().min(episodes);
+        let mut next_ep = 0usize;
+        let mut slots: Vec<Slot> = Vec::with_capacity(width);
+        for env in self.envs.iter_mut().take(width) {
+            let obs = env.reset(&mut reset_rng);
+            slots.push(Slot { ep: next_ep, ret: 0.0, obs, alive: true });
+            next_ep += 1;
+        }
+
+        let mut obs_block: Vec<f32> = Vec::with_capacity(
+            width * self.obs_dim);
+        let mut act_block: Vec<f32> = vec![0.0; width * self.act_dim];
+        let mut order: Vec<usize> = Vec::with_capacity(width);
+
+        while slots.iter().any(|s| s.alive) {
+            // gather live observations into one batch, in slot order
+            obs_block.clear();
+            order.clear();
+            for (i, slot) in slots.iter().enumerate() {
+                if slot.alive {
+                    obs_block.extend_from_slice(&slot.obs);
+                    order.push(i);
+                }
+            }
+            let live = order.len();
+            act_block.resize(live * self.act_dim, 0.0);
+            backend.infer_batch(&obs_block,
+                                &mut act_block[..live * self.act_dim])?;
+
+            // step every live slot with its action row
+            for (row, &i) in order.iter().enumerate() {
+                let slot = &mut slots[i];
+                let act =
+                    &act_block[row * self.act_dim..(row + 1) * self.act_dim];
+                let out = self.envs[i].step(act);
+                slot.ret += out.reward;
+                slot.obs = out.obs;
+                if out.terminated || out.truncated {
+                    returns[slot.ep] = slot.ret;
+                    if next_ep < episodes {
+                        // refill in episode order: this is the
+                        // (next_ep+1)-th reset drawn from the stream
+                        slot.obs = self.envs[i].reset(&mut reset_rng);
+                        slot.ep = next_ep;
+                        slot.ret = 0.0;
+                        next_ep += 1;
+                    } else {
+                        slot.alive = false;
+                    }
+                }
+            }
+        }
+        Ok(returns)
+    }
+
+    /// Convenience: `(mean, std)` of [`VecEnv::rollout_returns`].
+    pub fn rollout_stats<B>(&mut self, backend: &mut B, episodes: usize,
+                            seed: u64) -> Result<(f64, f64)>
+    where
+        B: PolicyBackend + ?Sized,
+    {
+        let r = self.rollout_returns(backend, episodes, seed)?;
+        Ok((stats::mean(&r), stats::std(&r)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::Scenario;
+    use crate::intinfer::IntEngine;
+    use crate::quant::BitCfg;
+    use crate::util::testkit::toy_policy;
+
+    fn backend_for(env: &str) -> IntEngine {
+        let e = crate::envs::make(env).unwrap();
+        IntEngine::new(toy_policy(21, e.obs_dim(), 8, e.act_dim(),
+                                  BitCfg::new(6, 4, 8)))
+    }
+
+    #[test]
+    fn pool_sizes_agree_bit_for_bit() {
+        let sc = Scenario::parse("pendulum+obsnoise:0.2+delay:1").unwrap();
+        let mut want = None;
+        for pool in [1, 3, 8] {
+            let mut venv = VecEnv::from_scenario(&sc, pool).unwrap();
+            let mut be = backend_for("pendulum");
+            let r = venv.rollout_returns(&mut be, 6, 77).unwrap();
+            assert_eq!(r.len(), 6);
+            match &want {
+                None => want = Some(r),
+                Some(w) => assert_eq!(&r, w, "pool={pool}"),
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_short_episode_counts() {
+        let sc = Scenario::bare("pendulum");
+        let mut venv = VecEnv::from_scenario(&sc, 4).unwrap();
+        let mut be = backend_for("pendulum");
+        assert!(venv.rollout_returns(&mut be, 0, 1).unwrap().is_empty());
+        // fewer episodes than slots: only `episodes` resets are drawn
+        let r2 = venv.rollout_returns(&mut be, 2, 1).unwrap();
+        let mut serial = VecEnv::from_scenario(&sc, 1).unwrap();
+        let r2s = serial.rollout_returns(&mut be, 2, 1).unwrap();
+        assert_eq!(r2, r2s);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error() {
+        let sc = Scenario::bare("hopper");
+        let mut venv = VecEnv::from_scenario(&sc, 2).unwrap();
+        let mut be = backend_for("pendulum");
+        assert!(venv.rollout_returns(&mut be, 1, 0).is_err());
+    }
+}

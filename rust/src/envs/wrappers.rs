@@ -1,0 +1,604 @@
+//! Stackable environment wrappers — the perturbation layer behind
+//! [`crate::envs::Scenario`].
+//!
+//! Every wrapper owns a `Box<dyn Env>` and is itself an [`Env`], so any
+//! stack of wrappers over any base environment is again an environment
+//! (object-safe composition). Wrappers fall into three groups:
+//!
+//! * **observation**: [`Normalize`], [`ObsNoise`], [`SensorDropout`],
+//!   [`ObsQuant`], and the obs half of [`DomainRand`] — transform what
+//!   the policy sees;
+//! * **action**: [`ActDelay`], [`ActHold`], [`ActScale`], and the act
+//!   half of [`DomainRand`] — transform what the actuators do;
+//! * **stateless plumbing**: [`Normalize`] applies frozen running
+//!   statistics so perturbations above it act in *normalized* units
+//!   (the paper's §3.3 convention: ŝ = norm(s) + ε).
+//!
+//! ## Determinism contract
+//!
+//! A wrapper may consume randomness in exactly two places:
+//!
+//! 1. at [`Env::reset`], from the caller's RNG — a single `next_u64`
+//!    that seeds the wrapper's private per-episode stream (plus any
+//!    per-episode parameter draws from that private stream);
+//! 2. during steps, **only** from that private stream.
+//!
+//! Because the shared reset RNG is consumed in episode order and every
+//! in-episode draw is a pure function of the episode's reset draw, a
+//! [`crate::envs::VecEnv`] pool replays episodes bit-identically at any
+//! pool size — randomness is keyed by *episode index*, never by arrival
+//! order.
+
+use super::{Env, StepOut};
+use crate::quant::{qdq, QRange};
+use crate::util::rng::Rng;
+use crate::util::stats::ObsNormalizer;
+
+/// Object-safe view of one stacked layer (diagnostics and tests).
+pub trait Wrapper: Env {
+    /// The grammar atom this layer prints as (e.g. `obsnoise:0.1`).
+    fn atom(&self) -> String;
+    fn inner(&self) -> &dyn Env;
+}
+
+/// Delegate the dimension/bookkeeping half of [`Env`] to `self.inner`.
+macro_rules! delegate_env_shape {
+    () => {
+        fn name(&self) -> &'static str {
+            self.inner.name()
+        }
+        fn obs_dim(&self) -> usize {
+            self.inner.obs_dim()
+        }
+        fn act_dim(&self) -> usize {
+            self.inner.act_dim()
+        }
+        fn max_steps(&self) -> usize {
+            self.inner.max_steps()
+        }
+    };
+}
+
+/// Draw the wrapper's per-episode stream from the shared reset RNG —
+/// exactly one `next_u64`, so the shared stream advances by a fixed
+/// amount per wrapper per reset regardless of what the wrapper does
+/// with it.
+fn episode_stream(rng: &mut Rng) -> Rng {
+    Rng::new(rng.next_u64())
+}
+
+// ---------------------------------------------------------------------------
+// Normalize
+
+/// Applies frozen observation normalization *inside* the env stack, so
+/// wrappers stacked above it perturb the normalized observation the
+/// policy actually consumes. Never updates the statistics.
+pub struct Normalize {
+    inner: Box<dyn Env>,
+    norm: ObsNormalizer,
+}
+
+impl Normalize {
+    pub fn wrap(inner: Box<dyn Env>, norm: ObsNormalizer) -> Box<dyn Env> {
+        Box::new(Normalize { inner, norm })
+    }
+}
+
+impl Env for Normalize {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        let mut obs = self.inner.reset(rng);
+        self.norm.normalize(&mut obs);
+        obs
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        let mut out = self.inner.step(action);
+        self.norm.normalize(&mut out.obs);
+        out
+    }
+}
+
+impl Wrapper for Normalize {
+    fn atom(&self) -> String {
+        "norm".into()
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ObsNoise
+
+/// I.i.d. Gaussian noise on every observation component, every step
+/// (including the reset observation): o' = o + ε, ε ~ N(0, σ²).
+pub struct ObsNoise {
+    inner: Box<dyn Env>,
+    std: f64,
+    rng: Rng,
+}
+
+impl ObsNoise {
+    pub fn wrap(inner: Box<dyn Env>, std: f64) -> Box<dyn Env> {
+        Box::new(ObsNoise { inner, std, rng: Rng::new(0) })
+    }
+
+    fn perturb(&mut self, obs: &mut [f32]) {
+        for v in obs.iter_mut() {
+            *v += (self.rng.normal() * self.std) as f32;
+        }
+    }
+}
+
+impl Env for ObsNoise {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.rng = episode_stream(rng);
+        let mut obs = self.inner.reset(rng);
+        self.perturb(&mut obs);
+        obs
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        let mut out = self.inner.step(action);
+        self.perturb(&mut out.obs);
+        out
+    }
+}
+
+impl Wrapper for ObsNoise {
+    fn atom(&self) -> String {
+        format!("obsnoise:{}", self.std)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SensorDropout
+
+/// Each observation component independently reads 0 with probability p
+/// at every step — a stuck/lost sensor sample. One uniform draw per
+/// component per step keeps the stream layout fixed.
+pub struct SensorDropout {
+    inner: Box<dyn Env>,
+    p: f64,
+    rng: Rng,
+}
+
+impl SensorDropout {
+    pub fn wrap(inner: Box<dyn Env>, p: f64) -> Box<dyn Env> {
+        Box::new(SensorDropout { inner, p, rng: Rng::new(0) })
+    }
+
+    fn perturb(&mut self, obs: &mut [f32]) {
+        for v in obs.iter_mut() {
+            if self.rng.uniform() < self.p {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+impl Env for SensorDropout {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.rng = episode_stream(rng);
+        let mut obs = self.inner.reset(rng);
+        self.perturb(&mut obs);
+        obs
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        let mut out = self.inner.step(action);
+        self.perturb(&mut out.obs);
+        out
+    }
+}
+
+impl Wrapper for SensorDropout {
+    fn atom(&self) -> String {
+        format!("dropout:{}", self.p)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ObsQuant
+
+/// Quantize each observation component to a signed b-bit lattice over
+/// ±10 (the normalizer's clip range) — a coarse ADC in front of the
+/// policy. Deterministic; stack it above [`Normalize`] to model the
+/// paper's input-bitwidth axis at evaluation time.
+pub struct ObsQuant {
+    inner: Box<dyn Env>,
+    bits: u32,
+    scale: f32,
+    range: QRange,
+}
+
+/// The normalizer clips to ±10; the lattice spans exactly that.
+const OBS_CLIP: f32 = 10.0;
+
+impl ObsQuant {
+    pub fn wrap(inner: Box<dyn Env>, bits: u32) -> Box<dyn Env> {
+        Box::new(ObsQuant {
+            inner,
+            bits,
+            scale: OBS_CLIP,
+            range: QRange::new(bits, true),
+        })
+    }
+
+    fn perturb(&self, obs: &mut [f32]) {
+        for v in obs.iter_mut() {
+            *v = qdq(*v, self.scale, self.range);
+        }
+    }
+}
+
+impl Env for ObsQuant {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        let mut obs = self.inner.reset(rng);
+        self.perturb(&mut obs);
+        obs
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        let mut out = self.inner.step(action);
+        self.perturb(&mut out.obs);
+        out
+    }
+}
+
+impl Wrapper for ObsQuant {
+    fn atom(&self) -> String {
+        format!("obsquant:{}", self.bits)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ActDelay
+
+/// The actuator applies the action commanded k steps ago; the first k
+/// steps of every episode apply zero torque (transport delay).
+pub struct ActDelay {
+    inner: Box<dyn Env>,
+    k: usize,
+    queue: std::collections::VecDeque<Vec<f32>>,
+}
+
+impl ActDelay {
+    pub fn wrap(inner: Box<dyn Env>, k: usize) -> Box<dyn Env> {
+        Box::new(ActDelay { inner, k, queue: Default::default() })
+    }
+}
+
+impl Env for ActDelay {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.queue.clear();
+        for _ in 0..self.k {
+            self.queue.push_back(vec![0.0; self.inner.act_dim()]);
+        }
+        self.inner.reset(rng)
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        self.queue.push_back(action.to_vec());
+        let applied = self.queue.pop_front().expect("delay queue");
+        self.inner.step(&applied)
+    }
+}
+
+impl Wrapper for ActDelay {
+    fn atom(&self) -> String {
+        format!("delay:{}", self.k)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ActHold
+
+/// Zero-order hold: the policy's command is only latched every k-th
+/// step; in between, the previous latched action repeats (a controller
+/// running at 1/k of the simulation rate).
+pub struct ActHold {
+    inner: Box<dyn Env>,
+    k: usize,
+    held: Vec<f32>,
+    tick: usize,
+}
+
+impl ActHold {
+    pub fn wrap(inner: Box<dyn Env>, k: usize) -> Box<dyn Env> {
+        Box::new(ActHold { inner, k, held: Vec::new(), tick: 0 })
+    }
+}
+
+impl Env for ActHold {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.held = vec![0.0; self.inner.act_dim()];
+        self.tick = 0;
+        self.inner.reset(rng)
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        if self.tick % self.k == 0 {
+            self.held.clear();
+            self.held.extend_from_slice(action);
+        }
+        self.tick += 1;
+        self.inner.step(&self.held)
+    }
+}
+
+impl Wrapper for ActHold {
+    fn atom(&self) -> String {
+        format!("hold:{}", self.k)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ActScale
+
+/// Scale every action component by a fixed actuator-strength gain
+/// (g < 1: weak motors; g > 1: overdriven — the base env's step
+/// boundary saturates anything pushed past ±1).
+pub struct ActScale {
+    inner: Box<dyn Env>,
+    gain: f64,
+    buf: Vec<f32>,
+}
+
+impl ActScale {
+    pub fn wrap(inner: Box<dyn Env>, gain: f64) -> Box<dyn Env> {
+        Box::new(ActScale { inner, gain, buf: Vec::new() })
+    }
+}
+
+impl Env for ActScale {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.inner.reset(rng)
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        self.buf.clear();
+        self.buf
+            .extend(action.iter().map(|&a| (a as f64 * self.gain) as f32));
+        self.inner.step(&self.buf)
+    }
+}
+
+impl Wrapper for ActScale {
+    fn atom(&self) -> String {
+        format!("actscale:{}", self.gain)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DomainRand
+
+/// Domain randomization at the env boundary: at every reset, draw a
+/// per-component actuator gain and a per-component observation gain,
+/// each uniform in [1-s, 1+s], and hold them for the episode. Models
+/// miscalibrated actuators and sensors without reaching into the
+/// physics parameters.
+pub struct DomainRand {
+    inner: Box<dyn Env>,
+    s: f64,
+    act_gain: Vec<f32>,
+    obs_gain: Vec<f32>,
+    buf: Vec<f32>,
+}
+
+impl DomainRand {
+    pub fn wrap(inner: Box<dyn Env>, s: f64) -> Box<dyn Env> {
+        Box::new(DomainRand {
+            inner,
+            s,
+            act_gain: Vec::new(),
+            obs_gain: Vec::new(),
+            buf: Vec::new(),
+        })
+    }
+
+    fn perturb(&self, obs: &mut [f32]) {
+        for (v, &g) in obs.iter_mut().zip(&self.obs_gain) {
+            *v *= g;
+        }
+    }
+}
+
+impl Env for DomainRand {
+    delegate_env_shape!();
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        let mut ep = episode_stream(rng);
+        let lo = 1.0 - self.s;
+        let hi = 1.0 + self.s;
+        self.act_gain = (0..self.inner.act_dim())
+            .map(|_| ep.uniform_in(lo, hi) as f32)
+            .collect();
+        self.obs_gain = (0..self.inner.obs_dim())
+            .map(|_| ep.uniform_in(lo, hi) as f32)
+            .collect();
+        let mut obs = self.inner.reset(rng);
+        self.perturb(&mut obs);
+        obs
+    }
+
+    fn step_raw(&mut self, action: &[f32]) -> StepOut {
+        self.buf.clear();
+        self.buf.extend(
+            action.iter().zip(&self.act_gain).map(|(&a, &g)| a * g));
+        let mut out = self.inner.step(&self.buf);
+        self.perturb(&mut out.obs);
+        out
+    }
+}
+
+impl Wrapper for DomainRand {
+    fn atom(&self) -> String {
+        format!("domainrand:{}", self.s)
+    }
+
+    fn inner(&self) -> &dyn Env {
+        &*self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::make;
+
+    fn rollout(env: &mut dyn Env, seed: u64, steps: usize)
+               -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut obs_trace = vec![env.reset(&mut rng)];
+        let mut rewards = Vec::new();
+        for t in 0..steps {
+            let a: Vec<f32> = (0..env.act_dim())
+                .map(|i| ((t + i) as f32 * 0.37).sin())
+                .collect();
+            let out = env.step(&a);
+            obs_trace.push(out.obs);
+            rewards.push(out.reward);
+            if out.terminated || out.truncated {
+                break;
+            }
+        }
+        (obs_trace, rewards)
+    }
+
+    #[test]
+    fn wrapped_episodes_are_deterministic_per_seed() {
+        let build = || -> Box<dyn Env> {
+            let e = make("hopper").unwrap();
+            let e = ObsNoise::wrap(e, 0.1);
+            let e = SensorDropout::wrap(e, 0.1);
+            let e = ActDelay::wrap(e, 2);
+            DomainRand::wrap(e, 0.2)
+        };
+        let (o1, r1) = rollout(&mut *build(), 5, 60);
+        let (o2, r2) = rollout(&mut *build(), 5, 60);
+        assert_eq!(o1, o2);
+        assert_eq!(r1, r2);
+        let (o3, _) = rollout(&mut *build(), 6, 60);
+        assert_ne!(o1, o3, "different seed must differ");
+    }
+
+    #[test]
+    fn obsnoise_perturbs_and_preserves_shape() {
+        let mut plain = make("pendulum").unwrap();
+        let mut noisy = ObsNoise::wrap(make("pendulum").unwrap(), 0.5);
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let a = plain.reset(&mut r1);
+        let b = noisy.reset(&mut r2);
+        assert_eq!(a.len(), b.len());
+        assert_ne!(a, b, "noise must touch the reset observation too");
+    }
+
+    #[test]
+    fn delay_applies_zero_for_first_k_steps() {
+        // a delayed full-torque pendulum must match an undelayed one fed
+        // zeros for k steps first
+        let k = 3;
+        let mut delayed = ActDelay::wrap(make("pendulum").unwrap(), k);
+        let mut manual = make("pendulum").unwrap();
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        delayed.reset(&mut r1);
+        manual.reset(&mut r2);
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        for t in 0..6 {
+            got.push(delayed.step(&[1.0]).obs);
+            let a = if t < k { 0.0 } else { 1.0 };
+            want.push(manual.step(&[a]).obs);
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn hold_latches_every_k_steps() {
+        let mut held = ActHold::wrap(make("pendulum").unwrap(), 2);
+        let mut manual = make("pendulum").unwrap();
+        let mut r1 = Rng::new(12);
+        let mut r2 = Rng::new(12);
+        held.reset(&mut r1);
+        manual.reset(&mut r2);
+        let cmds = [0.8f32, -0.6, 0.4, -0.2];
+        let latched = [0.8f32, 0.8, 0.4, 0.4];
+        for (c, l) in cmds.iter().zip(latched) {
+            assert_eq!(held.step(&[*c]).obs, manual.step(&[l]).obs);
+        }
+    }
+
+    #[test]
+    fn actscale_scales_and_saturates() {
+        let mut scaled = ActScale::wrap(make("pendulum").unwrap(), 0.5);
+        let mut manual = make("pendulum").unwrap();
+        let mut r1 = Rng::new(13);
+        let mut r2 = Rng::new(13);
+        scaled.reset(&mut r1);
+        manual.reset(&mut r2);
+        assert_eq!(scaled.step(&[1.0]).obs, manual.step(&[0.5]).obs);
+
+        // gain > 1 saturates at the inner step boundary
+        let mut hot = ActScale::wrap(make("pendulum").unwrap(), 3.0);
+        let mut full = make("pendulum").unwrap();
+        let mut r3 = Rng::new(14);
+        let mut r4 = Rng::new(14);
+        hot.reset(&mut r3);
+        full.reset(&mut r4);
+        assert_eq!(hot.step(&[0.9]).obs, full.step(&[1.0]).obs);
+    }
+
+    #[test]
+    fn obsquant_is_idempotent_and_coarse() {
+        let mut q = ObsQuant::wrap(make("pendulum").unwrap(), 3);
+        let mut rng = Rng::new(15);
+        let obs = q.reset(&mut rng);
+        // every component sits on the 3-bit lattice over ±10
+        let r = QRange::new(3, true);
+        for &v in &obs {
+            assert_eq!(v, qdq(v, OBS_CLIP, r), "not on lattice: {v}");
+        }
+    }
+}

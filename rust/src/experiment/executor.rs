@@ -252,6 +252,7 @@ mod tests {
             learning_starts: 20,
             eval_episodes: 3,
             normalize: true,
+            scenario: None,
         };
         let cfgs: Vec<(usize, BitCfg, bool)> = (0..n_cfg)
             .map(|i| (16 << (i % 3), BitCfg::uniform(2 + i as u32 % 7),

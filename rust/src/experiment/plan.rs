@@ -18,6 +18,9 @@ pub struct TrialTemplate {
     pub learning_starts: usize,
     pub eval_episodes: usize,
     pub normalize: bool,
+    /// evaluation scenario suffix stamped onto every trial
+    /// (`None` = bare env; see [`Trial::scenario`])
+    pub scenario: Option<String>,
 }
 
 impl TrialTemplate {
@@ -34,6 +37,7 @@ impl TrialTemplate {
             learning_starts: self.learning_starts,
             eval_episodes: self.eval_episodes,
             seed,
+            scenario: self.scenario.clone(),
         }
     }
 }
@@ -112,6 +116,7 @@ mod tests {
             learning_starts: 100,
             eval_episodes: 5,
             normalize: true,
+            scenario: None,
         }
     }
 

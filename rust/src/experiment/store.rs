@@ -168,6 +168,7 @@ mod tests {
             learning_starts: 100,
             eval_episodes: 5,
             seed,
+            scenario: None,
         }
     }
 

@@ -12,6 +12,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::envs::Scenario;
 use crate::quant::BitCfg;
 use crate::rl::Algo;
 use crate::util::json::Json;
@@ -50,6 +51,11 @@ pub struct Trial {
     /// training seed; the eval seed is derived from it (`seed ^ 0xe7a1`,
     /// matching the historical sweep protocol)
     pub seed: u64,
+    /// evaluation scenario as a canonical perturbation suffix
+    /// (`"obsnoise:0.1+delay:2"`; see [`Scenario::suffix`]). `None` =
+    /// bare env — never `Some("")`, so scenario-less trials keep their
+    /// historical ids and old run dirs still resume.
+    pub scenario: Option<String>,
 }
 
 impl Trial {
@@ -57,11 +63,19 @@ impl Trial {
     /// This is the hashed identity; extend it whenever `Trial` grows a
     /// field that affects results.
     fn descriptor(&self) -> String {
-        format!("v1|{}|{}|h{}|b{},{},{}|q{}|n{}|s{}|t{}|ls{}|e{}",
-                self.algo.name(), self.env, self.hidden, self.bits.b_in,
-                self.bits.b_core, self.bits.b_out, self.quant_on as u8,
-                self.normalize as u8, self.seed, self.steps,
-                self.learning_starts, self.eval_episodes)
+        let mut d =
+            format!("v1|{}|{}|h{}|b{},{},{}|q{}|n{}|s{}|t{}|ls{}|e{}",
+                    self.algo.name(), self.env, self.hidden,
+                    self.bits.b_in, self.bits.b_core, self.bits.b_out,
+                    self.quant_on as u8, self.normalize as u8, self.seed,
+                    self.steps, self.learning_starts, self.eval_episodes);
+        // appended only when set: scenario-less descriptors (and
+        // therefore ids and run dirs) are byte-identical to v1
+        if let Some(sc) = &self.scenario {
+            d.push_str("|sc:");
+            d.push_str(sc);
+        }
+        d
     }
 
     /// Deterministic content-derived id: a human-readable prefix plus the
@@ -81,8 +95,28 @@ impl Trial {
         self.seed ^ 0xe7a1
     }
 
+    /// The trial's evaluation scenario (bare env when unset).
+    pub fn scenario(&self) -> Result<Scenario> {
+        match &self.scenario {
+            None => Ok(Scenario::bare(&self.env)),
+            Some(sfx) => Scenario::parse_suffix(&self.env, sfx)
+                .with_context(|| format!("trial scenario `{sfx}`")),
+        }
+    }
+
+    /// Pin the evaluation scenario, storing the canonical suffix (bare
+    /// → `None`). Errors when the scenario names a different env.
+    pub fn with_scenario(mut self, sc: &Scenario) -> Result<Trial> {
+        anyhow::ensure!(sc.env == self.env,
+                        "scenario env `{}` != trial env `{}`", sc.env,
+                        self.env);
+        self.scenario =
+            if sc.is_bare() { None } else { Some(sc.suffix()) };
+        Ok(self)
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("env", Json::str(&self.env)),
             ("algo", Json::str(self.algo.name())),
             ("hidden", Json::num(self.hidden as f64)),
@@ -98,7 +132,11 @@ impl Trial {
             // through the f64 JSON number and break the record's
             // identity check on resume
             ("seed", Json::str(self.seed.to_string())),
-        ])
+        ];
+        if let Some(sc) = &self.scenario {
+            pairs.push(("scenario", Json::str(sc)));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Trial> {
@@ -119,6 +157,10 @@ impl Trial {
                 .as_str()?
                 .parse()
                 .map_err(|e| anyhow::anyhow!("trial seed: {e}"))?,
+            scenario: match j.opt("scenario") {
+                Some(s) => Some(s.as_str().context("scenario")?.to_string()),
+                None => None,
+            },
         })
     }
 
@@ -216,6 +258,7 @@ mod tests {
             learning_starts: 300,
             eval_episodes: 5,
             seed,
+            scenario: None,
         }
     }
 
@@ -229,6 +272,36 @@ mod tests {
         let mut t = trial(1);
         t.quant_on = false;
         assert_ne!(t.id(), trial(1).id());
+    }
+
+    #[test]
+    fn scenario_folds_into_identity() {
+        let base = trial(1);
+        let noisy = trial(1)
+            .with_scenario(&Scenario::parse("pendulum+obsnoise:0.1")
+                .unwrap())
+            .unwrap();
+        assert_ne!(noisy.id(), base.id());
+        assert_eq!(noisy.scenario.as_deref(), Some("obsnoise:0.1"));
+        assert_eq!(noisy.scenario().unwrap().to_string(),
+                   "pendulum+obsnoise:0.1");
+
+        // bare scenario normalizes to None → historical id preserved
+        let bare = trial(1)
+            .with_scenario(&Scenario::bare("pendulum"))
+            .unwrap();
+        assert_eq!(bare, base);
+        assert_eq!(bare.id(), base.id());
+
+        // env mismatch is an error, not a silent cross-env eval
+        assert!(trial(1)
+            .with_scenario(&Scenario::bare("hopper"))
+            .is_err());
+
+        // scenario'd trials round-trip the run store json
+        let back = Trial::from_json(&noisy.to_json()).unwrap();
+        assert_eq!(back, noisy);
+        assert_eq!(back.id(), noisy.id());
     }
 
     #[test]

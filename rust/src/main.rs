@@ -1,9 +1,10 @@
 //! `qcontrol` — leader entrypoint for the learning-to-hardware pipeline.
 //!
 //! Subcommands:
-//!   train     train one policy (SAC/DDPG, quantized or FP32) and checkpoint
-//!   eval      evaluate a checkpoint (optionally with input noise / backends)
-//!   sweep     Fig.1-style bitwidth sweep for one env (parallel, resumable)
+//!   train       train one policy (SAC/DDPG, quantized or FP32), checkpoint
+//!   eval        evaluate a checkpoint under a scenario / backend
+//!   robustness  scenario × backend reward grid, emits robustness.json
+//!   sweep       Fig.1-style bitwidth sweep for one env (parallel, resumable)
 //!   select    staged model selection (paper §3.2; parallel, resumable)
 //!   pipeline  one-shot select → export → synth, emits pipeline.json
 //!   synth     synthesize a config to the XC7A15T model (Table 3 row)
@@ -28,6 +29,7 @@ use qcontrol::coordinator::serving;
 use qcontrol::coordinator::store::{now_secs, Store};
 use qcontrol::coordinator::sweep::{run_sweep, sweep_run_name, Scope,
                                    SweepProtocol};
+use qcontrol::envs::Scenario;
 use qcontrol::experiment::{Executor, RlRunner, RunStore};
 use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
@@ -78,6 +80,7 @@ fn main() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "robustness" => cmd_robustness(&args),
         "sweep" => cmd_sweep(&args),
         "select" => cmd_select(&args),
         "pipeline" => cmd_pipeline(&args),
@@ -105,8 +108,16 @@ usage: qcontrol <cmd> [--flags]
 
   train    --env E [--algo sac|ddpg] [--hidden H] [--bits i,c,o]
            [--fp32] [--steps N] [--seed S] [--ckpt PATH] [--verbose]
-  eval     --ckpt PATH [--episodes N] [--noise SIGMA]
+  eval     --ckpt PATH [--episodes N] [--scenario SPEC]
            [--backend pjrt|fakequant|fp32|int]
+           (SPEC is a perturbation stack or preset, e.g.
+            `obsnoise:0.05+delay:2` or `flaky-sensors`; --noise SIGMA
+            is kept one release as a shim for `obsnoise:SIGMA`)
+  robustness
+           --ckpt PATH [--env E] [--scenarios S1,S2,...]
+           [--backends int,fp32] [--episodes N] [--seed S] [--out FILE]
+           (evaluates every scenario × backend cell on the vectorized
+            episode pool; emits machine-readable robustness.json)
   sweep    --env E [--scopes all,input,output,core] [--bits 8,6,4,3,2]
            [--steps N] [--seeds N] [--jobs N]
   select   --env E [--steps N] [--seeds N] [--jobs N]
@@ -201,21 +212,115 @@ fn load_ckpt(a: &Args) -> Result<(Json, Vec<f32>, ObsNormalizer, String,
 fn cmd_eval(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
     let (_, flat, norm, env, algo, hidden, bits, quant_on) = load_ckpt(a)?;
+    let scenario =
+        Scenario::parse_suffix(&env, a.str_opt("scenario").unwrap_or(""))
+            .context("--scenario")?;
     let opts = EvalOpts {
         algo,
-        env: env.clone(),
+        scenario,
         hidden,
         bits,
         quant_on,
         episodes: a.usize("episodes", 10)?,
-        noise_std: a.f64("noise", 0.0)?,
         seed: a.u64("seed", 42)?,
         backend: EvalBackend::parse(&a.str("backend", "pjrt"))?,
-    };
+    }
+    // --noise: compat shim for the retired noise_std knob (one release)
+    .with_noise_std(a.f64("noise", 0.0)?);
     let (mean, std) = rl::evaluate(&rt, &opts, &flat, &norm)?;
-    println!("{env}: return {mean:.1} ± {std:.1} over {} episodes \
-              (noise σ={}, backend {:?})",
-             opts.episodes, opts.noise_std, opts.backend);
+    println!("{}: return {mean:.1} ± {std:.1} over {} episodes \
+              (backend {})",
+             opts.scenario, opts.episodes, opts.backend.name());
+    Ok(())
+}
+
+/// Default scenario column for `qcontrol robustness`: the paper's noise
+/// axis (Fig. 3) plus every perturbation family and the sim2real stack.
+const ROBUSTNESS_SCENARIOS: &str =
+    "nominal,obsnoise:0.05,obsnoise:0.1,obsnoise:0.2,obsnoise:0.4,\
+     coarse-adc,flaky-sensors,laggy-actuators,slow-controller,\
+     weak-motors,sim2real";
+
+fn cmd_robustness(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let (_, flat, norm, ckpt_env, algo, hidden, bits, quant_on) =
+        load_ckpt(a)?;
+    let env = a.str("env", &ckpt_env);
+    anyhow::ensure!(env == ckpt_env,
+                    "--env {env} does not match checkpoint env {ckpt_env}");
+    let episodes = a.usize("episodes", 10)?;
+    let seed = a.u64("seed", 42)?;
+    let scenarios: Vec<Scenario> = a
+        .str("scenarios", ROBUSTNESS_SCENARIOS)
+        .split(',')
+        .map(|sfx| Scenario::parse_suffix(&env, sfx.trim()))
+        .collect::<Result<_>>()
+        .context("--scenarios")?;
+    // FP32 checkpoints have no integer lattice to run
+    let default_backends = if quant_on { "int,fp32" } else { "fp32" };
+    let backends: Vec<EvalBackend> = a
+        .str("backends", default_backends)
+        .split(',')
+        .map(|b| EvalBackend::parse(b.trim()))
+        .collect::<Result<_>>()
+        .context("--backends")?;
+
+    println!("robustness grid on {env}: {} scenario(s) × {} backend(s), \
+              {episodes} episodes each",
+             scenarios.len(), backends.len());
+    let mut table = Table::new(&["scenario", "backend", "return"]);
+    let mut grid: Vec<Json> = Vec::new();
+    for sc in &scenarios {
+        for &backend in &backends {
+            let opts = EvalOpts {
+                algo,
+                scenario: sc.clone(),
+                hidden,
+                bits,
+                quant_on,
+                episodes,
+                seed,
+                backend,
+            };
+            let returns = rl::evaluate_returns(&rt, &opts, &flat, &norm)?;
+            let (mean, std) = (qcontrol::util::stats::mean(&returns),
+                               qcontrol::util::stats::std(&returns));
+            table.row(vec![sc.to_string(), backend.name().into(),
+                           format!("{mean:.1} ± {std:.1}")]);
+            grid.push(Json::obj(vec![
+                ("scenario", Json::str(sc.to_string())),
+                ("backend", Json::str(backend.name())),
+                ("mean", Json::num(mean)),
+                ("std", Json::num(std)),
+                ("returns", Json::Arr(
+                    returns.iter().map(|&r| Json::num(r)).collect())),
+            ]));
+        }
+    }
+    table.print();
+
+    let report = Json::obj(vec![
+        ("v", Json::num(1.0)),
+        ("env", Json::str(&env)),
+        ("algo", Json::str(algo.name())),
+        ("hidden", Json::num(hidden as f64)),
+        ("bits", Json::str(bits.to_string())),
+        ("quant_on", Json::Bool(quant_on)),
+        ("episodes", Json::num(episodes as f64)),
+        ("seed", Json::str(seed.to_string())),
+        ("scenarios", Json::Arr(
+            scenarios.iter().map(|s| Json::str(s.to_string())).collect())),
+        ("backends", Json::Arr(
+            backends.iter().map(|b| Json::str(b.name())).collect())),
+        ("grid", Json::Arr(grid)),
+    ]);
+    let out = a.str("out", "robustness.json");
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, report.to_string())
+        .with_context(|| format!("write {out}"))?;
+    println!("robustness report -> {out}");
     Ok(())
 }
 

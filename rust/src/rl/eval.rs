@@ -1,9 +1,19 @@
-//! Deterministic policy evaluation: rollouts with input-noise injection
-//! (Fig. 3), driven through the unified [`PolicyBackend`] trait.
+//! Deterministic policy evaluation under composable [`Scenario`]s,
+//! vectorized through [`VecEnv`] and driven by the unified
+//! [`PolicyBackend`] trait.
+//!
+//! The historical single-knob `noise_std` rollout is gone: an
+//! evaluation condition is now a full scenario
+//! (`hopper+obsnoise:0.05+delay:2`), built as a wrapper stack over the
+//! base env, and rollouts run as a lockstep episode pool that gathers
+//! live observations into one `infer_batch` block per step — the same
+//! batched inference path the serving subsystem exercises. Results are
+//! bit-identical at any pool size (see [`VecEnv`]), and the bare
+//! scenario at pool 1 reproduces the classic serial rollout exactly.
 //!
 //! The interchangeable execution paths — whose agreement is itself a
 //! validation of the deployment chain — are resolved *once* into a
-//! `Box<dyn PolicyBackend>` before the rollout loop:
+//! `Box<dyn PolicyBackend>` before the rollout:
 //!
 //! * `pjrt`      — the AOT `*_fwd_*` artifact (L2 graph incl. the Pallas
 //!                 kernel path), wrapped in [`PjrtBackend`],
@@ -13,11 +23,17 @@
 //!                 ([`crate::policy::Fp32Backend`]),
 //! * `int`       — the integer-only engine (`intinfer`), i.e. exactly
 //!                 what the FPGA executes.
+//!
+//! Perturbation placement: the wrapper stack sits **above** a frozen
+//! normalization layer, so observation atoms act on the normalized
+//! state the policy consumes (paper §3.3: ŝ = norm(s) + ε), and action
+//! atoms act on the policy's [-1,1] commands before the env's clamped
+//! step boundary.
 
 use anyhow::Result;
 
 use super::{fwd_hyper, policy::extract_tensors, Algo};
-use crate::envs;
+use crate::envs::{self, wrappers, Scenario, VecEnv};
 use crate::intinfer::IntEngine;
 use crate::policy::{FakeQuantBackend, Fp32Backend, PolicyBackend,
                     PolicyDescriptor};
@@ -25,7 +41,6 @@ use crate::quant::export::IntPolicy;
 use crate::quant::fakequant::PolicyTensors;
 use crate::quant::BitCfg;
 use crate::runtime::{Exe, Runtime};
-use crate::util::rng::Rng;
 use crate::util::stats::{self, ObsNormalizer};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,24 +59,56 @@ impl EvalBackend {
             "fp32" => EvalBackend::Fp32,
             "integer" | "int" => EvalBackend::Integer,
             _ => anyhow::bail!(
-                "unknown backend `{s}` (pjrt|fakequant|fp32|int)"),
+                "unknown backend `{s}` (pjrt|fakequant|fp32|int|integer)"),
         })
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalBackend::Pjrt => "pjrt",
+            EvalBackend::FakeQuant => "fakequant",
+            EvalBackend::Fp32 => "fp32",
+            EvalBackend::Integer => "int",
+        }
+    }
 }
+
+/// Episode-pool width used when the caller doesn't pin one. Results are
+/// pool-size-invariant, so this is purely a dispatch-amortization knob.
+pub const DEFAULT_POOL: usize = 8;
 
 #[derive(Clone, Debug)]
 pub struct EvalOpts {
     pub algo: Algo,
-    pub env: String,
+    /// What to evaluate on: env + perturbation stack
+    /// (`Scenario::bare(env)` for the clean condition).
+    pub scenario: Scenario,
     pub hidden: usize,
     pub bits: BitCfg,
     pub quant_on: bool,
     pub episodes: usize,
-    /// i.i.d. Gaussian noise added to the *normalized* observation
-    /// (paper §3.3): ŝ = norm(s) + ε, ε ~ N(0, σ²)
-    pub noise_std: f64,
     pub seed: u64,
     pub backend: EvalBackend,
+}
+
+impl EvalOpts {
+    /// The environment name (from the scenario).
+    pub fn env(&self) -> &str {
+        &self.scenario.env
+    }
+
+    /// Compat shim for the retired `noise_std` field, kept for one
+    /// release: σ of i.i.d. Gaussian noise on the *normalized*
+    /// observation, exactly the old knob's semantics
+    /// (`hopper+obsnoise:σ` in the scenario grammar).
+    pub fn with_noise_std(mut self, noise_std: f64) -> EvalOpts {
+        if noise_std > 0.0 {
+            self.scenario
+                .perturbs
+                .push(envs::Perturb::ObsNoise(noise_std));
+        }
+        self
+    }
 }
 
 /// Resolve the requested execution path into a trait object over the
@@ -71,7 +118,7 @@ pub fn make_backend<'a>(rt: &Runtime, opts: &EvalOpts, flat: &'a [f32],
                         tensors: &PolicyTensors) -> Result<Box<dyn PolicyBackend + 'a>> {
     Ok(match opts.backend {
         EvalBackend::Pjrt => {
-            let exe = rt.exe_for(opts.algo.name(), "fwd", &opts.env,
+            let exe = rt.exe_for(opts.algo.name(), "fwd", opts.env(),
                                  opts.hidden, Some(1))?;
             let hyper = fwd_hyper(rt, opts.bits, opts.quant_on);
             Box::new(PjrtBackend {
@@ -107,46 +154,41 @@ pub fn evaluate(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
     Ok((stats::mean(&returns), stats::std(&returns)))
 }
 
-/// Full per-episode returns (for robustness bands and selection rules).
+/// Full per-episode returns (for robustness bands and selection rules),
+/// at the default pool width.
 pub fn evaluate_returns(rt: &Runtime, opts: &EvalOpts, flat: &[f32],
                         norm: &ObsNormalizer) -> Result<Vec<f64>> {
-    let mut env = envs::make(&opts.env)?;
-    let (obs_dim, act_dim) = (env.obs_dim(), env.act_dim());
-    let mut rng = Rng::new(opts.seed);
+    evaluate_returns_pooled(rt, opts, flat, norm,
+                            DEFAULT_POOL.min(opts.episodes.max(1)))
+}
+
+/// Per-episode returns with a pinned episode-pool width. The pool is a
+/// throughput knob only: any width yields bit-identical returns.
+pub fn evaluate_returns_pooled(rt: &Runtime, opts: &EvalOpts,
+                               flat: &[f32], norm: &ObsNormalizer,
+                               pool: usize) -> Result<Vec<f64>> {
+    // probe dims once, off the bare env
+    let probe = envs::make(opts.env())?;
+    let (obs_dim, act_dim) = (probe.obs_dim(), probe.act_dim());
+    drop(probe);
 
     let spec = rt
         .manifest
         .specs
-        .get(&format!("{}_{}_h{}", opts.algo.name(), opts.env, opts.hidden))
+        .get(&format!("{}_{}_h{}", opts.algo.name(), opts.env(),
+                      opts.hidden))
         .ok_or_else(|| anyhow::anyhow!("no spec for eval config"))?;
     let tensors = extract_tensors(spec, flat, obs_dim, opts.hidden,
                                   act_dim)?;
     let mut backend = make_backend(rt, opts, flat, &tensors)?;
 
-    let mut returns = Vec::with_capacity(opts.episodes);
-    let mut action = vec![0.0f32; act_dim];
-    for _ in 0..opts.episodes {
-        let mut obs = env.reset(&mut rng);
-        let mut ep = 0.0f64;
-        loop {
-            let mut x = obs.clone();
-            norm.normalize(&mut x);
-            if opts.noise_std > 0.0 {
-                for v in x.iter_mut() {
-                    *v += (rng.normal() * opts.noise_std) as f32;
-                }
-            }
-            backend.infer(&x, &mut action)?;
-            let out = env.step(&action);
-            ep += out.reward;
-            obs = out.obs;
-            if out.terminated || out.truncated {
-                break;
-            }
-        }
-        returns.push(ep);
-    }
-    Ok(returns)
+    let mut venv = VecEnv::new(|| {
+        let base = envs::make(opts.env())?;
+        // scenario atoms stack above the frozen normalization layer
+        Ok(opts.scenario.apply(wrappers::Normalize::wrap(base,
+                                                         norm.clone())))
+    }, pool)?;
+    venv.rollout_returns(&mut *backend, opts.episodes, opts.seed)
 }
 
 /// The AOT-compiled forward graph behind the unified trait: runs the
@@ -199,5 +241,46 @@ impl PolicyBackend for PjrtBackend<'_> {
             hidden: self.hidden,
             bits: None,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_accepts_every_documented_token() {
+        assert_eq!(EvalBackend::parse("pjrt").unwrap(), EvalBackend::Pjrt);
+        assert_eq!(EvalBackend::parse("fakequant").unwrap(),
+                   EvalBackend::FakeQuant);
+        assert_eq!(EvalBackend::parse("fp32").unwrap(), EvalBackend::Fp32);
+        // both spellings of the integer engine parse…
+        assert_eq!(EvalBackend::parse("int").unwrap(),
+                   EvalBackend::Integer);
+        assert_eq!(EvalBackend::parse("integer").unwrap(),
+                   EvalBackend::Integer);
+        // …and the error text names every accepted token
+        let err = EvalBackend::parse("tpu").unwrap_err().to_string();
+        for tok in ["pjrt", "fakequant", "fp32", "int", "integer"] {
+            assert!(err.contains(tok), "`{err}` missing `{tok}`");
+        }
+    }
+
+    #[test]
+    fn noise_shim_builds_the_obsnoise_scenario() {
+        let opts = EvalOpts {
+            algo: Algo::Sac,
+            scenario: Scenario::bare("hopper"),
+            hidden: 16,
+            bits: BitCfg::new(4, 3, 8),
+            quant_on: true,
+            episodes: 3,
+            seed: 1,
+            backend: EvalBackend::Fp32,
+        };
+        let shimmed = opts.clone().with_noise_std(0.25);
+        assert_eq!(shimmed.scenario.to_string(), "hopper+obsnoise:0.25");
+        // σ = 0 stays bare (the old knob's no-op case)
+        assert!(opts.with_noise_std(0.0).scenario.is_bare());
     }
 }

@@ -19,7 +19,8 @@ use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 use crate::util::stats::ObsNormalizer;
 
-pub use eval::{evaluate, EvalBackend, EvalOpts};
+pub use eval::{evaluate, evaluate_returns, evaluate_returns_pooled,
+               EvalBackend, EvalOpts, DEFAULT_POOL};
 pub use policy::{extract_tensors, init_flat};
 
 /// Which paper algorithm (both from CleanRL).
@@ -309,12 +310,11 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainResult> {
             eval_seed = eval_seed.wrapping_add(1);
             let (mean, std) = evaluate(rt, &EvalOpts {
                 algo: cfg.algo,
-                env: cfg.env.clone(),
+                scenario: envs::Scenario::bare(&cfg.env),
                 hidden: cfg.hidden,
                 bits: cfg.bits,
                 quant_on: cfg.quant_on,
                 episodes: cfg.eval_episodes,
-                noise_std: 0.0,
                 seed: eval_seed,
                 backend: EvalBackend::Pjrt,
             }, &flat, &norm)?;
@@ -359,6 +359,9 @@ pub struct TrialRun {
 /// the trial's own fields, so the outcome is independent of which
 /// executor worker (or process) runs it.
 pub fn run_trial(rt: &Runtime, trial: &Trial) -> Result<TrialRun> {
+    // fail fast: an unparsable scenario suffix must error before the
+    // training budget is spent, not at the post-training evaluate
+    let scenario = trial.scenario()?;
     let mut cfg = TrainConfig::new(trial.algo, &trial.env);
     cfg.hidden = trial.hidden;
     cfg.bits = trial.bits;
@@ -370,12 +373,13 @@ pub fn run_trial(rt: &Runtime, trial: &Trial) -> Result<TrialRun> {
     let train = self::train(rt, &cfg)?;
     let (eval_mean, eval_std) = evaluate(rt, &EvalOpts {
         algo: trial.algo,
-        env: trial.env.clone(),
+        // evaluation runs under the trial's scenario (bare when unset);
+        // training itself always sees the clean environment
+        scenario,
         hidden: trial.hidden,
         bits: trial.bits,
         quant_on: trial.quant_on,
         episodes: trial.eval_episodes,
-        noise_std: 0.0,
         seed: trial.eval_seed(),
         backend: EvalBackend::Pjrt,
     }, &train.flat, &train.normalizer)?;

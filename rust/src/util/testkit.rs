@@ -5,15 +5,18 @@
 //! back-compat server test, and `examples/policy_server.rs` when PJRT is
 //! unavailable. One builder here keeps them from drifting apart.
 
+use crate::policy::OwnedTensors;
 use crate::quant::export::IntPolicy;
-use crate::quant::fakequant::PolicyTensors;
 use crate::quant::BitCfg;
 use crate::util::rng::Rng;
 
-/// Build a deterministic random 3-layer integer policy of the given
-/// dimensions (same seed + dims + bits → identical policy).
-pub fn toy_policy(seed: u64, obs_dim: usize, hidden: usize,
-                  act_dim: usize, bits: BitCfg) -> IntPolicy {
+/// Deterministic random 3-layer FP32 tensors of the given dimensions
+/// (same seed + dims → identical tensors). The one toy-policy recipe:
+/// [`toy_policy`] quantizes these, and surfaces that need the FP32 side
+/// too (e.g. the fig3 surrogate's int-vs-fp32 pair) build from the same
+/// tensors instead of re-rolling their own.
+pub fn toy_tensors(seed: u64, obs_dim: usize, hidden: usize,
+                   act_dim: usize) -> OwnedTensors {
     let mut r = Rng::new(seed);
     let mut mk = |n: usize, s: f32| -> Vec<f32> {
         let mut v = vec![0.0f32; n];
@@ -21,19 +24,29 @@ pub fn toy_policy(seed: u64, obs_dim: usize, hidden: usize,
         v.iter_mut().for_each(|x| *x *= s);
         v
     };
-    let bufs = [
-        mk(hidden * obs_dim, 0.5), mk(hidden, 0.1),
-        mk(hidden * hidden, 0.3), mk(hidden, 0.1),
-        mk(act_dim * hidden, 0.3), mk(act_dim, 0.1),
-    ];
-    let p = PolicyTensors {
-        obs_dim, hidden, act_dim,
-        fc1_w: &bufs[0], fc1_b: &bufs[1],
-        fc2_w: &bufs[2], fc2_b: &bufs[3],
-        mean_w: &bufs[4], mean_b: &bufs[5],
-        s_in: 2.0, s_h1: 1.2, s_h2: 1.2, s_out: 1.0,
-    };
-    IntPolicy::from_tensors(&p, bits)
+    OwnedTensors {
+        obs_dim,
+        hidden,
+        act_dim,
+        fc1_w: mk(hidden * obs_dim, 0.5),
+        fc1_b: mk(hidden, 0.1),
+        fc2_w: mk(hidden * hidden, 0.3),
+        fc2_b: mk(hidden, 0.1),
+        mean_w: mk(act_dim * hidden, 0.3),
+        mean_b: mk(act_dim, 0.1),
+        s_in: 2.0,
+        s_h1: 1.2,
+        s_h2: 1.2,
+        s_out: 1.0,
+    }
+}
+
+/// Build a deterministic random 3-layer integer policy of the given
+/// dimensions (same seed + dims + bits → identical policy).
+pub fn toy_policy(seed: u64, obs_dim: usize, hidden: usize,
+                  act_dim: usize, bits: BitCfg) -> IntPolicy {
+    IntPolicy::from_tensors(
+        &toy_tensors(seed, obs_dim, hidden, act_dim).views(), bits)
 }
 
 #[cfg(test)]

@@ -19,6 +19,7 @@ fn template() -> TrialTemplate {
         learning_starts: 140,
         eval_episodes: 5,
         normalize: true,
+        scenario: None,
     }
 }
 

@@ -1,0 +1,162 @@
+//! Scenario / vectorized-evaluation acceptance tests (artifact-free).
+//!
+//! Pins the two contracts the eval redesign stands on:
+//!
+//! 1. **Trajectory determinism** — same env + seed produces
+//!    bit-identical observation/reward sequences, for all six envs,
+//!    bare and wrapped.
+//! 2. **Pool invariance** — `VecEnv` at pool sizes {1, 8} reproduces
+//!    the pre-redesign serial rollout exactly (same shared-RNG reset
+//!    sequence, same per-step inference), for a pinned
+//!    (env, seed, backend) matrix.
+
+use qcontrol::envs::{self, make, Scenario, VecEnv, ENV_NAMES};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::PolicyBackend;
+use qcontrol::quant::BitCfg;
+use qcontrol::util::rng::Rng;
+use qcontrol::util::testkit::toy_policy;
+
+/// Deterministic integer backend sized for an env.
+fn backend_for(env: &str, seed: u64) -> IntEngine {
+    let e = make(env).unwrap();
+    IntEngine::new(toy_policy(seed, e.obs_dim(), 16, e.act_dim(),
+                              BitCfg::new(6, 4, 8)))
+}
+
+/// One full episode driven by a deterministic action schedule; returns
+/// the exact (obs, reward) trace.
+fn trace(env: &mut dyn envs::Env, seed: u64, cap: usize)
+         -> (Vec<Vec<f32>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut obs = vec![env.reset(&mut rng)];
+    let mut rewards = Vec::new();
+    for t in 0..cap {
+        let a: Vec<f32> = (0..env.act_dim())
+            .map(|i| ((t * 7 + i * 3) as f32 * 0.21).sin())
+            .collect();
+        let out = env.step(&a);
+        obs.push(out.obs);
+        rewards.push(out.reward);
+        if out.terminated || out.truncated {
+            break;
+        }
+    }
+    (obs, rewards)
+}
+
+#[test]
+fn trajectories_bit_identical_across_all_six_envs() {
+    for name in ENV_NAMES {
+        let (o1, r1) = trace(&mut *make(name).unwrap(), 42, 200);
+        let (o2, r2) = trace(&mut *make(name).unwrap(), 42, 200);
+        assert_eq!(o1, o2, "{name}: obs diverged");
+        assert_eq!(r1, r2, "{name}: rewards diverged");
+        // and a different seed must actually change the trajectory
+        let (o3, _) = trace(&mut *make(name).unwrap(), 43, 200);
+        assert_ne!(o1, o3, "{name}: seed has no effect");
+    }
+}
+
+#[test]
+fn wrapped_trajectories_bit_identical_across_all_six_envs() {
+    for name in ENV_NAMES {
+        let sc = Scenario::parse_suffix(
+            name, "domainrand:0.1+obsnoise:0.05+dropout:0.02+delay:1")
+            .unwrap();
+        let (o1, r1) = trace(&mut *sc.build().unwrap(), 7, 120);
+        let (o2, r2) = trace(&mut *sc.build().unwrap(), 7, 120);
+        assert_eq!(o1, o2, "{name}: wrapped obs diverged");
+        assert_eq!(r1, r2, "{name}: wrapped rewards diverged");
+    }
+}
+
+/// The pre-redesign serial evaluation loop, verbatim: one shared RNG,
+/// resets drawn sequentially, one `infer` per step, no pooling. (The
+/// historical normalizer step is the identity here — these policies are
+/// evaluated raw, which is what a disabled `ObsNormalizer` did.)
+fn pre_redesign_serial(env_name: &str, backend: &mut dyn PolicyBackend,
+                       episodes: usize, seed: u64) -> Vec<f64> {
+    let mut env = make(env_name).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut action = vec![0.0f32; env.act_dim()];
+    let mut returns = Vec::with_capacity(episodes);
+    for _ in 0..episodes {
+        let mut obs = env.reset(&mut rng);
+        let mut ep = 0.0f64;
+        loop {
+            backend.infer(&obs, &mut action).unwrap();
+            let out = env.step(&action);
+            ep += out.reward;
+            obs = out.obs;
+            if out.terminated || out.truncated {
+                break;
+            }
+        }
+        returns.push(ep);
+    }
+    returns
+}
+
+#[test]
+fn vecenv_matches_pre_redesign_serial_eval_exactly() {
+    // pinned (env, seed) matrix; pendulum truncates at 200, hopper
+    // terminates on falls, halfcheetah runs its full 1000-step episodes
+    let matrix = [("pendulum", 5, 101u64), ("pendulum", 5, 202),
+                  ("hopper", 4, 101), ("hopper", 4, 303),
+                  ("halfcheetah", 2, 404)];
+    for (env, episodes, seed) in matrix {
+        let mut be = backend_for(env, 9);
+        let want = pre_redesign_serial(env, &mut be, episodes, seed);
+        assert_eq!(want.len(), episodes);
+        let sc = Scenario::bare(env);
+        for pool in [1usize, 8] {
+            let mut venv = VecEnv::from_scenario(&sc, pool).unwrap();
+            let got = venv
+                .rollout_returns(&mut be, episodes, seed)
+                .unwrap();
+            assert_eq!(got, want,
+                       "{env} seed {seed} pool {pool}: vectorized \
+                        rollout diverged from the serial reference");
+        }
+    }
+}
+
+#[test]
+fn perturbed_scenarios_are_pool_invariant() {
+    // every random wrapper in one stack: pool order must not leak into
+    // any episode's stream
+    let sc = Scenario::parse_suffix(
+        "hopper", "domainrand:0.15+obsnoise:0.1+dropout:0.05+hold:2")
+        .unwrap();
+    let mut be = backend_for("hopper", 5);
+    let mut want = None;
+    for pool in [1usize, 3, 8] {
+        let mut venv = VecEnv::from_scenario(&sc, pool).unwrap();
+        let got = venv.rollout_returns(&mut be, 6, 1234).unwrap();
+        match &want {
+            None => want = Some(got),
+            Some(w) => assert_eq!(&got, w, "pool {pool} diverged"),
+        }
+    }
+    // the perturbations must actually bite: a bare rollout differs
+    let mut bare = VecEnv::from_scenario(&Scenario::bare("hopper"), 8)
+        .unwrap();
+    let clean = bare.rollout_returns(&mut be, 6, 1234).unwrap();
+    assert_ne!(clean, want.unwrap(), "scenario had no effect");
+}
+
+#[test]
+fn preset_scenarios_run_on_every_env() {
+    // every named preset × every env builds and completes an episode
+    for &(preset, _) in qcontrol::envs::scenario::PRESETS {
+        for env in ["pendulum", "ant"] {
+            let sc = Scenario::parse(&format!("{env}+{preset}")).unwrap();
+            let mut be = backend_for(env, 3);
+            let mut venv = VecEnv::from_scenario(&sc, 2).unwrap();
+            let r = venv.rollout_returns(&mut be, 2, 5).unwrap();
+            assert_eq!(r.len(), 2, "{env}+{preset}");
+            assert!(r.iter().all(|x| x.is_finite()), "{env}+{preset}");
+        }
+    }
+}

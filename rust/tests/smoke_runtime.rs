@@ -65,12 +65,11 @@ fn short_training_run_improves_pendulum() {
     let norm_fresh = ObsNormalizer::new(3, false);
     let opts = EvalOpts {
         algo: Algo::Sac,
-        env: "pendulum".into(),
+        scenario: qcontrol::envs::Scenario::bare("pendulum"),
         hidden: 16,
         bits: cfg.bits,
         quant_on: true,
         episodes: 10,
-        noise_std: 0.0,
         seed: 42,
         backend: EvalBackend::Pjrt,
     };
