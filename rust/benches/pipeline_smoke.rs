@@ -9,7 +9,7 @@
 //! workers must select identically) and emits the same `pipeline.json`
 //! the `qcontrol pipeline` command produces.
 
-use qcontrol::coordinator::pipeline::assemble_report;
+use qcontrol::coordinator::pipeline::{assemble_report, emit_datapaths};
 use qcontrol::coordinator::select::{select_model_on, SelectProtocol};
 use qcontrol::coordinator::sweep::SweepProtocol;
 use qcontrol::experiment::{fnv1a64, Executor, RunStore, Trial,
@@ -105,16 +105,26 @@ fn main() {
     art.save(&qpol_path).unwrap();
     let synth = synthesize(&art.policy, &XC7A15T, 1e8).unwrap();
 
+    // emit the C/Verilog datapaths exactly as the pipeline tail does,
+    // and drop a copy in the CWD so CI uploads one emitted pair as a
+    // build artifact next to BENCH_*.json
+    let (c_path, v_path) = emit_datapaths(&art, store.dir()).unwrap();
+    std::fs::copy(&c_path, format!("EMIT_{}.c", art.id)).unwrap();
+    std::fs::copy(&v_path, format!("EMIT_{}.v", art.id)).unwrap();
+
     let report = assemble_report(&select, &art, &qpol_path, &synth,
-                                 &XC7A15T, 1e8, exec.stats());
+                                 &XC7A15T, 1e8,
+                                 (c_path.as_path(), v_path.as_path()),
+                                 exec.stats());
     std::fs::write("pipeline.json", report.to_string()).unwrap();
 
     let stats = exec.stats();
     println!("pipeline smoke ok in {:.1} ms: {} jobs, {} trials trained, \
               {} deduped; selected h={} bits={}; {} LUTs, {:.1e} \
-              actions/s; wrote pipeline.json and {}",
+              actions/s; wrote pipeline.json, {}, and the emitted \
+              EMIT_{}.c/.v pair",
              t0.elapsed().as_secs_f64() * 1e3, stats.jobs, stats.executed,
              stats.deduped, select.hidden, select.bits,
              synth.design.luts(), synth.throughput,
-             qpol_path.display());
+             qpol_path.display(), art.id);
 }

@@ -11,22 +11,21 @@
 //!   each stage one parallel trial wave, audited by typed
 //!   [`select::StageOutcome`]s in a [`select::SelectReport`].
 //! * [`pipeline`] — the one-shot learning-to-hardware chain: selection →
-//!   `.qpol` export → Artix-7 synthesis, emitting a single
-//!   `pipeline.json` report in a resumable run directory.
+//!   `.qpol` export → Artix-7 synthesis → C/Verilog datapath emission,
+//!   emitting a single `pipeline.json` report in a resumable run
+//!   directory.
 //! * [`serving`] — the deployment serving subsystem: concurrent TCP
 //!   accepts over a bounded worker pool, a [`crate::policy::PolicyRegistry`]
 //!   of `.qpol` artifacts served by per-policy inference cores (requests
 //!   routed by id over the framed v2 protocol, header-less v1 clients
 //!   falling back to the default policy), batched integer-only inference,
 //!   and centralized µs latency accounting.
-//! * [`server`] — back-compat facade over [`serving`] (old entry point).
 //! * [`store`]  — JSON results store, so every bench/experiment appends to
 //!   `results/*.json` reproducibly. Trial-granular, resumable state lives
 //!   in [`crate::experiment::RunStore`] under `results/runs/`.
 
 pub mod pipeline;
 pub mod select;
-pub mod server;
 pub mod serving;
 pub mod store;
 pub mod sweep;

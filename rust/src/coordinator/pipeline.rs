@@ -1,6 +1,6 @@
 //! One-shot learning-to-hardware pipeline: staged selection → `.qpol`
-//! export → FPGA synthesis, emitting a single machine-readable
-//! `pipeline.json` report.
+//! export → FPGA synthesis → C/Verilog datapath emission, emitting a
+//! single machine-readable `pipeline.json` report.
 //!
 //! The pipeline runs inside one resumable [`RunStore`] directory
 //! (`results/runs/pipeline-<env>-<cfg>/`): selection trials persist
@@ -18,6 +18,7 @@ use super::store::now_secs;
 use crate::experiment::{ExecStats, Executor, ExperimentPlan, RlRunner,
                         RunStore};
 use crate::policy::PolicyArtifact;
+use crate::qir;
 use crate::quant::export::IntPolicy;
 use crate::quant::BitCfg;
 use crate::rl::{self, Algo};
@@ -33,8 +34,24 @@ pub struct PipelineRun {
     pub policy_id: String,
     pub qpol_path: PathBuf,
     pub synth: SynthReport,
+    /// emitted integer-only C datapath (`<id>.c` in the run dir)
+    pub emit_c_path: PathBuf,
+    /// emitted Verilog module (`<id>.v` in the run dir)
+    pub emit_v_path: PathBuf,
     pub run_dir: PathBuf,
     pub report_path: PathBuf,
+}
+
+/// Render a verified artifact as its C + Verilog datapaths next to the
+/// `.qpol` it came from — shared by the pipeline tail and the CI smoke
+/// bench. Filenames use `qir::identifier` (the emitted symbols' stem),
+/// so a hostile artifact id cannot escape `dir`. Returns
+/// `(c_path, verilog_path)`.
+pub fn emit_datapaths(art: &PolicyArtifact, dir: &Path)
+                      -> Result<(PathBuf, PathBuf)> {
+    // the emitters verify the graph themselves
+    let g = qir::lower(&art.policy).with_name(&art.id);
+    Ok((qir::write_c(&g, dir)?, qir::write_verilog(&g, dir)?))
 }
 
 /// Deterministic run-directory name for a pipeline configuration.
@@ -61,9 +78,11 @@ pub fn build_artifact(manifest: &Manifest, env: &str, algo: Algo,
         .with_context(|| format!("no spec for {env} h={hidden}"))?;
     let tensors = rl::extract_tensors(spec, flat, dims.obs_dim, hidden,
                                       dims.act_dim)?;
-    let mut art = PolicyArtifact::new(
-        id, IntPolicy::from_tensors(&tensors, bits))
-        .with_normalizer(norm);
+    let policy = IntPolicy::from_tensors(&tensors, bits);
+    // same IR gate artifact *loading* applies: never hand the serving /
+    // emit paths a policy that could wrap an i32 accumulator
+    qir::lower(&policy).verify()?;
+    let mut art = PolicyArtifact::new(id, policy).with_normalizer(norm);
     art.env = env.to_string();
     Ok(art)
 }
@@ -132,8 +151,12 @@ pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
     art.save(&qpol_path)?;
 
     let synth = synthesize(&art.policy, &XC7A15T, clock_hz)?;
+    let (emit_c_path, emit_v_path) = emit_datapaths(&art, store.dir())?;
     let report = assemble_report(&select, &art, &qpol_path, &synth,
-                                 &XC7A15T, clock_hz, exec.stats());
+                                 &XC7A15T, clock_hz,
+                                 (emit_c_path.as_path(),
+                                  emit_v_path.as_path()),
+                                 exec.stats());
     let report_path = store.write_report("pipeline", &report)?;
 
     Ok(PipelineRun {
@@ -141,6 +164,8 @@ pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
         policy_id: art.id,
         qpol_path,
         synth,
+        emit_c_path,
+        emit_v_path,
         run_dir: store.dir().to_path_buf(),
         report_path,
     })
@@ -149,11 +174,26 @@ pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
 /// Assemble the `pipeline.json` report. Pure of the runtime, so the CI
 /// smoke bench exercises the identical report path with a surrogate
 /// selection.
+#[allow(clippy::too_many_arguments)]
 pub fn assemble_report(select: &SelectReport, art: &PolicyArtifact,
                        qpol_path: &Path, synth: &SynthReport,
-                       device: &Device, clock_hz: f64, stats: ExecStats)
+                       device: &Device, clock_hz: f64,
+                       emitted: (&Path, &Path), stats: ExecStats)
                        -> Json {
     let p = &art.policy;
+    let (emit_c, emit_v) = emitted;
+    let artifact = vec![
+        ("id", Json::str(&art.id)),
+        ("path", Json::str(qpol_path.to_string_lossy())),
+        ("hidden", Json::num(p.hidden as f64)),
+        ("obs_dim", Json::num(p.obs_dim as f64)),
+        ("act_dim", Json::num(p.act_dim as f64)),
+        ("bits", Json::str(p.bits.to_string())),
+        ("weight_bits", Json::num(p.weight_bits_total() as f64)),
+        ("threshold_bits", Json::num(p.threshold_bits_total() as f64)),
+        ("emitted_c", Json::str(emit_c.to_string_lossy())),
+        ("emitted_verilog", Json::str(emit_v.to_string_lossy())),
+    ];
     Json::obj(vec![
         ("env", Json::str(&select.env)),
         ("generated_unix", Json::num(now_secs() as f64)),
@@ -164,16 +204,7 @@ pub fn assemble_report(select: &SelectReport, art: &PolicyArtifact,
             ("trials_deduped", Json::num(stats.deduped as f64)),
         ])),
         ("selection", select.to_json()),
-        ("artifact", Json::obj(vec![
-            ("id", Json::str(&art.id)),
-            ("path", Json::str(qpol_path.to_string_lossy())),
-            ("hidden", Json::num(p.hidden as f64)),
-            ("obs_dim", Json::num(p.obs_dim as f64)),
-            ("act_dim", Json::num(p.act_dim as f64)),
-            ("bits", Json::str(p.bits.to_string())),
-            ("weight_bits", Json::num(p.weight_bits_total() as f64)),
-            ("threshold_bits", Json::num(p.threshold_bits_total() as f64)),
-        ])),
+        ("artifact", Json::obj(artifact)),
         ("synthesis", Json::obj(vec![
             ("device", Json::str(device.name)),
             ("clock_hz", Json::num(clock_hz)),

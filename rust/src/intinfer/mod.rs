@@ -7,6 +7,17 @@
 //! owned by the engine. The paper's µs-scale "latency per action" claim is
 //! benchmarked against this engine (`benches/intinfer_latency.rs`) while
 //! the cycle-accurate FPGA numbers come from `synth`.
+//!
+//! `IntEngine` is the fast specialized executor of the integer IR: the
+//! reference semantics live in [`crate::qir::Interpreter`], and the
+//! property suite in `rust/tests/qir.rs` pins the two bit-identical.
+//! The i32 accumulation below is sound because `qir`'s `verify()` pass
+//! bounds the worst-case accumulator (`cols × |w|max × |x|max`) to
+//! `i32`, and every path that feeds this engine runs it — `.qpol`
+//! loading (`PolicyArtifact::from_bytes`, hence registry + serving),
+//! checkpoint export (`build_artifact`), and the `eval --backend int`
+//! resolution — so wider configurations are rejected with a
+//! descriptive error instead of wrapping here.
 
 use crate::policy::{PolicyBackend, PolicyDescriptor};
 use crate::quant::export::IntPolicy;
@@ -56,9 +67,10 @@ impl IntEngine {
             for j in 0..layer.rows {
                 let wrow =
                     &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
-                // i32 accumulation is safe: |acc| <= cols * 127 * 255 << 2^31
-                // (iterator form + exact slice bounds lets LLVM drop the
-                // bounds checks and vectorize — see EXPERIMENTS.md §Perf)
+                // i32 accumulation is safe: qir::verify bounds
+                // cols * |w|max * |x|max to i32 for every deployable
+                // graph (iterator form + exact slice bounds lets LLVM
+                // drop the bounds checks and vectorize)
                 let acc: i32 = wrow
                     .iter()
                     .zip(x)

@@ -20,6 +20,7 @@ pub mod physics;
 pub mod replay;
 pub mod quant;
 pub mod intinfer;
+pub mod qir;
 pub mod policy;
 pub mod synth;
 pub mod runtime;

@@ -9,6 +9,7 @@
 //!   pipeline  one-shot select → export → synth, emits pipeline.json
 //!   synth     synthesize a config to the XC7A15T model (Table 3 row)
 //!   export    convert a checkpoint into a deployable .qpol artifact
+//!   emit      render a .qpol as integer-only C and/or a Verilog module
 //!   serve     run the integer action server over TCP (ckpt or artifact dir)
 //!   info      artifact/manifest summary
 //!
@@ -16,6 +17,7 @@
 //!   qcontrol train --env pendulum --hidden 16 --bits 4,3,8 --steps 3000
 //!   qcontrol pipeline --env pendulum --seeds 3 --jobs 8
 //!   qcontrol export --ckpt results/pendulum_sac.ckpt --out pols/pend.qpol
+//!   qcontrol emit --qpol pols/pend.qpol --format c --out emitted/
 //!   qcontrol serve --dir pols --default pend --port 7777
 
 use anyhow::{Context, Result};
@@ -86,6 +88,7 @@ fn main() -> Result<()> {
         "pipeline" => cmd_pipeline(&args),
         "synth" => cmd_synth(&args),
         "export" => cmd_export(&args),
+        "emit" => cmd_emit(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         // (`--help` never reaches here: `--`-prefixed tokens are flags,
@@ -111,8 +114,7 @@ usage: qcontrol <cmd> [--flags]
   eval     --ckpt PATH [--episodes N] [--scenario SPEC]
            [--backend pjrt|fakequant|fp32|int]
            (SPEC is a perturbation stack or preset, e.g.
-            `obsnoise:0.05+delay:2` or `flaky-sensors`; --noise SIGMA
-            is kept one release as a shim for `obsnoise:SIGMA`)
+            `obsnoise:0.05+delay:2` or `flaky-sensors`)
   robustness
            --ckpt PATH [--env E] [--scenarios S1,S2,...]
            [--backends int,fp32] [--episodes N] [--seed S] [--out FILE]
@@ -123,10 +125,15 @@ usage: qcontrol <cmd> [--flags]
   select   --env E [--steps N] [--seeds N] [--jobs N]
   pipeline --env E [--steps N] [--seeds N] [--jobs N] [--clock-hz HZ]
            (staged selection -> .qpol export -> XC7A15T synthesis at
-            HZ (default 1e8); emits results/runs/<run-id>/pipeline.json)
+            HZ (default 1e8) -> C/Verilog datapath emission; emits
+            results/runs/<run-id>/pipeline.json)
   synth    --env E [--hidden H] [--bits i,c,o]  (defaults: paper Table 1)
   export   --ckpt PATH [--out FILE.qpol] [--id ID]
            (checkpoint -> versioned integer .qpol artifact)
+  emit     --qpol FILE.qpol [--format c|verilog|both] [--out DIR]
+           (verified integer IR -> self-contained C datapath and/or
+            Verilog module, weights/thresholds as ROM literals; default
+            format both, default DIR results/emit)
   serve    --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
            [--max-batch N] [--max-connections N]
            (--dir serves every .qpol in ARTIFACTS, routed by policy id
@@ -212,21 +219,29 @@ fn load_ckpt(a: &Args) -> Result<(Json, Vec<f32>, ObsNormalizer, String,
 fn cmd_eval(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
     let (_, flat, norm, env, algo, hidden, bits, quant_on) = load_ckpt(a)?;
-    let scenario =
-        Scenario::parse_suffix(&env, a.str_opt("scenario").unwrap_or(""))
-            .context("--scenario")?;
+    if a.has("noise") {
+        // the PR-4 one-release compat shim is retired
+        let sigma = match a.str_opt("noise") {
+            Some(s) if s != "true" => s,
+            _ => "SIGMA",
+        };
+        anyhow::bail!(
+            "--noise was removed: evaluate under a scenario instead, \
+             e.g. `--scenario obsnoise:{sigma}` (the suffix form of \
+             `{env}+obsnoise:{sigma}`; see `qcontrol help`)");
+    }
     let opts = EvalOpts {
         algo,
-        scenario,
+        scenario: Scenario::parse_suffix(
+            &env, a.str_opt("scenario").unwrap_or(""))
+            .context("--scenario")?,
         hidden,
         bits,
         quant_on,
         episodes: a.usize("episodes", 10)?,
         seed: a.u64("seed", 42)?,
         backend: EvalBackend::parse(&a.str("backend", "pjrt"))?,
-    }
-    // --noise: compat shim for the retired noise_std knob (one release)
-    .with_noise_std(a.f64("noise", 0.0)?);
+    };
     let (mean, std) = rl::evaluate(&rt, &opts, &flat, &norm)?;
     println!("{}: return {mean:.1} ± {std:.1} over {} episodes \
               (backend {})",
@@ -457,6 +472,8 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
              qcontrol::util::human_time(run.synth.latency_s),
              run.synth.throughput, run.synth.power.total_w,
              run.synth.energy_per_action);
+    println!("emitted datapaths: {} / {}", run.emit_c_path.display(),
+             run.emit_v_path.display());
     let stats = exec.stats();
     println!("{} trial(s) trained, {} resumed, {} deduped",
              stats.executed, stats.cached, stats.deduped);
@@ -537,6 +554,38 @@ fn cmd_export(a: &Args) -> Result<()> {
               bits, {} threshold bits) -> {out}",
              art.id, art.env, p.obs_dim, p.hidden, p.act_dim, p.bits,
              p.weight_bits_total(), p.threshold_bits_total());
+    Ok(())
+}
+
+fn cmd_emit(a: &Args) -> Result<()> {
+    let qpol = a
+        .str_opt("qpol")
+        .context("--qpol required (a .qpol artifact; see `qcontrol \
+                  export`)")?;
+    let art = PolicyArtifact::load(qpol)?;
+    // artifact loading has already run IR verification; the emitters
+    // re-gate their own input. Filenames come from `qir::identifier`
+    // (via write_c/write_verilog), never from the raw artifact id.
+    let g = qcontrol::qir::lower(&art.policy).with_name(&art.id);
+    let out_dir = std::path::PathBuf::from(a.str("out", "results/emit"));
+    std::fs::create_dir_all(&out_dir)?;
+    let format = a.str("format", "both");
+    let (want_c, want_v) = match format.as_str() {
+        "c" => (true, false),
+        "verilog" => (false, true),
+        "both" => (true, true),
+        other => anyhow::bail!(
+            "--format `{other}`: expected c, verilog, or both"),
+    };
+    println!("emitting `{}` ({})", art.id, g.summary());
+    if want_c {
+        let path = qcontrol::qir::write_c(&g, &out_dir)?;
+        println!("  C datapath       -> {}", path.display());
+    }
+    if want_v {
+        let path = qcontrol::qir::write_verilog(&g, &out_dir)?;
+        println!("  Verilog module   -> {}", path.display());
+    }
     Ok(())
 }
 

@@ -310,19 +310,28 @@ impl PolicyArtifact {
                 "tanh LUT size {} != output levels {}", tanh_lut.len(),
                 last.out_range.levels());
 
+        let policy = IntPolicy {
+            obs_dim,
+            hidden,
+            act_dim,
+            bits,
+            s_in,
+            in_range,
+            layers,
+            tanh_lut,
+        };
+        // a .qpol is untrusted input feeding the i32 engines (registry,
+        // serving, eval): run the full IR verification — threshold
+        // monotonicity, lattice membership, accumulator-width safety —
+        // here, so no loaded artifact can wrap an i32 accumulator
+        crate::qir::lower(&policy)
+            .verify()
+            .context("artifact fails integer-IR verification")?;
+
         Ok(PolicyArtifact {
             id,
             env,
-            policy: IntPolicy {
-                obs_dim,
-                hidden,
-                act_dim,
-                bits,
-                s_in,
-                in_range,
-                layers,
-                tanh_lut,
-            },
+            policy,
             norm_mean,
             norm_var,
         })

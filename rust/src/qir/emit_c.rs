@@ -1,0 +1,302 @@
+//! C emission: render a verified [`QGraph`] as one self-contained,
+//! integer-only C file.
+//!
+//! The emitted translation unit has no dependencies beyond libc
+//! (`math.h` for the boundary `rintf`), keeps every weight/threshold as
+//! a `static const` ROM literal, and isolates the controller's single
+//! floating-point operation — the input quantization — in one boundary
+//! function. All f32 constants cross as IEEE-754 bit patterns
+//! (`memcpy`-punned), so the file reproduces the rust engines **bit for
+//! bit**: the cc-guarded smoke test in `rust/tests/qir.rs` compiles it
+//! with `-DQPOL_TEST_MAIN` and diffs raw action bit patterns against
+//! [`super::Interpreter`].
+//!
+//! ```text
+//! cc -O2 -c policy.c                         # datapath only
+//! cc -O2 -DQPOL_TEST_MAIN policy.c -lm -o p  # stdin/stdout driver
+//! ```
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::{QGraph, QirBackend};
+
+/// Sanitize a graph name into a C/Verilog identifier — also the file
+/// stem every `write_*` helper uses, so artifact ids with separators or
+/// other filesystem-hostile characters cannot escape the output dir.
+pub fn identifier(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if s.is_empty() || s.chars().next().unwrap().is_ascii_digit() {
+        s.insert(0, 'q');
+    }
+    s
+}
+
+/// Wrap `items` into indented source lines of ~`width` columns.
+pub(crate) fn wrap_list(items: &[String], indent: &str, width: usize)
+                        -> String {
+    let mut out = String::new();
+    let mut line = String::from(indent);
+    for (i, item) in items.iter().enumerate() {
+        let last = i + 1 == items.len();
+        let piece =
+            if last { item.clone() } else { format!("{item}, ") };
+        if line.len() + piece.len() > width && line.len() > indent.len() {
+            out.push_str(line.trim_end());
+            out.push('\n');
+            line = String::from(indent);
+        }
+        line.push_str(&piece);
+    }
+    out.push_str(line.trim_end());
+    out
+}
+
+/// Emit the graph as a self-contained C file (see module docs).
+pub fn emit_c(g: &QGraph) -> Result<String> {
+    g.verify()?;
+    let layers = g.layers()?;
+    let (s_in, in_r) = g.input_quantizer()?;
+    let (lut, out_r) = g.tanh()?;
+    let ident = identifier(&g.name);
+    let up = ident.to_ascii_uppercase();
+    // the rust quantizer guards the scale once; bake the guarded value
+    let s_in_bits = s_in.max(1e-12).to_bits();
+    // Rust's `NaN as i64` is 0, then clamped onto the lattice
+    let nan_q = 0i32.clamp(in_r.qmin, in_r.qmax);
+    let maxdim = g.max_int_dim();
+    let max_bound = layers
+        .iter()
+        .map(|l| l.acc_edge.abs_max())
+        .max()
+        .unwrap_or(0);
+
+    let mut c = String::new();
+    let w = &mut c;
+    writeln!(w, "/* {} — integer-only controller datapath emitted by \
+                 `qcontrol emit`.", g.name)?;
+    writeln!(w, " *")?;
+    writeln!(w, " * graph: {}", g.summary())?;
+    writeln!(w, " *")?;
+    writeln!(w, " * Contract: the caller feeds the *normalized* \
+                 observation (the frozen")?;
+    writeln!(w, " * normalizer travels in the .qpol NORM section); \
+                 {ident}_infer projects it")?;
+    writeln!(w, " * onto the input lattice — the one floating-point \
+                 operation of the")?;
+    writeln!(w, " * deployed controller — then runs integer \
+                 matrix-vector products with")?;
+    writeln!(w, " * i32 accumulators (worst case |acc| <= {max_bound} \
+                 < 2^31, checked by")?;
+    writeln!(w, " * qir verify), threshold requantization, and a tanh \
+                 LUT readout of")?;
+    writeln!(w, " * IEEE-754 bit patterns. Bit-identical to qcontrol's \
+                 qir Interpreter")?;
+    writeln!(w, " * and IntEngine (pinned by rust/tests/qir.rs).")?;
+    writeln!(w, " *")?;
+    writeln!(w, " * Compile:  cc -O2 -c {ident}.c")?;
+    writeln!(w, " *           cc -O2 -DQPOL_TEST_MAIN {ident}.c -lm -o \
+                 {ident}")?;
+    writeln!(w, " */")?;
+    writeln!(w, "#include <math.h>")?;
+    writeln!(w, "#include <stdint.h>")?;
+    writeln!(w, "#include <string.h>")?;
+    writeln!(w)?;
+    writeln!(w, "#define {up}_OBS_DIM {}", g.obs_dim)?;
+    writeln!(w, "#define {up}_ACT_DIM {}", g.act_dim)?;
+    writeln!(w)?;
+    writeln!(w, "static float {ident}_f32(uint32_t bits) {{")?;
+    writeln!(w, "    float f;")?;
+    writeln!(w, "    memcpy(&f, &bits, 4);")?;
+    writeln!(w, "    return f;")?;
+    writeln!(w, "}}")?;
+    writeln!(w)?;
+    writeln!(w, "/* input quantizer: lattice [{}, {}], qs {}, s_in f32 \
+                 bits {:#010x} */", in_r.qmin, in_r.qmax, in_r.qs,
+             s_in_bits)?;
+    writeln!(w, "static int32_t {ident}_quantize_input(float x) {{")?;
+    writeln!(w, "    /* rintf: round half to even, matching Rust's \
+                 round_ties_even */")?;
+    writeln!(w, "    float v = rintf(x / {ident}_f32({s_in_bits:#010x}u) * \
+                 {}.0f);", in_r.qs)?;
+    writeln!(w, "    if (isnan(v)) return {nan_q}; /* Rust NaN-as-int \
+                 cast, clamped */")?;
+    writeln!(w, "    if (v <= {}.0f) return {};", in_r.qmin, in_r.qmin)?;
+    writeln!(w, "    if (v >= {}.0f) return {};", in_r.qmax, in_r.qmax)?;
+    writeln!(w, "    return (int32_t)v;")?;
+    writeln!(w, "}}")?;
+
+    // --- ROMs -----------------------------------------------------------
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let nthr = l.levels - 1;
+        writeln!(w)?;
+        writeln!(w, "/* layer {n}: MatVec {}x{}, {}-bit weights */",
+                 l.rows, l.cols, l.w_bits)?;
+        writeln!(w, "static const int8_t {up}_W{n}[{} * {}] = {{",
+                 l.rows, l.cols)?;
+        let items: Vec<String> =
+            l.w.iter().map(|v| v.to_string()).collect();
+        writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
+        writeln!(w, "}};")?;
+        writeln!(w, "/* layer {n}: ThresholdRequant -> lattice [{}, {}] \
+                 ({} levels), acc {} bits */", l.out_range.qmin,
+                 l.out_range.qmax, l.levels, l.acc_bits)?;
+        writeln!(w, "static const int32_t {up}_T{n}[{} * {nthr}] = {{",
+                 l.rows)?;
+        let items: Vec<String> =
+            l.thresholds.iter().map(|v| v.to_string()).collect();
+        writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
+        writeln!(w, "}};")?;
+    }
+    writeln!(w)?;
+    writeln!(w, "/* output tanh LUT over the {}-level lattice, f32 bit \
+                 patterns */", lut.len())?;
+    writeln!(w, "static const uint32_t {up}_TANH[{}] = {{", lut.len())?;
+    let items: Vec<String> = lut
+        .iter()
+        .map(|v| format!("{:#010x}u", v.to_bits()))
+        .collect();
+    writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
+    writeln!(w, "}};")?;
+
+    // --- datapath -------------------------------------------------------
+    writeln!(w)?;
+    writeln!(w, "void {ident}_infer(const float obs[{up}_OBS_DIM], float \
+                 act[{up}_ACT_DIM]) {{")?;
+    writeln!(w, "    int32_t buf_a[{maxdim}], buf_b[{maxdim}];")?;
+    writeln!(w, "    int32_t *cur = buf_a, *nxt = buf_b, *swp;")?;
+    writeln!(w, "    int j, k, cnt;")?;
+    writeln!(w, "    for (j = 0; j < {up}_OBS_DIM; j++)")?;
+    writeln!(w, "        cur[j] = {ident}_quantize_input(obs[j]);")?;
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let nthr = l.levels - 1;
+        writeln!(w, "    /* layer {n}: |acc| <= {} (verified < 2^31) */",
+                 l.acc_edge.abs_max())?;
+        writeln!(w, "    for (j = 0; j < {}; j++) {{", l.rows)?;
+        writeln!(w, "        int32_t acc = 0;")?;
+        writeln!(w, "        for (k = 0; k < {}; k++)", l.cols)?;
+        writeln!(w, "            acc += (int32_t){up}_W{n}[j * {} + k] * \
+                     cur[k];", l.cols)?;
+        writeln!(w, "        cnt = 0;")?;
+        writeln!(w, "        while (cnt < {nthr} && {up}_T{n}[j * {nthr} \
+                     + cnt] <= acc)")?;
+        writeln!(w, "            cnt++;")?;
+        writeln!(w, "        nxt[j] = {} + cnt;", l.out_range.qmin)?;
+        writeln!(w, "    }}")?;
+        writeln!(w, "    swp = cur; cur = nxt; nxt = swp;")?;
+    }
+    writeln!(w, "    for (j = 0; j < {up}_ACT_DIM; j++)")?;
+    writeln!(w, "        act[j] = {ident}_f32({up}_TANH[cur[j] - ({})]);",
+             out_r.qmin)?;
+    writeln!(w, "}}")?;
+
+    // --- optional bit-exact stdio driver --------------------------------
+    writeln!(w)?;
+    writeln!(w, "#ifdef QPOL_TEST_MAIN")?;
+    writeln!(w, "#include <inttypes.h>")?;
+    writeln!(w, "#include <stdio.h>")?;
+    writeln!(w, "/* Reads {up}_OBS_DIM f32 bit patterns (hex) per \
+                 observation from stdin,")?;
+    writeln!(w, " * writes {up}_ACT_DIM action bit patterns (hex) per \
+                 line — the driver")?;
+    writeln!(w, " * behind the emitted-C bit-identity smoke test. */")?;
+    writeln!(w, "int main(void) {{")?;
+    writeln!(w, "    float obs[{up}_OBS_DIM], act[{up}_ACT_DIM];")?;
+    writeln!(w, "    uint32_t bits;")?;
+    writeln!(w, "    int i;")?;
+    writeln!(w, "    for (;;) {{")?;
+    writeln!(w, "        for (i = 0; i < {up}_OBS_DIM; i++) {{")?;
+    writeln!(w, "            if (scanf(\"%\" SCNx32, &bits) != 1) \
+                 return 0;")?;
+    writeln!(w, "            obs[i] = {ident}_f32(bits);")?;
+    writeln!(w, "        }}")?;
+    writeln!(w, "        {ident}_infer(obs, act);")?;
+    writeln!(w, "        for (i = 0; i < {up}_ACT_DIM; i++) {{")?;
+    writeln!(w, "            memcpy(&bits, &act[i], 4);")?;
+    writeln!(w, "            printf(\"%08\" PRIx32 \"%c\", bits,")?;
+    writeln!(w, "                   i + 1 == {up}_ACT_DIM ? '\\n' : ' \
+                 ');")?;
+    writeln!(w, "        }}")?;
+    writeln!(w, "    }}")?;
+    writeln!(w, "}}")?;
+    writeln!(w, "#endif /* QPOL_TEST_MAIN */")?;
+    Ok(c)
+}
+
+/// Emit the graph and write it as `dir/<identifier>.c` (the sanitized
+/// name, same stem as the symbols inside). Returns the written path.
+pub fn write_c(g: &QGraph, dir: &Path) -> Result<PathBuf> {
+    let path = dir.join(format!("{}.c", identifier(&g.name)));
+    std::fs::write(&path, emit_c(g)?)
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// [`QirBackend`] marker for C emission.
+pub struct CEmitter;
+
+impl QirBackend for CEmitter {
+    type Output = String;
+
+    fn name(&self) -> &'static str {
+        "emit-c"
+    }
+
+    fn compile(&self, g: &QGraph) -> Result<String> {
+        emit_c(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qir::lower;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    #[test]
+    fn emitted_c_is_structurally_complete() {
+        let g = lower(&testkit::toy_policy(3, 5, 8, 2,
+                                           BitCfg::new(4, 3, 8)))
+            .with_name("pend-a");
+        let c = emit_c(&g).unwrap();
+        // symbols are namespaced by the sanitized policy id, so two
+        // emitted controllers link into one binary; only the test-main
+        // guard macro stays fixed
+        for needle in ["#define PEND_A_OBS_DIM 5",
+                       "#define PEND_A_ACT_DIM 2",
+                       "PEND_A_W1", "PEND_A_W2", "PEND_A_W3", "PEND_A_T3",
+                       "PEND_A_TANH", "pend_a_quantize_input",
+                       "pend_a_infer", "QPOL_TEST_MAIN"] {
+            assert!(c.contains(needle), "missing `{needle}`");
+        }
+        // balanced braces is a cheap well-formedness proxy; the real
+        // compile check lives in the cc-guarded integration test
+        assert_eq!(c.matches('{').count(), c.matches('}').count());
+        // integer-only: the sole float math is the boundary quantizer
+        assert_eq!(c.matches("rintf").count(), 2, "one use + one comment");
+    }
+
+    #[test]
+    fn identifier_sanitization() {
+        assert_eq!(identifier("pend-a.v2"), "pend_a_v2");
+        assert_eq!(identifier("7seg"), "q7seg");
+        assert_eq!(identifier(""), "q");
+    }
+
+    #[test]
+    fn unverifiable_graph_is_rejected() {
+        let mut g = lower(&testkit::toy_policy(1, 4, 8, 2,
+                                               BitCfg::new(4, 3, 8)));
+        g.ops.pop();
+        g.edges.pop();
+        assert!(emit_c(&g).is_err());
+    }
+}

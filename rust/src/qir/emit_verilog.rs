@@ -1,0 +1,263 @@
+//! Verilog emission: render a verified [`QGraph`] as one self-contained
+//! module.
+//!
+//! The module is the **bit-true functional reference** of the datapath —
+//! a flat combinational description with every weight/threshold as a ROM
+//! literal — not the folded MVAU implementation (PE/SIMD folding,
+//! FIFOs, and the resource/timing story live in `crate::synth`). The two
+//! floating-point boundary ops stay off-chip, exactly as the paper
+//! deploys them (§2.3): the module consumes input-*lattice* points
+//! (signed, `in_bits` each, produced by the host-side quantizer the C
+//! emitter renders) and emits both the output lattice index and the tanh
+//! LUT entry as a 32-bit IEEE-754 bit pattern (an integer ROM lookup).
+//!
+//! Dialect: Verilog-2001 — `reg` arrays initialized in `initial` blocks
+//! (the standard ROM-inference idiom), indexed part-selects, no
+//! SystemVerilog constructs — so `iverilog`, Verilator, Vivado, and
+//! Yosys all ingest it.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::emit_c::identifier;
+use super::{EdgeTy, QGraph, QirBackend};
+
+/// Storage width for a lattice edge: exact for signed lattices, one
+/// headroom sign bit for unsigned ones so every operand of the signed
+/// datapath arithmetic is itself signed.
+fn store_bits(e: EdgeTy) -> u32 {
+    if e.signed() { e.bits() } else { e.bits() + 1 }
+}
+
+/// Signed two's-complement width for an arbitrary value interval.
+fn signed_bits(lo: i64, hi: i64) -> u32 {
+    EdgeTy::Int { dim: 1, lo: lo.min(-1), hi: hi.max(0), lattice: None }
+        .bits()
+}
+
+/// Emit the graph as a self-contained Verilog-2001 module.
+pub fn emit_verilog(g: &QGraph) -> Result<String> {
+    g.verify()?;
+    let layers = g.layers()?;
+    let (_s_in, in_r) = g.input_quantizer()?;
+    let (lut, out_r) = g.tanh()?;
+    let module = identifier(&g.name);
+    let in_bits = store_bits(g.edges[0]);
+    let last = layers.last().unwrap();
+    let out_bits = EdgeTy::lattice(1, last.out_range).bits();
+
+    let mut v = String::new();
+    let w = &mut v;
+    writeln!(w, "// {} — integer-only controller datapath emitted by \
+                 `qcontrol emit`.", g.name)?;
+    writeln!(w, "//")?;
+    writeln!(w, "// graph: {}", g.summary())?;
+    writeln!(w, "//")?;
+    writeln!(w, "// Bit-true combinational reference of the verified \
+                 integer IR; the")?;
+    writeln!(w, "// folded MVAU build (PE/SIMD, FIFOs, resources, \
+                 timing) is modeled by")?;
+    writeln!(w, "// `qcontrol synth`. Boundary contract: obs_q carries \
+                 already-quantized")?;
+    writeln!(w, "// input-lattice points [{}, {}] (the FP input \
+                 quantizer stays host-side),", in_r.qmin, in_r.qmax)?;
+    writeln!(w, "// act_q is the output-lattice index [{}, {}] and \
+                 act_f32 the tanh LUT", out_r.qmin, out_r.qmax)?;
+    writeln!(w, "// entry as an IEEE-754 bit pattern (integer ROM \
+                 lookup).")?;
+    writeln!(w, "module {module} (")?;
+    writeln!(w, "    input  wire [{}:0] obs_q,   // {} lanes x {in_bits}b \
+                 signed", g.obs_dim as u32 * in_bits - 1, g.obs_dim)?;
+    writeln!(w, "    output reg  [{}:0] act_q,   // {} lanes x {out_bits}b \
+                 signed lattice", g.act_dim as u32 * out_bits - 1,
+             g.act_dim)?;
+    writeln!(w, "    output reg  [{}:0] act_f32  // {} lanes x f32 bit \
+                 pattern", g.act_dim * 32 - 1, g.act_dim)?;
+    writeln!(w, ");")?;
+
+    // ---- ROMs ----------------------------------------------------------
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let nthr = l.levels - 1;
+        let tmin = l.thresholds.iter().copied().min().unwrap_or(0) as i64;
+        let tmax = l.thresholds.iter().copied().max().unwrap_or(0) as i64;
+        // thresholds may sit outside the reachable accumulator range
+        // (unreachable levels); size their ROM for the values themselves
+        let tw = signed_bits(tmin, tmax).max(l.acc_bits);
+        writeln!(w)?;
+        writeln!(w, "    // layer {n}: MatVec {}x{} ({}-bit weights), \
+                     requant to {} levels", l.rows, l.cols, l.w_bits,
+                 l.levels)?;
+        writeln!(w, "    reg signed [{}:0] w{n} [0:{}];", l.w_bits - 1,
+                 l.rows * l.cols - 1)?;
+        writeln!(w, "    reg signed [{}:0] t{n} [0:{}];", tw - 1,
+                 l.rows * nthr - 1)?;
+        writeln!(w, "    initial begin")?;
+        let items: Vec<String> = l
+            .w
+            .iter()
+            .enumerate()
+            .map(|(i, x)| format!("w{n}[{i}] = {x};"))
+            .collect();
+        writeln!(w, "{}", wrap_list_stmts(&items, "        "))?;
+        let items: Vec<String> = l
+            .thresholds
+            .iter()
+            .enumerate()
+            .map(|(i, x)| format!("t{n}[{i}] = {x};"))
+            .collect();
+        writeln!(w, "{}", wrap_list_stmts(&items, "        "))?;
+        writeln!(w, "    end")?;
+    }
+    writeln!(w)?;
+    writeln!(w, "    // output tanh LUT, f32 bit patterns over the {}-\
+                 level lattice", lut.len())?;
+    writeln!(w, "    reg [31:0] tanh_lut [0:{}];", lut.len() - 1)?;
+    writeln!(w, "    initial begin")?;
+    let items: Vec<String> = lut
+        .iter()
+        .enumerate()
+        .map(|(i, x)| format!("tanh_lut[{i}] = 32'h{:08x};", x.to_bits()))
+        .collect();
+    writeln!(w, "{}", wrap_list_stmts(&items, "        "))?;
+    writeln!(w, "    end")?;
+
+    // ---- activation storage --------------------------------------------
+    writeln!(w)?;
+    writeln!(w, "    reg signed [{}:0] x0 [0:{}];", in_bits - 1,
+             g.obs_dim - 1)?;
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let hw = store_bits(EdgeTy::lattice(1, l.out_range));
+        writeln!(w, "    reg signed [{}:0] h{n} [0:{}];", hw - 1,
+                 l.rows - 1)?;
+        writeln!(w, "    reg signed [{}:0] acc{n};", l.acc_bits - 1)?;
+    }
+    writeln!(w, "    integer i, j, k, cnt, idx;")?;
+
+    // ---- datapath ------------------------------------------------------
+    writeln!(w)?;
+    writeln!(w, "    always @* begin")?;
+    writeln!(w, "        for (i = 0; i < {}; i = i + 1)", g.obs_dim)?;
+    writeln!(w, "            x0[i] = $signed(obs_q[i*{in_bits} +: \
+                 {in_bits}]);")?;
+    let mut src = "x0".to_string();
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let nthr = l.levels - 1;
+        writeln!(w, "        // layer {n}: |acc| <= {} (fits the {}-bit \
+                     accumulator)", l.acc_edge.abs_max(), l.acc_bits)?;
+        writeln!(w, "        for (j = 0; j < {}; j = j + 1) begin",
+                 l.rows)?;
+        writeln!(w, "            acc{n} = 0;")?;
+        writeln!(w, "            for (k = 0; k < {}; k = k + 1)",
+                 l.cols)?;
+        writeln!(w, "                acc{n} = acc{n} + w{n}[j*{} + k] * \
+                     {src}[k];", l.cols)?;
+        writeln!(w, "            cnt = 0;")?;
+        writeln!(w, "            for (k = 0; k < {nthr}; k = k + 1)")?;
+        writeln!(w, "                if (t{n}[j*{nthr} + k] <= acc{n})")?;
+        writeln!(w, "                    cnt = cnt + 1;")?;
+        writeln!(w, "            h{n}[j] = {} + cnt;", l.out_range.qmin)?;
+        writeln!(w, "        end")?;
+        src = format!("h{n}");
+    }
+    writeln!(w, "        for (i = 0; i < {}; i = i + 1) begin",
+             g.act_dim)?;
+    writeln!(w, "            act_q[i*{out_bits} +: {out_bits}] = \
+                 {src}[i][{}:0];", out_bits - 1)?;
+    writeln!(w, "            idx = {src}[i] - ({});", out_r.qmin)?;
+    writeln!(w, "            act_f32[i*32 +: 32] = tanh_lut[idx];")?;
+    writeln!(w, "        end")?;
+    writeln!(w, "    end")?;
+    writeln!(w, "endmodule")?;
+    Ok(v)
+}
+
+/// Pack already-`;`-terminated statements a few per line.
+fn wrap_list_stmts(items: &[String], indent: &str) -> String {
+    let mut out = String::new();
+    let mut line = String::from(indent);
+    for item in items {
+        let piece = format!("{item} ");
+        if line.len() + piece.len() > 72 && line.len() > indent.len() {
+            out.push_str(line.trim_end());
+            out.push('\n');
+            line = String::from(indent);
+        }
+        line.push_str(&piece);
+    }
+    out.push_str(line.trim_end());
+    out
+}
+
+/// Emit the module and write it as `dir/<identifier>.v` (the sanitized
+/// name, matching the module name inside). Returns the written path.
+pub fn write_verilog(g: &QGraph, dir: &Path) -> Result<PathBuf> {
+    let path = dir.join(format!("{}.v", identifier(&g.name)));
+    std::fs::write(&path, emit_verilog(g)?)
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// [`QirBackend`] marker for Verilog emission.
+pub struct VerilogEmitter;
+
+impl QirBackend for VerilogEmitter {
+    type Output = String;
+
+    fn name(&self) -> &'static str {
+        "emit-verilog"
+    }
+
+    fn compile(&self, g: &QGraph) -> Result<String> {
+        emit_verilog(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qir::lower;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    #[test]
+    fn emitted_module_is_structurally_complete() {
+        // nb: the name must not contain the substring `end` (e.g.
+        // "pend-a") or the begin/end balance count below miscounts
+        let g = lower(&testkit::toy_policy(3, 5, 8, 2,
+                                           BitCfg::new(4, 3, 8)))
+            .with_name("ctrl-a");
+        let v = emit_verilog(&g).unwrap();
+        assert!(v.starts_with("// ctrl-a"));
+        for needle in ["module ctrl_a (", "endmodule", "obs_q", "act_q",
+                       "act_f32", "w1 [0:", "t3 [0:", "tanh_lut [0:",
+                       "always @*"] {
+            assert!(v.contains(needle), "missing `{needle}`");
+        }
+        // `end` also matches inside `endmodule`; discount it
+        assert_eq!(v.matches("begin").count(),
+                   v.matches("end").count()
+                       - v.matches("endmodule").count());
+        // one ROM + one activation array + one accumulator per layer
+        for n in 1..=3 {
+            assert!(v.contains(&format!("w{n} [0:")));
+            assert!(v.contains(&format!("h{n} [0:")));
+            assert!(v.contains(&format!("acc{n};")));
+        }
+    }
+
+    #[test]
+    fn port_widths_match_the_lattices() {
+        // obs 4 lanes x 6b signed in, 2 lanes x 8b out
+        let g = lower(&testkit::toy_policy(1, 4, 8, 2,
+                                           BitCfg::new(6, 3, 8)));
+        let v = emit_verilog(&g).unwrap();
+        assert!(v.contains("input  wire [23:0] obs_q"), "{v}");
+        assert!(v.contains("output reg  [15:0] act_q"));
+        assert!(v.contains("output reg  [63:0] act_f32"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Reference executor of the integer IR.
+//!
+//! Walks a verified [`QGraph`] op by op with unbounded (`i64`)
+//! accumulators and the exact lattice arithmetic of the exporter — the
+//! semantics every other executor is measured against. Because
+//! [`QGraph::verify`] bounds the worst-case accumulator of every MatVec
+//! to `i32`, the fast `i32` engines (`crate::intinfer::IntEngine`, the
+//! emitted C datapath) are bit-identical to this interpreter; the
+//! property suite in `rust/tests/qir.rs` pins
+//! `Interpreter ≡ IntEngine::infer ≡ IntPolicy::forward_naive`.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{QGraph, QOp, QirBackend};
+use crate::quant::quantize;
+
+/// Reference executor over an owned, verified graph.
+pub struct Interpreter {
+    g: QGraph,
+}
+
+impl Interpreter {
+    /// Verify the graph and take ownership. The only failure mode is a
+    /// graph that does not pass [`QGraph::verify`].
+    pub fn new(g: QGraph) -> Result<Interpreter> {
+        g.verify()?;
+        Ok(Interpreter { g })
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.g.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.g.act_dim
+    }
+
+    pub fn graph(&self) -> &QGraph {
+        &self.g
+    }
+
+    /// Execute one (already normalized) observation through the graph.
+    pub fn infer(&self, obs: &[f32]) -> Result<Vec<f32>> {
+        ensure!(obs.len() == self.g.obs_dim,
+                "observation of {} values, graph expects {}", obs.len(),
+                self.g.obs_dim);
+        let mut x: Vec<i64> = Vec::new();
+        for (i, op) in self.g.ops.iter().enumerate() {
+            match op {
+                QOp::QuantizeInput { s_in } => {
+                    let Some(r) = self.lattice_at(i) else {
+                        bail!("op {i}: missing input lattice");
+                    };
+                    x = obs
+                        .iter()
+                        .map(|&v| quantize(v, *s_in, r) as i64)
+                        .collect();
+                }
+                QOp::MatVec { rows, cols, w, .. } => {
+                    let mut next = vec![0i64; *rows];
+                    for (j, slot) in next.iter_mut().enumerate() {
+                        let wrow = &w[j * cols..(j + 1) * cols];
+                        *slot = wrow
+                            .iter()
+                            .zip(&x)
+                            .map(|(&wv, &xv)| wv as i64 * xv)
+                            .sum();
+                    }
+                    x = next;
+                }
+                QOp::ThresholdRequant { levels, thresholds, .. } => {
+                    let Some(r) = self.lattice_at(i) else {
+                        bail!("op {i}: missing requant lattice");
+                    };
+                    let n = levels - 1;
+                    for (row, acc) in x.iter_mut().enumerate() {
+                        let t = &thresholds[row * n..(row + 1) * n];
+                        let cnt =
+                            t.partition_point(|&th| (th as i64) <= *acc);
+                        *acc = r.qmin as i64 + cnt as i64;
+                    }
+                }
+                QOp::TanhLut { lut } => {
+                    let Some(r) = self.lattice_before(i) else {
+                        bail!("op {i}: missing output lattice");
+                    };
+                    return Ok(x
+                        .iter()
+                        .map(|&q| lut[(q - r.qmin as i64) as usize])
+                        .collect());
+                }
+            }
+        }
+        bail!("graph did not terminate in a TanhLut");
+    }
+
+    fn lattice_at(&self, i: usize) -> Option<crate::quant::QRange> {
+        match self.g.edges[i] {
+            super::EdgeTy::Int { lattice, .. } => lattice,
+            super::EdgeTy::F32 { .. } => None,
+        }
+    }
+
+    fn lattice_before(&self, i: usize) -> Option<crate::quant::QRange> {
+        if i == 0 {
+            return None;
+        }
+        self.lattice_at(i - 1)
+    }
+}
+
+/// [`QirBackend`] marker for reference execution.
+pub struct Interpret;
+
+impl QirBackend for Interpret {
+    type Output = Interpreter;
+
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn compile(&self, g: &QGraph) -> Result<Interpreter> {
+        Interpreter::new(g.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qir::lower;
+    use crate::quant::BitCfg;
+    use crate::util::rng::Rng;
+    use crate::util::testkit;
+
+    #[test]
+    fn matches_the_naive_threshold_forward() {
+        let p = testkit::toy_policy(11, 6, 12, 3, BitCfg::new(4, 3, 8));
+        let interp = Interpreter::new(lower(&p)).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let mut obs = vec![0.0f32; 6];
+            rng.fill_normal(&mut obs);
+            assert_eq!(interp.infer(&obs).unwrap(), p.forward_naive(&obs));
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error() {
+        let p = testkit::toy_policy(1, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let interp = Interpreter::new(lower(&p)).unwrap();
+        assert!(interp.infer(&[0.0; 3]).is_err());
+        assert!(interp.infer(&[]).is_err());
+    }
+
+    #[test]
+    fn backend_trait_compiles_the_graph() {
+        let g = lower(&testkit::toy_policy(3, 4, 8, 2,
+                                           BitCfg::new(4, 3, 8)));
+        let interp = Interpret.compile(&g).unwrap();
+        assert_eq!(Interpret.name(), "interp");
+        assert_eq!(interp.obs_dim(), 4);
+        assert_eq!(interp.act_dim(), 2);
+    }
+}

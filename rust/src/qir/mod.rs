@@ -1,0 +1,610 @@
+//! QIR — the typed integer compute-graph IR of the deployed controller.
+//!
+//! The paper's pipeline ends in hardware: a QAT policy is lowered to an
+//! integer-only datapath and synthesized to an Artix-7 (§2.3, §3.4).
+//! QIR is that datapath as a first-class object: a [`QGraph`] of typed
+//! ops — [`QOp::QuantizeInput`], [`QOp::MatVec`],
+//! [`QOp::ThresholdRequant`], [`QOp::TanhLut`] — whose edges carry
+//! explicit integer value types ([`EdgeTy`]: dimensions, value bounds,
+//! quantization lattices). Every consumer of the integer semantics is a
+//! backend over this one IR instead of re-interpreting the raw
+//! [`IntPolicy`] struct:
+//!
+//! * [`interp::Interpreter`] — the reference executor
+//!   (`crate::intinfer::IntEngine` stays the fast specialized executor
+//!   and is pinned bit-identical to it by `rust/tests/qir.rs`),
+//! * `crate::synth` — the FPGA costing/folding estimator consumes
+//!   [`QGraph`] op metadata,
+//! * [`emit_c`] / [`emit_verilog`] — render the graph as a
+//!   self-contained integer-only C file or a Verilog module
+//!   (`qcontrol emit`).
+//!
+//! The contract: [`lower`] turns an [`IntPolicy`] into a graph,
+//! [`QGraph::verify`] checks the structural invariants **once** — dim
+//! chaining, weight-lattice membership, per-row threshold monotonicity,
+//! and accumulator-width safety (the worst case `cols × |w|max × |x|max`
+//! must fit an `i32`, because every fast executor accumulates in `i32`)
+//! — and backends may then assume a well-formed graph instead of each
+//! asserting its own subset. Verification failures are descriptive
+//! errors, never panics.
+
+pub mod emit_c;
+pub mod emit_verilog;
+pub mod interp;
+
+pub use emit_c::{emit_c, identifier, write_c, CEmitter};
+pub use emit_verilog::{emit_verilog, write_verilog, VerilogEmitter};
+pub use interp::{Interpret, Interpreter};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::export::IntPolicy;
+use crate::quant::QRange;
+
+/// Type of one edge of the compute graph: what values flow between two
+/// ops. Integer edges carry exact inclusive value bounds plus (when the
+/// edge is a quantization lattice rather than a raw accumulator) the
+/// lattice description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeTy {
+    /// f32 values at the graph boundary (the normalized observation in,
+    /// the tanh'd action out) — the only non-integer edges.
+    F32 { dim: usize },
+    /// Integer values in `[lo, hi]`; `lattice` is present when the edge
+    /// is a quantization lattice (then `lo = qmin`, `hi = qmax`).
+    Int {
+        dim: usize,
+        lo: i64,
+        hi: i64,
+        lattice: Option<QRange>,
+    },
+}
+
+impl EdgeTy {
+    /// A lattice-typed integer edge.
+    pub fn lattice(dim: usize, r: QRange) -> EdgeTy {
+        EdgeTy::Int {
+            dim,
+            lo: r.qmin as i64,
+            hi: r.qmax as i64,
+            lattice: Some(r),
+        }
+    }
+
+    /// A symmetric accumulator edge `[-bound, bound]`.
+    pub fn acc(dim: usize, bound: i64) -> EdgeTy {
+        EdgeTy::Int { dim, lo: -bound, hi: bound, lattice: None }
+    }
+
+    pub fn dim(&self) -> usize {
+        match *self {
+            EdgeTy::F32 { dim } | EdgeTy::Int { dim, .. } => dim,
+        }
+    }
+
+    /// Largest absolute value the edge can carry (0 for f32 edges).
+    pub fn abs_max(&self) -> i64 {
+        match *self {
+            EdgeTy::F32 { .. } => 0,
+            EdgeTy::Int { lo, hi, .. } => lo.abs().max(hi.abs()),
+        }
+    }
+
+    /// Minimal two's-complement storage width for the edge's values
+    /// (sign bit included when `lo < 0`); 0 for f32 edges. For a b-bit
+    /// lattice edge this reproduces b exactly, for an accumulator edge
+    /// the analytic `acc_bits` of the exporter.
+    pub fn bits(&self) -> u32 {
+        fn ubits(v: u64) -> u32 {
+            64 - v.leading_zeros()
+        }
+        match *self {
+            EdgeTy::F32 { .. } => 0,
+            EdgeTy::Int { lo, hi, .. } => {
+                if lo < 0 {
+                    let pos = ubits(hi.max(0) as u64) + 1;
+                    let neg = ubits(lo.unsigned_abs() - 1) + 1;
+                    pos.max(neg)
+                } else {
+                    ubits(hi as u64).max(1)
+                }
+            }
+        }
+    }
+
+    pub fn signed(&self) -> bool {
+        matches!(*self, EdgeTy::Int { lo, .. } if lo < 0)
+    }
+}
+
+/// Ops of the integer datapath, in the paper's §2.3 vocabulary.
+#[derive(Clone, Debug)]
+pub enum QOp {
+    /// The single floating-point operation of the deployed controller:
+    /// project the (already normalized) observation onto the input
+    /// lattice with scale `s_in`.
+    QuantizeInput { s_in: f32 },
+    /// Integer matrix-vector product, `[rows, cols]` row-major lattice
+    /// weights on the signed `w_bits` lattice, wide accumulator out.
+    MatVec {
+        rows: usize,
+        cols: usize,
+        w_bits: u32,
+        w: Vec<i8>,
+    },
+    /// FINN-style threshold requantization of an accumulator vector onto
+    /// a `levels`-point lattice: `out = qmin + #{k : T[row][k] <= acc}`,
+    /// `[rows, levels-1]` row-major monotone thresholds (bias folded
+    /// in). `acc_bits` is the declared accumulator width the hardware
+    /// datapath provisions (drives the synthesis cost model).
+    ThresholdRequant {
+        levels: usize,
+        acc_bits: u32,
+        thresholds: Vec<i32>,
+    },
+    /// Terminal lookup of the output lattice through the tanh table —
+    /// integer index in, IEEE-754 bit pattern out.
+    TanhLut { lut: Vec<f32> },
+}
+
+impl QOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QOp::QuantizeInput { .. } => "QuantizeInput",
+            QOp::MatVec { .. } => "MatVec",
+            QOp::ThresholdRequant { .. } => "ThresholdRequant",
+            QOp::TanhLut { .. } => "TanhLut",
+        }
+    }
+}
+
+/// The typed integer compute graph: a verified chain
+/// `QuantizeInput → (MatVec → ThresholdRequant)+ → TanhLut` with
+/// `edges[i]` the output type of `ops[i]` (the input of `ops[0]` is the
+/// implicit `F32 { obs_dim }` boundary edge).
+#[derive(Clone, Debug)]
+pub struct QGraph {
+    /// provenance label (artifact id, …) — used by the emitters
+    pub name: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub ops: Vec<QOp>,
+    pub edges: Vec<EdgeTy>,
+}
+
+/// Lower a deployable [`IntPolicy`] to its compute graph. Pure
+/// restructuring — every number is carried over, nothing recomputed —
+/// so `lower` cannot fail; call [`QGraph::verify`] before executing,
+/// costing, or emitting the result.
+pub fn lower(p: &IntPolicy) -> QGraph {
+    let mut ops = vec![QOp::QuantizeInput { s_in: p.s_in }];
+    let mut edges = vec![EdgeTy::lattice(p.obs_dim, p.in_range)];
+    for l in &p.layers {
+        ops.push(QOp::MatVec {
+            rows: l.rows,
+            cols: l.cols,
+            w_bits: l.w_bits,
+            w: l.w_int.clone(),
+        });
+        edges.push(EdgeTy::acc(l.rows, l.acc_abs_bound()));
+        ops.push(QOp::ThresholdRequant {
+            levels: l.out_range.levels(),
+            acc_bits: l.acc_bits,
+            thresholds: l.thresholds.clone(),
+        });
+        edges.push(EdgeTy::lattice(l.rows, l.out_range));
+    }
+    ops.push(QOp::TanhLut { lut: p.tanh_lut.clone() });
+    edges.push(EdgeTy::F32 { dim: p.act_dim });
+    QGraph {
+        name: "qpol".to_string(),
+        obs_dim: p.obs_dim,
+        act_dim: p.act_dim,
+        ops,
+        edges,
+    }
+}
+
+impl QGraph {
+    pub fn with_name(mut self, name: impl Into<String>) -> QGraph {
+        self.name = name.into();
+        self
+    }
+
+    /// Input edge type of op `i`.
+    fn in_edge(&self, i: usize) -> EdgeTy {
+        if i == 0 {
+            EdgeTy::F32 { dim: self.obs_dim }
+        } else {
+            self.edges[i - 1]
+        }
+    }
+
+    /// One-line structural summary ("QuantizeInput(5) → MatVec 16x5 w4 →
+    /// …") for logs and emitted-file headers.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .ops
+            .iter()
+            .map(|op| match op {
+                QOp::QuantizeInput { .. } => {
+                    format!("QuantizeInput({})", self.obs_dim)
+                }
+                QOp::MatVec { rows, cols, w_bits, .. } => {
+                    format!("MatVec {rows}x{cols} w{w_bits}")
+                }
+                QOp::ThresholdRequant { levels, acc_bits, .. } => {
+                    format!("ThresholdRequant({levels} lv, acc \
+                             {acc_bits}b)")
+                }
+                QOp::TanhLut { lut } => format!("TanhLut({})", lut.len()),
+            })
+            .collect();
+        parts.join(" -> ")
+    }
+
+    /// Check every structural invariant of the graph once, so backends
+    /// (interpreter, synthesis estimator, emitters) can assume a
+    /// well-formed datapath. Errors are descriptive and name the
+    /// offending op; this never panics.
+    ///
+    /// Invariants:
+    /// * canonical shape `QuantizeInput (MatVec ThresholdRequant)+
+    ///   TanhLut`, with one output edge type per op;
+    /// * dimension chaining: each op's input dim equals the previous
+    ///   op's output dim (`cols` for MatVec), boundary dims match
+    ///   `obs_dim`/`act_dim`;
+    /// * weights live on the signed `w_bits` lattice;
+    /// * **accumulator-width safety**: the worst-case magnitude
+    ///   `cols × |w|max × |x|max` of every MatVec fits an `i32` — the
+    ///   fast executors (`IntEngine`, the emitted C, the Verilog
+    ///   datapath) accumulate at finite width, so a wider graph is
+    ///   rejected here instead of silently wrapping there;
+    /// * the declared `acc_bits` of each requant covers its input edge;
+    /// * thresholds: `rows × (levels-1)` of them, monotone
+    ///   nondecreasing per row;
+    /// * the tanh LUT is finite and exactly covers the output lattice.
+    pub fn verify(&self) -> Result<()> {
+        ensure!(!self.ops.is_empty(), "empty graph");
+        ensure!(self.ops.len() == self.edges.len(),
+                "{} ops but {} edge types", self.ops.len(),
+                self.edges.len());
+        ensure!(self.ops.len() >= 4 && self.ops.len() % 2 == 0,
+                "graph has {} ops, expected QuantizeInput + N x (MatVec, \
+                 ThresholdRequant) + TanhLut", self.ops.len());
+        ensure!(self.obs_dim >= 1 && self.act_dim >= 1,
+                "degenerate boundary dims {}x{}", self.obs_dim,
+                self.act_dim);
+
+        for (i, op) in self.ops.iter().enumerate() {
+            let inp = self.in_edge(i);
+            let out = self.edges[i];
+            let last = i + 1 == self.ops.len();
+            match op {
+                QOp::QuantizeInput { s_in } => {
+                    ensure!(i == 0,
+                            "op {i}: QuantizeInput only legal at the \
+                             input boundary");
+                    ensure!(s_in.is_finite() && *s_in > 0.0,
+                            "op {i}: input scale {s_in} not a positive \
+                             finite f32");
+                    let EdgeTy::Int { dim, lo, hi, lattice: Some(r) } =
+                        out
+                    else {
+                        bail!("op {i}: QuantizeInput must emit an \
+                               integer lattice edge, got {out:?}");
+                    };
+                    ensure!(dim == self.obs_dim,
+                            "op {i}: quantizer dim {dim} != obs_dim {}",
+                            self.obs_dim);
+                    ensure!(lo == r.qmin as i64 && hi == r.qmax as i64,
+                            "op {i}: lattice edge bounds [{lo}, {hi}] \
+                             disagree with its QRange {r:?}");
+                    ensure!(r.qmax > r.qmin && r.qs >= 1,
+                            "op {i}: degenerate input lattice {r:?}");
+                }
+                QOp::MatVec { rows, cols, w_bits, w } => {
+                    ensure!(i % 2 == 1 && !last,
+                            "op {i}: MatVec out of place (canonical \
+                             chain is QuantizeInput, then MatVec/\
+                             ThresholdRequant pairs, then TanhLut)");
+                    ensure!(*rows >= 1 && *cols >= 1,
+                            "op {i}: degenerate MatVec {rows}x{cols}");
+                    let EdgeTy::Int { dim: in_dim, .. } = inp else {
+                        bail!("op {i}: MatVec input must be an integer \
+                               edge, got {inp:?}");
+                    };
+                    ensure!(in_dim == *cols,
+                            "op {i}: MatVec cols {cols} != input dim \
+                             {in_dim} (dim chain broken)");
+                    ensure!(w.len() == rows * cols,
+                            "op {i}: {} weights for a {rows}x{cols} \
+                             MatVec", w.len());
+                    ensure!((1..=8).contains(w_bits),
+                            "op {i}: w_bits {w_bits} outside 1..=8 (i8 \
+                             lattice storage)");
+                    let wr = QRange::new(*w_bits, true);
+                    if let Some(bad) = w
+                        .iter()
+                        .find(|&&v| (v as i32) < wr.qmin
+                              || (v as i32) > wr.qmax)
+                    {
+                        bail!("op {i}: weight {bad} off the signed \
+                               {w_bits}-bit lattice [{}, {}]", wr.qmin,
+                              wr.qmax);
+                    }
+                    // --- accumulator-width safety ---------------------
+                    // The fast executors accumulate in i32 (IntEngine's
+                    // hot loop, the emitted C datapath); reject any
+                    // graph whose worst case could wrap there. i128
+                    // keeps the bound computation itself overflow-free.
+                    let wmax = w
+                        .iter()
+                        .fold(0i64, |m, &v| m.max((v as i64).abs()));
+                    let xmax = inp.abs_max();
+                    let bound =
+                        *cols as i128 * wmax as i128 * xmax as i128;
+                    ensure!(bound <= i32::MAX as i128,
+                            "op {i}: worst-case accumulator {bound} \
+                             (cols {cols} x |w|max {wmax} x |x|max \
+                             {xmax}) exceeds i32 — the integer engines \
+                             accumulate at 32 bits");
+                    let EdgeTy::Int { dim: out_dim, lo, hi, .. } = out
+                    else {
+                        bail!("op {i}: MatVec must emit an integer \
+                               accumulator edge, got {out:?}");
+                    };
+                    ensure!(out_dim == *rows,
+                            "op {i}: accumulator dim {out_dim} != rows \
+                             {rows}");
+                    ensure!(lo as i128 <= -bound && hi as i128 >= bound,
+                            "op {i}: accumulator edge [{lo}, {hi}] does \
+                             not cover the worst case ±{bound}");
+                }
+                QOp::ThresholdRequant { levels, acc_bits, thresholds } => {
+                    ensure!(i % 2 == 0 && i >= 2 && !last,
+                            "op {i}: ThresholdRequant out of place \
+                             (must follow a MatVec)");
+                    ensure!(*levels >= 2,
+                            "op {i}: requant to {levels} level(s)");
+                    let EdgeTy::Int { dim, .. } = inp else {
+                        bail!("op {i}: requant input must be an integer \
+                               edge, got {inp:?}");
+                    };
+                    ensure!((1..=64).contains(acc_bits),
+                            "op {i}: acc_bits {acc_bits} outside 1..=64");
+                    ensure!(*acc_bits >= inp.bits(),
+                            "op {i}: declared acc_bits {acc_bits} \
+                             narrower than the {} bits its input edge \
+                             needs", inp.bits());
+                    ensure!(thresholds.len() == dim * (levels - 1),
+                            "op {i}: {} thresholds for {dim} rows x {} \
+                             cutpoints", thresholds.len(), levels - 1);
+                    for row in 0..dim {
+                        let t =
+                            &thresholds[row * (levels - 1)
+                                ..(row + 1) * (levels - 1)];
+                        if let Some(k) =
+                            t.windows(2).position(|w| w[0] > w[1])
+                        {
+                            bail!("op {i}: non-monotone thresholds in \
+                                   row {row} at cutpoint {k} ({} > {})",
+                                  t[k], t[k + 1]);
+                        }
+                    }
+                    let EdgeTy::Int { dim: out_dim, lo, hi,
+                                      lattice: Some(r) } = out
+                    else {
+                        bail!("op {i}: requant must emit an integer \
+                               lattice edge, got {out:?}");
+                    };
+                    ensure!(out_dim == dim,
+                            "op {i}: requant changed dim {dim} -> \
+                             {out_dim}");
+                    ensure!(r.levels() == *levels,
+                            "op {i}: output lattice has {} levels, op \
+                             declares {levels}", r.levels());
+                    ensure!(lo == r.qmin as i64 && hi == r.qmax as i64,
+                            "op {i}: lattice edge bounds [{lo}, {hi}] \
+                             disagree with its QRange {r:?}");
+                }
+                QOp::TanhLut { lut } => {
+                    ensure!(last,
+                            "op {i}: TanhLut only legal at the output \
+                             boundary");
+                    let EdgeTy::Int { dim, lattice: Some(r), .. } = inp
+                    else {
+                        bail!("op {i}: TanhLut input must be an integer \
+                               lattice edge, got {inp:?}");
+                    };
+                    ensure!(dim == self.act_dim,
+                            "op {i}: output dim {dim} != act_dim {}",
+                            self.act_dim);
+                    ensure!(lut.len() == r.levels(),
+                            "op {i}: tanh LUT of {} entries over a {}-\
+                             level lattice", lut.len(), r.levels());
+                    ensure!(lut.iter().all(|v| v.is_finite()),
+                            "op {i}: non-finite tanh LUT entry");
+                    let boundary = EdgeTy::F32 { dim: self.act_dim };
+                    ensure!(out == boundary,
+                            "op {i}: TanhLut must emit the f32 action \
+                             boundary, got {out:?}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flat per-layer view (fused MatVec + ThresholdRequant) of a graph
+    /// in canonical form — the shared substrate of the synthesis
+    /// geometry pass and the emitters. Call [`QGraph::verify`] first;
+    /// this re-checks only the shape it needs to slice safely.
+    pub fn layers(&self) -> Result<Vec<LayerView<'_>>> {
+        let mut out = Vec::new();
+        let mut i = 1;
+        while i + 1 < self.ops.len() {
+            let (QOp::MatVec { rows, cols, w_bits, w },
+                 QOp::ThresholdRequant { levels, acc_bits, thresholds }) =
+                (&self.ops[i], &self.ops[i + 1])
+            else {
+                bail!("op {i}: graph not in canonical \
+                       MatVec/ThresholdRequant form (run verify)");
+            };
+            let EdgeTy::Int { lattice: Some(out_range), .. } =
+                self.edges[i + 1]
+            else {
+                bail!("op {}: requant output is not a lattice edge",
+                      i + 1);
+            };
+            out.push(LayerView {
+                rows: *rows,
+                cols: *cols,
+                w_bits: *w_bits,
+                w: w.as_slice(),
+                levels: *levels,
+                acc_bits: *acc_bits,
+                thresholds: thresholds.as_slice(),
+                in_edge: self.in_edge(i),
+                acc_edge: self.edges[i],
+                out_range,
+            });
+            i += 2;
+        }
+        ensure!(!out.is_empty(), "graph has no MatVec layers");
+        Ok(out)
+    }
+
+    /// The input quantizer boundary: `(s_in, input lattice)`.
+    pub fn input_quantizer(&self) -> Result<(f32, QRange)> {
+        match (self.ops.first(), self.edges.first()) {
+            (Some(QOp::QuantizeInput { s_in }),
+             Some(EdgeTy::Int { lattice: Some(r), .. })) => {
+                Ok((*s_in, *r))
+            }
+            _ => bail!("graph does not start with QuantizeInput"),
+        }
+    }
+
+    /// The terminal tanh LUT and the lattice it indexes.
+    pub fn tanh(&self) -> Result<(&[f32], QRange)> {
+        let n = self.ops.len();
+        ensure!(n >= 2 && self.edges.len() == n,
+                "graph too short for a TanhLut boundary");
+        let Some(QOp::TanhLut { lut }) = self.ops.last() else {
+            bail!("graph does not end with TanhLut");
+        };
+        let EdgeTy::Int { lattice: Some(r), .. } = self.edges[n - 2]
+        else {
+            bail!("TanhLut input is not a lattice edge");
+        };
+        Ok((lut.as_slice(), r))
+    }
+
+    /// Largest integer vector dim flowing through the graph (scratch
+    /// sizing for executors and the emitted C).
+    pub fn max_int_dim(&self) -> usize {
+        self.edges
+            .iter()
+            .filter(|e| matches!(e, EdgeTy::Int { .. }))
+            .map(|e| e.dim())
+            .max()
+            .unwrap_or(1)
+            .max(self.obs_dim)
+    }
+}
+
+/// One fused MatVec + ThresholdRequant layer of a canonical graph.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub w_bits: u32,
+    pub w: &'a [i8],
+    pub levels: usize,
+    pub acc_bits: u32,
+    pub thresholds: &'a [i32],
+    /// lattice edge feeding the MatVec
+    pub in_edge: EdgeTy,
+    /// accumulator edge between the MatVec and the requant
+    pub acc_edge: EdgeTy,
+    /// lattice the requant lands on
+    pub out_range: QRange,
+}
+
+/// A consumer of verified graphs: reference execution, synthesis
+/// costing, code emission. `compile` must accept any graph that passes
+/// [`QGraph::verify`] (implementations call it once up front), so every
+/// future op or backend plugs in at this one seam.
+pub trait QirBackend {
+    type Output;
+    fn name(&self) -> &'static str;
+    fn compile(&self, g: &QGraph) -> Result<Self::Output>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    fn toy_graph() -> QGraph {
+        lower(&testkit::toy_policy(3, 5, 8, 2, BitCfg::new(4, 3, 8)))
+    }
+
+    #[test]
+    fn lowered_graph_verifies() {
+        let g = toy_graph();
+        g.verify().unwrap();
+        assert_eq!(g.ops.len(), 2 + 2 * 3);
+        assert_eq!(g.layers().unwrap().len(), 3);
+        let (s_in, r) = g.input_quantizer().unwrap();
+        assert!(s_in > 0.0);
+        assert_eq!(r, QRange::new(4, true));
+        let (lut, out_r) = g.tanh().unwrap();
+        assert_eq!(lut.len(), out_r.levels());
+    }
+
+    #[test]
+    fn edge_bits_reproduce_lattice_widths() {
+        for b in 1..=16u32 {
+            assert_eq!(EdgeTy::lattice(1, QRange::new(b, true)).bits(), b);
+            assert_eq!(EdgeTy::lattice(1, QRange::new(b, false)).bits(),
+                       b);
+        }
+        // accumulator edges reproduce the exporter's analytic acc_bits
+        for bound in [1i64, 2, 3, 4, 7, 8, 100, 32385] {
+            let want = 64 - (bound as u64).leading_zeros() + 1;
+            assert_eq!(EdgeTy::acc(1, bound).bits(), want, "bound {bound}");
+        }
+    }
+
+    #[test]
+    fn layer_views_carry_the_exporter_metadata() {
+        let p = testkit::toy_policy(7, 4, 6, 2, BitCfg::new(5, 3, 6));
+        let g = lower(&p);
+        g.verify().unwrap();
+        let views = g.layers().unwrap();
+        for (v, l) in views.iter().zip(&p.layers) {
+            assert_eq!((v.rows, v.cols), (l.rows, l.cols));
+            assert_eq!(v.w_bits, l.w_bits);
+            assert_eq!(v.acc_bits, l.acc_bits);
+            assert_eq!(v.w, &l.w_int[..]);
+            assert_eq!(v.thresholds, &l.thresholds[..]);
+            assert_eq!(v.out_range, l.out_range);
+            assert_eq!(v.levels, l.out_range.levels());
+        }
+        // edge storage widths reproduce the BitCfg
+        assert_eq!(views[0].in_edge.bits(), 5);
+        assert_eq!(views[1].in_edge.bits(), 3);
+        assert_eq!(EdgeTy::lattice(1, views[2].out_range).bits(), 6);
+    }
+
+    #[test]
+    fn summary_names_every_op() {
+        let s = toy_graph().summary();
+        for part in ["QuantizeInput(5)", "MatVec 8x5", "ThresholdRequant",
+                     "TanhLut"] {
+            assert!(s.contains(part), "{s}");
+        }
+    }
+}

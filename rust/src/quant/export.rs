@@ -19,6 +19,12 @@
 //! [`crate::policy::artifact`]) round-trip the policy through the
 //! versioned, checksummed `.qpol` binary format bit-identically; see the
 //! `policy` module for the deployable-artifact and registry layer.
+//!
+//! Consumers of the integer semantics (the fast engine, the synthesis
+//! estimator, the C/Verilog emitters) do not read this struct directly:
+//! [`crate::qir::lower`] turns it into the typed integer compute graph
+//! whose `verify()` pass checks the structural invariants — including
+//! that the worst-case accumulator fits `i32` — once for all backends.
 
 use super::{absmax_scale, quantize, BitCfg, QRange};
 use super::fakequant::PolicyTensors;

@@ -96,19 +96,6 @@ impl EvalOpts {
     pub fn env(&self) -> &str {
         &self.scenario.env
     }
-
-    /// Compat shim for the retired `noise_std` field, kept for one
-    /// release: σ of i.i.d. Gaussian noise on the *normalized*
-    /// observation, exactly the old knob's semantics
-    /// (`hopper+obsnoise:σ` in the scenario grammar).
-    pub fn with_noise_std(mut self, noise_std: f64) -> EvalOpts {
-        if noise_std > 0.0 {
-            self.scenario
-                .perturbs
-                .push(envs::Perturb::ObsNoise(noise_std));
-        }
-        self
-    }
 }
 
 /// Resolve the requested execution path into a trait object over the
@@ -140,8 +127,11 @@ pub fn make_backend<'a>(rt: &Runtime, opts: &EvalOpts, flat: &'a [f32],
         EvalBackend::Integer => {
             anyhow::ensure!(opts.quant_on,
                             "integer backend requires a quantized policy");
-            Box::new(IntEngine::new(IntPolicy::from_tensors(tensors,
-                                                            opts.bits)))
+            let policy = IntPolicy::from_tensors(tensors, opts.bits);
+            // gate the i32 engine behind the IR invariants (notably
+            // accumulator-width safety) exactly like artifact loading
+            crate::qir::lower(&policy).verify()?;
+            Box::new(IntEngine::new(policy))
         }
     })
 }
@@ -266,21 +256,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn noise_shim_builds_the_obsnoise_scenario() {
-        let opts = EvalOpts {
-            algo: Algo::Sac,
-            scenario: Scenario::bare("hopper"),
-            hidden: 16,
-            bits: BitCfg::new(4, 3, 8),
-            quant_on: true,
-            episodes: 3,
-            seed: 1,
-            backend: EvalBackend::Fp32,
-        };
-        let shimmed = opts.clone().with_noise_std(0.25);
-        assert_eq!(shimmed.scenario.to_string(), "hopper+obsnoise:0.25");
-        // σ = 0 stays bare (the old knob's no-op case)
-        assert!(opts.with_noise_std(0.0).scenario.is_bare());
-    }
 }

@@ -5,11 +5,18 @@
 //! *highest* power-of-10 target whose design fits the device and meets
 //! timing. This mirrors FINN's `target_fps` flow plus the paper's retained
 //! highest completing build.
+//!
+//! The search consumes the [`LayerGeom`] rows the IR's typed edges
+//! provide ([`super::model::layer_geometry`] over a verified
+//! [`QGraph`]); `fold_geometry`/`search_geometry` stay geometry-level so
+//! callers with a hand-built geometry (tests, what-if sweeps) can drive
+//! the identical cost path.
 
 use anyhow::{bail, Result};
 
-use super::model::{cost_layer, layer_geometry, Design, Device, LayerFold};
-use crate::quant::export::IntPolicy;
+use super::model::{cost_layer, layer_geometry, Design, Device,
+                   LayerFold, LayerGeom};
+use crate::qir::QGraph;
 
 /// Divisors of n, ascending.
 fn divisors(n: usize) -> Vec<usize> {
@@ -33,20 +40,21 @@ pub struct SearchOutcome {
 }
 
 /// Minimal-resource folding for one layer meeting a cycle budget, or None.
-#[allow(clippy::too_many_arguments)]
-fn fold_layer_for_budget(rows: usize, cols: usize, w_bits: u32,
-                         in_bits: u32, out_bits: u32, acc_bits: u32,
-                         budget_cycles: u64, dsps_avail: u64)
+fn fold_layer_for_budget(geom: &LayerGeom, budget_cycles: u64,
+                         dsps_avail: u64)
                          -> Option<super::model::MvauCost> {
     let mut best: Option<super::model::MvauCost> = None;
-    for &pe in &divisors(rows) {
-        for &simd in &divisors(cols) {
-            let cycles = (rows / pe) as u64 * (cols / simd) as u64;
+    for &pe in &divisors(geom.rows) {
+        for &simd in &divisors(geom.cols) {
+            let cycles =
+                (geom.rows / pe) as u64 * (geom.cols / simd) as u64;
             if cycles > budget_cycles {
                 continue;
             }
-            let c = cost_layer(rows, cols, LayerFold { pe, simd }, w_bits,
-                               in_bits, out_bits, acc_bits, dsps_avail);
+            let c = cost_layer(geom.rows, geom.cols,
+                               LayerFold { pe, simd }, geom.w_bits,
+                               geom.in_bits, geom.out_bits,
+                               geom.acc_bits, dsps_avail);
             let better = match &best {
                 None => true,
                 Some(b) => (c.luts + c.dsps * 40,
@@ -61,35 +69,38 @@ fn fold_layer_for_budget(rows: usize, cols: usize, w_bits: u32,
     best
 }
 
-/// Fold a whole policy for one throughput target.
-pub fn fold_for_target(policy: &IntPolicy, device: &Device, clock_hz: f64,
-                       target: f64) -> Option<Design> {
+/// Fold a geometry for one throughput target.
+pub fn fold_geometry(geoms: &[LayerGeom], device: &Device, clock_hz: f64,
+                     target: f64) -> Option<Design> {
     let budget = (clock_hz / target).floor() as u64;
     if budget == 0 {
         return None;
     }
     let mut layers = Vec::new();
     let mut dsps_left = device.dsps;
-    for (rows, cols, w_bits, in_bits, out_bits, acc_bits) in
-        layer_geometry(policy)
-    {
-        let c = fold_layer_for_budget(rows, cols, w_bits, in_bits,
-                                      out_bits, acc_bits, budget,
-                                      dsps_left)?;
+    for geom in geoms {
+        let c = fold_layer_for_budget(geom, budget, dsps_left)?;
         dsps_left = dsps_left.saturating_sub(c.dsps);
         layers.push(c);
     }
     Some(Design { device: *device, clock_hz, layers })
 }
 
-/// The §3.4 procedure: sweep powers of 10, retain the best feasible build.
-pub fn search_folding(policy: &IntPolicy, device: &Device, clock_hz: f64)
-                      -> Result<SearchOutcome> {
+/// Fold a whole graph for one throughput target.
+pub fn fold_for_target(g: &QGraph, device: &Device, clock_hz: f64,
+                       target: f64) -> Result<Option<Design>> {
+    Ok(fold_geometry(&layer_geometry(g)?, device, clock_hz, target))
+}
+
+/// The §3.4 procedure over a pre-extracted geometry: sweep powers of 10,
+/// retain the best feasible build.
+pub fn search_geometry(geoms: &[LayerGeom], device: &Device,
+                       clock_hz: f64) -> Result<SearchOutcome> {
     let mut attempts = Vec::new();
     let mut best: Option<(f64, Design)> = None;
     for exp in 1..=8 {
         let target = 10f64.powi(exp);
-        let Some(design) = fold_for_target(policy, device, clock_hz, target)
+        let Some(design) = fold_geometry(geoms, device, clock_hz, target)
         else {
             attempts.push((target, false, false));
             continue;
@@ -111,7 +122,7 @@ pub fn search_folding(policy: &IntPolicy, device: &Device, clock_hz: f64)
             attempts,
         }),
         None => bail!(
-            "no feasible folding on {} for this policy (its smallest build \
+            "no feasible folding on {} for this graph (its smallest build \
              exceeds the device — the paper hit this with 8-bit width-256 \
              models)",
             device.name
@@ -119,9 +130,16 @@ pub fn search_folding(policy: &IntPolicy, device: &Device, clock_hz: f64)
     }
 }
 
+/// The §3.4 procedure over a verified graph.
+pub fn search_folding(g: &QGraph, device: &Device, clock_hz: f64)
+                      -> Result<SearchOutcome> {
+    search_geometry(&layer_geometry(g)?, device, clock_hz)
+}
+
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
+    use crate::qir::{lower, QGraph};
     use crate::quant::export::IntPolicy;
     use crate::quant::fakequant::PolicyTensors;
     use crate::quant::BitCfg;
@@ -152,6 +170,11 @@ pub(crate) mod tests {
         IntPolicy::from_tensors(&p, bits)
     }
 
+    pub(crate) fn toy_graph(obs: usize, h: usize, act: usize,
+                            bits: BitCfg) -> QGraph {
+        lower(&toy_policy(obs, h, act, bits))
+    }
+
     #[test]
     fn divisors_complete() {
         assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
@@ -159,9 +182,13 @@ pub(crate) mod tests {
 
     #[test]
     fn higher_target_more_resources() {
-        let p = toy_policy(11, 64, 3, BitCfg::new(4, 3, 8));
-        let slow = fold_for_target(&p, &XC7A15T, 1e8, 1e3).unwrap();
-        let fast = fold_for_target(&p, &XC7A15T, 1e8, 1e5).unwrap();
+        let g = toy_graph(11, 64, 3, BitCfg::new(4, 3, 8));
+        let slow = fold_for_target(&g, &XC7A15T, 1e8, 1e3)
+            .unwrap()
+            .unwrap();
+        let fast = fold_for_target(&g, &XC7A15T, 1e8, 1e5)
+            .unwrap()
+            .unwrap();
         assert!(fast.initiation_interval() <= 1_000);
         assert!(slow.initiation_interval() <= 100_000);
         assert!(fast.luts() >= slow.luts(),
@@ -170,8 +197,8 @@ pub(crate) mod tests {
 
     #[test]
     fn search_picks_feasible_maximum() {
-        let p = toy_policy(3, 16, 1, BitCfg::new(4, 2, 8));
-        let out = search_folding(&p, &XC7A15T, 1e8).unwrap();
+        let g = toy_graph(3, 16, 1, BitCfg::new(4, 2, 8));
+        let out = search_folding(&g, &XC7A15T, 1e8).unwrap();
         assert!(out.design.fits(1.0));
         assert!(out.design.meets_timing());
         assert!(out.choice.target_throughput >= 1e3);
@@ -183,15 +210,17 @@ pub(crate) mod tests {
 
     #[test]
     fn wide_8bit_model_rejected() {
-        let p = toy_policy(17, 256, 6, BitCfg::new(8, 8, 8));
-        assert!(search_folding(&p, &XC7A15T, 1e8).is_err(),
+        let g = toy_graph(17, 256, 6, BitCfg::new(8, 8, 8));
+        assert!(search_folding(&g, &XC7A15T, 1e8).is_err(),
                 "8-bit width-256 must not fit (paper §3.4)");
     }
 
     #[test]
     fn budget_respected_per_layer() {
-        let p = toy_policy(11, 32, 3, BitCfg::new(3, 2, 8));
-        let d = fold_for_target(&p, &XC7A15T, 1e8, 1e4).unwrap();
+        let g = toy_graph(11, 32, 3, BitCfg::new(3, 2, 8));
+        let d = fold_for_target(&g, &XC7A15T, 1e8, 1e4)
+            .unwrap()
+            .unwrap();
         for l in &d.layers {
             assert!(l.cycles <= 1e4 as u64, "layer cycles {}", l.cycles);
         }

@@ -1,12 +1,16 @@
 //! FPGA synthesis estimator — the FINN/Vivado substitute (DESIGN.md §3).
 //!
-//! Models a FINN-style streaming dataflow build of an [`IntPolicy`] on the
-//! Artix-7 XC7A15T at 100 MHz: one matrix-vector-activation unit (MVAU) per
-//! layer with PE×SIMD folding, threshold-based requantization memory, FIFO
-//! links, and an XPE-style analytic power model. The throughput-driven
-//! folding search reproduces the paper's §3.4 procedure: sweep target
-//! throughputs in powers of 10, let the folding optimizer hit each target,
-//! retain the highest target that fits the device and meets timing.
+//! A QIR backend: the estimator consumes a verified
+//! [`crate::qir::QGraph`] — MVAU geometry comes from the graph's typed
+//! edges and op metadata ([`model::layer_geometry`]) instead of from raw
+//! `IntPolicy` fields. Models a FINN-style streaming dataflow build on
+//! the Artix-7 XC7A15T at 100 MHz: one matrix-vector-activation unit
+//! (MVAU) per layer with PE×SIMD folding, threshold-based
+//! requantization memory, FIFO links, and an XPE-style analytic power
+//! model. The throughput-driven folding search reproduces the paper's
+//! §3.4 procedure: sweep target throughputs in powers of 10, let the
+//! folding optimizer hit each target, retain the highest target that
+//! fits the device and meets timing.
 //!
 //! The cost model is calibrated to the *mechanisms* FINN-R publishes
 //! (threshold memory exponential in activation bits, LUT MACs proportional
@@ -20,10 +24,12 @@ pub mod model;
 pub mod power;
 
 pub use dataflow::simulate_latency_cycles;
-pub use folding::{search_folding, FoldingChoice, SearchOutcome};
-pub use model::{Design, Device, LayerFold, MvauCost, XC7A15T};
+pub use folding::{fold_geometry, search_folding, search_geometry,
+                  FoldingChoice, SearchOutcome};
+pub use model::{Design, Device, LayerFold, LayerGeom, MvauCost, XC7A15T};
 pub use power::{estimate_power, PowerBreakdown};
 
+use crate::qir::{self, QGraph, QirBackend};
 use crate::quant::export::IntPolicy;
 
 /// Full synthesis report for one policy (a Table 3 row).
@@ -41,11 +47,12 @@ pub struct SynthReport {
     pub sim_cycles: u64,
 }
 
-/// Synthesize a policy: folding search at the given clock, then power and
-/// the cycle-level simulation cross-check.
-pub fn synthesize(policy: &IntPolicy, device: &Device, clock_hz: f64)
-                  -> anyhow::Result<SynthReport> {
-    let outcome = search_folding(policy, device, clock_hz)?;
+/// Synthesize a verified graph: folding search at the given clock, then
+/// power and the cycle-level simulation cross-check.
+pub fn synthesize_graph(g: &QGraph, device: &Device, clock_hz: f64)
+                        -> anyhow::Result<SynthReport> {
+    g.verify()?;
+    let outcome = search_folding(g, device, clock_hz)?;
     let design = outcome.design;
     let power = estimate_power(&design, clock_hz);
     let latency_cycles = design.latency_cycles();
@@ -61,4 +68,59 @@ pub fn synthesize(policy: &IntPolicy, device: &Device, clock_hz: f64)
         energy_per_action: power.total_w * latency_s,
         sim_cycles: sim_cycles.max(latency_cycles),
     })
+}
+
+/// Synthesize a policy — lowers to QIR and forwards to
+/// [`synthesize_graph`] (same numbers, one verification pass).
+pub fn synthesize(policy: &IntPolicy, device: &Device, clock_hz: f64)
+                  -> anyhow::Result<SynthReport> {
+    synthesize_graph(&qir::lower(policy), device, clock_hz)
+}
+
+/// [`QirBackend`] for the synthesis estimator: compiling a graph yields
+/// its Table-3 row on the configured device/clock.
+pub struct Synthesize {
+    pub device: Device,
+    pub clock_hz: f64,
+}
+
+impl QirBackend for Synthesize {
+    type Output = SynthReport;
+
+    fn name(&self) -> &'static str {
+        "synth"
+    }
+
+    fn compile(&self, g: &QGraph) -> anyhow::Result<SynthReport> {
+        synthesize_graph(g, &self.device, self.clock_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    #[test]
+    fn policy_and_graph_paths_agree() {
+        let p = testkit::toy_policy(1, 3, 16, 1, BitCfg::new(4, 2, 8));
+        let a = synthesize(&p, &XC7A15T, 1e8).unwrap();
+        let b = synthesize_graph(&qir::lower(&p), &XC7A15T, 1e8).unwrap();
+        assert_eq!(a.design.luts(), b.design.luts());
+        assert_eq!(a.design.ffs(), b.design.ffs());
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert_eq!(a.throughput, b.throughput);
+    }
+
+    #[test]
+    fn synthesize_backend_compiles_graphs() {
+        let g = qir::lower(&testkit::toy_policy(1, 3, 16, 1,
+                                                BitCfg::new(4, 2, 8)));
+        let be = Synthesize { device: XC7A15T, clock_hz: 1e8 };
+        assert_eq!(be.name(), "synth");
+        let rep = be.compile(&g).unwrap();
+        assert!(rep.design.fits(1.0));
+        assert!(rep.throughput > 0.0);
+    }
 }

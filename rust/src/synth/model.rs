@@ -13,7 +13,7 @@
 //!   exponential-in-activation-bits term that makes 8-bit models not fit,
 //! * FIFOs + control: FFs proportional to PE·(acc_bits) plus stream widths.
 
-use crate::quant::export::IntPolicy;
+use crate::qir::{EdgeTy, QGraph};
 
 /// FPGA device resources (Table 2).
 #[derive(Clone, Copy, Debug)]
@@ -193,31 +193,40 @@ impl Design {
     }
 }
 
-/// Build the padded MVAU geometry for a policy (before folding).
-pub fn layer_geometry(policy: &IntPolicy) -> Vec<(usize, usize, u32, u32, u32, u32)> {
-    policy
-        .layers
+/// Padded per-layer MVAU geometry — everything the cost model needs to
+/// know about one layer, extracted from the IR's typed edges (stream
+/// widths come from the edge lattices, the accumulator width from the
+/// requant op) instead of from raw `IntPolicy` fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerGeom {
+    pub rows: usize,
+    pub cols: usize,
+    pub w_bits: u32,
+    pub in_bits: u32,
+    pub out_bits: u32,
+    pub acc_bits: u32,
+}
+
+/// Build the padded MVAU geometry for a verified graph (before folding).
+pub fn layer_geometry(g: &QGraph) -> anyhow::Result<Vec<LayerGeom>> {
+    let views = g.layers()?;
+    let n = views.len();
+    Ok(views
         .iter()
         .enumerate()
-        .map(|(i, l)| {
-            let rows = if i + 1 == policy.layers.len() {
-                pad_to(l.rows, PAD_MULTIPLE)
+        .map(|(i, v)| LayerGeom {
+            rows: if i + 1 == n {
+                pad_to(v.rows, PAD_MULTIPLE)
             } else {
-                l.rows
-            };
-            let in_bits = if i == 0 {
-                policy.bits.b_in
-            } else {
-                policy.bits.b_core
-            };
-            let out_bits = if i + 1 == policy.layers.len() {
-                policy.bits.b_out
-            } else {
-                policy.bits.b_core
-            };
-            (rows, l.cols, l.w_bits, in_bits, out_bits, l.acc_bits)
+                v.rows
+            },
+            cols: v.cols,
+            w_bits: v.w_bits,
+            in_bits: v.in_edge.bits(),
+            out_bits: EdgeTy::lattice(1, v.out_range).bits(),
+            acc_bits: v.acc_bits,
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]

@@ -62,13 +62,13 @@ pub fn estimate_power(design: &Design, clock_hz: f64) -> PowerBreakdown {
 mod tests {
     use super::*;
     use crate::quant::BitCfg;
-    use crate::synth::folding::{fold_for_target, tests::toy_policy};
+    use crate::synth::folding::{fold_for_target, tests::toy_graph};
     use crate::synth::model::XC7A15T;
 
     #[test]
     fn power_in_paper_band() {
-        let p = toy_policy(11, 64, 3, BitCfg::new(4, 3, 8));
-        let d = fold_for_target(&p, &XC7A15T, 1e8, 1e4).unwrap();
+        let g = toy_graph(11, 64, 3, BitCfg::new(4, 3, 8));
+        let d = fold_for_target(&g, &XC7A15T, 1e8, 1e4).unwrap().unwrap();
         let pw = estimate_power(&d, 1e8);
         assert!(pw.total_w > 0.1 && pw.total_w < 0.7,
                 "total {} W outside the paper's band", pw.total_w);
@@ -77,9 +77,11 @@ mod tests {
 
     #[test]
     fn more_parallel_designs_burn_more() {
-        let p = toy_policy(17, 128, 6, BitCfg::new(3, 2, 8));
-        let slow = fold_for_target(&p, &XC7A15T, 1e8, 1e3).unwrap();
-        let fast = fold_for_target(&p, &XC7A15T, 1e8, 1e5).unwrap();
+        let g = toy_graph(17, 128, 6, BitCfg::new(3, 2, 8));
+        let slow =
+            fold_for_target(&g, &XC7A15T, 1e8, 1e3).unwrap().unwrap();
+        let fast =
+            fold_for_target(&g, &XC7A15T, 1e8, 1e5).unwrap().unwrap();
         let pw_slow = estimate_power(&slow, 1e8);
         let pw_fast = estimate_power(&fast, 1e8);
         assert!(pw_fast.total_w >= pw_slow.total_w * 0.9,
@@ -88,8 +90,8 @@ mod tests {
 
     #[test]
     fn scales_with_clock() {
-        let p = toy_policy(3, 16, 1, BitCfg::new(4, 2, 8));
-        let d = fold_for_target(&p, &XC7A15T, 1e8, 1e4).unwrap();
+        let g = toy_graph(3, 16, 1, BitCfg::new(4, 2, 8));
+        let d = fold_for_target(&g, &XC7A15T, 1e8, 1e4).unwrap().unwrap();
         let p100 = estimate_power(&d, 1e8);
         let p50 = estimate_power(&d, 5e7);
         assert!(p50.total_w < p100.total_w);

@@ -168,7 +168,7 @@ fn prop_folding_search_respects_device() {
         let bits = BitCfg::new(g.usize_in(2, 8) as u32,
                                g.usize_in(2, 4) as u32, 8);
         let ip = IntPolicy::from_tensors(&tensors(&b), bits);
-        match search_folding(&ip, &XC7A15T, 1e8) {
+        match search_folding(&qcontrol::qir::lower(&ip), &XC7A15T, 1e8) {
             Ok(out) => {
                 if !out.design.fits(1.0) {
                     return Err("design exceeds device".into());

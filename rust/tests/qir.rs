@@ -1,0 +1,396 @@
+//! QIR integration suite: the executor-equivalence property
+//! (`Interpreter ≡ IntEngine::infer ≡ IntPolicy::forward_naive`, bit for
+//! bit, across the BitCfg matrix), `verify()` rejection behavior
+//! (errors, never panics), the pre-refactor synthesis-equality pin, and
+//! the cc-guarded emitted-C bit-identity smoke test.
+
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+
+use qcontrol::intinfer::IntEngine;
+use qcontrol::qir::{emit_c, emit_verilog, lower, EdgeTy, Interpreter,
+                    QGraph, QOp};
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::{BitCfg, QRange};
+use qcontrol::synth::model::{layer_geometry, pad_to, LayerGeom,
+                             PAD_MULTIPLE};
+use qcontrol::synth::{estimate_power, search_geometry, synthesize,
+                      XC7A15T};
+use qcontrol::util::prop::check;
+use qcontrol::util::rng::Rng;
+use qcontrol::util::testkit;
+
+/// The bit-config matrix every cross-executor property runs over,
+/// including both 2-bit extremes (all-2-bit, and 2-bit I/O around an
+/// 8-bit core).
+const BITS_MATRIX: [BitCfg; 6] = [
+    BitCfg { b_in: 2, b_core: 2, b_out: 2 },
+    BitCfg { b_in: 3, b_core: 2, b_out: 4 },
+    BitCfg { b_in: 4, b_core: 3, b_out: 8 },
+    BitCfg { b_in: 8, b_core: 8, b_out: 8 },
+    BitCfg { b_in: 2, b_core: 8, b_out: 2 },
+    BitCfg { b_in: 16, b_core: 8, b_out: 16 },
+];
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// executor equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interpreter_engine_and_naive_forward_agree_bit_for_bit() {
+    for (i, &bits) in BITS_MATRIX.iter().enumerate() {
+        let p = testkit::toy_policy(40 + i as u64, 6, 24, 3, bits);
+        let g = lower(&p);
+        g.verify().unwrap_or_else(|e| {
+            panic!("lowered graph must verify for bits={bits:?}: {e}")
+        });
+        let interp = Interpreter::new(g).unwrap();
+        let mut eng = IntEngine::new(p.clone());
+        let mut rng = Rng::new(3);
+        for case in 0..100 {
+            let mut obs = vec![0.0f32; 6];
+            rng.fill_normal(&mut obs);
+            let a = interp.infer(&obs).unwrap();
+            let b = eng.infer_vec(&obs);
+            let c = p.forward_naive(&obs);
+            assert_eq!(bits_of(&a), bits_of(&b),
+                       "interp vs engine, bits={bits:?} case={case}");
+            assert_eq!(bits_of(&a), bits_of(&c),
+                       "interp vs naive, bits={bits:?} case={case}");
+        }
+    }
+}
+
+#[test]
+fn prop_interpreter_matches_engine_on_random_policies() {
+    check("qir-interp-vs-engine", 40, 909, |g| {
+        let obs = g.usize_in(1, 12);
+        let h = g.usize_in(2, 24);
+        let act = g.usize_in(1, 6);
+        let bits = BitCfg::new(g.usize_in(2, 8) as u32,
+                               g.usize_in(2, 8) as u32,
+                               g.usize_in(2, 8) as u32);
+        let seed = g.usize_in(0, 10_000) as u64;
+        let p = testkit::toy_policy(seed, obs, h, act, bits);
+        let interp = Interpreter::new(lower(&p))
+            .map_err(|e| format!("verify: {e}"))?;
+        let mut eng = IntEngine::new(p.clone());
+        for _ in 0..5 {
+            let o = g.vec_normal(obs, 1.5);
+            let a = interp.infer(&o).map_err(|e| e.to_string())?;
+            if bits_of(&a) != bits_of(&eng.infer_vec(&o)) {
+                return Err(format!("engine diverged, bits={bits:?}"));
+            }
+            if bits_of(&a) != bits_of(&p.forward_naive(&o)) {
+                return Err(format!("naive diverged, bits={bits:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn extreme_inputs_agree_across_executors() {
+    let p = testkit::toy_policy(9, 5, 16, 2, BitCfg::new(4, 3, 8));
+    let interp = Interpreter::new(lower(&p)).unwrap();
+    let mut eng = IntEngine::new(p.clone());
+    for v in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::MAX,
+              -f32::MAX, 1e9, -1e9, 0.0, -0.0] {
+        let obs = vec![v; 5];
+        assert_eq!(bits_of(&interp.infer(&obs).unwrap()),
+                   bits_of(&eng.infer_vec(&obs)), "input {v}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// verify(): rejections are errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn verify_rejects_broken_dim_chain() {
+    let mut g = lower(&testkit::toy_policy(1, 5, 8, 2,
+                                           BitCfg::new(4, 3, 8)));
+    let QOp::MatVec { cols, .. } = &mut g.ops[1] else {
+        panic!("op 1 should be the first MatVec");
+    };
+    *cols += 1;
+    let err = g.verify().unwrap_err().to_string();
+    assert!(err.contains("dim chain broken"), "{err}");
+}
+
+#[test]
+fn verify_rejects_non_monotone_thresholds() {
+    let mut g = lower(&testkit::toy_policy(2, 5, 8, 2,
+                                           BitCfg::new(4, 3, 8)));
+    let QOp::ThresholdRequant { thresholds, .. } = &mut g.ops[2] else {
+        panic!("op 2 should be the first requant");
+    };
+    thresholds[0] = thresholds[1] + 1;
+    let err = g.verify().unwrap_err().to_string();
+    assert!(err.contains("non-monotone"), "{err}");
+}
+
+/// Hand-build a single-layer graph whose worst-case accumulator is
+/// `cols × 127 × 255` (weights pinned to 127 on the 8-bit lattice, an
+/// unsigned 8-bit input lattice), so `cols` dials the bound directly.
+fn acc_bound_graph(cols: usize) -> QGraph {
+    let in_r = QRange::new(8, false); // [0, 255]
+    let out_r = QRange::new(2, true); // [-2, 1], 4 levels
+    let bound = cols as i64 * 127 * 255;
+    QGraph {
+        name: "acc-bound".into(),
+        obs_dim: cols,
+        act_dim: 1,
+        ops: vec![
+            QOp::QuantizeInput { s_in: 1.0 },
+            QOp::MatVec { rows: 1, cols, w_bits: 8, w: vec![127; cols] },
+            QOp::ThresholdRequant {
+                levels: 4,
+                acc_bits: 33,
+                thresholds: vec![-1000, 0, 1000],
+            },
+            QOp::TanhLut { lut: vec![-0.9, -0.5, 0.5, 0.9] },
+        ],
+        edges: vec![
+            EdgeTy::lattice(cols, in_r),
+            EdgeTy::acc(1, bound),
+            EdgeTy::lattice(1, out_r),
+            EdgeTy::F32 { dim: 1 },
+        ],
+    }
+}
+
+#[test]
+fn verify_accumulator_bound_is_exact_at_the_i32_boundary() {
+    // cols * 127 * 255: 66311 lands at 2_147_481_735 (<= i32::MAX),
+    // 66312 at 2_147_514_120 (> i32::MAX)
+    assert!(66311i64 * 127 * 255 <= i32::MAX as i64);
+    assert!(66312i64 * 127 * 255 > i32::MAX as i64);
+    acc_bound_graph(66311).verify().expect("at the boundary: accepted");
+    let err = acc_bound_graph(66312).verify().unwrap_err().to_string();
+    assert!(err.contains("exceeds i32"), "{err}");
+    assert!(err.contains("66312"), "names the cols: {err}");
+}
+
+#[test]
+fn verify_rejects_undeclared_accumulator_headroom() {
+    // the declared edge must cover the worst case the weights imply
+    let mut g = acc_bound_graph(100);
+    g.edges[1] = EdgeTy::acc(1, 10);
+    let err = g.verify().unwrap_err().to_string();
+    assert!(err.contains("does not cover"), "{err}");
+}
+
+#[test]
+fn verify_rejects_off_lattice_weights() {
+    let mut g = lower(&testkit::toy_policy(3, 5, 8, 2,
+                                           BitCfg::new(4, 3, 8)));
+    let QOp::MatVec { w, .. } = &mut g.ops[1] else { unreachable!() };
+    w[0] = 127; // b_core = 3 → lattice [-4, 3]
+    let err = g.verify().unwrap_err().to_string();
+    assert!(err.contains("lattice"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// synthesis: the QIR path reproduces the pre-refactor numbers
+// ---------------------------------------------------------------------------
+
+/// The geometry extraction exactly as `synth` computed it before the
+/// QIR rebuild: straight from `IntPolicy` fields and the `BitCfg`.
+fn legacy_geometry(p: &IntPolicy) -> Vec<LayerGeom> {
+    let n = p.layers.len();
+    p.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerGeom {
+            rows: if i + 1 == n {
+                pad_to(l.rows, PAD_MULTIPLE)
+            } else {
+                l.rows
+            },
+            cols: l.cols,
+            w_bits: l.w_bits,
+            in_bits: if i == 0 { p.bits.b_in } else { p.bits.b_core },
+            out_bits: if i + 1 == n {
+                p.bits.b_out
+            } else {
+                p.bits.b_core
+            },
+            acc_bits: l.acc_bits,
+        })
+        .collect()
+}
+
+#[test]
+fn synthesize_on_qir_reproduces_pre_refactor_reports() {
+    for &(obs, h, act) in &[(3usize, 16usize, 1usize), (11, 64, 3),
+                            (17, 256, 6)] {
+        for &bits in &BITS_MATRIX {
+            if !BitCfg::CORE_RANGE.contains(&bits.b_core) {
+                continue;
+            }
+            let p = testkit::toy_policy(5, obs, h, act, bits);
+            let g = lower(&p);
+            let legacy = legacy_geometry(&p);
+            // the IR-derived geometry is field-for-field the legacy one
+            assert_eq!(layer_geometry(&g).unwrap(), legacy,
+                       "geometry diverged: {obs}x{h}x{act} bits={bits}");
+            // …so the full report path lands on identical numbers
+            let old = search_geometry(&legacy, &XC7A15T, 1e8);
+            let new = synthesize(&p, &XC7A15T, 1e8);
+            match (old, new) {
+                (Err(_), Err(_)) => {} // infeasible both ways (8-bit wide)
+                (Ok(old), Ok(new)) => {
+                    let (d0, d1) = (&old.design, &new.design);
+                    assert_eq!(d0.luts(), d1.luts());
+                    assert_eq!(d0.ffs(), d1.ffs());
+                    assert_eq!(d0.bram36().to_bits(),
+                               d1.bram36().to_bits());
+                    assert_eq!(d0.dsps(), d1.dsps());
+                    assert_eq!(d0.latency_cycles(), d1.latency_cycles());
+                    assert_eq!(d0.initiation_interval(),
+                               d1.initiation_interval());
+                    for (a, b) in d0.layers.iter().zip(&d1.layers) {
+                        assert_eq!((a.fold, a.cycles, a.luts, a.ffs,
+                                    a.dsps),
+                                   (b.fold, b.cycles, b.luts, b.ffs,
+                                    b.dsps));
+                    }
+                    let p0 = estimate_power(d0, 1e8);
+                    assert_eq!(p0.total_w.to_bits(),
+                               new.power.total_w.to_bits());
+                    assert_eq!(new.throughput,
+                               1e8 / d0.initiation_interval() as f64);
+                }
+                (old, new) => panic!(
+                    "feasibility diverged for {obs}x{h}x{act} \
+                     bits={bits}: legacy ok={} qir ok={}",
+                    old.is_ok(), new.is_ok()),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// emitted C: compile with the system cc and pin bit-identity
+// ---------------------------------------------------------------------------
+
+fn smoke_cases(obs_dim: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(77);
+    let mut cases: Vec<Vec<f32>> = (0..64)
+        .map(|_| {
+            let mut o = vec![0.0f32; obs_dim];
+            rng.fill_normal(&mut o);
+            o
+        })
+        .collect();
+    // boundary semantics travel too: NaN/±inf/saturating magnitudes
+    for v in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::MAX,
+              -f32::MAX, 1e9, -1e9, 10.0, -0.0] {
+        cases.push(vec![v; obs_dim]);
+    }
+    cases
+}
+
+#[test]
+fn emitted_c_is_bit_identical_to_the_interpreter_under_cc() {
+    let cc = std::env::var("CC").unwrap_or_else(|_| "cc".to_string());
+    if Command::new(&cc).arg("--version").output().is_err() {
+        eprintln!("NOTICE: skipping emitted-C smoke test — no C \
+                   compiler (`{cc}`) on PATH");
+        return;
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("qcontrol-qir-emit-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for (i, &bits) in [BitCfg::new(4, 3, 8), BitCfg::new(2, 2, 2)]
+        .iter()
+        .enumerate()
+    {
+        let p = testkit::toy_policy(31 + i as u64, 5, 16, 3, bits);
+        let g = lower(&p).with_name(format!("smoke{i}"));
+        let interp = Interpreter::new(g.clone()).unwrap();
+        let c_path = dir.join(format!("smoke{i}.c"));
+        std::fs::write(&c_path, emit_c(&g).unwrap()).unwrap();
+        let bin = dir.join(format!("smoke{i}"));
+        let out = Command::new(&cc)
+            .args(["-O2", "-DQPOL_TEST_MAIN", "-o"])
+            .arg(&bin)
+            .arg(&c_path)
+            .arg("-lm")
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "cc failed on the emitted C \
+                 (bits={bits:?}):\n{}",
+                String::from_utf8_lossy(&out.stderr));
+
+        let cases = smoke_cases(5);
+        let stdin_text: String = cases
+            .iter()
+            .map(|o| {
+                o.iter()
+                    .map(|v| format!("{:08x}", v.to_bits()))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+                    + "\n"
+            })
+            .collect();
+        let mut child = Command::new(&bin)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .unwrap();
+        child
+            .stdin
+            .as_mut()
+            .unwrap()
+            .write_all(stdin_text.as_bytes())
+            .unwrap();
+        let out = child.wait_with_output().unwrap();
+        assert!(out.status.success());
+        let text = String::from_utf8(out.stdout).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), cases.len(), "driver dropped cases");
+        for (obs, line) in cases.iter().zip(&lines) {
+            let want = bits_of(&interp.infer(obs).unwrap());
+            let got: Vec<u32> = line
+                .split_whitespace()
+                .map(|t| u32::from_str_radix(t, 16).unwrap())
+                .collect();
+            assert_eq!(got, want, "bits={bits:?} obs={obs:?}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn emitted_verilog_parses_when_iverilog_is_available() {
+    if Command::new("iverilog").arg("-V").output().is_err() {
+        eprintln!("NOTICE: skipping Verilog parse check — no iverilog \
+                   on PATH (the module is still emitted and \
+                   structurally asserted in unit tests)");
+        return;
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("qcontrol-qir-verilog-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let g = lower(&testkit::toy_policy(12, 5, 16, 3,
+                                       BitCfg::new(4, 3, 8)))
+        .with_name("vsmoke");
+    let v_path = dir.join("vsmoke.v");
+    std::fs::write(&v_path, emit_verilog(&g).unwrap()).unwrap();
+    let out = Command::new("iverilog")
+        .arg("-o")
+        .arg(dir.join("vsmoke.out"))
+        .arg(&v_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "iverilog rejected the emitted \
+             module:\n{}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}
