@@ -15,7 +15,8 @@ use qcontrol::coordinator::sweep::SweepProtocol;
 use qcontrol::experiment::{fnv1a64, Executor, RunStore, Trial,
                            TrialResult};
 use qcontrol::policy::PolicyArtifact;
-use qcontrol::synth::{synthesize, XC7A15T};
+use qcontrol::qir::OptLevel;
+use qcontrol::synth::{synthesize_with, XC7A15T};
 use qcontrol::util::stats::ObsNormalizer;
 use qcontrol::util::testkit::toy_policy;
 
@@ -103,17 +104,26 @@ fn main() {
     art.env = env.to_string();
     let qpol_path = store.dir().join(format!("{}.qpol", art.id));
     art.save(&qpol_path).unwrap();
-    let synth = synthesize(&art.policy, &XC7A15T, 1e8).unwrap();
+    let (synth, _) =
+        synthesize_with(&art.policy, &XC7A15T, 1e8, OptLevel::Full)
+            .unwrap();
 
-    // emit the C/Verilog datapaths exactly as the pipeline tail does,
-    // and drop a copy in the CWD so CI uploads one emitted pair as a
-    // build artifact next to BENCH_*.json
-    let (c_path, v_path) = emit_datapaths(&art, store.dir()).unwrap();
+    // emit the C/Verilog datapaths exactly as the pipeline tail does
+    // (optimized), and drop copies in the CWD so CI uploads the
+    // optimized EMIT pair next to the unoptimized one and BENCH_*.json
+    let (c_path, v_path, passes) =
+        emit_datapaths(&art, store.dir(), OptLevel::Full).unwrap();
     std::fs::copy(&c_path, format!("EMIT_{}.c", art.id)).unwrap();
     std::fs::copy(&v_path, format!("EMIT_{}.v", art.id)).unwrap();
+    let noopt_dir = store.dir().join("noopt");
+    std::fs::create_dir_all(&noopt_dir).unwrap();
+    let (c0, v0, _) =
+        emit_datapaths(&art, &noopt_dir, OptLevel::None).unwrap();
+    std::fs::copy(&c0, format!("EMIT_{}_noopt.c", art.id)).unwrap();
+    std::fs::copy(&v0, format!("EMIT_{}_noopt.v", art.id)).unwrap();
 
     let report = assemble_report(&select, &art, &qpol_path, &synth,
-                                 &XC7A15T, 1e8,
+                                 &passes, &XC7A15T, 1e8,
                                  (c_path.as_path(), v_path.as_path()),
                                  exec.stats());
     std::fs::write("pipeline.json", report.to_string()).unwrap();

@@ -1,0 +1,91 @@
+//! CI bench for the QIR pass pipeline: pre- vs post-optimization cost
+//! of the synthesis model across a dims × BitCfg grid, on surrogate
+//! policies with planted dead rows (no PJRT artifacts, no training).
+//! Emits `BENCH_qir_opt.json` with per-configuration before/after
+//! LUT/FF/latency/energy and the per-pass delta ledger, and asserts
+//! that the pipeline strictly reduces LUTs *and* FFs on at least one
+//! all-2-bit configuration — the acceptance bar for the rewrite passes.
+
+use qcontrol::qir::{self, CostEstimate, OptLevel};
+use qcontrol::quant::BitCfg;
+use qcontrol::util::bench::Table;
+use qcontrol::util::json::Json;
+use qcontrol::util::testkit::sparse_toy_policy;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let dims = [(4usize, 16usize, 2usize), (8, 32, 4), (11, 64, 3)];
+    let grid = [BitCfg::new(2, 2, 2), BitCfg::new(3, 2, 4),
+                BitCfg::new(4, 3, 8), BitCfg::new(8, 8, 8)];
+
+    let mut t = Table::new(&["dims", "bits", "LUT", "LUT opt", "FF",
+                             "FF opt", "cycles", "cycles opt",
+                             "E/a [J]", "E/a opt"]);
+    let mut rows = Vec::new();
+    let mut two_bit_strict = false;
+    for (di, &(obs, hidden, act)) in dims.iter().enumerate() {
+        for bits in grid {
+            // a quarter of each hidden layer's rows planted dead, so
+            // the prune pass has real work on every configuration
+            let p = sparse_toy_policy(11 + di as u64, obs, hidden, act,
+                                      bits, hidden / 4, hidden / 4);
+            let (g0, _) = qir::prepare(&p, OptLevel::None).unwrap();
+            let before = CostEstimate::of(&g0).unwrap();
+            let (g1, report) = qir::prepare(&p, OptLevel::Full).unwrap();
+            let after = CostEstimate::of(&g1).unwrap();
+            let strict = after.luts < before.luts
+                && after.ffs < before.ffs;
+            if bits.b_in == 2 && bits.b_core == 2 && bits.b_out == 2
+                && strict
+            {
+                two_bit_strict = true;
+            }
+            t.row(vec![
+                format!("{obs}x{hidden}x{act}"),
+                bits.to_string(),
+                before.luts.to_string(), after.luts.to_string(),
+                before.ffs.to_string(), after.ffs.to_string(),
+                before.latency_cycles.to_string(),
+                after.latency_cycles.to_string(),
+                format!("{:.2e}", before.energy_per_action_j),
+                format!("{:.2e}", after.energy_per_action_j),
+            ]);
+            rows.push(Json::obj(vec![
+                ("obs_dim", Json::num(obs as f64)),
+                ("hidden", Json::num(hidden as f64)),
+                ("act_dim", Json::num(act as f64)),
+                ("bits", Json::str(bits.to_string())),
+                ("luts_before", Json::num(before.luts as f64)),
+                ("luts_after", Json::num(after.luts as f64)),
+                ("ffs_before", Json::num(before.ffs as f64)),
+                ("ffs_after", Json::num(after.ffs as f64)),
+                ("latency_cycles_before",
+                 Json::num(before.latency_cycles as f64)),
+                ("latency_cycles_after",
+                 Json::num(after.latency_cycles as f64)),
+                ("energy_per_action_j_before",
+                 Json::num(before.energy_per_action_j)),
+                ("energy_per_action_j_after",
+                 Json::num(after.energy_per_action_j)),
+                ("strict_lut_ff_reduction", Json::Bool(strict)),
+                ("passes", report.to_json()),
+            ]));
+        }
+    }
+    t.print();
+    assert!(two_bit_strict,
+            "pass pipeline must strictly reduce LUTs and FFs on at \
+             least one all-2-bit configuration");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("qir_opt")),
+        ("device", Json::str("XC7A15T")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_qir_opt.json", out.to_string()).unwrap();
+    println!("\nqir opt bench ok in {:.1} ms: {} configurations, \
+              2-bit strict LUT+FF reduction confirmed; wrote \
+              BENCH_qir_opt.json",
+             t0.elapsed().as_secs_f64() * 1e3,
+             dims.len() * grid.len());
+}

@@ -23,7 +23,7 @@ use crate::quant::export::IntPolicy;
 use crate::quant::BitCfg;
 use crate::rl::{self, Algo};
 use crate::runtime::{Manifest, Runtime};
-use crate::synth::{synthesize, Device, SynthReport, XC7A15T};
+use crate::synth::{synthesize_graph, Device, SynthReport, XC7A15T};
 use crate::util::json::Json;
 use crate::util::stats::ObsNormalizer;
 
@@ -38,20 +38,27 @@ pub struct PipelineRun {
     pub emit_c_path: PathBuf,
     /// emitted Verilog module (`<id>.v` in the run dir)
     pub emit_v_path: PathBuf,
+    /// per-pass ledger of the optimization pipeline that produced the
+    /// deployed graph (recorded in `pipeline.json` under `"passes"`)
+    pub passes: qir::PassReport,
     pub run_dir: PathBuf,
     pub report_path: PathBuf,
 }
 
 /// Render a verified artifact as its C + Verilog datapaths next to the
 /// `.qpol` it came from — shared by the pipeline tail and the CI smoke
-/// bench. Filenames use `qir::identifier` (the emitted symbols' stem),
-/// so a hostile artifact id cannot escape `dir`. Returns
-/// `(c_path, verilog_path)`.
-pub fn emit_datapaths(art: &PolicyArtifact, dir: &Path)
-                      -> Result<(PathBuf, PathBuf)> {
-    // the emitters verify the graph themselves
-    let g = qir::lower(&art.policy).with_name(&art.id);
-    Ok((qir::write_c(&g, dir)?, qir::write_verilog(&g, dir)?))
+/// bench. The graph comes from the shared
+/// `lower → optimize(level) → verify → compile` path, so both emitted
+/// files render the same rewritten datapath the serving engine
+/// executes. Filenames use `qir::identifier` (the emitted symbols'
+/// stem), so a hostile artifact id cannot escape `dir`. Returns
+/// `(c_path, verilog_path, pass_report)`.
+pub fn emit_datapaths(art: &PolicyArtifact, dir: &Path,
+                      level: qir::OptLevel)
+                      -> Result<(PathBuf, PathBuf, qir::PassReport)> {
+    let (g, passes) = qir::prepare(&art.policy, level)?;
+    let g = g.with_name(&art.id);
+    Ok((qir::write_c(&g, dir)?, qir::write_verilog(&g, dir)?, passes))
 }
 
 /// Deterministic run-directory name for a pipeline configuration.
@@ -88,10 +95,14 @@ pub fn build_artifact(manifest: &Manifest, env: &str, algo: Algo,
 }
 
 /// Run the full pipeline for one environment: staged selection (parallel,
-/// resumable), export of the selected policy to `.qpol`, synthesis to
-/// the Artix-7 model, and one `pipeline.json` report in the run dir.
+/// resumable), export of the selected policy to `.qpol`, the QIR pass
+/// pipeline at `level`, synthesis of the optimized graph to the Artix-7
+/// model, and one `pipeline.json` report (with per-pass cost deltas) in
+/// the run dir. Every deployment surface — synthesis numbers, emitted
+/// C, emitted Verilog — is produced from the *same* prepared graph.
 pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
-                    exec: &Executor, clock_hz: f64) -> Result<PipelineRun> {
+                    exec: &Executor, clock_hz: f64,
+                    level: qir::OptLevel) -> Result<PipelineRun> {
     let mut proto = proto.clone();
     proto.widths = usable_widths(rt, env, &proto.widths)?;
     anyhow::ensure!(!proto.sweep.seeds.is_empty(),
@@ -150,10 +161,14 @@ pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
     let qpol_path = store.dir().join(format!("{}.qpol", art.id));
     art.save(&qpol_path)?;
 
-    let synth = synthesize(&art.policy, &XC7A15T, clock_hz)?;
-    let (emit_c_path, emit_v_path) = emit_datapaths(&art, store.dir())?;
+    // one prepared graph feeds synthesis and both emitters
+    let (g, passes) = qir::prepare(&art.policy, level)?;
+    let g = g.with_name(&art.id);
+    let synth = synthesize_graph(&g, &XC7A15T, clock_hz)?;
+    let emit_c_path = qir::write_c(&g, store.dir())?;
+    let emit_v_path = qir::write_verilog(&g, store.dir())?;
     let report = assemble_report(&select, &art, &qpol_path, &synth,
-                                 &XC7A15T, clock_hz,
+                                 &passes, &XC7A15T, clock_hz,
                                  (emit_c_path.as_path(),
                                   emit_v_path.as_path()),
                                  exec.stats());
@@ -166,6 +181,7 @@ pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
         synth,
         emit_c_path,
         emit_v_path,
+        passes,
         run_dir: store.dir().to_path_buf(),
         report_path,
     })
@@ -177,9 +193,9 @@ pub fn run_pipeline(rt: &Runtime, env: &str, proto: &SelectProtocol,
 #[allow(clippy::too_many_arguments)]
 pub fn assemble_report(select: &SelectReport, art: &PolicyArtifact,
                        qpol_path: &Path, synth: &SynthReport,
-                       device: &Device, clock_hz: f64,
-                       emitted: (&Path, &Path), stats: ExecStats)
-                       -> Json {
+                       passes: &qir::PassReport, device: &Device,
+                       clock_hz: f64, emitted: (&Path, &Path),
+                       stats: ExecStats) -> Json {
     let p = &art.policy;
     let (emit_c, emit_v) = emitted;
     let artifact = vec![
@@ -205,6 +221,7 @@ pub fn assemble_report(select: &SelectReport, art: &PolicyArtifact,
         ])),
         ("selection", select.to_json()),
         ("artifact", Json::obj(artifact)),
+        ("passes", passes.to_json()),
         ("synthesis", Json::obj(vec![
             ("device", Json::str(device.name)),
             ("clock_hz", Json::num(clock_hz)),

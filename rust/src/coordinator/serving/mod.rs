@@ -210,7 +210,10 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
         let norm = artifact.normalizer();
         let obs_dim = artifact.policy.obs_dim;
         let act_dim = artifact.policy.act_dim;
-        let engine = IntEngine::new(artifact.policy);
+        // shared lower → optimize → verify → compile path: each core
+        // executes the pass-pipeline output, pinned bit-identical to
+        // the unoptimized engine by the qir property suite
+        let engine = IntEngine::optimized(artifact.policy)?;
         let (tx, rx) = mpsc::channel::<Request>();
         cores.insert(id.clone(), CoreHandle { tx, obs_dim, act_dim });
         let recorder = recorder.clone();

@@ -11,20 +11,137 @@
 //! `IntEngine` is the fast specialized executor of the integer IR: the
 //! reference semantics live in [`crate::qir::Interpreter`], and the
 //! property suite in `rust/tests/qir.rs` pins the two bit-identical.
-//! The i32 accumulation below is sound because `qir`'s `verify()` pass
-//! bounds the worst-case accumulator (`cols × |w|max × |x|max`) to
-//! `i32`, and every path that feeds this engine runs it — `.qpol`
-//! loading (`PolicyArtifact::from_bytes`, hence registry + serving),
-//! checkpoint export (`build_artifact`), and the `eval --backend int`
-//! resolution — so wider configurations are rejected with a
-//! descriptive error instead of wrapping here.
+//! The engine executes an [`ExecPlan`] compiled either straight from an
+//! [`IntPolicy`] ([`IntEngine::new`] — bit-for-bit the historical
+//! layout) or from any verified [`crate::qir::QGraph`]
+//! ([`IntEngine::with_graph`]), which is how the optimizer's rewritten
+//! graphs reach serving: [`IntEngine::optimized`] runs the standard
+//! pass pipeline and executes the result. The i32 accumulation below is
+//! sound because `qir`'s `verify()` bounds the worst-case accumulator
+//! (`cols × |w|max × |x|max`) to `i32`, and every path that feeds this
+//! engine runs it — `.qpol` loading (`PolicyArtifact::from_bytes`,
+//! hence registry + serving), checkpoint export (`build_artifact`), and
+//! the `eval --backend int` resolution — so wider configurations are
+//! rejected with a descriptive error instead of wrapping here.
+
+use anyhow::{ensure, Result};
 
 use crate::policy::{PolicyBackend, PolicyDescriptor};
+use crate::qir::{self, QGraph};
 use crate::quant::export::IntPolicy;
+use crate::quant::QRange;
+
+/// One executable layer of the compiled plan: everything the hot loop
+/// touches, laid out contiguously and free of provenance metadata.
+struct PlanLayer {
+    rows: usize,
+    cols: usize,
+    w: Vec<i8>,
+    /// cutpoints per row (`levels - 1`)
+    nthr: usize,
+    thresholds: Vec<i32>,
+    qmin: i32,
+}
+
+/// Executable form of the integer datapath — the engine's compiled
+/// program. Built from a raw policy or from any verified graph, so the
+/// same hot loops serve both the legacy layout and optimizer output.
+struct ExecPlan {
+    obs_dim: usize,
+    act_dim: usize,
+    s_in: f32,
+    in_range: QRange,
+    layers: Vec<PlanLayer>,
+    out_qmin: i32,
+    tanh_lut: Vec<f32>,
+}
+
+impl ExecPlan {
+    /// Straight copy of the policy's layers — exactly the numbers
+    /// `IntEngine` historically read from `IntPolicy` fields.
+    fn from_policy(p: &IntPolicy) -> ExecPlan {
+        let layers = p
+            .layers
+            .iter()
+            .map(|l| PlanLayer {
+                rows: l.rows,
+                cols: l.cols,
+                w: l.w_int.clone(),
+                nthr: l.out_range.levels() - 1,
+                thresholds: l.thresholds.clone(),
+                qmin: l.out_range.qmin,
+            })
+            .collect();
+        let out_qmin = p
+            .layers
+            .last()
+            .map(|l| l.out_range.qmin)
+            .unwrap_or(0);
+        ExecPlan {
+            obs_dim: p.obs_dim,
+            act_dim: p.act_dim,
+            s_in: p.s_in,
+            in_range: p.in_range,
+            layers,
+            out_qmin,
+            tanh_lut: p.tanh_lut.clone(),
+        }
+    }
+
+    /// Compile a verified graph. The graph's typed edges carry every
+    /// number the plan needs; verification is re-run here so a plan can
+    /// never be built from a malformed (or hand-mutated) graph.
+    fn from_graph(g: &QGraph) -> Result<ExecPlan> {
+        g.verify()?;
+        let (s_in, in_range) = g.input_quantizer()?;
+        let layers = g
+            .layers()?
+            .iter()
+            .map(|v| PlanLayer {
+                rows: v.rows,
+                cols: v.cols,
+                w: v.w.to_vec(),
+                nthr: v.levels - 1,
+                thresholds: v.thresholds.to_vec(),
+                qmin: v.out_range.qmin,
+            })
+            .collect();
+        let (lut, out_r) = g.tanh()?;
+        Ok(ExecPlan {
+            obs_dim: g.obs_dim,
+            act_dim: g.act_dim,
+            s_in,
+            in_range,
+            layers,
+            out_qmin: out_r.qmin,
+            tanh_lut: lut.to_vec(),
+        })
+    }
+
+    fn lane(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.rows.max(l.cols))
+            .max()
+            .unwrap_or(1)
+            .max(self.obs_dim)
+    }
+
+    /// The single FP op: on-the-fly input quantization (bit-identical
+    /// to `IntPolicy::quantize_input`).
+    fn quantize_input(&self, obs: &[f32], out: &mut [i32]) {
+        for (o, &x) in out.iter_mut().zip(obs) {
+            *o = crate::quant::quantize(x, self.s_in, self.in_range);
+        }
+    }
+}
 
 /// Reusable integer inference engine over a fixed [`IntPolicy`].
 pub struct IntEngine {
+    /// source policy — kept for descriptors, registries, and the
+    /// serving surfaces that report hidden/bits metadata
     pub policy: IntPolicy,
+    plan: ExecPlan,
     /// per-lane stride of the scratch buffers: max dim of any activation
     lane: usize,
     // ping-pong activation buffers (i32 lattice values); grown on demand
@@ -34,16 +151,40 @@ pub struct IntEngine {
 }
 
 impl IntEngine {
+    /// Execute the policy as exported — no graph rewrites. Infallible
+    /// and bit-for-bit the historical engine.
     pub fn new(policy: IntPolicy) -> IntEngine {
-        let lane = policy
-            .layers
-            .iter()
-            .map(|l| l.rows.max(l.cols))
-            .max()
-            .unwrap_or(1)
-            .max(policy.obs_dim);
+        let plan = ExecPlan::from_policy(&policy);
+        IntEngine::from_plan(policy, plan)
+    }
+
+    /// Execute a verified graph (typically optimizer output) on behalf
+    /// of `policy`. The policy stays the identity the engine reports;
+    /// the graph is what actually runs — the property suite pins the
+    /// two bit-identical for every pass.
+    pub fn with_graph(policy: IntPolicy, g: &QGraph) -> Result<IntEngine> {
+        let plan = ExecPlan::from_graph(g)?;
+        ensure!(plan.obs_dim == policy.obs_dim
+                    && plan.act_dim == policy.act_dim,
+                "graph is {}x{} but the policy is {}x{}",
+                plan.obs_dim, plan.act_dim, policy.obs_dim,
+                policy.act_dim);
+        Ok(IntEngine::from_plan(policy, plan))
+    }
+
+    /// The shared `lower → optimize → verify → compile` path: run the
+    /// standard pass pipeline at full optimization and execute the
+    /// rewritten graph.
+    pub fn optimized(policy: IntPolicy) -> Result<IntEngine> {
+        let (g, _report) = qir::prepare(&policy, qir::OptLevel::Full)?;
+        IntEngine::with_graph(policy, &g)
+    }
+
+    fn from_plan(policy: IntPolicy, plan: ExecPlan) -> IntEngine {
+        let lane = plan.lane();
         IntEngine {
             policy,
+            plan,
             lane,
             buf_a: vec![0; lane],
             buf_b: vec![0; lane],
@@ -53,20 +194,17 @@ impl IntEngine {
     /// Integer forward for one (already normalized) observation.
     /// `action_out` must have length `act_dim`. No allocation.
     pub fn infer(&mut self, obs: &[f32], action_out: &mut [f32]) {
-        let p = &self.policy;
+        let p = &self.plan;
         debug_assert_eq!(obs.len(), p.obs_dim);
         debug_assert_eq!(action_out.len(), p.act_dim);
 
-        // the single FP op: on-the-fly input quantization
         p.quantize_input(obs, &mut self.buf_a[..p.obs_dim]);
 
         let (mut cur, mut nxt) = (&mut self.buf_a, &mut self.buf_b);
         for layer in &p.layers {
-            let nthr = layer.out_range.levels() - 1;
             let x = &cur[..layer.cols];
             for j in 0..layer.rows {
-                let wrow =
-                    &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
+                let wrow = &layer.w[j * layer.cols..(j + 1) * layer.cols];
                 // i32 accumulation is safe: qir::verify bounds
                 // cols * |w|max * |x|max to i32 for every deployable
                 // graph (iterator form + exact slice bounds lets LLVM
@@ -77,15 +215,15 @@ impl IntEngine {
                     .map(|(&w, &xv)| w as i32 * xv)
                     .sum();
                 // threshold requant: binary search over sorted cutpoints
-                let t = &layer.thresholds[j * nthr..(j + 1) * nthr];
+                let t =
+                    &layer.thresholds[j * layer.nthr..(j + 1) * layer.nthr];
                 let cnt = t.partition_point(|&th| th <= acc);
-                nxt[j] = layer.out_range.qmin + cnt as i32;
+                nxt[j] = layer.qmin + cnt as i32;
             }
             std::mem::swap(&mut cur, &mut nxt);
         }
 
-        let last = p.layers.last().unwrap();
-        let qmin = last.out_range.qmin;
+        let qmin = p.out_qmin;
         for (o, &q) in action_out.iter_mut().zip(cur.iter()) {
             *o = p.tanh_lut[(q - qmin) as usize];
         }
@@ -93,7 +231,7 @@ impl IntEngine {
 
     /// Convenience allocating wrapper.
     pub fn infer_vec(&mut self, obs: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.policy.act_dim];
+        let mut out = vec![0.0f32; self.plan.act_dim];
         self.infer(obs, &mut out);
         out
     }
@@ -111,8 +249,8 @@ impl IntEngine {
     /// bit-identical to per-observation inference (pinned by a property
     /// test); concurrent serving may therefore coalesce requests freely.
     pub fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32]) {
-        let obs_dim = self.policy.obs_dim;
-        let act_dim = self.policy.act_dim;
+        let obs_dim = self.plan.obs_dim;
+        let act_dim = self.plan.act_dim;
         assert_eq!(obs.len() % obs_dim, 0, "obs block not [batch, obs_dim]");
         let batch = obs.len() / obs_dim;
         assert_eq!(actions_out.len(), batch * act_dim,
@@ -127,7 +265,7 @@ impl IntEngine {
             self.buf_b.resize(need, 0);
         }
 
-        let p = &self.policy;
+        let p = &self.plan;
         for b in 0..batch {
             p.quantize_input(&obs[b * obs_dim..(b + 1) * obs_dim],
                              &mut self.buf_a[b * lane..b * lane + obs_dim]);
@@ -135,11 +273,10 @@ impl IntEngine {
 
         let (mut cur, mut nxt) = (&mut self.buf_a, &mut self.buf_b);
         for layer in &p.layers {
-            let nthr = layer.out_range.levels() - 1;
             for j in 0..layer.rows {
-                let wrow =
-                    &layer.w_int[j * layer.cols..(j + 1) * layer.cols];
-                let t = &layer.thresholds[j * nthr..(j + 1) * nthr];
+                let wrow = &layer.w[j * layer.cols..(j + 1) * layer.cols];
+                let t =
+                    &layer.thresholds[j * layer.nthr..(j + 1) * layer.nthr];
                 for b in 0..batch {
                     let x = &cur[b * lane..b * lane + layer.cols];
                     let acc: i32 = wrow
@@ -148,14 +285,13 @@ impl IntEngine {
                         .map(|(&w, &xv)| w as i32 * xv)
                         .sum();
                     let cnt = t.partition_point(|&th| th <= acc);
-                    nxt[b * lane + j] = layer.out_range.qmin + cnt as i32;
+                    nxt[b * lane + j] = layer.qmin + cnt as i32;
                 }
             }
             std::mem::swap(&mut cur, &mut nxt);
         }
 
-        let last = p.layers.last().unwrap();
-        let qmin = last.out_range.qmin;
+        let qmin = p.out_qmin;
         for b in 0..batch {
             let lanes = &cur[b * lane..b * lane + act_dim];
             let out = &mut actions_out[b * act_dim..(b + 1) * act_dim];
@@ -167,15 +303,17 @@ impl IntEngine {
 
     /// Convenience allocating wrapper around [`IntEngine::infer_batch`].
     pub fn infer_batch_vec(&mut self, obs: &[f32]) -> Vec<f32> {
-        let batch = obs.len() / self.policy.obs_dim;
-        let mut out = vec![0.0f32; batch * self.policy.act_dim];
+        let batch = obs.len() / self.plan.obs_dim;
+        let mut out = vec![0.0f32; batch * self.plan.act_dim];
         self.infer_batch(obs, &mut out);
         out
     }
 
-    /// Multiply-accumulate count per inference (for ops/s reporting).
+    /// Multiply-accumulate count per inference (for ops/s reporting) —
+    /// of the plan actually executing, so an optimized engine reports
+    /// the pruned/fused workload.
     pub fn macs(&self) -> u64 {
-        self.policy
+        self.plan
             .layers
             .iter()
             .map(|l| (l.rows * l.cols) as u64)
@@ -333,5 +471,36 @@ mod tests {
     fn macs_count() {
         let (eng, _keep) = build(0, 10, 20, 3, BitCfg::new(4, 3, 8));
         assert_eq!(eng.macs(), (20 * 10 + 20 * 20 + 3 * 20) as u64);
+    }
+
+    #[test]
+    fn optimized_engine_is_bit_identical_to_new() {
+        for bits in [BitCfg::new(2, 2, 2), BitCfg::new(4, 3, 8)] {
+            let (mut base, _keep) = build(21, 6, 16, 2, bits);
+            let mut opt =
+                IntEngine::optimized(base.policy.clone()).unwrap();
+            let mut rng = Rng::new(3);
+            for _ in 0..50 {
+                let mut obs = vec![0.0f32; 6];
+                rng.fill_normal(&mut obs);
+                assert_eq!(base.infer_vec(&obs), opt.infer_vec(&obs),
+                           "bits={bits:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_backed_plan_matches_policy_plan() {
+        let (mut base, _keep) = build(13, 5, 12, 2, BitCfg::new(3, 2, 4));
+        let g = crate::qir::lower(&base.policy);
+        let mut viagraph =
+            IntEngine::with_graph(base.policy.clone(), &g).unwrap();
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let mut obs = vec![0.0f32; 5];
+            rng.fill_normal(&mut obs);
+            assert_eq!(base.infer_vec(&obs), viagraph.infer_vec(&obs));
+        }
+        assert_eq!(base.macs(), viagraph.macs());
     }
 }

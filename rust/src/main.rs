@@ -38,7 +38,7 @@ use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
 use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
 use qcontrol::runtime::{default_artifact_dir, Manifest, Runtime};
-use qcontrol::synth::{synthesize, XC7A15T};
+use qcontrol::synth::{synthesize_with, XC7A15T};
 use qcontrol::util::bench::Table;
 use qcontrol::util::cli::Args;
 use qcontrol::util::json::Json;
@@ -124,16 +124,23 @@ usage: qcontrol <cmd> [--flags]
            [--steps N] [--seeds N] [--jobs N]
   select   --env E [--steps N] [--seeds N] [--jobs N]
   pipeline --env E [--steps N] [--seeds N] [--jobs N] [--clock-hz HZ]
-           (staged selection -> .qpol export -> XC7A15T synthesis at
-            HZ (default 1e8) -> C/Verilog datapath emission; emits
-            results/runs/<run-id>/pipeline.json)
-  synth    --env E [--hidden H] [--bits i,c,o]  (defaults: paper Table 1)
+           [--opt|--no-opt]
+           (staged selection -> .qpol export -> QIR pass pipeline ->
+            XC7A15T synthesis at HZ (default 1e8) -> C/Verilog datapath
+            emission; emits results/runs/<run-id>/pipeline.json with
+            per-pass cost deltas under \"passes\")
+  synth    --env E [--hidden H] [--bits i,c,o] [--opt|--no-opt]
+           (defaults: paper Table 1)
   export   --ckpt PATH [--out FILE.qpol] [--id ID]
            (checkpoint -> versioned integer .qpol artifact)
-  emit     --qpol FILE.qpol [--format c|verilog|both] [--out DIR]
-           (verified integer IR -> self-contained C datapath and/or
-            Verilog module, weights/thresholds as ROM literals; default
-            format both, default DIR results/emit)
+  emit     --qpol FILE.qpol | --dir ARTIFACTS
+           [--format c|verilog|both] [--out DIR] [--opt|--no-opt]
+           (verified integer IR -> optimizing pass pipeline ->
+            self-contained C datapath and/or Verilog module,
+            weights/thresholds as ROM literals; default format both,
+            default DIR results/emit; prints the per-pass summary.
+            --dir emits every registry policy into one C unit with
+            identical ROMs shared across policies)
   serve    --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
            [--max-batch N] [--max-connections N]
            (--dir serves every .qpol in ARTIFACTS, routed by policy id
@@ -143,7 +150,26 @@ usage: qcontrol <cmd> [--flags]
 sweep/select/pipeline run trials on a parallel executor (--jobs /
 QCONTROL_JOBS, default: all cores; results are bit-identical at any
 jobs value) and persist one record per trial under results/runs/ —
-re-running the same configuration resumes, skipping finished trials.";
+re-running the same configuration resumes, skipping finished trials.
+
+emit/pipeline/synth run the verified QIR rewrite passes (dead-row
+pruning, requant fusion, accumulator narrowing) by default; --no-opt
+emits the policy exactly as exported, --opt states the default
+explicitly. Optimized and unoptimized datapaths are bit-identical.";
+
+/// Resolve `--opt` / `--no-opt` into a pass-pipeline level. The
+/// optimizing pipeline is the default; `--opt` states it explicitly,
+/// `--no-opt` reproduces the policy exactly as exported. Passing both
+/// is a contradiction, not a precedence puzzle.
+fn parse_opt_level(a: &Args) -> Result<qcontrol::qir::OptLevel> {
+    anyhow::ensure!(!(a.has("opt") && a.has("no-opt")),
+                    "--opt and --no-opt are mutually exclusive");
+    Ok(if a.has("no-opt") {
+        qcontrol::qir::OptLevel::None
+    } else {
+        qcontrol::qir::OptLevel::Full
+    })
+}
 
 fn cmd_train(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
@@ -450,6 +476,7 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
     proto.widths = usable_widths(&rt, &env, &proto.widths)?;
     let exec = executor_from(a)?;
     let clock_hz = a.f64("clock-hz", 1e8)?;
+    let level = parse_opt_level(a)?;
     println!("pipeline {env}: select -> export -> synth ({}, {} jobs)",
              proto.sweep.describe(), exec.jobs());
     println!("run dir {} (completed trials are skipped on re-run)",
@@ -457,10 +484,13 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
                  .join(pipeline_run_name(&env, &proto))
                  .display());
 
-    let run = run_pipeline(&rt, &env, &proto, &exec, clock_hz)?;
+    let run = run_pipeline(&rt, &env, &proto, &exec, clock_hz, level)?;
     print_select_report(&run.select);
     println!("exported `{}` -> {}", run.policy_id,
              run.qpol_path.display());
+    for line in run.passes.summary_lines() {
+        println!("  {line}");
+    }
     println!("synthesis on {}:", XC7A15T.name);
     println!("  LUT {:>6}/{}   FF {:>6}/{}   BRAM {:>5.1}/{}   DSP {:>3}/{}",
              run.synth.design.luts(), XC7A15T.luts,
@@ -506,8 +536,13 @@ fn cmd_synth(a: &Args) -> Result<()> {
     let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim, hidden,
                                       dims.act_dim)?;
     let policy = IntPolicy::from_tensors(&tensors, bits);
-    let report = synthesize(&policy, &XC7A15T, 1e8)?;
+    let level = parse_opt_level(a)?;
+    let (report, passes) = synthesize_with(&policy, &XC7A15T, 1e8,
+                                           level)?;
     println!("{env} h={hidden} bits={bits} on {}:", XC7A15T.name);
+    for line in passes.summary_lines() {
+        println!("  {line}");
+    }
     println!("  LUT {:>6}/{}   FF {:>6}/{}   BRAM {:>5.1}/{}   DSP {:>3}/{}",
              report.design.luts(), XC7A15T.luts,
              report.design.ffs(), XC7A15T.ffs,
@@ -558,15 +593,21 @@ fn cmd_export(a: &Args) -> Result<()> {
 }
 
 fn cmd_emit(a: &Args) -> Result<()> {
+    if let Some(dir) = a.str_opt("dir") {
+        return cmd_emit_registry(a, dir);
+    }
     let qpol = a
         .str_opt("qpol")
         .context("--qpol required (a .qpol artifact; see `qcontrol \
-                  export`)")?;
+                  export`), or --dir for registry emission")?;
     let art = PolicyArtifact::load(qpol)?;
-    // artifact loading has already run IR verification; the emitters
-    // re-gate their own input. Filenames come from `qir::identifier`
-    // (via write_c/write_verilog), never from the raw artifact id.
-    let g = qcontrol::qir::lower(&art.policy).with_name(&art.id);
+    // artifact loading has already run IR verification; the pass
+    // manager re-verifies around every rewrite and the emitters re-gate
+    // their own input. Filenames come from `qir::identifier` (via
+    // write_c/write_verilog), never from the raw artifact id.
+    let level = parse_opt_level(a)?;
+    let (g, passes) = qcontrol::qir::prepare(&art.policy, level)?;
+    let g = g.with_name(&art.id);
     let out_dir = std::path::PathBuf::from(a.str("out", "results/emit"));
     std::fs::create_dir_all(&out_dir)?;
     let format = a.str("format", "both");
@@ -578,6 +619,9 @@ fn cmd_emit(a: &Args) -> Result<()> {
             "--format `{other}`: expected c, verilog, or both"),
     };
     println!("emitting `{}` ({})", art.id, g.summary());
+    for line in passes.summary_lines() {
+        println!("  {line}");
+    }
     if want_c {
         let path = qcontrol::qir::write_c(&g, &out_dir)?;
         println!("  C datapath       -> {}", path.display());
@@ -586,6 +630,31 @@ fn cmd_emit(a: &Args) -> Result<()> {
         let path = qcontrol::qir::write_verilog(&g, &out_dir)?;
         println!("  Verilog module   -> {}", path.display());
     }
+    Ok(())
+}
+
+/// `emit --dir ARTIFACTS`: render every registry policy into one C
+/// translation unit, deduplicating identical ROMs across policies
+/// (common-ROM sharing — policies exported at the same output width
+/// share the tanh LUT even when their weights differ).
+fn cmd_emit_registry(a: &Args, dir: &str) -> Result<()> {
+    let level = parse_opt_level(a)?;
+    let registry = PolicyRegistry::load_dir(dir)?;
+    let mut graphs = Vec::new();
+    for (id, art) in registry.iter() {
+        let (g, _passes) = qcontrol::qir::prepare(&art.policy, level)?;
+        graphs.push(g.with_name(id));
+    }
+    let (c, rep) = qcontrol::qir::emit_c_registry(&graphs)?;
+    let out_dir = std::path::PathBuf::from(a.str("out", "results/emit"));
+    std::fs::create_dir_all(&out_dir)?;
+    let path = out_dir.join("registry.c");
+    std::fs::write(&path, c)
+        .with_context(|| format!("write {}", path.display()))?;
+    println!("emitted {} policies -> {}", graphs.len(), path.display());
+    println!("  {} of {} ROMs shared across policies, {} bits of ROM \
+              storage saved", rep.roms_shared, rep.roms_total,
+             rep.bits_saved);
     Ok(())
 }
 

@@ -120,12 +120,20 @@ impl PolicyRegistry {
         }
     }
 
-    /// Instantiate an integer inference backend for one policy.
+    /// Instantiate an integer inference backend for one policy, run
+    /// through the shared `lower → optimize → verify → compile` path.
+    /// Registry entries verified on load, so the pass pipeline cannot
+    /// fail here in practice; if it ever does, fall back to the
+    /// unoptimized engine (the two are pinned bit-identical) rather
+    /// than turning a lookup `Option` into an error surface.
     pub fn backend(&self, id: &str) -> Option<Box<dyn PolicyBackend>> {
-        self.entries
-            .get(id)
-            .map(|a| Box::new(IntEngine::new(a.policy.clone()))
-                as Box<dyn PolicyBackend>)
+        self.entries.get(id).map(|a| {
+            match IntEngine::optimized(a.policy.clone()) {
+                Ok(e) => Box::new(e) as Box<dyn PolicyBackend>,
+                Err(_) => Box::new(IntEngine::new(a.policy.clone()))
+                    as Box<dyn PolicyBackend>,
+            }
+        })
     }
 }
 

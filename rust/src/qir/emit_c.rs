@@ -15,7 +15,15 @@
 //! cc -O2 -c policy.c                         # datapath only
 //! cc -O2 -DQPOL_TEST_MAIN policy.c -lm -o p  # stdin/stdout driver
 //! ```
+//!
+//! [`emit_c_registry`] renders a whole registry of policies into one
+//! translation unit and deduplicates identical ROMs across policies
+//! (common-ROM sharing): a weight, threshold, or tanh ROM whose
+//! contents and shape match an earlier policy's is emitted once and
+//! aliased with a `#define`. Policies exported at the same output
+//! width share the tanh LUT this way even when their weights differ.
 
+use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -57,19 +65,81 @@ pub(crate) fn wrap_list(items: &[String], indent: &str, width: usize)
     out
 }
 
+/// Smallest C integer type whose range covers `[lo, hi]`.
+fn c_int_type(lo: i64, hi: i64) -> &'static str {
+    if lo >= i8::MIN as i64 && hi <= i8::MAX as i64 {
+        "int8_t"
+    } else if lo >= i16::MIN as i64 && hi <= i16::MAX as i64 {
+        "int16_t"
+    } else {
+        "int32_t"
+    }
+}
+
+/// Smallest C integer type holding a `bits`-wide two's-complement
+/// value. The narrowing pass shrinks declared accumulator widths, so
+/// this is where `--opt` visibly narrows the emitted C datapath.
+fn acc_c_type(bits: u32) -> &'static str {
+    if bits <= 8 {
+        "int8_t"
+    } else if bits <= 16 {
+        "int16_t"
+    } else {
+        "int32_t"
+    }
+}
+
+/// Outcome of cross-policy ROM deduplication in registry emission.
+/// `bits_saved` counts the C storage not emitted (int8 weights, int32
+/// thresholds and tanh bit patterns).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RomShareReport {
+    /// ROMs across all policies (weights + thresholds + tanh LUTs)
+    pub roms_total: usize,
+    /// ROMs emitted as `#define` aliases of an identical earlier ROM
+    pub roms_shared: usize,
+    /// storage saved by aliasing, in bits
+    pub bits_saved: u64,
+}
+
+/// Cross-policy ROM table: canonical content key → owning symbol.
+struct RomShare {
+    table: HashMap<String, String>,
+    report: RomShareReport,
+}
+
+/// Consult the ROM table: returns the owning symbol if an identical ROM
+/// was already emitted, else records `symbol` as the owner. `None`
+/// share (standalone emission) always emits.
+fn rom_lookup(share: &mut Option<&mut RomShare>, key: String,
+              symbol: &str, stored_bits: u64) -> Option<String> {
+    let s = match share {
+        Some(s) => s,
+        None => return None,
+    };
+    s.report.roms_total += 1;
+    match s.table.get(&key) {
+        Some(owner) => {
+            s.report.roms_shared += 1;
+            s.report.bits_saved += stored_bits;
+            Some(owner.clone())
+        }
+        None => {
+            s.table.insert(key, symbol.to_string());
+            None
+        }
+    }
+}
+
 /// Emit the graph as a self-contained C file (see module docs).
 pub fn emit_c(g: &QGraph) -> Result<String> {
     g.verify()?;
     let layers = g.layers()?;
-    let (s_in, in_r) = g.input_quantizer()?;
-    let (lut, out_r) = g.tanh()?;
+    anyhow::ensure!(!layers.is_empty(),
+                    "graph `{}` has no MatVec/Requant layers to emit",
+                    g.name);
     let ident = identifier(&g.name);
     let up = ident.to_ascii_uppercase();
-    // the rust quantizer guards the scale once; bake the guarded value
-    let s_in_bits = s_in.max(1e-12).to_bits();
-    // Rust's `NaN as i64` is 0, then clamped onto the lattice
-    let nan_q = 0i32.clamp(in_r.qmin, in_r.qmax);
-    let maxdim = g.max_int_dim();
     let max_bound = layers
         .iter()
         .map(|l| l.acc_edge.abs_max())
@@ -106,96 +176,7 @@ pub fn emit_c(g: &QGraph) -> Result<String> {
     writeln!(w, "#include <math.h>")?;
     writeln!(w, "#include <stdint.h>")?;
     writeln!(w, "#include <string.h>")?;
-    writeln!(w)?;
-    writeln!(w, "#define {up}_OBS_DIM {}", g.obs_dim)?;
-    writeln!(w, "#define {up}_ACT_DIM {}", g.act_dim)?;
-    writeln!(w)?;
-    writeln!(w, "static float {ident}_f32(uint32_t bits) {{")?;
-    writeln!(w, "    float f;")?;
-    writeln!(w, "    memcpy(&f, &bits, 4);")?;
-    writeln!(w, "    return f;")?;
-    writeln!(w, "}}")?;
-    writeln!(w)?;
-    writeln!(w, "/* input quantizer: lattice [{}, {}], qs {}, s_in f32 \
-                 bits {:#010x} */", in_r.qmin, in_r.qmax, in_r.qs,
-             s_in_bits)?;
-    writeln!(w, "static int32_t {ident}_quantize_input(float x) {{")?;
-    writeln!(w, "    /* rintf: round half to even, matching Rust's \
-                 round_ties_even */")?;
-    writeln!(w, "    float v = rintf(x / {ident}_f32({s_in_bits:#010x}u) * \
-                 {}.0f);", in_r.qs)?;
-    writeln!(w, "    if (isnan(v)) return {nan_q}; /* Rust NaN-as-int \
-                 cast, clamped */")?;
-    writeln!(w, "    if (v <= {}.0f) return {};", in_r.qmin, in_r.qmin)?;
-    writeln!(w, "    if (v >= {}.0f) return {};", in_r.qmax, in_r.qmax)?;
-    writeln!(w, "    return (int32_t)v;")?;
-    writeln!(w, "}}")?;
-
-    // --- ROMs -----------------------------------------------------------
-    for (li, l) in layers.iter().enumerate() {
-        let n = li + 1;
-        let nthr = l.levels - 1;
-        writeln!(w)?;
-        writeln!(w, "/* layer {n}: MatVec {}x{}, {}-bit weights */",
-                 l.rows, l.cols, l.w_bits)?;
-        writeln!(w, "static const int8_t {up}_W{n}[{} * {}] = {{",
-                 l.rows, l.cols)?;
-        let items: Vec<String> =
-            l.w.iter().map(|v| v.to_string()).collect();
-        writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
-        writeln!(w, "}};")?;
-        writeln!(w, "/* layer {n}: ThresholdRequant -> lattice [{}, {}] \
-                 ({} levels), acc {} bits */", l.out_range.qmin,
-                 l.out_range.qmax, l.levels, l.acc_bits)?;
-        writeln!(w, "static const int32_t {up}_T{n}[{} * {nthr}] = {{",
-                 l.rows)?;
-        let items: Vec<String> =
-            l.thresholds.iter().map(|v| v.to_string()).collect();
-        writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
-        writeln!(w, "}};")?;
-    }
-    writeln!(w)?;
-    writeln!(w, "/* output tanh LUT over the {}-level lattice, f32 bit \
-                 patterns */", lut.len())?;
-    writeln!(w, "static const uint32_t {up}_TANH[{}] = {{", lut.len())?;
-    let items: Vec<String> = lut
-        .iter()
-        .map(|v| format!("{:#010x}u", v.to_bits()))
-        .collect();
-    writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
-    writeln!(w, "}};")?;
-
-    // --- datapath -------------------------------------------------------
-    writeln!(w)?;
-    writeln!(w, "void {ident}_infer(const float obs[{up}_OBS_DIM], float \
-                 act[{up}_ACT_DIM]) {{")?;
-    writeln!(w, "    int32_t buf_a[{maxdim}], buf_b[{maxdim}];")?;
-    writeln!(w, "    int32_t *cur = buf_a, *nxt = buf_b, *swp;")?;
-    writeln!(w, "    int j, k, cnt;")?;
-    writeln!(w, "    for (j = 0; j < {up}_OBS_DIM; j++)")?;
-    writeln!(w, "        cur[j] = {ident}_quantize_input(obs[j]);")?;
-    for (li, l) in layers.iter().enumerate() {
-        let n = li + 1;
-        let nthr = l.levels - 1;
-        writeln!(w, "    /* layer {n}: |acc| <= {} (verified < 2^31) */",
-                 l.acc_edge.abs_max())?;
-        writeln!(w, "    for (j = 0; j < {}; j++) {{", l.rows)?;
-        writeln!(w, "        int32_t acc = 0;")?;
-        writeln!(w, "        for (k = 0; k < {}; k++)", l.cols)?;
-        writeln!(w, "            acc += (int32_t){up}_W{n}[j * {} + k] * \
-                     cur[k];", l.cols)?;
-        writeln!(w, "        cnt = 0;")?;
-        writeln!(w, "        while (cnt < {nthr} && {up}_T{n}[j * {nthr} \
-                     + cnt] <= acc)")?;
-        writeln!(w, "            cnt++;")?;
-        writeln!(w, "        nxt[j] = {} + cnt;", l.out_range.qmin)?;
-        writeln!(w, "    }}")?;
-        writeln!(w, "    swp = cur; cur = nxt; nxt = swp;")?;
-    }
-    writeln!(w, "    for (j = 0; j < {up}_ACT_DIM; j++)")?;
-    writeln!(w, "        act[j] = {ident}_f32({up}_TANH[cur[j] - ({})]);",
-             out_r.qmin)?;
-    writeln!(w, "}}")?;
+    emit_c_graph(w, g, &mut None)?;
 
     // --- optional bit-exact stdio driver --------------------------------
     writeln!(w)?;
@@ -230,6 +211,203 @@ pub fn emit_c(g: &QGraph) -> Result<String> {
     Ok(c)
 }
 
+/// Render every graph of one policy registry into a single driver-free
+/// translation unit, deduplicating identical ROMs across policies.
+/// Symbols are namespaced by each graph's sanitized identifier; two
+/// names that sanitize to the same identifier would silently merge, so
+/// that is an error. Returns the C source and the sharing ledger.
+pub fn emit_c_registry(graphs: &[QGraph])
+                       -> Result<(String, RomShareReport)> {
+    anyhow::ensure!(!graphs.is_empty(),
+                    "registry emission needs at least one graph");
+    let mut seen: HashMap<String, &str> = HashMap::new();
+    for g in graphs {
+        let id = identifier(&g.name);
+        if let Some(prev) = seen.insert(id.clone(), &g.name) {
+            anyhow::bail!("policies `{prev}` and `{}` both sanitize to \
+                           C identifier `{id}`", g.name);
+        }
+    }
+    let mut share = RomShare {
+        table: HashMap::new(),
+        report: RomShareReport::default(),
+    };
+    let mut c = String::new();
+    let w = &mut c;
+    writeln!(w, "/* {} integer-only controller datapaths emitted by \
+                 `qcontrol emit --dir`.", graphs.len())?;
+    writeln!(w, " *")?;
+    writeln!(w, " * One translation unit per registry: identical \
+                 weight/threshold/tanh")?;
+    writeln!(w, " * ROMs are emitted once and aliased (`#define`) for \
+                 every later policy")?;
+    writeln!(w, " * that carries the same contents. Per-policy entry \
+                 points are")?;
+    writeln!(w, " * `<id>_infer`; the stdio test driver is suppressed \
+                 (one `main` per")?;
+    writeln!(w, " * binary) — emit a single policy for the bit-exact \
+                 driver. */")?;
+    writeln!(w, "#include <math.h>")?;
+    writeln!(w, "#include <stdint.h>")?;
+    writeln!(w, "#include <string.h>")?;
+    for g in graphs {
+        g.verify()
+            .with_context(|| format!("registry policy `{}`", g.name))?;
+        writeln!(w)?;
+        writeln!(w, "/* ==== {}: {} ==== */", g.name, g.summary())?;
+        emit_c_graph(w, g, &mut Some(&mut share))?;
+    }
+    Ok((c, share.report))
+}
+
+/// Emit one graph's defines, helpers, ROMs, and datapath (no includes,
+/// no driver). `share` enables cross-policy ROM aliasing.
+fn emit_c_graph(w: &mut String, g: &QGraph,
+                share: &mut Option<&mut RomShare>) -> Result<()> {
+    g.verify()?;
+    let layers = g.layers()?;
+    anyhow::ensure!(!layers.is_empty(),
+                    "graph `{}` has no MatVec/Requant layers to emit",
+                    g.name);
+    let (s_in, in_r) = g.input_quantizer()?;
+    let (lut, out_r) = g.tanh()?;
+    let ident = identifier(&g.name);
+    let up = ident.to_ascii_uppercase();
+    // the rust quantizer guards the scale once; bake the guarded value
+    let s_in_bits = s_in.max(1e-12).to_bits();
+    // Rust's `NaN as i64` is 0, then clamped onto the lattice
+    let nan_q = 0i32.clamp(in_r.qmin, in_r.qmax);
+    let maxdim = g.max_int_dim();
+    // the scratch buffers only ever hold lattice points (quantized
+    // input, requant outputs), so their type follows the widest lattice
+    let (buf_lo, buf_hi) = layers
+        .iter()
+        .map(|l| (l.out_range.qmin as i64, l.out_range.qmax as i64))
+        .fold((in_r.qmin as i64, in_r.qmax as i64),
+              |(lo, hi), (l, h)| (lo.min(l), hi.max(h)));
+    let buf_ty = c_int_type(buf_lo, buf_hi);
+
+    writeln!(w)?;
+    writeln!(w, "#define {up}_OBS_DIM {}", g.obs_dim)?;
+    writeln!(w, "#define {up}_ACT_DIM {}", g.act_dim)?;
+    writeln!(w)?;
+    writeln!(w, "static float {ident}_f32(uint32_t bits) {{")?;
+    writeln!(w, "    float f;")?;
+    writeln!(w, "    memcpy(&f, &bits, 4);")?;
+    writeln!(w, "    return f;")?;
+    writeln!(w, "}}")?;
+    writeln!(w)?;
+    writeln!(w, "/* input quantizer: lattice [{}, {}], qs {}, s_in f32 \
+                 bits {:#010x} */", in_r.qmin, in_r.qmax, in_r.qs,
+             s_in_bits)?;
+    writeln!(w, "static int32_t {ident}_quantize_input(float x) {{")?;
+    writeln!(w, "    /* rintf: round half to even, matching Rust's \
+                 round_ties_even */")?;
+    writeln!(w, "    float v = rintf(x / {ident}_f32({s_in_bits:#010x}u) * \
+                 {}.0f);", in_r.qs)?;
+    writeln!(w, "    if (isnan(v)) return {nan_q}; /* Rust NaN-as-int \
+                 cast, clamped */")?;
+    writeln!(w, "    if (v <= {}.0f) return {};", in_r.qmin, in_r.qmin)?;
+    writeln!(w, "    if (v >= {}.0f) return {};", in_r.qmax, in_r.qmax)?;
+    writeln!(w, "    return (int32_t)v;")?;
+    writeln!(w, "}}")?;
+
+    // --- ROMs -----------------------------------------------------------
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let nthr = l.levels - 1;
+        writeln!(w)?;
+        writeln!(w, "/* layer {n}: MatVec {}x{}, {}-bit weights */",
+                 l.rows, l.cols, l.w_bits)?;
+        let symbol = format!("{up}_W{n}");
+        let items: Vec<String> =
+            l.w.iter().map(|v| v.to_string()).collect();
+        let key = format!("w:{}x{}:{}", l.rows, l.cols, items.join(","));
+        if let Some(owner) = rom_lookup(share, key, &symbol,
+                                        (l.rows * l.cols) as u64 * 8) {
+            writeln!(w, "#define {symbol} {owner} /* shared ROM */")?;
+        } else {
+            writeln!(w, "static const int8_t {symbol}[{} * {}] = {{",
+                     l.rows, l.cols)?;
+            writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
+            writeln!(w, "}};")?;
+        }
+        writeln!(w, "/* layer {n}: ThresholdRequant -> lattice [{}, {}] \
+                 ({} levels), acc {} bits */", l.out_range.qmin,
+                 l.out_range.qmax, l.levels, l.acc_bits)?;
+        let symbol = format!("{up}_T{n}");
+        let items: Vec<String> =
+            l.thresholds.iter().map(|v| v.to_string()).collect();
+        let key = format!("t:{}x{nthr}:{}", l.rows, items.join(","));
+        if let Some(owner) = rom_lookup(share, key, &symbol,
+                                        (l.rows * nthr) as u64 * 32) {
+            writeln!(w, "#define {symbol} {owner} /* shared ROM */")?;
+        } else {
+            writeln!(w, "static const int32_t {symbol}[{} * {nthr}] = {{",
+                     l.rows)?;
+            writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
+            writeln!(w, "}};")?;
+        }
+    }
+    writeln!(w)?;
+    writeln!(w, "/* output tanh LUT over the {}-level lattice, f32 bit \
+                 patterns */", lut.len())?;
+    let symbol = format!("{up}_TANH");
+    let items: Vec<String> = lut
+        .iter()
+        .map(|v| format!("{:#010x}u", v.to_bits()))
+        .collect();
+    let key = format!("l:{}:{}", lut.len(), items.join(","));
+    if let Some(owner) = rom_lookup(share, key, &symbol,
+                                    lut.len() as u64 * 32) {
+        writeln!(w, "#define {symbol} {owner} /* shared ROM */")?;
+    } else {
+        writeln!(w, "static const uint32_t {symbol}[{}] = {{",
+                 lut.len())?;
+        writeln!(w, "{}", wrap_list(&items, "    ", 76))?;
+        writeln!(w, "}};")?;
+    }
+
+    // --- datapath -------------------------------------------------------
+    writeln!(w)?;
+    writeln!(w, "void {ident}_infer(const float obs[{up}_OBS_DIM], float \
+                 act[{up}_ACT_DIM]) {{")?;
+    writeln!(w, "    {buf_ty} buf_a[{maxdim}], buf_b[{maxdim}];")?;
+    writeln!(w, "    {buf_ty} *cur = buf_a, *nxt = buf_b, *swp;")?;
+    writeln!(w, "    int j, k, cnt;")?;
+    writeln!(w, "    for (j = 0; j < {up}_OBS_DIM; j++)")?;
+    writeln!(w, "        cur[j] = ({buf_ty}){ident}_quantize_input(\
+                 obs[j]);")?;
+    for (li, l) in layers.iter().enumerate() {
+        let n = li + 1;
+        let nthr = l.levels - 1;
+        // the declared accumulator width bounds every partial sum (each
+        // lattice contains 0, so per-column contributions straddle 0),
+        // so the narrowed C type is safe throughout the dot product
+        let acc_ty = acc_c_type(l.acc_bits);
+        writeln!(w, "    /* layer {n}: |acc| <= {} (fits {acc_ty}, \
+                     verified < 2^31) */", l.acc_edge.abs_max())?;
+        writeln!(w, "    for (j = 0; j < {}; j++) {{", l.rows)?;
+        writeln!(w, "        {acc_ty} acc = 0;")?;
+        writeln!(w, "        for (k = 0; k < {}; k++)", l.cols)?;
+        writeln!(w, "            acc = ({acc_ty})(acc + \
+                     (int32_t){up}_W{n}[j * {} + k] * cur[k]);", l.cols)?;
+        writeln!(w, "        cnt = 0;")?;
+        writeln!(w, "        while (cnt < {nthr} && {up}_T{n}[j * {nthr} \
+                     + cnt] <= acc)")?;
+        writeln!(w, "            cnt++;")?;
+        writeln!(w, "        nxt[j] = ({buf_ty})({} + cnt);",
+                 l.out_range.qmin)?;
+        writeln!(w, "    }}")?;
+        writeln!(w, "    swp = cur; cur = nxt; nxt = swp;")?;
+    }
+    writeln!(w, "    for (j = 0; j < {up}_ACT_DIM; j++)")?;
+    writeln!(w, "        act[j] = {ident}_f32({up}_TANH[cur[j] - ({})]);",
+             out_r.qmin)?;
+    writeln!(w, "}}")?;
+    Ok(())
+}
+
 /// Emit the graph and write it as `dir/<identifier>.c` (the sanitized
 /// name, same stem as the symbols inside). Returns the written path.
 pub fn write_c(g: &QGraph, dir: &Path) -> Result<PathBuf> {
@@ -257,8 +435,8 @@ impl QirBackend for CEmitter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::qir::lower;
-    use crate::quant::BitCfg;
+    use crate::qir::{lower, EdgeTy, QOp};
+    use crate::quant::{BitCfg, QRange};
     use crate::util::testkit;
 
     #[test]
@@ -298,5 +476,87 @@ mod tests {
         g.ops.pop();
         g.edges.pop();
         assert!(emit_c(&g).is_err());
+    }
+
+    #[test]
+    fn degenerate_graphs_error_instead_of_panicking() {
+        let empty = QGraph {
+            name: "e".into(),
+            obs_dim: 1,
+            act_dim: 1,
+            ops: vec![],
+            edges: vec![],
+        };
+        let err = emit_c(&empty).unwrap_err().to_string();
+        assert!(err.contains("empty graph"), "{err}");
+        // boundary ops but no MatVec/Requant legs between them
+        let legless = QGraph {
+            name: "l".into(),
+            obs_dim: 1,
+            act_dim: 1,
+            ops: vec![QOp::QuantizeInput { s_in: 1.0 },
+                      QOp::TanhLut { lut: vec![0.0; 4] }],
+            edges: vec![EdgeTy::lattice(1, QRange::new(2, true)),
+                        EdgeTy::F32 { dim: 1 }],
+        };
+        assert!(emit_c(&legless).is_err());
+    }
+
+    #[test]
+    fn activation_buffers_use_the_narrowest_lattice_type() {
+        // every lattice fits i8 → int8_t scratch
+        let g = lower(&testkit::toy_policy(1, 4, 8, 2,
+                                           BitCfg::new(4, 3, 4)));
+        let c = emit_c(&g).unwrap();
+        assert!(c.contains("int8_t buf_a"), "{c}");
+        // a 16-bit input lattice needs int16_t scratch
+        let g = lower(&testkit::toy_policy(1, 4, 8, 2,
+                                           BitCfg::new(16, 3, 4)));
+        let c = emit_c(&g).unwrap();
+        assert!(c.contains("int16_t buf_a"), "{c}");
+    }
+
+    #[test]
+    fn registry_emission_shares_identical_roms() {
+        // the same tensors under two ids: every ROM of the second policy
+        // aliases the first's (3 W + 3 T + 1 TANH per policy)
+        let p = testkit::toy_policy(5, 4, 8, 2, BitCfg::new(3, 2, 4));
+        let a = lower(&p).with_name("pol-a");
+        let b = lower(&p).with_name("pol-b");
+        let (c, rep) = emit_c_registry(&[a, b]).unwrap();
+        assert_eq!(rep.roms_total, 14);
+        assert_eq!(rep.roms_shared, 7);
+        assert!(rep.bits_saved > 0);
+        assert!(c.contains("#define POL_B_W1 POL_A_W1"), "{c}");
+        assert!(c.contains("#define POL_B_TANH POL_A_TANH"));
+        // driver suppressed: one translation unit, no `main` candidates
+        assert!(!c.contains("QPOL_TEST_MAIN"));
+        assert_eq!(c.matches('{').count(), c.matches('}').count());
+    }
+
+    #[test]
+    fn registry_emission_shares_the_tanh_lut_across_policies() {
+        // different weights, same output width → the tanh LUT (a pure
+        // function of the output lattice) is the shared ROM
+        let a = lower(&testkit::toy_policy(1, 4, 8, 2,
+                                           BitCfg::new(4, 3, 8)))
+            .with_name("p1");
+        let b = lower(&testkit::toy_policy(2, 4, 8, 2,
+                                           BitCfg::new(4, 3, 8)))
+            .with_name("p2");
+        let (c, rep) = emit_c_registry(&[a, b]).unwrap();
+        assert!(c.contains("#define P2_TANH P1_TANH"), "{c}");
+        assert!(rep.roms_shared >= 1);
+        assert!(rep.roms_shared < rep.roms_total);
+    }
+
+    #[test]
+    fn registry_emission_rejects_colliding_identifiers() {
+        let p = testkit::toy_policy(1, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let a = lower(&p).with_name("pol-a");
+        let b = lower(&p).with_name("pol.a"); // sanitizes to pol_a too
+        let err = emit_c_registry(&[a, b]).unwrap_err().to_string();
+        assert!(err.contains("pol_a"), "{err}");
+        assert!(emit_c_registry(&[]).is_err());
     }
 }

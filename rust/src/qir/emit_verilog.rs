@@ -45,7 +45,10 @@ pub fn emit_verilog(g: &QGraph) -> Result<String> {
     let (lut, out_r) = g.tanh()?;
     let module = identifier(&g.name);
     let in_bits = store_bits(g.edges[0]);
-    let last = layers.last().unwrap();
+    let last = layers.last().with_context(|| {
+        format!("graph `{}` has no MatVec/Requant layers to emit",
+                g.name)
+    })?;
     let out_bits = EdgeTy::lattice(1, last.out_range).bits();
 
     let mut v = String::new();
@@ -248,6 +251,32 @@ mod tests {
             assert!(v.contains(&format!("h{n} [0:")));
             assert!(v.contains(&format!("acc{n};")));
         }
+    }
+
+    #[test]
+    fn degenerate_graphs_error_instead_of_panicking() {
+        use crate::qir::QOp;
+        use crate::quant::QRange;
+        let empty = QGraph {
+            name: "e".into(),
+            obs_dim: 1,
+            act_dim: 1,
+            ops: vec![],
+            edges: vec![],
+        };
+        let err = emit_verilog(&empty).unwrap_err().to_string();
+        assert!(err.contains("empty graph"), "{err}");
+        // boundary ops but no MatVec/Requant legs between them
+        let legless = QGraph {
+            name: "l".into(),
+            obs_dim: 1,
+            act_dim: 1,
+            ops: vec![QOp::QuantizeInput { s_in: 1.0 },
+                      QOp::TanhLut { lut: vec![0.0; 4] }],
+            edges: vec![EdgeTy::lattice(1, QRange::new(2, true)),
+                        EdgeTy::F32 { dim: 1 }],
+        };
+        assert!(emit_verilog(&legless).is_err());
     }
 
     #[test]

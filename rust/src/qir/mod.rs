@@ -31,10 +31,15 @@
 pub mod emit_c;
 pub mod emit_verilog;
 pub mod interp;
+pub mod passes;
 
-pub use emit_c::{emit_c, identifier, write_c, CEmitter};
+pub use emit_c::{emit_c, emit_c_registry, identifier, write_c, CEmitter,
+                 RomShareReport};
 pub use emit_verilog::{emit_verilog, write_verilog, VerilogEmitter};
 pub use interp::{Interpret, Interpreter};
+pub use passes::{prepare, CostEstimate, FuseTrivialRequant,
+                 NarrowAccWidths, OptLevel, Pass, PassDelta, PassManager,
+                 PassOutcome, PassReport, PruneDeadRows};
 
 use anyhow::{bail, ensure, Result};
 
@@ -118,7 +123,7 @@ impl EdgeTy {
 }
 
 /// Ops of the integer datapath, in the paper's §2.3 vocabulary.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum QOp {
     /// The single floating-point operation of the deployed controller:
     /// project the (already normalized) observation onto the input
@@ -162,7 +167,7 @@ impl QOp {
 /// `QuantizeInput → (MatVec → ThresholdRequant)+ → TanhLut` with
 /// `edges[i]` the output type of `ops[i]` (the input of `ops[0]` is the
 /// implicit `F32 { obs_dim }` boundary edge).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QGraph {
     /// provenance label (artifact id, …) — used by the emitters
     pub name: String,
@@ -260,6 +265,10 @@ impl QGraph {
     ///   fast executors (`IntEngine`, the emitted C, the Verilog
     ///   datapath) accumulate at finite width, so a wider graph is
     ///   rejected here instead of silently wrapping there;
+    /// * every accumulator edge covers the exact interval-propagated
+    ///   `[lo, hi]` of its MatVec (exact, not the crude symmetric
+    ///   bound, so the narrowed edges the optimizer declares verify
+    ///   while anything tighter than reality is rejected);
     /// * the declared `acc_bits` of each requant covers its input edge;
     /// * thresholds: `rows × (levels-1)` of them, monotone
     ///   nondecreasing per row;
@@ -310,7 +319,9 @@ impl QGraph {
                              ThresholdRequant pairs, then TanhLut)");
                     ensure!(*rows >= 1 && *cols >= 1,
                             "op {i}: degenerate MatVec {rows}x{cols}");
-                    let EdgeTy::Int { dim: in_dim, .. } = inp else {
+                    let EdgeTy::Int { dim: in_dim, lo: in_lo,
+                                      hi: in_hi, .. } = inp
+                    else {
                         bail!("op {i}: MatVec input must be an integer \
                                edge, got {inp:?}");
                     };
@@ -357,9 +368,18 @@ impl QGraph {
                     ensure!(out_dim == *rows,
                             "op {i}: accumulator dim {out_dim} != rows \
                              {rows}");
-                    ensure!(lo as i128 <= -bound && hi as i128 >= bound,
+                    // Exact interval-propagated covering check (safe in
+                    // i64 only *after* the crude bound above passed):
+                    // the optimizer's narrow pass declares exact edges,
+                    // so the covering requirement must be exact too —
+                    // the crude symmetric bound would reject them.
+                    let (exact_lo, exact_hi) =
+                        passes::matvec_interval(w, *rows, *cols, in_lo,
+                                                in_hi);
+                    ensure!(lo <= exact_lo && hi >= exact_hi,
                             "op {i}: accumulator edge [{lo}, {hi}] does \
-                             not cover the worst case ±{bound}");
+                             not cover the worst case [{exact_lo}, \
+                             {exact_hi}]");
                 }
                 QOp::ThresholdRequant { levels, acc_bits, thresholds } => {
                     ensure!(i % 2 == 0 && i >= 2 && !last,

@@ -1,0 +1,933 @@
+//! Verified graph-rewrite passes over [`QGraph`] — the optimizing half
+//! of the QIR compiler (ROADMAP item 2: "lowers and verifies but never
+//! rewrites").
+//!
+//! A [`Pass`] is a semantics-preserving rewrite: the optimized graph
+//! must stay **bit-identical** to the unoptimized one on every input
+//! (pinned by the property tests in `rust/tests/qir.rs`). The
+//! [`PassManager`] enforces the safety contract mechanically: it runs
+//! [`QGraph::verify`] before the first pass and after every pass, and
+//! records a per-pass [`PassDelta`] plus the synth-cost-model
+//! [`CostEstimate`] before/after, so `pipeline.json` and `qcontrol
+//! emit` can show exactly what each rewrite bought.
+//!
+//! Shipped passes:
+//!
+//! * [`PruneDeadRows`] — at 2–3-bit lattices whole weight rows quantize
+//!   to exactly zero; their accumulator is the constant 0, so the
+//!   requant output is a known constant. Remove the row, its
+//!   thresholds, and the matching downstream column, folding the
+//!   constant into the downstream thresholds (a uniform shift + clamp
+//!   preserves the partition-point semantics exactly).
+//! * [`FuseTrivialRequant`] — when a requant is *affine-trivial* on the
+//!   reachable accumulator interval (its thresholds restricted to that
+//!   interval are exactly the consecutive integers, so `out = acc + s`),
+//!   the two adjacent MatVecs collapse into one (`W'' = W2·W1`) and the
+//!   shift folds into the downstream thresholds.
+//! * [`NarrowAccWidths`] — interval-propagate the exact `[lo, hi]`
+//!   bounds through every MatVec and shrink the declared `acc_bits` to
+//!   the minimal two's-complement width. This narrows the C activation
+//!   types, the Verilog accumulator regs, and the synth model's
+//!   comparator/FF datapath.
+//!
+//! The fourth pass of the pipeline, common-ROM sharing, is an
+//! *emission-level* rewrite (it dedups identical weight/threshold/tanh
+//! ROMs **across** the policies of one registry) and lives in
+//! [`super::emit_c::emit_c_registry`].
+//!
+//! Soundness of the interval machinery: every lattice edge contains 0
+//! (signed lattices are symmetric-ish, unsigned start at 0), so each
+//! weight's contribution to a row interval is `min(w·lo, w·hi) ≤ 0 ≤
+//! max(w·lo, w·hi)`; removing a column can only shrink the interval,
+//! and the exact interval is always contained in the crude
+//! `±cols·|w|max·|x|max` bound that `verify` checks first — which is
+//! why the i64 arithmetic here cannot overflow on a verified graph.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::quant::export::IntPolicy;
+use crate::synth::model::{cost_layer, layer_geometry, Design, LayerFold,
+                          XC7A15T};
+use crate::synth::power::estimate_power;
+use crate::util::json::Json;
+
+use super::{lower, EdgeTy, QGraph, QOp};
+
+/// Clock the folding-independent cost probe is evaluated at (the
+/// paper's fixed 100 MHz).
+const COST_CLOCK_HZ: f64 = 1e8;
+
+// ---------------------------------------------------------------------------
+// interval propagation (shared with QGraph::verify)
+// ---------------------------------------------------------------------------
+
+/// Exact reachable interval of one MatVec row given input values in
+/// `[lo, hi]`. Because every lattice contains 0, the per-weight
+/// contribution straddles 0 and partial sums stay inside the final
+/// interval — safe in i64 once the crude i32 bound has been checked.
+pub(crate) fn row_interval(wrow: &[i8], lo: i64, hi: i64) -> (i64, i64) {
+    let mut rlo = 0i64;
+    let mut rhi = 0i64;
+    for &wv in wrow {
+        let w = wv as i64;
+        let (a, b) = (w * lo, w * hi);
+        rlo += a.min(b);
+        rhi += a.max(b);
+    }
+    (rlo, rhi)
+}
+
+/// i64-weight variant for fused products (entries may exceed i8 before
+/// the fit check).
+fn row_interval_i64(wrow: &[i64], lo: i64, hi: i64) -> (i64, i64) {
+    let mut rlo = 0i64;
+    let mut rhi = 0i64;
+    for &w in wrow {
+        let (a, b) = (w * lo, w * hi);
+        rlo += a.min(b);
+        rhi += a.max(b);
+    }
+    (rlo, rhi)
+}
+
+/// Exact reachable interval of a whole MatVec (union over rows).
+pub(crate) fn matvec_interval(w: &[i8], rows: usize, cols: usize,
+                              lo: i64, hi: i64) -> (i64, i64) {
+    let mut glo = 0i64;
+    let mut ghi = 0i64;
+    for r in 0..rows {
+        let (a, b) = row_interval(&w[r * cols..(r + 1) * cols], lo, hi);
+        if r == 0 {
+            (glo, ghi) = (a, b);
+        } else {
+            glo = glo.min(a);
+            ghi = ghi.max(b);
+        }
+    }
+    (glo, ghi)
+}
+
+// ---------------------------------------------------------------------------
+// cost probe
+// ---------------------------------------------------------------------------
+
+/// Folding-independent synth-cost snapshot of a graph: every layer
+/// fully sequential (PE=SIMD=1, no DSPs), so two snapshots of the same
+/// graph before/after a pass are directly comparable — the delta
+/// isolates what the *rewrite* changed, not what the folding search
+/// happened to pick.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostEstimate {
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub latency_cycles: u64,
+    pub energy_per_action_j: f64,
+}
+
+impl CostEstimate {
+    pub fn of(g: &QGraph) -> Result<CostEstimate> {
+        let layers = layer_geometry(g)?
+            .iter()
+            .map(|l| cost_layer(l.rows, l.cols,
+                                LayerFold { pe: 1, simd: 1 },
+                                l.w_bits, l.in_bits, l.out_bits,
+                                l.acc_bits, 0))
+            .collect();
+        let design =
+            Design { device: XC7A15T, clock_hz: COST_CLOCK_HZ, layers };
+        let power = estimate_power(&design, COST_CLOCK_HZ);
+        let latency_cycles = design.latency_cycles();
+        Ok(CostEstimate {
+            luts: design.luts(),
+            ffs: design.ffs(),
+            bram36: design.bram36(),
+            latency_cycles,
+            energy_per_action_j: power.total_w
+                * latency_cycles as f64 / COST_CLOCK_HZ,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pass plumbing
+// ---------------------------------------------------------------------------
+
+/// Optimization level of the shared `lower → optimize → verify →
+/// compile` path. `None` still verifies; `Full` runs the standard
+/// rewrite pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptLevel {
+    None,
+    Full,
+}
+
+impl OptLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            OptLevel::None => "none",
+            OptLevel::Full => "full",
+        }
+    }
+}
+
+/// What one pass changed, in graph terms.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PassDelta {
+    /// ops removed from the chain (fusion)
+    pub ops_removed: u64,
+    /// MatVec output rows removed (with their thresholds)
+    pub rows_pruned: u64,
+    /// downstream MatVec columns removed
+    pub cols_pruned: u64,
+    /// total declared accumulator bits shaved across requants
+    pub acc_bits_saved: u64,
+}
+
+impl PassDelta {
+    pub fn changed(&self) -> bool {
+        *self != PassDelta::default()
+    }
+
+    pub fn accumulate(&mut self, o: &PassDelta) {
+        self.ops_removed += o.ops_removed;
+        self.rows_pruned += o.rows_pruned;
+        self.cols_pruned += o.cols_pruned;
+        self.acc_bits_saved += o.acc_bits_saved;
+    }
+}
+
+/// A semantics-preserving graph rewrite. `run` mutates the graph and
+/// reports what changed; it must keep the graph bit-identical on every
+/// input and leave it in a state [`QGraph::verify`] accepts (the
+/// manager re-checks both mechanically).
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &mut QGraph) -> Result<PassDelta>;
+}
+
+/// One pass's ledger entry: the graph delta plus the cost-model
+/// snapshot on both sides.
+#[derive(Clone, Debug)]
+pub struct PassOutcome {
+    pub name: &'static str,
+    pub delta: PassDelta,
+    pub cost_before: CostEstimate,
+    pub cost_after: CostEstimate,
+}
+
+/// Full record of one optimization run — serialized into
+/// `pipeline.json` and printed by `qcontrol emit`.
+#[derive(Clone, Debug)]
+pub struct PassReport {
+    pub level: OptLevel,
+    pub outcomes: Vec<PassOutcome>,
+}
+
+impl PassReport {
+    pub fn total_delta(&self) -> PassDelta {
+        let mut t = PassDelta::default();
+        for o in &self.outcomes {
+            t.accumulate(&o.delta);
+        }
+        t
+    }
+
+    /// Human lines for CLI output, one per pass.
+    pub fn summary_lines(&self) -> Vec<String> {
+        if self.outcomes.is_empty() {
+            return vec![format!("opt {}: no rewrite passes run",
+                                self.level.name())];
+        }
+        self.outcomes
+            .iter()
+            .map(|o| {
+                format!(
+                    "pass {:<13} -{} ops -{} rows -{} cols -{} acc bits \
+                     | luts {} -> {}, ffs {} -> {}, cycles {} -> {}",
+                    o.name, o.delta.ops_removed, o.delta.rows_pruned,
+                    o.delta.cols_pruned, o.delta.acc_bits_saved,
+                    o.cost_before.luts, o.cost_after.luts,
+                    o.cost_before.ffs, o.cost_after.ffs,
+                    o.cost_before.latency_cycles,
+                    o.cost_after.latency_cycles)
+            })
+            .collect()
+    }
+
+    /// The `pipeline.json` per-pass delta schema:
+    /// `{"level": ..., "passes": [{name, ops_removed, rows_pruned,
+    /// cols_pruned, acc_bits_saved, luts_before, luts_after,
+    /// ffs_before, ffs_after, latency_cycles_before,
+    /// latency_cycles_after, energy_per_action_j_before,
+    /// energy_per_action_j_after}]}`.
+    pub fn to_json(&self) -> Json {
+        let passes = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("name", Json::str(o.name)),
+                    ("ops_removed", Json::num(o.delta.ops_removed as f64)),
+                    ("rows_pruned", Json::num(o.delta.rows_pruned as f64)),
+                    ("cols_pruned", Json::num(o.delta.cols_pruned as f64)),
+                    ("acc_bits_saved",
+                     Json::num(o.delta.acc_bits_saved as f64)),
+                    ("luts_before", Json::num(o.cost_before.luts as f64)),
+                    ("luts_after", Json::num(o.cost_after.luts as f64)),
+                    ("ffs_before", Json::num(o.cost_before.ffs as f64)),
+                    ("ffs_after", Json::num(o.cost_after.ffs as f64)),
+                    ("latency_cycles_before",
+                     Json::num(o.cost_before.latency_cycles as f64)),
+                    ("latency_cycles_after",
+                     Json::num(o.cost_after.latency_cycles as f64)),
+                    ("energy_per_action_j_before",
+                     Json::num(o.cost_before.energy_per_action_j)),
+                    ("energy_per_action_j_after",
+                     Json::num(o.cost_after.energy_per_action_j)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("level", Json::str(self.level.name())),
+            ("passes", Json::Arr(passes)),
+        ])
+    }
+}
+
+/// Runs a pass list under the safety contract: verify the input graph,
+/// then after every pass re-verify and snapshot the cost model. A pass
+/// that breaks an invariant aborts the whole run with a descriptive
+/// error naming it — an optimized graph is never silently worse-formed
+/// than its source.
+pub struct PassManager {
+    pub level: OptLevel,
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    /// The standard pipeline for a level. Order (prune → fuse →
+    /// narrow) is a heuristic, not a correctness requirement: the
+    /// ordering property test runs every permutation.
+    pub fn standard(level: OptLevel) -> PassManager {
+        let passes: Vec<Box<dyn Pass>> = match level {
+            OptLevel::None => vec![],
+            OptLevel::Full => vec![
+                Box::new(PruneDeadRows),
+                Box::new(FuseTrivialRequant),
+                Box::new(NarrowAccWidths),
+            ],
+        };
+        PassManager { level, passes }
+    }
+
+    /// Custom pass list (ordering/idempotence tests).
+    pub fn with_passes(level: OptLevel, passes: Vec<Box<dyn Pass>>)
+                       -> PassManager {
+        PassManager { level, passes }
+    }
+
+    pub fn run(&self, g: &mut QGraph) -> Result<PassReport> {
+        g.verify().context("pass input graph fails verification")?;
+        let mut outcomes = Vec::new();
+        for p in &self.passes {
+            let cost_before = CostEstimate::of(g)?;
+            let delta = p
+                .run(g)
+                .with_context(|| format!("pass `{}`", p.name()))?;
+            g.verify().with_context(|| {
+                format!("pass `{}` broke graph invariants", p.name())
+            })?;
+            let cost_after = CostEstimate::of(g)?;
+            outcomes.push(PassOutcome {
+                name: p.name(),
+                delta,
+                cost_before,
+                cost_after,
+            });
+        }
+        Ok(PassReport { level: self.level, outcomes })
+    }
+}
+
+/// The one shared entry point of every consumer: `lower` the policy,
+/// run the standard pipeline at `level` (which verifies before and
+/// after), and hand back the graph plus the pass ledger.
+pub fn prepare(p: &IntPolicy, level: OptLevel)
+               -> Result<(QGraph, PassReport)> {
+    let mut g = lower(p);
+    let report = PassManager::standard(level).run(&mut g)?;
+    Ok((g, report))
+}
+
+// ---------------------------------------------------------------------------
+// pass 1: dead-row/column pruning
+// ---------------------------------------------------------------------------
+
+/// Remove MatVec rows whose weights are all zero (their accumulator is
+/// identically 0, so the requant output is the constant
+/// `qmin + #{th ≤ 0}`), drop the matching thresholds and downstream
+/// columns, and shift the downstream thresholds by the constant's
+/// contribution `K_j = Σ_{r∈dead} w2[j][r]·c_r`. Shifted thresholds
+/// are clamped into `[lo_j, hi_j+1]` of the *new* downstream row
+/// interval — outside that window a threshold's truth value
+/// `th ≤ acc` is constant, so the clamp changes nothing and keeps the
+/// values small. Sweeps to a fixed point (removing columns can zero
+/// further rows). The final MatVec's rows are the action dims and are
+/// never pruned; an all-dead MatVec keeps row 0 so the chain stays
+/// well-formed.
+pub struct PruneDeadRows;
+
+impl Pass for PruneDeadRows {
+    fn name(&self) -> &'static str {
+        "prune-dead"
+    }
+
+    fn run(&self, g: &mut QGraph) -> Result<PassDelta> {
+        let mut delta = PassDelta::default();
+        loop {
+            let mut changed = false;
+            let n = g.ops.len();
+            if n >= 6 {
+                let mut i = 1;
+                // non-final MatVecs only: downstream pair at i+2, i+3
+                while i + 4 < n {
+                    if try_prune_site(g, i, &mut delta)? {
+                        changed = true;
+                    }
+                    i += 2;
+                }
+            }
+            if !changed {
+                return Ok(delta);
+            }
+        }
+    }
+}
+
+fn try_prune_site(g: &mut QGraph, i: usize, delta: &mut PassDelta)
+                  -> Result<bool> {
+    let QOp::MatVec { rows, cols, w, .. } = &g.ops[i] else {
+        bail!("op {i}: expected MatVec");
+    };
+    let (rows, cols, w1) = (*rows, *cols, w.clone());
+    let dead: Vec<usize> = {
+        let mut d: Vec<usize> = (0..rows)
+            .filter(|&r| w1[r * cols..(r + 1) * cols]
+                .iter()
+                .all(|&v| v == 0))
+            .collect();
+        if d.len() == rows {
+            d.remove(0); // keep one row: the chain needs a layer here
+        }
+        d
+    };
+    if dead.is_empty() {
+        return Ok(false);
+    }
+
+    let QOp::ThresholdRequant { levels, thresholds, .. } = &g.ops[i + 1]
+    else {
+        bail!("op {}: expected ThresholdRequant", i + 1);
+    };
+    let (levels1, t1) = (*levels, thresholds.clone());
+    let EdgeTy::Int { lattice: Some(r1), .. } = g.edges[i + 1] else {
+        bail!("op {}: requant output is not a lattice edge", i + 1);
+    };
+    let QOp::MatVec { rows: rows2, cols: cols2, w: w2, .. } =
+        &g.ops[i + 2]
+    else {
+        bail!("op {}: expected MatVec", i + 2);
+    };
+    let (rows2, cols2, w2) = (*rows2, *cols2, w2.clone());
+    ensure!(cols2 == rows, "op {}: dim chain broken", i + 2);
+    let QOp::ThresholdRequant { levels: levels2, thresholds: t2, .. } =
+        &g.ops[i + 3]
+    else {
+        bail!("op {}: expected ThresholdRequant", i + 3);
+    };
+    let (levels2, t2) = (*levels2, t2.clone());
+
+    // constant output of each dead row: acc ≡ 0
+    let nthr1 = levels1 - 1;
+    let c_of = |r: usize| -> i64 {
+        let t = &t1[r * nthr1..(r + 1) * nthr1];
+        r1.qmin as i64 + t.partition_point(|&th| th <= 0) as i64
+    };
+    // downstream shift per output row
+    let k: Vec<i64> = (0..rows2)
+        .map(|j| dead.iter()
+            .map(|&r| w2[j * cols2 + r] as i64 * c_of(r))
+            .sum())
+        .collect();
+
+    let keep: Vec<usize> =
+        (0..rows).filter(|r| !dead.contains(r)).collect();
+    let rows_new = keep.len();
+    let mut w1_new = Vec::with_capacity(rows_new * cols);
+    let mut t1_new = Vec::with_capacity(rows_new * nthr1);
+    for &r in &keep {
+        w1_new.extend_from_slice(&w1[r * cols..(r + 1) * cols]);
+        t1_new.extend_from_slice(&t1[r * nthr1..(r + 1) * nthr1]);
+    }
+    let mut w2_new = Vec::with_capacity(rows2 * rows_new);
+    for j in 0..rows2 {
+        for &r in &keep {
+            w2_new.push(w2[j * cols2 + r]);
+        }
+    }
+
+    // shift + clamp the downstream thresholds; all-or-nothing on i32 fit
+    let (l_lo, l_hi) = (r1.qmin as i64, r1.qmax as i64);
+    let nthr2 = levels2 - 1;
+    let mut t2_new = Vec::with_capacity(t2.len());
+    for j in 0..rows2 {
+        let (lo_j, hi_j) = row_interval(
+            &w2_new[j * rows_new..(j + 1) * rows_new], l_lo, l_hi);
+        for &th in &t2[j * nthr2..(j + 1) * nthr2] {
+            let v = (th as i64 - k[j]).clamp(lo_j, hi_j + 1);
+            if v < i32::MIN as i64 || v > i32::MAX as i64 {
+                return Ok(false); // cannot represent; skip whole site
+            }
+            t2_new.push(v as i32);
+        }
+    }
+
+    // exact new intervals for both touched accumulator edges
+    let EdgeTy::Int { lo: in_lo, hi: in_hi, .. } = g.in_edge(i) else {
+        bail!("op {i}: MatVec input is not an integer edge");
+    };
+    let (a_lo, a_hi) =
+        matvec_interval(&w1_new, rows_new, cols, in_lo, in_hi);
+    let (b_lo, b_hi) =
+        matvec_interval(&w2_new, rows2, rows_new, l_lo, l_hi);
+
+    let removed = dead.len() as u64;
+    if let QOp::MatVec { rows, w, .. } = &mut g.ops[i] {
+        *rows = rows_new;
+        *w = w1_new;
+    }
+    g.edges[i] =
+        EdgeTy::Int { dim: rows_new, lo: a_lo, hi: a_hi, lattice: None };
+    if let QOp::ThresholdRequant { thresholds, .. } = &mut g.ops[i + 1] {
+        *thresholds = t1_new;
+    }
+    g.edges[i + 1] = EdgeTy::lattice(rows_new, r1);
+    if let QOp::MatVec { cols, w, .. } = &mut g.ops[i + 2] {
+        *cols = rows_new;
+        *w = w2_new;
+    }
+    g.edges[i + 2] =
+        EdgeTy::Int { dim: rows2, lo: b_lo, hi: b_hi, lattice: None };
+    if let QOp::ThresholdRequant { thresholds, .. } = &mut g.ops[i + 3] {
+        *thresholds = t2_new;
+    }
+    delta.rows_pruned += removed;
+    delta.cols_pruned += removed;
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// pass 2: threshold-requant fusion
+// ---------------------------------------------------------------------------
+
+/// Fuse `MatVec1 → Requant → MatVec2` into one MatVec where the requant
+/// is affine-trivial: for every row `r`, its thresholds restricted to
+/// the reachable open-closed window `(lo_r, hi_r]` are exactly the
+/// consecutive integers `{lo_r+1, …, hi_r}`, each once — then
+/// `out_r = acc_r + s_r` with `s_r = qmin + #{th ≤ lo_r} − lo_r`
+/// (checking window *contents*, not just the endpoint difference,
+/// because a monotone step function can jump by 2 and then 0 while
+/// matching the endpoints). The fused weights `W'' = W2·W1` must fit a
+/// signed ≤8-bit lattice and respect the i32 accumulator bound, and the
+/// shifted downstream thresholds must fit i32, else the site is
+/// skipped whole. The downstream `acc_bits` becomes
+/// `max(old, bits(new edge))` since the fused interval is not provably
+/// inside the old one.
+pub struct FuseTrivialRequant;
+
+impl Pass for FuseTrivialRequant {
+    fn name(&self) -> &'static str {
+        "fuse-requant"
+    }
+
+    fn run(&self, g: &mut QGraph) -> Result<PassDelta> {
+        let mut delta = PassDelta::default();
+        'restart: loop {
+            let n = g.ops.len();
+            let mut i = 2; // requant indices with a downstream MatVec
+            while i + 4 <= n {
+                if try_fuse_site(g, i)? {
+                    delta.ops_removed += 2;
+                    continue 'restart; // indices shifted; rescan
+                }
+                i += 2;
+            }
+            return Ok(delta);
+        }
+    }
+}
+
+fn try_fuse_site(g: &mut QGraph, i: usize) -> Result<bool> {
+    let QOp::MatVec { rows, cols, w, .. } = &g.ops[i - 1] else {
+        bail!("op {}: expected MatVec", i - 1);
+    };
+    let (rows1, cols1, w1) = (*rows, *cols, w.clone());
+    let QOp::ThresholdRequant { levels, thresholds, .. } = &g.ops[i]
+    else {
+        bail!("op {i}: expected ThresholdRequant");
+    };
+    let (levels1, t1) = (*levels, thresholds.clone());
+    let EdgeTy::Int { lattice: Some(r1), .. } = g.edges[i] else {
+        bail!("op {i}: requant output is not a lattice edge");
+    };
+    let QOp::MatVec { rows: rows2, cols: cols2, w: w2, .. } =
+        &g.ops[i + 1]
+    else {
+        bail!("op {}: expected MatVec", i + 1);
+    };
+    let (rows2, cols2, w2) = (*rows2, *cols2, w2.clone());
+    ensure!(cols2 == rows1, "op {}: dim chain broken", i + 1);
+    let QOp::ThresholdRequant { levels: levels2, acc_bits: acc2,
+                                thresholds: t2, .. } = &g.ops[i + 2]
+    else {
+        bail!("op {}: expected ThresholdRequant", i + 2);
+    };
+    let (levels2, acc2, t2) = (*levels2, *acc2, t2.clone());
+
+    let EdgeTy::Int { lo: in_lo, hi: in_hi, .. } = g.in_edge(i - 1)
+    else {
+        bail!("op {}: MatVec input is not an integer edge", i - 1);
+    };
+
+    // affine-triviality per requant row on its reachable interval
+    let nthr1 = levels1 - 1;
+    let mut s = Vec::with_capacity(rows1);
+    for r in 0..rows1 {
+        let (lo_r, hi_r) = row_interval(
+            &w1[r * cols1..(r + 1) * cols1], in_lo, in_hi);
+        let row_t = &t1[r * nthr1..(r + 1) * nthr1];
+        let window: Vec<i64> = row_t
+            .iter()
+            .map(|&v| v as i64)
+            .filter(|&v| v > lo_r && v <= hi_r)
+            .collect();
+        if window.len() as i64 != hi_r - lo_r {
+            return Ok(false);
+        }
+        for (kk, &v) in window.iter().enumerate() {
+            if v != lo_r + 1 + kk as i64 {
+                return Ok(false);
+            }
+        }
+        let below = row_t.iter().filter(|&&v| (v as i64) <= lo_r).count();
+        s.push(r1.qmin as i64 + below as i64 - lo_r);
+    }
+
+    // fused product W'' = W2·W1 and shift K = W2·s
+    let mut wf = vec![0i64; rows2 * cols1];
+    for j in 0..rows2 {
+        for r in 0..rows1 {
+            let w2v = w2[j * cols2 + r] as i64;
+            if w2v == 0 {
+                continue;
+            }
+            for c in 0..cols1 {
+                wf[j * cols1 + c] += w2v * w1[r * cols1 + c] as i64;
+            }
+        }
+    }
+    let k: Vec<i64> = (0..rows2)
+        .map(|j| (0..rows1)
+            .map(|r| w2[j * cols2 + r] as i64 * s[r])
+            .sum())
+        .collect();
+
+    // fused weights must live on a signed ≤8-bit lattice
+    let wmax = wf.iter().fold(0i64, |m, &v| m.max(v.abs()));
+    let Some(w_bits) = (1..=8u32).find(|&b| {
+        let r = crate::quant::QRange::new(b, true);
+        wf.iter().all(|&v| v >= r.qmin as i64 && v <= r.qmax as i64)
+    }) else {
+        return Ok(false);
+    };
+    // and respect the i32 accumulator bound of the fast executors
+    let xmax = in_lo.abs().max(in_hi.abs());
+    if cols1 as i128 * wmax as i128 * xmax as i128 > i32::MAX as i128 {
+        return Ok(false);
+    }
+
+    // shift + clamp the downstream thresholds; all-or-nothing on i32 fit
+    let nthr2 = levels2 - 1;
+    let mut t2_new = Vec::with_capacity(t2.len());
+    let mut g_lo = 0i64;
+    let mut g_hi = 0i64;
+    for j in 0..rows2 {
+        let (lo_j, hi_j) = row_interval_i64(
+            &wf[j * cols1..(j + 1) * cols1], in_lo, in_hi);
+        if j == 0 {
+            (g_lo, g_hi) = (lo_j, hi_j);
+        } else {
+            g_lo = g_lo.min(lo_j);
+            g_hi = g_hi.max(hi_j);
+        }
+        for &th in &t2[j * nthr2..(j + 1) * nthr2] {
+            let v = (th as i64 - k[j]).clamp(lo_j, hi_j + 1);
+            if v < i32::MIN as i64 || v > i32::MAX as i64 {
+                return Ok(false);
+            }
+            t2_new.push(v as i32);
+        }
+    }
+    let new_edge =
+        EdgeTy::Int { dim: rows2, lo: g_lo, hi: g_hi, lattice: None };
+    let acc_bits_new = acc2.max(new_edge.bits());
+
+    g.ops[i - 1] = QOp::MatVec {
+        rows: rows2,
+        cols: cols1,
+        w_bits,
+        w: wf.iter().map(|&v| v as i8).collect(),
+    };
+    g.edges[i - 1] = new_edge;
+    g.ops.drain(i..i + 2);
+    g.edges.drain(i..i + 2);
+    if let QOp::ThresholdRequant { acc_bits, thresholds, .. } =
+        &mut g.ops[i]
+    {
+        *acc_bits = acc_bits_new;
+        *thresholds = t2_new;
+    }
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// pass 3: accumulator width narrowing
+// ---------------------------------------------------------------------------
+
+/// Replace every accumulator edge with the exact interval-propagated
+/// `[lo, hi]` and shrink each requant's declared `acc_bits` to the
+/// minimal two's-complement width of that interval. Interval inclusion
+/// makes `bits()` monotone, so the new width never exceeds the old —
+/// the pass only narrows. Downstream this shrinks C activation types,
+/// Verilog `acc` reg widths, and the synth model's comparator/FF
+/// datapath (where `acc_bits` enters linearly).
+pub struct NarrowAccWidths;
+
+impl Pass for NarrowAccWidths {
+    fn name(&self) -> &'static str {
+        "narrow-acc"
+    }
+
+    fn run(&self, g: &mut QGraph) -> Result<PassDelta> {
+        let mut delta = PassDelta::default();
+        let n = g.ops.len();
+        let mut i = 1;
+        while i + 2 < n {
+            let EdgeTy::Int { lo: in_lo, hi: in_hi, .. } = g.in_edge(i)
+            else {
+                bail!("op {i}: MatVec input is not an integer edge");
+            };
+            let (rows, glo, ghi) = {
+                let QOp::MatVec { rows, cols, w, .. } = &g.ops[i] else {
+                    bail!("op {i}: expected MatVec");
+                };
+                let (glo, ghi) =
+                    matvec_interval(w, *rows, *cols, in_lo, in_hi);
+                (*rows, glo, ghi)
+            };
+            let new_edge =
+                EdgeTy::Int { dim: rows, lo: glo, hi: ghi, lattice: None };
+            let new_bits = new_edge.bits();
+            g.edges[i] = new_edge;
+            if let QOp::ThresholdRequant { acc_bits, .. } =
+                &mut g.ops[i + 1]
+            {
+                if new_bits < *acc_bits {
+                    delta.acc_bits_saved += (*acc_bits - new_bits) as u64;
+                    *acc_bits = new_bits;
+                }
+            }
+            i += 2;
+        }
+        Ok(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qir::{interp::Interpreter, QGraph};
+    use crate::quant::{BitCfg, QRange};
+    use crate::util::testkit;
+
+    fn interp_outputs(g: &QGraph, obs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        let it = Interpreter::new(g.clone()).unwrap();
+        obs.iter()
+            .map(|o| it.infer(o)
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect())
+            .collect()
+    }
+
+    fn probe_obs(dim: usize) -> Vec<Vec<f32>> {
+        let mut r = crate::util::rng::Rng::new(17);
+        (0..32)
+            .map(|_| {
+                let mut v = vec![0.0f32; dim];
+                r.fill_normal(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    /// Hand-built two-layer graph whose first requant is affine-trivial
+    /// on the reachable interval, with every fused number precomputed.
+    fn fusable_graph() -> QGraph {
+        let in_r = QRange::new(2, true); // [-2, 1]
+        let mid_r = QRange::new(3, true); // [-4, 3]
+        let out_r = QRange::new(2, true); // [-2, 1]
+        QGraph {
+            name: "fuseme".into(),
+            obs_dim: 2,
+            act_dim: 2,
+            ops: vec![
+                QOp::QuantizeInput { s_in: 1.0 },
+                // a1 = x0, reachable [-2, 1]
+                QOp::MatVec { rows: 1, cols: 2, w_bits: 2,
+                              w: vec![1, 0] },
+                // thresholds in (-2, 1] are exactly {-1, 0, 1}:
+                // out = acc + s with s = -4 + 1 + 2 = -1
+                QOp::ThresholdRequant {
+                    levels: 8,
+                    acc_bits: 4,
+                    thresholds: vec![-5, -1, 0, 1, 5, 6, 7],
+                },
+                QOp::MatVec { rows: 2, cols: 1, w_bits: 2,
+                              w: vec![1, -1] },
+                QOp::ThresholdRequant {
+                    levels: 4,
+                    acc_bits: 4,
+                    thresholds: vec![-2, -1, 0, 1, 2, 3],
+                },
+                QOp::TanhLut { lut: vec![-0.9, -0.4, 0.4, 0.9] },
+            ],
+            edges: vec![
+                EdgeTy::lattice(2, in_r),
+                EdgeTy::acc(1, 4),
+                EdgeTy::lattice(1, mid_r),
+                EdgeTy::acc(2, 4),
+                EdgeTy::lattice(2, out_r),
+                EdgeTy::F32 { dim: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn fusion_collapses_the_worked_example() {
+        let g0 = fusable_graph();
+        g0.verify().unwrap();
+        let obs = probe_obs(2);
+        let want = interp_outputs(&g0, &obs);
+
+        let mut g = g0.clone();
+        let delta = FuseTrivialRequant.run(&mut g).unwrap();
+        g.verify().unwrap();
+        assert_eq!(delta.ops_removed, 2);
+        assert_eq!(g.ops.len(), 4);
+        let QOp::MatVec { rows, cols, w_bits, w } = &g.ops[1] else {
+            panic!("fused op is not a MatVec");
+        };
+        assert_eq!((*rows, *cols, *w_bits), (2, 2, 2));
+        assert_eq!(w, &vec![1, 0, -1, 0]); // W'' = W2 · W1
+        let QOp::ThresholdRequant { thresholds, .. } = &g.ops[2] else {
+            panic!("op 2 is not a requant");
+        };
+        // K = (-1, 1): row0 shifted by +1, row1 by -1, clamps inert
+        assert_eq!(thresholds, &vec![-1, 0, 1, 0, 1, 2]);
+        assert_eq!(interp_outputs(&g, &obs), want);
+    }
+
+    #[test]
+    fn prune_removes_planted_dead_rows_bit_identically() {
+        let p = testkit::sparse_toy_policy(11, 5, 16, 2,
+                                           BitCfg::new(3, 2, 6), 4, 4);
+        let g0 = lower(&p);
+        g0.verify().unwrap();
+        let obs = probe_obs(5);
+        let want = interp_outputs(&g0, &obs);
+
+        let mut g = g0.clone();
+        let delta = PruneDeadRows.run(&mut g).unwrap();
+        g.verify().unwrap();
+        assert!(delta.rows_pruned >= 8, "planted 4+4 dead rows, \
+                 pruned {}", delta.rows_pruned);
+        assert_eq!(delta.rows_pruned, delta.cols_pruned);
+        assert_eq!(interp_outputs(&g, &obs), want);
+    }
+
+    #[test]
+    fn narrow_shrinks_declared_widths_bit_identically() {
+        let p = testkit::toy_policy(5, 4, 12, 2, BitCfg::new(2, 2, 2));
+        let g0 = lower(&p);
+        g0.verify().unwrap();
+        let obs = probe_obs(4);
+        let want = interp_outputs(&g0, &obs);
+
+        let mut g = g0.clone();
+        let delta = NarrowAccWidths.run(&mut g).unwrap();
+        g.verify().unwrap();
+        assert!(delta.acc_bits_saved > 0,
+                "exact intervals should beat the crude exporter bound");
+        assert_eq!(interp_outputs(&g, &obs), want);
+        // idempotent: a second run changes nothing
+        let again = NarrowAccWidths.run(&mut g).unwrap();
+        assert!(!again.changed());
+    }
+
+    #[test]
+    fn manager_records_strict_cost_reduction_at_2bit() {
+        let p = testkit::sparse_toy_policy(3, 6, 24, 2,
+                                           BitCfg::new(2, 2, 2), 6, 6);
+        let (g, report) = prepare(&p, OptLevel::Full).unwrap();
+        g.verify().unwrap();
+        assert_eq!(report.outcomes.len(), 3);
+        let first = &report.outcomes[0].cost_before;
+        let last = &report.outcomes[report.outcomes.len() - 1].cost_after;
+        assert!(last.luts < first.luts, "luts {} -> {}", first.luts,
+                last.luts);
+        assert!(last.ffs < first.ffs, "ffs {} -> {}", first.ffs,
+                last.ffs);
+        assert!(report.total_delta().changed());
+        // report surfaces are well-formed
+        assert_eq!(report.summary_lines().len(), 3);
+        let j = report.to_json();
+        assert_eq!(j.get("level").unwrap().as_str().unwrap(), "full");
+        assert_eq!(j.get("passes").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn prepare_none_is_lower_plus_verify() {
+        let p = testkit::toy_policy(9, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let (g, report) = prepare(&p, OptLevel::None).unwrap();
+        assert!(report.outcomes.is_empty());
+        assert_eq!(g.ops.len(), lower(&p).ops.len());
+        let mut expect = lower(&p);
+        expect.name = g.name.clone();
+        assert_eq!(g, expect);
+    }
+
+    #[test]
+    fn manager_rejects_unverifiable_input() {
+        let p = testkit::toy_policy(9, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let mut g = lower(&p);
+        g.edges.pop();
+        let err = PassManager::standard(OptLevel::Full)
+            .run(&mut g)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("fails verification"),
+                "{err:#}");
+    }
+}

@@ -128,10 +128,10 @@ pub fn make_backend<'a>(rt: &Runtime, opts: &EvalOpts, flat: &'a [f32],
             anyhow::ensure!(opts.quant_on,
                             "integer backend requires a quantized policy");
             let policy = IntPolicy::from_tensors(tensors, opts.bits);
-            // gate the i32 engine behind the IR invariants (notably
+            // the shared lower → optimize → verify → compile path gates
+            // the i32 engine behind the IR invariants (notably
             // accumulator-width safety) exactly like artifact loading
-            crate::qir::lower(&policy).verify()?;
-            Box::new(IntEngine::new(policy))
+            Box::new(IntEngine::optimized(policy)?)
         }
     })
 }

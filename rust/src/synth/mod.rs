@@ -70,11 +70,22 @@ pub fn synthesize_graph(g: &QGraph, device: &Device, clock_hz: f64)
     })
 }
 
-/// Synthesize a policy — lowers to QIR and forwards to
-/// [`synthesize_graph`] (same numbers, one verification pass).
+/// Synthesize a policy — takes its graph from the shared
+/// `lower → optimize(level) → verify → compile` path and forwards to
+/// [`synthesize_graph`], returning the pass ledger alongside the
+/// report so callers can surface per-pass cost deltas.
+pub fn synthesize_with(policy: &IntPolicy, device: &Device,
+                       clock_hz: f64, level: qir::OptLevel)
+                       -> anyhow::Result<(SynthReport, qir::PassReport)> {
+    let (g, passes) = qir::prepare(policy, level)?;
+    Ok((synthesize_graph(&g, device, clock_hz)?, passes))
+}
+
+/// Synthesize a policy exactly as exported (no graph rewrites) — the
+/// historical numbers; [`synthesize_with`] exposes the optimizing path.
 pub fn synthesize(policy: &IntPolicy, device: &Device, clock_hz: f64)
                   -> anyhow::Result<SynthReport> {
-    synthesize_graph(&qir::lower(policy), device, clock_hz)
+    Ok(synthesize_with(policy, device, clock_hz, qir::OptLevel::None)?.0)
 }
 
 /// [`QirBackend`] for the synthesis estimator: compiling a graph yields

@@ -49,6 +49,25 @@ pub fn toy_policy(seed: u64, obs_dim: usize, hidden: usize,
         &toy_tensors(seed, obs_dim, hidden, act_dim).views(), bits)
 }
 
+/// A toy policy with planted all-zero weight rows: the first `dead_h1`
+/// rows of fc1 and the first `dead_h2` rows of fc2 are zeroed in FP32
+/// (zero rows quantize to zero rows at any bit width; biases are left
+/// alone, so the dead rows produce nonzero constants the prune pass
+/// must fold into downstream thresholds — the dead-row/column pruning
+/// vehicle for tests and the `qir_opt` bench).
+pub fn sparse_toy_policy(seed: u64, obs_dim: usize, hidden: usize,
+                         act_dim: usize, bits: BitCfg,
+                         dead_h1: usize, dead_h2: usize) -> IntPolicy {
+    let mut t = toy_tensors(seed, obs_dim, hidden, act_dim);
+    for j in 0..dead_h1.min(hidden) {
+        t.fc1_w[j * obs_dim..(j + 1) * obs_dim].fill(0.0);
+    }
+    for j in 0..dead_h2.min(hidden) {
+        t.fc2_w[j * hidden..(j + 1) * hidden].fill(0.0);
+    }
+    IntPolicy::from_tensors(&t.views(), bits)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,8 +8,10 @@ use std::io::Write as _;
 use std::process::{Command, Stdio};
 
 use qcontrol::intinfer::IntEngine;
-use qcontrol::qir::{emit_c, emit_verilog, lower, EdgeTy, Interpreter,
-                    QGraph, QOp};
+use qcontrol::qir::{emit_c, emit_verilog, lower, prepare, EdgeTy,
+                    FuseTrivialRequant, Interpreter, NarrowAccWidths,
+                    OptLevel, Pass, PassManager, PruneDeadRows, QGraph,
+                    QOp};
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::{BitCfg, QRange};
 use qcontrol::synth::model::{layer_geometry, pad_to, LayerGeom,
@@ -103,6 +105,144 @@ fn extreme_inputs_agree_across_executors() {
         let obs = vec![v; 5];
         assert_eq!(bits_of(&interp.infer(&obs).unwrap()),
                    bits_of(&eng.infer_vec(&obs)), "input {v}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pass pipeline: every rewrite stays bit-identical to the unoptimized
+// executors, at every BitCfg including the 2-bit extremes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn optimized_path_is_bit_identical_across_the_bits_matrix() {
+    for (i, &bits) in BITS_MATRIX.iter().enumerate() {
+        // dead = 0 exercises fuse/narrow alone; dead = 6 gives the
+        // prune pass real rows to fold away
+        for dead in [0usize, 6] {
+            let p = testkit::sparse_toy_policy(60 + i as u64, 6, 24, 3,
+                                               bits, dead, dead);
+            let base = Interpreter::new(lower(&p)).unwrap();
+            let (g_opt, report) = prepare(&p, OptLevel::Full).unwrap();
+            let opt = Interpreter::new(g_opt).unwrap();
+            let mut eng = IntEngine::new(p.clone());
+            let mut eng_opt = IntEngine::optimized(p.clone()).unwrap();
+            if dead > 0 {
+                assert!(report.total_delta().changed(),
+                        "planted dead rows must trigger a rewrite, \
+                         bits={bits:?}");
+            }
+            let mut rng = Rng::new(5);
+            for case in 0..50 {
+                let mut obs = vec![0.0f32; 6];
+                rng.fill_normal(&mut obs);
+                let want = bits_of(&base.infer(&obs).unwrap());
+                assert_eq!(want, bits_of(&opt.infer(&obs).unwrap()),
+                           "optimized interpreter diverged, \
+                            bits={bits:?} dead={dead} case={case}");
+                assert_eq!(want, bits_of(&eng.infer_vec(&obs)));
+                assert_eq!(want, bits_of(&eng_opt.infer_vec(&obs)),
+                           "optimized engine diverged, bits={bits:?} \
+                            dead={dead} case={case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pass_pipeline_preserves_bit_identity_on_random_policies() {
+    check("qir-opt-bit-identity", 30, 414, |g| {
+        let obs = g.usize_in(1, 10);
+        let h = g.usize_in(4, 24);
+        let act = g.usize_in(1, 5);
+        let bits = BitCfg::new(g.usize_in(2, 8) as u32,
+                               g.usize_in(2, 8) as u32,
+                               g.usize_in(2, 8) as u32);
+        let seed = g.usize_in(0, 10_000) as u64;
+        let dead = g.usize_in(0, h / 2);
+        let p = testkit::sparse_toy_policy(seed, obs, h, act, bits,
+                                           dead, dead);
+        let base = Interpreter::new(lower(&p))
+            .map_err(|e| format!("verify: {e}"))?;
+        let (go, _) = prepare(&p, OptLevel::Full)
+            .map_err(|e| format!("prepare: {e}"))?;
+        let opt = Interpreter::new(go).map_err(|e| e.to_string())?;
+        let mut eng_opt = IntEngine::optimized(p.clone())
+            .map_err(|e| e.to_string())?;
+        for _ in 0..5 {
+            let o = g.vec_normal(obs, 1.5);
+            let want = bits_of(&base.infer(&o)
+                .map_err(|e| e.to_string())?);
+            if want != bits_of(&opt.infer(&o)
+                .map_err(|e| e.to_string())?)
+            {
+                return Err(format!("optimized interpreter diverged, \
+                                    bits={bits:?} dead={dead}"));
+            }
+            if want != bits_of(&eng_opt.infer_vec(&o)) {
+                return Err(format!("optimized engine diverged, \
+                                    bits={bits:?} dead={dead}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_pipeline_is_a_fixed_point_after_one_run() {
+    for (i, &bits) in BITS_MATRIX.iter().enumerate() {
+        let p = testkit::sparse_toy_policy(80 + i as u64, 5, 16, 2,
+                                           bits, 4, 4);
+        let mut g = lower(&p);
+        let pm = PassManager::standard(OptLevel::Full);
+        pm.run(&mut g).unwrap();
+        let snapshot = g.clone();
+        let second = pm.run(&mut g).unwrap();
+        assert!(!second.total_delta().changed(),
+                "second run still rewrote, bits={bits:?}");
+        assert_eq!(g, snapshot,
+                   "graph changed on the second run, bits={bits:?}");
+    }
+}
+
+#[test]
+fn any_pass_ordering_preserves_interpreter_bit_identity() {
+    fn pass(name: &str) -> Box<dyn Pass> {
+        match name {
+            "prune" => Box::new(PruneDeadRows),
+            "fuse" => Box::new(FuseTrivialRequant),
+            _ => Box::new(NarrowAccWidths),
+        }
+    }
+    let perms: [[&str; 3]; 6] = [
+        ["prune", "fuse", "narrow"], ["prune", "narrow", "fuse"],
+        ["fuse", "prune", "narrow"], ["fuse", "narrow", "prune"],
+        ["narrow", "prune", "fuse"], ["narrow", "fuse", "prune"],
+    ];
+    for (i, &bits) in BITS_MATRIX.iter().enumerate() {
+        let p = testkit::sparse_toy_policy(90 + i as u64, 6, 20, 2,
+                                           bits, 5, 5);
+        let base = Interpreter::new(lower(&p)).unwrap();
+        let mut rng = Rng::new(23);
+        let cases: Vec<Vec<f32>> = (0..20)
+            .map(|_| {
+                let mut o = vec![0.0f32; 6];
+                rng.fill_normal(&mut o);
+                o
+            })
+            .collect();
+        for perm in perms {
+            let mut g = lower(&p);
+            let pm = PassManager::with_passes(
+                OptLevel::Full,
+                perm.iter().map(|n| pass(n)).collect());
+            pm.run(&mut g).unwrap();
+            let opt = Interpreter::new(g).unwrap();
+            for obs in &cases {
+                assert_eq!(bits_of(&base.infer(obs).unwrap()),
+                           bits_of(&opt.infer(obs).unwrap()),
+                           "pass order {perm:?} diverged, bits={bits:?}");
+            }
+        }
     }
 }
 
@@ -312,57 +452,65 @@ fn emitted_c_is_bit_identical_to_the_interpreter_under_cc() {
         .iter()
         .enumerate()
     {
-        let p = testkit::toy_policy(31 + i as u64, 5, 16, 3, bits);
-        let g = lower(&p).with_name(format!("smoke{i}"));
-        let interp = Interpreter::new(g.clone()).unwrap();
-        let c_path = dir.join(format!("smoke{i}.c"));
-        std::fs::write(&c_path, emit_c(&g).unwrap()).unwrap();
-        let bin = dir.join(format!("smoke{i}"));
-        let out = Command::new(&cc)
-            .args(["-O2", "-DQPOL_TEST_MAIN", "-o"])
-            .arg(&bin)
-            .arg(&c_path)
-            .arg("-lm")
-            .output()
-            .unwrap();
-        assert!(out.status.success(), "cc failed on the emitted C \
-                 (bits={bits:?}):\n{}",
-                String::from_utf8_lossy(&out.stderr));
+        // planted dead rows give the pass pipeline real work; the
+        // reference stays the *unoptimized* interpreter, so the
+        // optimized C binary is pinned against the original semantics
+        let p = testkit::sparse_toy_policy(31 + i as u64, 5, 16, 3,
+                                           bits, 4, 4);
+        let interp = Interpreter::new(lower(&p)).unwrap();
+        let g_opt = prepare(&p, OptLevel::Full).unwrap().0;
+        for (tag, g) in [("", lower(&p)), ("o", g_opt)] {
+            let g = g.with_name(format!("smoke{i}{tag}"));
+            let c_path = dir.join(format!("smoke{i}{tag}.c"));
+            std::fs::write(&c_path, emit_c(&g).unwrap()).unwrap();
+            let bin = dir.join(format!("smoke{i}{tag}"));
+            let out = Command::new(&cc)
+                .args(["-O2", "-DQPOL_TEST_MAIN", "-o"])
+                .arg(&bin)
+                .arg(&c_path)
+                .arg("-lm")
+                .output()
+                .unwrap();
+            assert!(out.status.success(), "cc failed on the emitted C \
+                     (bits={bits:?} opt={tag:?}):\n{}",
+                    String::from_utf8_lossy(&out.stderr));
 
-        let cases = smoke_cases(5);
-        let stdin_text: String = cases
-            .iter()
-            .map(|o| {
-                o.iter()
-                    .map(|v| format!("{:08x}", v.to_bits()))
-                    .collect::<Vec<_>>()
-                    .join(" ")
-                    + "\n"
-            })
-            .collect();
-        let mut child = Command::new(&bin)
-            .stdin(Stdio::piped())
-            .stdout(Stdio::piped())
-            .spawn()
-            .unwrap();
-        child
-            .stdin
-            .as_mut()
-            .unwrap()
-            .write_all(stdin_text.as_bytes())
-            .unwrap();
-        let out = child.wait_with_output().unwrap();
-        assert!(out.status.success());
-        let text = String::from_utf8(out.stdout).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), cases.len(), "driver dropped cases");
-        for (obs, line) in cases.iter().zip(&lines) {
-            let want = bits_of(&interp.infer(obs).unwrap());
-            let got: Vec<u32> = line
-                .split_whitespace()
-                .map(|t| u32::from_str_radix(t, 16).unwrap())
+            let cases = smoke_cases(5);
+            let stdin_text: String = cases
+                .iter()
+                .map(|o| {
+                    o.iter()
+                        .map(|v| format!("{:08x}", v.to_bits()))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                        + "\n"
+                })
                 .collect();
-            assert_eq!(got, want, "bits={bits:?} obs={obs:?}");
+            let mut child = Command::new(&bin)
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .spawn()
+                .unwrap();
+            child
+                .stdin
+                .as_mut()
+                .unwrap()
+                .write_all(stdin_text.as_bytes())
+                .unwrap();
+            let out = child.wait_with_output().unwrap();
+            assert!(out.status.success());
+            let text = String::from_utf8(out.stdout).unwrap();
+            let lines: Vec<&str> = text.lines().collect();
+            assert_eq!(lines.len(), cases.len(), "driver dropped cases");
+            for (obs, line) in cases.iter().zip(&lines) {
+                let want = bits_of(&interp.infer(obs).unwrap());
+                let got: Vec<u32> = line
+                    .split_whitespace()
+                    .map(|t| u32::from_str_radix(t, 16).unwrap())
+                    .collect();
+                assert_eq!(got, want,
+                           "bits={bits:?} opt={tag:?} obs={obs:?}");
+            }
         }
     }
     std::fs::remove_dir_all(&dir).ok();
@@ -379,18 +527,22 @@ fn emitted_verilog_parses_when_iverilog_is_available() {
     let dir = std::env::temp_dir()
         .join(format!("qcontrol-qir-verilog-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let g = lower(&testkit::toy_policy(12, 5, 16, 3,
-                                       BitCfg::new(4, 3, 8)))
-        .with_name("vsmoke");
-    let v_path = dir.join("vsmoke.v");
-    std::fs::write(&v_path, emit_verilog(&g).unwrap()).unwrap();
-    let out = Command::new("iverilog")
-        .arg("-o")
-        .arg(dir.join("vsmoke.out"))
-        .arg(&v_path)
-        .output()
-        .unwrap();
-    assert!(out.status.success(), "iverilog rejected the emitted \
-             module:\n{}", String::from_utf8_lossy(&out.stderr));
+    let p = testkit::sparse_toy_policy(12, 5, 16, 3,
+                                       BitCfg::new(4, 3, 8), 4, 4);
+    let g_opt = prepare(&p, OptLevel::Full).unwrap().0;
+    for (tag, g) in [("vsmoke", lower(&p)), ("vsmokeo", g_opt)] {
+        let g = g.with_name(tag);
+        let v_path = dir.join(format!("{tag}.v"));
+        std::fs::write(&v_path, emit_verilog(&g).unwrap()).unwrap();
+        let out = Command::new("iverilog")
+            .arg("-o")
+            .arg(dir.join(format!("{tag}.out")))
+            .arg(&v_path)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "iverilog rejected the emitted \
+                 `{tag}` module:\n{}",
+                String::from_utf8_lossy(&out.stderr));
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
