@@ -10,17 +10,24 @@
 //! `BENCH_serving.json` (req/s, p50/p99 µs per configuration) so the
 //! serving perf trajectory is machine-trackable across PRs.
 //!
+//! A final leg measures throughput *while the ops plane hot-swaps the
+//! policy* (12 confirmed reloads under concurrent load, zero
+//! client-visible errors) so the cost of live reloads is tracked too.
+//!
 //! Scale knobs:
 //!   QCONTROL_SERVER_REQS=5000 cargo bench --bench server_throughput
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use qcontrol::coordinator::serving::{serve, ActionClient, ServerConfig,
+use qcontrol::coordinator::ops::OpsConfig;
+use qcontrol::coordinator::serving::{serve, serve_registry, ActionClient,
+                                     RoutedClient, ServerConfig,
                                      ServerStats};
 use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::BitCfg;
 use qcontrol::util::bench::Table;
@@ -79,6 +86,99 @@ fn run_once(policy: &IntPolicy, clients: usize, max_batch: usize,
     (wall_s, stats)
 }
 
+const RELOAD_SWAPS: u64 = 12;
+
+/// Reload-under-load leg: `clients` workers hammer the registry server
+/// over v3 while the watcher applies `RELOAD_SWAPS` confirmed hot swaps
+/// (tmp+rename publications of the same weights under a changed env
+/// tag). Returns (wall seconds, total client requests, server stats).
+fn run_reload_leg(policy: &IntPolicy, clients: usize)
+                  -> (f64, u64, ServerStats) {
+    let dir = std::env::temp_dir().join("qcontrol_bench_reload");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let art = PolicyArtifact::new("p", policy.clone());
+    art.save(dir.join("p.qpol")).unwrap();
+    let registry = PolicyRegistry::load_dir(&dir).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let cfg = ServerConfig {
+        max_batch: 32,
+        ops: OpsConfig {
+            watch_dir: Some(dir.clone()),
+            reload_poll: Duration::from_millis(5),
+            ..OpsConfig::default()
+        },
+        ..ServerConfig::default()
+    };
+    let server = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            serve_registry(listener, registry, stop, cfg).unwrap()
+        })
+    };
+
+    let t0 = Instant::now();
+    let done = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let done = done.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = RoutedClient::connect(&addr).unwrap();
+            let mut obs = vec![0.0f32; OBS];
+            let mut n = 0u64;
+            let mut s = 0usize;
+            while !done.load(Ordering::Relaxed) {
+                for (d, o) in obs.iter_mut().enumerate() {
+                    *o = ((c * 31 + s * 7 + d) as f32 * 0.11).sin();
+                }
+                let (act, _ver) =
+                    client.act_versioned("p", &obs).unwrap();
+                std::hint::black_box(&act);
+                n += 1;
+                s += 1;
+            }
+            n
+        }));
+    }
+
+    // publish swaps one at a time, each confirmed through the wire
+    // before the next (env tags of distinct length defeat coarse mtime)
+    let mut probe = RoutedClient::connect(&addr).unwrap();
+    let obs = vec![0.0f32; OBS];
+    for k in 2..=(RELOAD_SWAPS + 1) {
+        let mut next = art.clone();
+        next.env = "x".repeat(k as usize);
+        let tmp = dir.join("p.qpol.tmp");
+        std::fs::write(&tmp, next.to_bytes().unwrap()).unwrap();
+        std::fs::rename(&tmp, dir.join("p.qpol")).unwrap();
+        loop {
+            let (_, v) = probe.act_versioned("p", &obs).unwrap();
+            if v >= k {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    done.store(true, Ordering::Relaxed);
+    let mut requests = 0u64;
+    for j in joins {
+        requests += j.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Relaxed);
+    let stats = server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_eq!(stats.io_errors, 0,
+               "hot swaps must be invisible to clients");
+    assert_eq!(stats.reloads, RELOAD_SWAPS,
+               "every publication must land as exactly one reload");
+    (wall_s, requests, stats)
+}
+
 fn main() {
     let reqs_per_client: usize = std::env::var("QCONTROL_SERVER_REQS")
         .ok()
@@ -135,6 +235,26 @@ fn main() {
     println!("batched inference (max_batch=32) coalesces concurrent \
               requests into one integer pass; batch of 1 isolates the \
               per-request path.");
+
+    // live-ops leg: throughput while the watcher hot-swaps the policy
+    let (wall_s, requests, stats) = run_reload_leg(&policy, 4);
+    let req_s = requests as f64 / wall_s;
+    println!();
+    println!("reload-under-load: {requests} reqs from 4 clients while \
+              {} confirmed hot swaps applied — {req_s:.0} req/s, \
+              p50 {:.2} µs, p99 {:.2} µs, 0 client-visible errors",
+             stats.reloads, stats.p50_us, stats.p99_us);
+    rows.push(Json::obj(vec![
+        ("leg", Json::str("reload_under_load")),
+        ("clients", Json::num(4.0)),
+        ("requests", Json::num(requests as f64)),
+        ("req_per_s", Json::num(req_s)),
+        ("reloads", Json::num(stats.reloads as f64)),
+        ("io_errors", Json::num(stats.io_errors as f64)),
+        ("p50_us", Json::num(stats.p50_us)),
+        ("p99_us", Json::num(stats.p99_us)),
+        ("p999_us", Json::num(stats.p999_us)),
+    ]));
 
     // machine-readable perf trajectory, tracked across PRs
     let report = Json::obj(vec![

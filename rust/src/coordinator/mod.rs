@@ -20,16 +20,22 @@
 //!   routed by id over the framed v2 protocol, header-less v1 clients
 //!   falling back to the default policy), batched integer-only inference,
 //!   and centralized µs latency accounting.
+//! * [`ops`]    — the live ops plane over serving: versioned hot reload
+//!   from the watched artifact directory, deterministic canary routing
+//!   with divergence accounting, and the streaming monitor protocol
+//!   (`qcontrol monitor`).
 //! * [`store`]  — JSON results store, so every bench/experiment appends to
 //!   `results/*.json` reproducibly. Trial-granular, resumable state lives
 //!   in [`crate::experiment::RunStore`] under `results/runs/`.
 
+pub mod ops;
 pub mod pipeline;
 pub mod select;
 pub mod serving;
 pub mod store;
 pub mod sweep;
 
+pub use ops::{CanarySpec, MonitorClient, OpsConfig};
 pub use pipeline::{run_pipeline, PipelineRun};
 pub use select::{select_model, select_model_on, SelectProtocol,
                  SelectReport, Stage, StageOutcome};

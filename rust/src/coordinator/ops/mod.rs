@@ -1,0 +1,540 @@
+//! Live ops plane for the registry server — hot policy reload, canary
+//! routing, and streaming telemetry.
+//!
+//! The serving data plane (accept loop → connection threads → per-policy
+//! inference cores) stays exactly as before; this module adds the
+//! *control* plane around it:
+//!
+//! * **Versioned hot reload** ([`reload`]): a watcher thread polls the
+//!   artifact directory (mtime + length gate, then the cheap CRC probe
+//!   from the `.qpol` END section), re-runs the full `lower → optimize →
+//!   verify` path on a changed artifact off the serving threads, and
+//!   stages the prebuilt engine on the policy's [`PolicySlot`]. The
+//!   inference core applies staged ops between batches, so in-flight
+//!   batches always finish on the core they started on, and every applied
+//!   swap bumps the slot's monotonically increasing version — stamped on
+//!   every reply (wire v3) and on every monitor event.
+//! * **Canary routing** ([`canary`]): `--canary ID=FRACTION` routes a
+//!   deterministic hash-based fraction of a policy's requests through a
+//!   *candidate* engine loaded from the `<id>.qpol.canary` sidecar. Both
+//!   cores run on canaried requests; the client always gets the
+//!   incumbent's action; divergence statistics (action L∞, per-component
+//!   bit mismatch counters, disagreement rate) accumulate on the slot.
+//!   `promote` / `rollback` commands arrive over the monitor protocol.
+//! * **Streaming telemetry** ([`monitor`]): a second listener speaks a
+//!   small length-framed JSON protocol pushing diff-based per-policy
+//!   state (QPS, batch occupancy, latency percentiles, versions, canary
+//!   divergence) plus a lossless-in-order event feed to any number of
+//!   subscribers; `qcontrol monitor` renders the stream.
+//!
+//! The shared vocabulary lives here: [`PolicySlot`] (the swappable
+//! per-policy handle), [`PendingOp`] (staged control-plane work),
+//! [`PolicyStats`] (per-policy counters + latency recorder), [`Event`]
+//! (the reload/canary event feed), and [`OpsConfig`] (everything the ops
+//! plane needs, carried inside `ServerConfig`).
+
+pub mod canary;
+pub mod monitor;
+pub mod reload;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::serving::LatencyRecorder;
+use crate::intinfer::IntEngine;
+use crate::util::json::Json;
+use crate::util::stats::ObsNormalizer;
+
+pub use canary::CanarySpec;
+pub use monitor::MonitorClient;
+pub use reload::SIDECAR_SUFFIX;
+
+/// Bound on queued-but-undelivered events: with no monitor subscriber
+/// the feed must not grow without bound, so the oldest events are shed
+/// (and counted) past this depth.
+const MAX_PENDING_EVENTS: usize = 1024;
+
+/// Ops-plane configuration, carried in `ServerConfig::ops`. The default
+/// is fully inert: no watcher, no canaries, no monitor listener.
+#[derive(Clone, Debug)]
+pub struct OpsConfig {
+    /// artifact directory polled for `.qpol` / `.qpol.canary` changes;
+    /// `None` disables hot reload (and therefore canary loading)
+    pub watch_dir: Option<PathBuf>,
+    /// watcher poll interval
+    pub reload_poll: Duration,
+    /// canary routes: which policy ids mirror what fraction of traffic
+    /// to their sidecar candidate
+    pub canary: Vec<CanarySpec>,
+    /// monitor listener; subscribers get the streamed telemetry frames.
+    /// Pre-bound (rather than an address) so callers binding port 0 can
+    /// learn the ephemeral port before serving starts.
+    pub monitor: Option<Arc<TcpListener>>,
+    /// monitor push cadence (one frame per tick per subscriber)
+    pub monitor_tick: Duration,
+}
+
+impl Default for OpsConfig {
+    fn default() -> OpsConfig {
+        OpsConfig {
+            watch_dir: None,
+            reload_poll: Duration::from_millis(100),
+            canary: Vec::new(),
+            monitor: None,
+            monitor_tick: Duration::from_millis(500),
+        }
+    }
+}
+
+impl OpsConfig {
+    /// Registry-independent sanity checks (id existence is checked by
+    /// `serve_registry`, which owns the registry).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.reload_poll.is_zero()
+                        && !self.monitor_tick.is_zero(),
+                        "ops timings must be non-zero");
+        for c in &self.canary {
+            anyhow::ensure!(c.fraction >= 0.0 && c.fraction <= 1.0,
+                            "canary `{}`: fraction {} outside [0, 1]",
+                            c.id, c.fraction);
+            anyhow::ensure!(self.watch_dir.is_some(),
+                            "canary `{}` needs a watched artifact dir \
+                             (the candidate loads from the \
+                             `{}.qpol.canary` sidecar)", c.id, c.id);
+        }
+        if let Some(dir) = &self.watch_dir {
+            anyhow::ensure!(dir.is_dir(), "watch dir {} is not a \
+                            directory", dir.display());
+        }
+        Ok(())
+    }
+}
+
+/// Control-plane work staged for an inference core. Engines are fully
+/// built (lower → optimize → verify) *before* staging, so applying an op
+/// costs the core a pointer swap, never a compile.
+pub enum PendingOp {
+    /// replace the incumbent engine (hot reload); bumps the version
+    Swap { engine: Box<IntEngine>, norm: ObsNormalizer },
+    /// install/replace the canary candidate
+    SetCandidate { engine: Box<IntEngine>, norm: ObsNormalizer, gen: u64 },
+    /// make the current candidate the incumbent; bumps the version
+    Promote,
+    /// drop the current candidate
+    Rollback,
+}
+
+/// The shared, swappable per-policy handle: fixed routing facts
+/// (id/dims), the monotonically increasing serving version, the staged
+/// op queue the core drains between batches, and the per-policy stats
+/// the monitor reads. Connection threads, the watcher, monitor
+/// subscribers, and the core all hold the same `Arc<PolicySlot>`.
+pub struct PolicySlot {
+    pub id: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// configured canary fraction; `None` = not a canary route
+    pub canary_fraction: Option<f64>,
+    /// serving version, bumped on every applied swap/promote
+    version: AtomicU64,
+    /// candidate generation counter (how many candidates were staged)
+    candidate_gen: AtomicU64,
+    /// whether a candidate is currently installed in the core
+    candidate_live: AtomicBool,
+    pub stats: PolicyStats,
+    pending: Mutex<Vec<PendingOp>>,
+    has_pending: AtomicBool,
+}
+
+impl PolicySlot {
+    pub fn new(id: impl Into<String>, obs_dim: usize, act_dim: usize,
+               version: u64, canary_fraction: Option<f64>) -> PolicySlot {
+        PolicySlot {
+            id: id.into(),
+            obs_dim,
+            act_dim,
+            canary_fraction,
+            version: AtomicU64::new(version),
+            candidate_gen: AtomicU64::new(0),
+            candidate_live: AtomicBool::new(false),
+            stats: PolicyStats::new(act_dim),
+            pending: Mutex::new(Vec::new()),
+            has_pending: AtomicBool::new(false),
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Next serving version; called only by the owning core when it
+    /// applies a swap/promote, so versions are monotone per policy.
+    pub(crate) fn bump_version(&self) -> u64 {
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Allocate the next candidate generation (staged by the watcher).
+    pub(crate) fn next_candidate_gen(&self) -> u64 {
+        self.candidate_gen.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    pub fn candidate_gen(&self) -> u64 {
+        self.candidate_gen.load(Ordering::Acquire)
+    }
+
+    pub fn candidate_live(&self) -> bool {
+        self.candidate_live.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn set_candidate_live(&self, live: bool) {
+        self.candidate_live.store(live, Ordering::Release);
+    }
+
+    /// Stage a control-plane op for the core. Cheap for the hot path to
+    /// check: cores test one atomic per batch.
+    pub fn push(&self, op: PendingOp) {
+        let mut q = self.pending.lock().unwrap();
+        q.push(op);
+        self.has_pending.store(true, Ordering::Release);
+    }
+
+    /// Take every staged op, in staging order. The fast path (nothing
+    /// staged) is a single relaxed atomic load, no lock.
+    pub(crate) fn drain_pending(&self) -> Vec<PendingOp> {
+        if !self.has_pending.load(Ordering::Acquire) {
+            return Vec::new();
+        }
+        let mut q = self.pending.lock().unwrap();
+        self.has_pending.store(false, Ordering::Release);
+        std::mem::take(&mut *q)
+    }
+}
+
+/// Per-policy serving counters + latency sink, read lock-free (or with
+/// one short lock for the divergence block) by the monitor.
+pub struct PolicyStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// per-policy inference latency (the global recorder still feeds
+    /// the aggregate `ServerStats`)
+    pub lat: LatencyRecorder,
+    /// requests also run through the candidate
+    pub canaried: AtomicU64,
+    /// canaried requests where any action component's bits differed
+    pub disagreed: AtomicU64,
+    div: Mutex<Divergence>,
+}
+
+/// Canary divergence accumulators for the *current* candidate (reset
+/// when a new candidate generation is staged).
+#[derive(Clone, Debug, Default)]
+pub struct Divergence {
+    /// max over canaried requests of L∞(incumbent action, candidate action)
+    pub linf_max: f64,
+    /// per-action-component count of exact f32 bit mismatches
+    pub bit_mismatch: Vec<u64>,
+}
+
+impl PolicyStats {
+    pub fn new(act_dim: usize) -> PolicyStats {
+        PolicyStats {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            lat: LatencyRecorder::new(),
+            canaried: AtomicU64::new(0),
+            disagreed: AtomicU64::new(0),
+            div: Mutex::new(Divergence {
+                linf_max: 0.0,
+                bit_mismatch: vec![0; act_dim],
+            }),
+        }
+    }
+
+    pub fn divergence(&self) -> Divergence {
+        self.div.lock().unwrap().clone()
+    }
+
+    /// Fold one incumbent-vs-candidate action pair into the divergence
+    /// accumulators. Returns whether the pair disagreed anywhere.
+    pub fn note_canary_pair(&self, incumbent: &[f32], candidate: &[f32])
+                            -> bool {
+        self.canaried.fetch_add(1, Ordering::Relaxed);
+        let mut div = self.div.lock().unwrap();
+        let mut any = false;
+        for (i, (&a, &b)) in incumbent.iter().zip(candidate).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                any = true;
+                div.bit_mismatch[i] += 1;
+            }
+            let d = (a as f64 - b as f64).abs();
+            if d > div.linf_max {
+                div.linf_max = d;
+            }
+        }
+        drop(div);
+        if any {
+            self.disagreed.fetch_add(1, Ordering::Relaxed);
+        }
+        any
+    }
+
+    /// A new candidate generation describes a new int′ — start its
+    /// divergence ledger from zero.
+    pub(crate) fn reset_canary(&self) {
+        self.canaried.store(0, Ordering::Relaxed);
+        self.disagreed.store(0, Ordering::Relaxed);
+        let mut div = self.div.lock().unwrap();
+        div.linf_max = 0.0;
+        div.bit_mismatch.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+/// One entry of the ops event feed, sequence-stamped at emission so
+/// subscribers can assert loss-free, in-order delivery.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// a staged hot reload was applied by the core
+    Reloaded { id: String, version: u64 },
+    /// an artifact change could not be turned into a swap — the
+    /// incumbent keeps serving
+    ReloadFailed { id: String, error: String },
+    /// a candidate engine was installed for canary routing
+    CanaryLoaded { id: String, gen: u64 },
+    /// the candidate became the incumbent
+    CanaryPromoted { id: String, version: u64 },
+    /// the candidate was dropped
+    CanaryRolledBack { id: String },
+    /// a monitor command could not be applied
+    OpFailed { id: String, op: String, reason: String },
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let seq = ("seq", Json::num(self.seq as f64));
+        match &self.kind {
+            EventKind::Reloaded { id, version } => Json::obj(vec![
+                seq,
+                ("event", Json::str("reloaded")),
+                ("id", Json::str(id)),
+                ("version", Json::num(*version as f64)),
+            ]),
+            EventKind::ReloadFailed { id, error } => Json::obj(vec![
+                seq,
+                ("event", Json::str("reload_failed")),
+                ("id", Json::str(id)),
+                ("error", Json::str(error)),
+            ]),
+            EventKind::CanaryLoaded { id, gen } => Json::obj(vec![
+                seq,
+                ("event", Json::str("canary_loaded")),
+                ("id", Json::str(id)),
+                ("gen", Json::num(*gen as f64)),
+            ]),
+            EventKind::CanaryPromoted { id, version } => Json::obj(vec![
+                seq,
+                ("event", Json::str("canary_promoted")),
+                ("id", Json::str(id)),
+                ("version", Json::num(*version as f64)),
+            ]),
+            EventKind::CanaryRolledBack { id } => Json::obj(vec![
+                seq,
+                ("event", Json::str("canary_rolled_back")),
+                ("id", Json::str(id)),
+            ]),
+            EventKind::OpFailed { id, op, reason } => Json::obj(vec![
+                seq,
+                ("event", Json::str("op_failed")),
+                ("id", Json::str(id)),
+                ("op", Json::str(op)),
+                ("reason", Json::str(reason)),
+            ]),
+        }
+    }
+}
+
+/// Sequence-stamping broadcast queue for ops events. Producers (cores,
+/// watcher, subscriber command handlers) `emit`; the monitor hub drains
+/// once per tick and fans frames out to subscribers. Bounded: with no
+/// hub draining it, the oldest events are shed and counted.
+#[derive(Default)]
+pub struct EventBus {
+    seq: AtomicU64,
+    pending: Mutex<VecDeque<Event>>,
+    dropped: AtomicU64,
+}
+
+impl EventBus {
+    pub fn emit(&self, kind: EventKind) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::AcqRel) + 1;
+        let mut q = self.pending.lock().unwrap();
+        if q.len() >= MAX_PENDING_EVENTS {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(Event { seq, kind });
+        seq
+    }
+
+    pub fn drain(&self) -> Vec<Event> {
+        let mut q = self.pending.lock().unwrap();
+        q.drain(..).collect()
+    }
+
+    /// Events shed because no subscriber/hub drained the queue in time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// The whole control plane, shared by every ops thread: one slot per
+/// registered policy plus the event feed and reload counters.
+pub struct OpsPlane {
+    pub slots: BTreeMap<String, Arc<PolicySlot>>,
+    pub bus: EventBus,
+    pub reloads: AtomicU64,
+    pub reload_failures: AtomicU64,
+}
+
+impl OpsPlane {
+    pub fn new(slots: BTreeMap<String, Arc<PolicySlot>>) -> OpsPlane {
+        OpsPlane {
+            slots,
+            bus: EventBus::default(),
+            reloads: AtomicU64::new(0),
+            reload_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn slot(&self, id: &str) -> Option<&Arc<PolicySlot>> {
+        self.slots.get(id)
+    }
+
+    /// Apply a monitor command: stage the op on the policy's core, or
+    /// emit `op_failed` when it cannot be routed.
+    pub fn command(&self, op_name: &str, id: &str) {
+        let Some(slot) = self.slot(id) else {
+            self.bus.emit(EventKind::OpFailed {
+                id: id.to_string(),
+                op: op_name.to_string(),
+                reason: "unknown policy id".to_string(),
+            });
+            return;
+        };
+        match op_name {
+            "promote" => slot.push(PendingOp::Promote),
+            "rollback" => slot.push(PendingOp::Rollback),
+            other => {
+                self.bus.emit(EventKind::OpFailed {
+                    id: id.to_string(),
+                    op: other.to_string(),
+                    reason: "unknown op (promote|rollback)".to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Build and verify an inference engine for a reload/canary artifact,
+/// enforcing the slot's fixed routing shape. Runs on the watcher thread
+/// — never on a serving thread.
+pub(crate) fn stage_engine(art: &crate::policy::PolicyArtifact,
+                           slot: &PolicySlot)
+                           -> Result<(Box<IntEngine>, ObsNormalizer)> {
+    crate::policy::registry::compatible_swap(art, slot.obs_dim,
+                                             slot.act_dim)?;
+    let norm = art.normalizer();
+    let engine = IntEngine::optimized(art.policy.clone())
+        .context("pass pipeline rejected the artifact")?;
+    Ok((Box::new(engine), norm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_bus_is_ordered_and_bounded() {
+        let bus = EventBus::default();
+        for i in 0..(MAX_PENDING_EVENTS + 10) {
+            bus.emit(EventKind::CanaryRolledBack {
+                id: format!("p{i}"),
+            });
+        }
+        let drained = bus.drain();
+        assert_eq!(drained.len(), MAX_PENDING_EVENTS);
+        assert_eq!(bus.dropped(), 10);
+        // the oldest were shed; what's left is contiguous and in order
+        for w in drained.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1);
+        }
+        assert_eq!(drained.last().unwrap().seq,
+                   (MAX_PENDING_EVENTS + 10) as u64);
+        assert!(bus.drain().is_empty());
+    }
+
+    #[test]
+    fn slot_pending_queue_is_fifo_and_resets_flag() {
+        let slot = PolicySlot::new("p", 4, 2, 1, None);
+        assert!(slot.drain_pending().is_empty());
+        slot.push(PendingOp::Promote);
+        slot.push(PendingOp::Rollback);
+        let ops = slot.drain_pending();
+        assert_eq!(ops.len(), 2);
+        assert!(matches!(ops[0], PendingOp::Promote));
+        assert!(matches!(ops[1], PendingOp::Rollback));
+        assert!(slot.drain_pending().is_empty());
+    }
+
+    #[test]
+    fn version_bumps_are_monotone() {
+        let slot = PolicySlot::new("p", 4, 2, 7, None);
+        assert_eq!(slot.version(), 7);
+        assert_eq!(slot.bump_version(), 8);
+        assert_eq!(slot.bump_version(), 9);
+        assert_eq!(slot.version(), 9);
+    }
+
+    #[test]
+    fn canary_pair_accounting_is_exact() {
+        let stats = PolicyStats::new(3);
+        // identical pair: canaried but not disagreed
+        assert!(!stats.note_canary_pair(&[0.5, -0.25, 1.0],
+                                        &[0.5, -0.25, 1.0]));
+        // component 1 differs by 0.5, component 2 by 0.125
+        assert!(stats.note_canary_pair(&[0.5, -0.25, 1.0],
+                                       &[0.5, 0.25, 0.875]));
+        assert_eq!(stats.canaried.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.disagreed.load(Ordering::Relaxed), 1);
+        let div = stats.divergence();
+        assert_eq!(div.bit_mismatch, vec![0, 1, 1]);
+        assert_eq!(div.linf_max, 0.5);
+        stats.reset_canary();
+        assert_eq!(stats.canaried.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.divergence().bit_mismatch, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn ops_config_validation() {
+        let mut cfg = OpsConfig::default();
+        cfg.validate().unwrap();
+        cfg.canary.push(CanarySpec { id: "p".into(), fraction: 0.5 });
+        // canary without a watch dir cannot load its sidecar
+        assert!(cfg.validate().is_err());
+        cfg.watch_dir = Some(std::env::temp_dir());
+        cfg.validate().unwrap();
+        cfg.canary[0].fraction = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+}

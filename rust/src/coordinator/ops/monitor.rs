@@ -1,0 +1,299 @@
+//! Streaming telemetry listener and its client.
+//!
+//! ## Wire protocol
+//!
+//! Symmetric length-framed JSON, all integers little-endian:
+//!
+//! ```text
+//! frame   len u32 | len bytes of UTF-8 JSON
+//! ```
+//!
+//! Server → subscriber frames:
+//!
+//! * on connect, one `{"type":"full","policies":{id:{...}},"events":[],
+//!   "server":{...}}` snapshot with every field of every policy;
+//! * then one `{"type":"diff","policies":{id:{changed fields only}},
+//!   "events":[...],"server":{...}}` frame per tick. Policies with no
+//!   changed fields are omitted; a frame with empty `policies` and
+//!   `events` is a heartbeat, so a blocking reader always makes
+//!   progress. Merging each diff over the snapshot reproduces the full
+//!   state.
+//!
+//! Per-policy fields: `version`, `candidate_gen`, `candidate_live`,
+//! `requests`, `qps`, `batches`, `mean_batch`, `mean_us`, `p50_us`,
+//! `p99_us`, `p999_us`, and — for canaried ids — `canary_fraction`,
+//! `canaried`, `disagreed`, `disagree_rate`, `linf_max`,
+//! `bit_mismatch` (array, one counter per action component).
+//! `server` carries `reloads`, `reload_failures`, `events_dropped`.
+//! `events` is the ordered ops feed (see [`super::Event::to_json`]).
+//!
+//! Subscriber → server frames are commands:
+//! `{"cmd":"promote"|"rollback","id":"<policy>"}`. Command outcomes
+//! surface on the event feed (`canary_promoted`, `op_failed`, ...), not
+//! as direct replies — every subscriber sees every decision.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::OpsPlane;
+use crate::util::json::{self, Json};
+
+/// Bound on an incoming frame length (a command is tiny; a garbage
+/// length field must not drive an allocation).
+const MAX_FRAME: usize = 1 << 22;
+
+/// Write one length-framed JSON value.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<()> {
+    let body = v.to_string().into_bytes();
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(())
+}
+
+/// Read one length-framed JSON value (blocking).
+pub fn read_frame(r: &mut impl Read) -> Result<Json> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("monitor frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "monitor frame of {len} bytes");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("monitor frame body")?;
+    json::parse(std::str::from_utf8(&body).context("monitor frame \
+                                                    is not UTF-8")?)
+}
+
+/// One connected subscriber: the hub writes frames on `stream`; a
+/// dedicated reader thread drains its command frames.
+struct Subscriber {
+    stream: TcpStream,
+    reader: std::thread::JoinHandle<()>,
+}
+
+/// Monitor hub thread body: accepts subscribers, pushes one telemetry
+/// frame per tick, and routes their commands onto the ops plane. Exits
+/// when `stop` is raised.
+pub(crate) fn run_monitor(listener: Arc<TcpListener>, plane: Arc<OpsPlane>,
+                          stop: Arc<AtomicBool>, tick: Duration) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut subs: Vec<Subscriber> = Vec::new();
+    // last state sent, per policy — the diff baseline
+    let mut last: BTreeMap<String, BTreeMap<String, Json>> =
+        BTreeMap::new();
+    let mut prev_requests: BTreeMap<String, u64> = BTreeMap::new();
+    let mut prev_t = Instant::now();
+
+    while !stop.load(Ordering::Acquire) {
+        // admit new subscribers with a full snapshot
+        while let Ok((stream, _)) = listener.accept() {
+            if let Some(sub) = admit(stream, &plane, &last) {
+                subs.push(sub);
+            }
+        }
+        std::thread::sleep(tick);
+
+        let now = Instant::now();
+        let dt = now.duration_since(prev_t).as_secs_f64().max(1e-9);
+        prev_t = now;
+        let state = build_state(&plane, &mut prev_requests, dt);
+        let mut policies = BTreeMap::new();
+        for (id, fields) in &state {
+            let changed: BTreeMap<String, Json> = fields
+                .iter()
+                .filter(|(k, v)| last.get(id).and_then(|o| o.get(*k))
+                        != Some(v))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            if !changed.is_empty() {
+                policies.insert(id.clone(), Json::Obj(changed));
+            }
+        }
+        last = state;
+        // the feed is drained even with no subscribers, so a quiet
+        // monitor port never backs the event queue up to its cap
+        let events: Vec<Json> =
+            plane.bus.drain().iter().map(|e| e.to_json()).collect();
+        let frame = Json::obj(vec![
+            ("type", Json::str("diff")),
+            ("policies", Json::Obj(policies)),
+            ("events", Json::Arr(events)),
+            ("server", server_state(&plane)),
+        ]);
+        subs.retain_mut(|s| write_frame(&mut s.stream, &frame).is_ok());
+    }
+
+    for sub in subs {
+        let _ = sub.stream.shutdown(Shutdown::Both);
+        let _ = sub.reader.join();
+    }
+}
+
+/// Set up one subscriber: full snapshot, then a command-reader thread.
+fn admit(stream: TcpStream, plane: &Arc<OpsPlane>,
+         last: &BTreeMap<String, BTreeMap<String, Json>>)
+         -> Option<Subscriber> {
+    stream.set_nodelay(true).ok()?;
+    stream.set_nonblocking(false).ok()?;
+    let mut stream = stream;
+    let full = Json::obj(vec![
+        ("type", Json::str("full")),
+        ("policies", Json::Obj(
+            last.iter()
+                .map(|(id, f)| (id.clone(), Json::Obj(f.clone())))
+                .collect())),
+        ("events", Json::Arr(Vec::new())),
+        ("server", server_state(plane)),
+    ]);
+    write_frame(&mut stream, &full).ok()?;
+    let mut read_half = stream.try_clone().ok()?;
+    let plane = plane.clone();
+    let reader = std::thread::Builder::new()
+        .name("qmon-sub".to_string())
+        .spawn(move || {
+            // commands until disconnect; malformed JSON ends the session
+            // (the writer half notices on its next frame)
+            while let Ok(cmd) = read_frame(&mut read_half) {
+                let (Ok(op), Ok(id)) = (
+                    cmd.get("cmd").and_then(|c| c.as_str().map(String::from)),
+                    cmd.get("id").and_then(|c| c.as_str().map(String::from)),
+                ) else {
+                    break;
+                };
+                plane.command(&op, &id);
+            }
+        })
+        .ok()?;
+    Some(Subscriber { stream, reader })
+}
+
+fn server_state(plane: &OpsPlane) -> Json {
+    Json::obj(vec![
+        ("reloads",
+         Json::num(plane.reloads.load(Ordering::Relaxed) as f64)),
+        ("reload_failures",
+         Json::num(plane.reload_failures.load(Ordering::Relaxed) as f64)),
+        ("events_dropped", Json::num(plane.bus.dropped() as f64)),
+    ])
+}
+
+/// Snapshot every slot into the per-policy field map the protocol
+/// publishes.
+fn build_state(plane: &OpsPlane, prev_requests: &mut BTreeMap<String, u64>,
+               dt_secs: f64) -> BTreeMap<String, BTreeMap<String, Json>> {
+    let mut out = BTreeMap::new();
+    for (id, slot) in &plane.slots {
+        let st = &slot.stats;
+        let requests = st.requests.load(Ordering::Relaxed);
+        let batches = st.batches.load(Ordering::Relaxed);
+        let prev = prev_requests.insert(id.clone(), requests).unwrap_or(0);
+        let lat = st.lat.snapshot();
+        let mut f: BTreeMap<String, Json> = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            f.insert(k.to_string(), v);
+        };
+        put("version", Json::num(slot.version() as f64));
+        put("candidate_gen", Json::num(slot.candidate_gen() as f64));
+        put("candidate_live", Json::Bool(slot.candidate_live()));
+        put("requests", Json::num(requests as f64));
+        put("qps",
+            Json::num((requests.saturating_sub(prev)) as f64 / dt_secs));
+        put("batches", Json::num(batches as f64));
+        put("mean_batch", Json::num(if batches == 0 { 0.0 } else {
+            requests as f64 / batches as f64
+        }));
+        put("mean_us", Json::num(lat.mean_us));
+        put("p50_us", Json::num(lat.p50_us));
+        put("p99_us", Json::num(lat.p99_us));
+        put("p999_us", Json::num(lat.p999_us));
+        if let Some(frac) = slot.canary_fraction {
+            let canaried = st.canaried.load(Ordering::Relaxed);
+            let disagreed = st.disagreed.load(Ordering::Relaxed);
+            let div = st.divergence();
+            put("canary_fraction", Json::num(frac));
+            put("canaried", Json::num(canaried as f64));
+            put("disagreed", Json::num(disagreed as f64));
+            put("disagree_rate", Json::num(if canaried == 0 { 0.0 } else {
+                disagreed as f64 / canaried as f64
+            }));
+            put("linf_max", Json::num(div.linf_max));
+            put("bit_mismatch", Json::Arr(
+                div.bit_mismatch.iter()
+                    .map(|&c| Json::num(c as f64))
+                    .collect()));
+        }
+        out.insert(id.clone(), f);
+    }
+    out
+}
+
+/// Blocking subscriber client for the monitor protocol — used by
+/// `qcontrol monitor` and the ops tests.
+pub struct MonitorClient {
+    stream: TcpStream,
+}
+
+impl MonitorClient {
+    pub fn connect(addr: &str) -> Result<MonitorClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting monitor at {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(MonitorClient { stream })
+    }
+
+    /// Block for the next frame (`full`, `diff`, or heartbeat).
+    pub fn recv(&mut self) -> Result<Json> {
+        read_frame(&mut self.stream)
+    }
+
+    fn send_cmd(&mut self, cmd: &str, id: &str) -> Result<()> {
+        write_frame(&mut self.stream, &Json::obj(vec![
+            ("cmd", Json::str(cmd)),
+            ("id", Json::str(id)),
+        ]))
+    }
+
+    /// Ask the server to make `id`'s canary candidate the incumbent.
+    /// The outcome arrives on the event feed.
+    pub fn promote(&mut self, id: &str) -> Result<()> {
+        self.send_cmd("promote", id)
+    }
+
+    /// Ask the server to drop `id`'s canary candidate.
+    pub fn rollback(&mut self, id: &str) -> Result<()> {
+        self.send_cmd("rollback", id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let v = Json::obj(vec![
+            ("cmd", Json::str("promote")),
+            ("id", Json::str("walker")),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        assert_eq!(u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+                   as usize, buf.len() - 4);
+        let back = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(b"xxxx");
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+}

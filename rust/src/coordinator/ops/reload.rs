@@ -1,0 +1,323 @@
+//! Hot-reload watcher: polls the served artifact directory and stages
+//! verified engine swaps on the policy slots.
+//!
+//! Detection is a three-stage gate, cheapest first: (1) mtime/length
+//! from one `stat` per file per poll; (2) on metadata change, the CRC
+//! probe ([`crate::policy::artifact::crc_probe`]) reads only the magic
+//! prefix and the 14-byte END section — a `touch` or an identical
+//! rewrite never triggers a reload; (3) on CRC change, the full
+//! `PolicyArtifact::load` (which re-runs QIR verification) plus
+//! `lower → optimize → verify → compile` build the new engine *on this
+//! thread*, and only the finished engine is staged. The serving cores
+//! therefore never pay a compile, and a malformed artifact can only
+//! ever produce a `reload_failed` event — never a dead server.
+//!
+//! Publication contract: writers must publish artifacts atomically
+//! (write to a temp file, then `rename(2)` into place). The watcher
+//! tolerates a torn write — it fails the CRC and retries on the next
+//! metadata change — but atomic publication avoids the spurious
+//! `reload_failed` event.
+//!
+//! Canary sidecars: for ids routed by `--canary`, a `<id>.qpol.canary`
+//! file in the same directory carries the candidate. Appearing or
+//! changing stages a fresh candidate (resetting divergence stats);
+//! disappearing stages a rollback. Sidecars for ids without a canary
+//! route are ignored.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, SystemTime};
+
+use anyhow::{Context, Result};
+
+use super::{stage_engine, EventKind, OpsPlane, PendingOp, PolicySlot};
+use crate::policy::artifact::{crc_probe, PolicyArtifact};
+
+/// Filename suffix that marks a canary candidate artifact for policy
+/// `<id>`: the watcher stages `<id>.qpol.canary` as a candidate rather
+/// than an incumbent swap.
+pub const SIDECAR_SUFFIX: &str = ".qpol.canary";
+
+/// Last-seen identity of one watched file. `crc: None` means the file
+/// failed its probe/load at this mtime/len — it is not retried until
+/// the metadata changes again, so each bad version fails exactly once.
+struct Probe {
+    mtime: SystemTime,
+    len: u64,
+    crc: Option<u32>,
+}
+
+enum Kind {
+    /// `<name>.qpol` — hot-reloads the incumbent; the slot is resolved
+    /// from the *parsed* artifact id, not the filename
+    Incumbent,
+    /// `<id>.qpol.canary` — candidate for the named (canaried) slot
+    Sidecar(String),
+}
+
+/// Watcher thread body. Exits when `stop` is raised.
+pub(crate) fn run_watcher(dir: PathBuf, plane: Arc<OpsPlane>,
+                          stop: Arc<AtomicBool>, poll: Duration) {
+    let mut probes: BTreeMap<PathBuf, Probe> = BTreeMap::new();
+
+    // Prime incumbents: every `.qpol` present now was just loaded by
+    // `load_dir`, so record its identity without staging a redundant
+    // swap. Sidecars are *not* primed — one present at startup is a
+    // candidate to install.
+    for (path, kind) in scan(&dir, &plane) {
+        if matches!(kind, Kind::Incumbent) {
+            if let (Ok(meta), Ok(crc)) =
+                (std::fs::metadata(&path), crc_probe(&path))
+            {
+                if let Ok(mtime) = meta.modified() {
+                    probes.insert(path, Probe {
+                        mtime,
+                        len: meta.len(),
+                        crc: Some(crc),
+                    });
+                }
+            }
+        }
+    }
+
+    while !stop.load(Ordering::Acquire) {
+        let mut seen: Vec<PathBuf> = Vec::new();
+        for (path, kind) in scan(&dir, &plane) {
+            seen.push(path.clone());
+            poll_file(&path, &kind, &mut probes, &plane);
+        }
+        // a vanished sidecar rolls its candidate back; a vanished
+        // incumbent just forgets its probe (serving continues, and a
+        // reappearing file is re-examined from scratch)
+        probes.retain(|path, _| {
+            if seen.contains(path) {
+                return true;
+            }
+            if let Kind::Sidecar(id) = classify(path) {
+                if let Some(slot) = plane.slot(&id) {
+                    slot.push(PendingOp::Rollback);
+                }
+            }
+            false
+        });
+        std::thread::sleep(poll);
+    }
+}
+
+/// Examine one file; stage work if its content actually changed.
+fn poll_file(path: &Path, kind: &Kind,
+             probes: &mut BTreeMap<PathBuf, Probe>,
+             plane: &Arc<OpsPlane>) {
+    let Ok(meta) = std::fs::metadata(path) else { return };
+    let Ok(mtime) = meta.modified() else { return };
+    let len = meta.len();
+    if let Some(p) = probes.get(path) {
+        if p.mtime == mtime && p.len == len {
+            return; // metadata unchanged: nothing to do
+        }
+    }
+    let crc = match crc_probe(path) {
+        Ok(crc) => {
+            if probes.get(path).and_then(|p| p.crc) == Some(crc) {
+                // touched or rewritten identically: remember the new
+                // metadata, keep the incumbent
+                probes.insert(path.to_path_buf(),
+                              Probe { mtime, len, crc: Some(crc) });
+                return;
+            }
+            Some(crc)
+        }
+        Err(_) => None, // fall through to load, which says *why*
+    };
+    let staged = match kind {
+        Kind::Incumbent => stage_incumbent(path, plane),
+        Kind::Sidecar(id) => stage_sidecar(path, id, plane),
+    };
+    let crc = match staged {
+        Ok(()) => crc,
+        Err(err) => {
+            plane.reload_failures.fetch_add(1, Ordering::Relaxed);
+            let id = match kind {
+                Kind::Sidecar(id) => id.clone(),
+                // the artifact didn't parse, so the filename stem is
+                // the best available identity for the event
+                Kind::Incumbent => path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            };
+            eprintln!("qserve: reload of {} failed: {err:#}",
+                      path.display());
+            plane.bus.emit(EventKind::ReloadFailed {
+                id,
+                error: format!("{err:#}"),
+            });
+            None // re-attempt only when the file changes again
+        }
+    };
+    probes.insert(path.to_path_buf(), Probe { mtime, len, crc });
+}
+
+/// Load + verify + build an incumbent replacement and stage the swap.
+fn stage_incumbent(path: &Path, plane: &Arc<OpsPlane>) -> Result<()> {
+    let art = PolicyArtifact::load(path)?;
+    let slot = plane.slot(&art.id).with_context(|| {
+        format!("artifact id `{}` is not served (live policy \
+                 addition is not supported; restart to add)", art.id)
+    })?;
+    let (engine, norm) = stage_engine(&art, slot)?;
+    slot.push(PendingOp::Swap { engine, norm });
+    Ok(())
+}
+
+/// Load + verify + build a canary candidate and stage it.
+fn stage_sidecar(path: &Path, id: &str, plane: &Arc<OpsPlane>)
+                 -> Result<()> {
+    let slot = plane
+        .slot(id)
+        .with_context(|| format!("canary sidecar for unserved id \
+                                  `{id}`"))?;
+    let art = PolicyArtifact::load(path)?;
+    anyhow::ensure!(art.id == slot.id,
+                    "sidecar {} carries id `{}`, expected `{}`",
+                    path.display(), art.id, slot.id);
+    let (engine, norm) = stage_engine(&art, slot)?;
+    let gen = slot.next_candidate_gen();
+    slot.push(PendingOp::SetCandidate { engine, norm, gen });
+    Ok(())
+}
+
+/// Enumerate watched files: every `.qpol`, plus `.qpol.canary` sidecars
+/// for ids that actually have a canary route.
+fn scan(dir: &Path, plane: &Arc<OpsPlane>) -> Vec<(PathBuf, Kind)> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut out: Vec<(PathBuf, Kind)> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter_map(|p| match classify(&p) {
+            Kind::Sidecar(id) => {
+                let routed = plane
+                    .slot(&id)
+                    .map(|s| s.canary_fraction.is_some())
+                    .unwrap_or(false);
+                routed.then_some((p, Kind::Sidecar(id)))
+            }
+            Kind::Incumbent => {
+                let is_qpol = p
+                    .extension()
+                    .map(|x| x == "qpol")
+                    .unwrap_or(false);
+                is_qpol.then_some((p, Kind::Incumbent))
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+fn classify(path: &Path) -> Kind {
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    match name.strip_suffix(SIDECAR_SUFFIX) {
+        Some(id) => Kind::Sidecar(id.to_string()),
+        None => Kind::Incumbent,
+    }
+}
+
+/// Watch a single slot's directory-free staging — used by unit tests to
+/// exercise `poll_file` without spinning the thread.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyArtifact;
+    use crate::quant::BitCfg;
+    use crate::util::testkit;
+
+    fn plane_for(id: &str, canary: bool) -> Arc<OpsPlane> {
+        let mut slots = BTreeMap::new();
+        slots.insert(id.to_string(), Arc::new(PolicySlot::new(
+            id, 4, 2, 1, canary.then_some(0.5))));
+        Arc::new(OpsPlane::new(slots))
+    }
+
+    fn art(id: &str, seed: u64) -> PolicyArtifact {
+        PolicyArtifact::new(id, testkit::toy_policy(seed, 4, 8, 2,
+                                                    BitCfg::new(4, 3, 8)))
+    }
+
+    #[test]
+    fn classify_splits_sidecars() {
+        assert!(matches!(classify(Path::new("/x/p1.qpol")),
+                         Kind::Incumbent));
+        match classify(Path::new("/x/p1.qpol.canary")) {
+            Kind::Sidecar(id) => assert_eq!(id, "p1"),
+            Kind::Incumbent => panic!("sidecar misclassified"),
+        }
+    }
+
+    #[test]
+    fn incumbent_staging_and_unknown_id() {
+        let dir = std::env::temp_dir().join("qcontrol_reload_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let plane = plane_for("p1", false);
+        let path = dir.join("p1.qpol");
+        art("p1", 3).save(&path).unwrap();
+        stage_incumbent(&path, &plane).unwrap();
+        let ops = plane.slot("p1").unwrap().drain_pending();
+        assert_eq!(ops.len(), 1);
+        assert!(matches!(ops[0], PendingOp::Swap { .. }));
+
+        // an artifact whose id is not served cannot be staged
+        let other = dir.join("zz.qpol");
+        art("zz", 4).save(&other).unwrap();
+        let err = stage_incumbent(&other, &plane).unwrap_err();
+        assert!(err.to_string().contains("not served"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sidecar_requires_matching_id() {
+        let dir = std::env::temp_dir().join("qcontrol_reload_sidecar");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let plane = plane_for("p1", true);
+        let path = dir.join("p1.qpol.canary");
+        art("p2", 5).save(&path).unwrap();
+        let err = stage_sidecar(&path, "p1", &plane).unwrap_err();
+        assert!(err.to_string().contains("carries id"), "{err}");
+
+        art("p1", 5).save(&path).unwrap();
+        stage_sidecar(&path, "p1", &plane).unwrap();
+        let ops = plane.slot("p1").unwrap().drain_pending();
+        assert_eq!(ops.len(), 1);
+        assert!(matches!(ops[0],
+                         PendingOp::SetCandidate { gen: 1, .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_ignores_unrouted_sidecars() {
+        let dir = std::env::temp_dir().join("qcontrol_reload_scan");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        art("p1", 1).save(dir.join("p1.qpol")).unwrap();
+        art("p1", 2).save(dir.join("p1.qpol.canary")).unwrap();
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+
+        // without a canary route the sidecar is invisible
+        let plane = plane_for("p1", false);
+        let paths: Vec<_> = scan(&dir, &plane);
+        assert_eq!(paths.len(), 1);
+        assert!(paths[0].0.ends_with("p1.qpol"));
+
+        // with one, it is watched
+        let plane = plane_for("p1", true);
+        assert_eq!(scan(&dir, &plane).len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

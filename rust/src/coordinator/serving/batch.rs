@@ -10,6 +10,22 @@
 //! bit-identical to per-observation `infer` (property-tested), clients
 //! cannot observe whether their request was batched.
 //!
+//! ## Live ops
+//!
+//! The core no longer owns its policy for life: it holds the engine
+//! *behind* the policy's shared [`PolicySlot`] handle and drains the
+//! slot's staged-op queue between batches (and on every idle wake). A
+//! staged `Swap` replaces the engine+normalizer with a pre-built,
+//! pre-verified pair — in-flight batches always complete on the engine
+//! they started on, the local latency buffer is flushed before the old
+//! engine retires (no tail samples are lost), and the slot's version
+//! bumps so every subsequent reply is stamped with the new version. A
+//! staged `SetCandidate` installs a canary candidate: requests selected
+//! by the deterministic observation hash are run through *both* engines,
+//! the client gets the incumbent's action, and the divergence ledger on
+//! the slot accumulates the comparison. `Promote`/`Rollback` retire the
+//! candidate in the corresponding direction.
+//!
 //! Shutdown: the core wakes at least every `batch_idle` to check `stop`;
 //! once stopped (or once every submitter hung up) it drains the queue so
 //! connection threads blocked on a reply always get unblocked — either
@@ -20,6 +36,8 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::ops::{canary, EventKind, OpsPlane, PendingOp,
+                              PolicySlot};
 use crate::intinfer::IntEngine;
 use crate::util::stats::ObsNormalizer;
 
@@ -31,34 +49,84 @@ use super::ServerConfig;
 /// unblocks the waiting connection thread.
 pub(crate) struct Request {
     pub obs: Vec<f32>,
-    pub resp: Sender<Vec<f32>>,
+    pub resp: Sender<Reply>,
+}
+
+/// Action plus the policy version that computed it (stamped on v3
+/// replies; v1/v2 connections drop it at the framing layer).
+pub(crate) struct Reply {
+    pub act: Vec<f32>,
+    pub version: u64,
+}
+
+/// Everything a core needs at spawn time.
+pub(crate) struct CoreSeed {
+    pub engine: Box<IntEngine>,
+    pub norm: ObsNormalizer,
+    pub slot: Arc<PolicySlot>,
+    pub plane: Arc<OpsPlane>,
+    pub stop: Arc<AtomicBool>,
+    pub cfg: ServerConfig,
+    pub recorder: Arc<LatencyRecorder>,
+}
+
+/// The canary candidate currently installed in a core.
+struct Candidate {
+    engine: Box<IntEngine>,
+    norm: ObsNormalizer,
+}
+
+/// Core state between batches: the live engine pair plus reusable
+/// scratch blocks.
+struct Core {
+    engine: Box<IntEngine>,
+    norm: ObsNormalizer,
+    candidate: Option<Candidate>,
+    slot: Arc<PolicySlot>,
+    plane: Arc<OpsPlane>,
+    recorder: Arc<LatencyRecorder>,
+    obs_dim: usize,
+    act_dim: usize,
+    obs_block: Vec<f32>,
+    act_block: Vec<f32>,
+    cand_obs: Vec<f32>,
+    cand_act: Vec<f32>,
 }
 
 /// Run the inference core until `stop` flips and the queue is drained, or
-/// until every submit handle is gone. Consumes the engine.
-pub(crate) fn run_inference_core(
-    rx: Receiver<Request>,
-    mut engine: IntEngine,
-    norm: ObsNormalizer,
-    stop: Arc<AtomicBool>,
-    cfg: ServerConfig,
-    recorder: Arc<LatencyRecorder>,
-) {
-    let obs_dim = engine.policy.obs_dim;
-    let act_dim = engine.policy.act_dim;
-    let max_batch = cfg.max_batch.max(1);
+/// until every submit handle is gone.
+pub(crate) fn run_inference_core(rx: Receiver<Request>, seed: CoreSeed) {
+    let max_batch = seed.cfg.max_batch.max(1);
+    let batch_idle = seed.cfg.batch_idle;
+    let stop = seed.stop.clone();
+    let recorder = seed.recorder.clone();
     let mut lat = recorder.local();
+    let mut core = Core {
+        obs_dim: seed.slot.obs_dim,
+        act_dim: seed.slot.act_dim,
+        engine: seed.engine,
+        norm: seed.norm,
+        candidate: None,
+        slot: seed.slot,
+        plane: seed.plane,
+        recorder,
+        obs_block: Vec::new(),
+        act_block: Vec::new(),
+        cand_obs: Vec::new(),
+        cand_act: Vec::new(),
+    };
     let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
-    let mut obs_block: Vec<f32> = Vec::new();
-    let mut act_block: Vec<f32> = Vec::new();
 
     loop {
-        match rx.recv_timeout(cfg.batch_idle) {
+        match rx.recv_timeout(batch_idle) {
             Ok(first) => pending.push(first),
             Err(RecvTimeoutError::Timeout) => {
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
+                // idle wake: staged swaps apply without waiting for
+                // traffic, so a reload on a quiet policy is still prompt
+                core.apply_pending(&mut lat);
                 continue;
             }
             Err(RecvTimeoutError::Disconnected) => break,
@@ -69,8 +137,10 @@ pub(crate) fn run_inference_core(
                 Err(_) => break,
             }
         }
-        run_batch(&mut engine, &norm, &mut pending, &mut obs_block,
-                  &mut act_block, &mut lat, &recorder, obs_dim, act_dim);
+        // ops apply at batch boundaries only: the batch that is about to
+        // run sees one consistent engine from first row to last
+        core.apply_pending(&mut lat);
+        core.run_batch(&mut pending, &mut lat);
     }
 
     // shutdown drain: answer whatever is already queued so no connection
@@ -85,46 +155,154 @@ pub(crate) fn run_inference_core(
         if pending.is_empty() {
             break;
         }
-        run_batch(&mut engine, &norm, &mut pending, &mut obs_block,
-                  &mut act_block, &mut lat, &recorder, obs_dim, act_dim);
+        core.run_batch(&mut pending, &mut lat);
     }
     // `lat` drops here, flushing residual samples into the recorder
 }
 
-/// Normalize + batched integer forward + reply fan-out for one batch.
-#[allow(clippy::too_many_arguments)]
-fn run_batch(
-    engine: &mut IntEngine,
-    norm: &ObsNormalizer,
-    pending: &mut Vec<Request>,
-    obs_block: &mut Vec<f32>,
-    act_block: &mut Vec<f32>,
-    lat: &mut LocalLatency<'_>,
-    recorder: &LatencyRecorder,
-    obs_dim: usize,
-    act_dim: usize,
-) {
-    let n = pending.len();
-    obs_block.clear();
-    for r in pending.iter() {
-        debug_assert_eq!(r.obs.len(), obs_dim);
-        obs_block.extend_from_slice(&r.obs);
+impl Core {
+    /// Drain and apply every op staged on the slot. Called only between
+    /// batches, so a swap can never split a batch across two engines.
+    fn apply_pending(&mut self, lat: &mut LocalLatency<'_>) {
+        for op in self.slot.drain_pending() {
+            match op {
+                PendingOp::Swap { engine, norm } => {
+                    // flush buffered samples before the old engine
+                    // retires: its tail latency must reach the recorder
+                    lat.flush();
+                    self.engine = engine;
+                    self.norm = norm;
+                    let version = self.slot.bump_version();
+                    self.plane.reloads.fetch_add(1, Ordering::Relaxed);
+                    self.plane.bus.emit(EventKind::Reloaded {
+                        id: self.slot.id.clone(),
+                        version,
+                    });
+                }
+                PendingOp::SetCandidate { engine, norm, gen } => {
+                    self.candidate = Some(Candidate { engine, norm });
+                    // a fresh candidate means a fresh int′: restart the
+                    // divergence ledger
+                    self.slot.stats.reset_canary();
+                    self.slot.set_candidate_live(true);
+                    self.plane.bus.emit(EventKind::CanaryLoaded {
+                        id: self.slot.id.clone(),
+                        gen,
+                    });
+                }
+                PendingOp::Promote => match self.candidate.take() {
+                    Some(c) => {
+                        lat.flush();
+                        self.engine = c.engine;
+                        self.norm = c.norm;
+                        self.slot.set_candidate_live(false);
+                        let version = self.slot.bump_version();
+                        self.plane.reloads.fetch_add(1, Ordering::Relaxed);
+                        self.plane.bus.emit(EventKind::CanaryPromoted {
+                            id: self.slot.id.clone(),
+                            version,
+                        });
+                    }
+                    None => {
+                        self.plane.bus.emit(EventKind::OpFailed {
+                            id: self.slot.id.clone(),
+                            op: "promote".to_string(),
+                            reason: "no candidate installed".to_string(),
+                        });
+                    }
+                },
+                PendingOp::Rollback => match self.candidate.take() {
+                    Some(_) => {
+                        self.slot.set_candidate_live(false);
+                        self.plane.bus.emit(EventKind::CanaryRolledBack {
+                            id: self.slot.id.clone(),
+                        });
+                    }
+                    None => {
+                        self.plane.bus.emit(EventKind::OpFailed {
+                            id: self.slot.id.clone(),
+                            op: "rollback".to_string(),
+                            reason: "no candidate installed".to_string(),
+                        });
+                    }
+                },
+            }
+        }
     }
-    act_block.clear();
-    act_block.resize(n * act_dim, 0.0);
 
-    let t0 = Instant::now();
-    for lane in obs_block.chunks_exact_mut(obs_dim) {
-        norm.normalize(lane);
-    }
-    engine.infer_batch(&obs_block[..], &mut act_block[..]);
-    let us = t0.elapsed().as_nanos() as f64 / 1e3;
+    /// Normalize + batched integer forward + reply fan-out for one
+    /// batch, mirroring the canaried subset through the candidate.
+    fn run_batch(&mut self, pending: &mut Vec<Request>,
+                 lat: &mut LocalLatency<'_>) {
+        let n = pending.len();
+        let (obs_dim, act_dim) = (self.obs_dim, self.act_dim);
+        self.obs_block.clear();
+        for r in pending.iter() {
+            debug_assert_eq!(r.obs.len(), obs_dim);
+            self.obs_block.extend_from_slice(&r.obs);
+        }
+        self.act_block.clear();
+        self.act_block.resize(n * act_dim, 0.0);
 
-    recorder.note_batch();
-    for (i, r) in pending.drain(..).enumerate() {
-        lat.record(us);
-        // a send error means the connection died while waiting — fine
-        let _ = r.resp.send(act_block[i * act_dim..(i + 1) * act_dim]
-            .to_vec());
+        // canary selection hashes the *raw* observation (before the
+        // incumbent's normalizer touches it), and the raw rows are
+        // copied out now because normalization below is in-place
+        let mut canary_rows: Vec<usize> = Vec::new();
+        if let (Some(frac), Some(_)) =
+            (self.slot.canary_fraction, self.candidate.as_ref())
+        {
+            self.cand_obs.clear();
+            for (i, r) in pending.iter().enumerate() {
+                if canary::selects(frac, &r.obs) {
+                    canary_rows.push(i);
+                    self.cand_obs.extend_from_slice(&r.obs);
+                }
+            }
+        }
+
+        let t0 = Instant::now();
+        for lane in self.obs_block.chunks_exact_mut(obs_dim) {
+            self.norm.normalize(lane);
+        }
+        self.engine.infer_batch(&self.obs_block[..],
+                                &mut self.act_block[..]);
+        // client-visible latency is the incumbent pass only; the mirror
+        // pass below is canary overhead, not serving latency
+        let us = t0.elapsed().as_nanos() as f64 / 1e3;
+
+        if !canary_rows.is_empty() {
+            let cand = self.candidate.as_mut()
+                .expect("canary_rows only fill with a candidate");
+            for lane in self.cand_obs.chunks_exact_mut(obs_dim) {
+                cand.norm.normalize(lane);
+            }
+            self.cand_act.clear();
+            self.cand_act.resize(canary_rows.len() * act_dim, 0.0);
+            cand.engine.infer_batch(&self.cand_obs[..],
+                                    &mut self.cand_act[..]);
+            for (k, &row) in canary_rows.iter().enumerate() {
+                self.slot.stats.note_canary_pair(
+                    &self.act_block[row * act_dim..(row + 1) * act_dim],
+                    &self.cand_act[k * act_dim..(k + 1) * act_dim]);
+            }
+        }
+
+        self.recorder.note_batch();
+        self.slot.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.slot.stats.requests.fetch_add(n as u64, Ordering::Relaxed);
+        // per-policy recorder merges once per batch so the monitor's
+        // next tick already sees these samples
+        self.slot.stats.lat.record_n(us, n);
+        self.slot.stats.lat.note_batch();
+        let version = self.slot.version();
+        for (i, r) in pending.drain(..).enumerate() {
+            lat.record(us);
+            // a send error means the connection died while waiting — fine
+            let _ = r.resp.send(Reply {
+                act: self.act_block[i * act_dim..(i + 1) * act_dim]
+                    .to_vec(),
+                version,
+            });
+        }
     }
 }

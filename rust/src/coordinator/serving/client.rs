@@ -14,7 +14,7 @@ use std::net::TcpStream;
 
 use anyhow::Result;
 
-use super::{MAX_WIRE_OBS, V2_MAGIC, V2_VERSION};
+use super::{MAX_WIRE_OBS, V2_MAGIC, V2_VERSION, V3_VERSION};
 
 /// Synchronous v1 round-trip client: one outstanding request per
 /// connection, dimensions fixed at connect time.
@@ -67,13 +67,26 @@ impl RoutedClient {
     /// Send one observation to the policy `id` (`""` = server default),
     /// block for the action.
     pub fn act(&mut self, id: &str, obs: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.round_trip(V2_VERSION, id, obs)?.0)
+    }
+
+    /// v3 round-trip: like [`RoutedClient::act`] but the reply carries
+    /// the serving policy's version, so a client can observe hot
+    /// reloads (the version is monotone per policy id).
+    pub fn act_versioned(&mut self, id: &str, obs: &[f32])
+                         -> Result<(Vec<f32>, u64)> {
+        self.round_trip(V3_VERSION, id, obs)
+    }
+
+    fn round_trip(&mut self, ver: u8, id: &str, obs: &[f32])
+                  -> Result<(Vec<f32>, u64)> {
         anyhow::ensure!(id.len() <= u8::MAX as usize,
                         "policy id longer than 255 bytes");
         anyhow::ensure!(obs.len() <= MAX_WIRE_OBS, "observation too large");
         let mut buf =
             Vec::with_capacity(4 + 2 + id.len() + 4 + obs.len() * 4);
         buf.extend_from_slice(&V2_MAGIC);
-        buf.push(V2_VERSION);
+        buf.push(ver);
         buf.push(id.len() as u8);
         buf.extend_from_slice(id.as_bytes());
         buf.extend_from_slice(&(obs.len() as u32).to_le_bytes());
@@ -82,19 +95,28 @@ impl RoutedClient {
         }
         self.stream.write_all(&buf)?;
 
-        let mut head = [0u8; 5];
-        self.stream.read_exact(&mut head)?;
-        let n = u32::from_le_bytes([head[1], head[2], head[3], head[4]])
-            as usize;
+        let mut status = [0u8; 1];
+        self.stream.read_exact(&mut status)?;
+        let mut version = 0u64;
+        if ver == V3_VERSION {
+            let mut v = [0u8; 8];
+            self.stream.read_exact(&mut v)?;
+            version = u64::from_le_bytes(v);
+        }
+        let mut n_buf = [0u8; 4];
+        self.stream.read_exact(&mut n_buf)?;
+        let n = u32::from_le_bytes(n_buf) as usize;
         anyhow::ensure!(n <= MAX_WIRE_OBS * 4, "implausible reply length");
-        match head[0] {
+        match status[0] {
             0 => {
                 let mut payload = vec![0u8; n * 4];
                 self.stream.read_exact(&mut payload)?;
-                Ok(payload
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect())
+                Ok((payload
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2],
+                                                     c[3]]))
+                        .collect(),
+                    version))
             }
             1 => {
                 let mut msg = vec![0u8; n];

@@ -38,6 +38,8 @@ pub struct ServerStats {
     pub batches: u64,
     /// registered policies (= independent inference cores) this run served
     pub policies: u64,
+    /// hot reloads applied (engine swaps + canary promotions) this run
+    pub reloads: u64,
     pub mean_us: f64,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -55,6 +57,7 @@ impl ServerStats {
             io_errors: 0,
             batches: 0,
             policies: 0,
+            reloads: 0,
             mean_us: mean(lat_us),
             p50_us: percentile_sorted(&sorted, 0.50),
             p99_us: percentile_sorted(&sorted, 0.99),
@@ -87,6 +90,22 @@ impl LatencyRecorder {
     /// Count one executed inference pass (batch of any size).
     pub fn note_batch(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` requests that shared one batched pass of `us`
+    /// microseconds, merging immediately (no thread-local buffering).
+    /// Used for the per-policy recorders the monitor snapshots every
+    /// tick — freshness matters more than lock amortization there,
+    /// and it is one lock acquisition per *batch* either way.
+    pub fn record_n(&self, us: f64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        self.recorded.fetch_add(n as u64, Ordering::Relaxed);
+        let mut shared = self.shared.lock().unwrap();
+        let add = n.min(MAX_RETAINED.saturating_sub(shared.len()));
+        let new_len = shared.len() + add;
+        shared.resize(new_len, us);
     }
 
     fn merge(&self, samples: &mut Vec<f64>) {
@@ -213,6 +232,18 @@ mod tests {
         let s = rec.snapshot();
         assert_eq!(s.requests, 10_000);
         assert!(s.p50_us > 0.0);
+    }
+
+    #[test]
+    fn record_n_merges_immediately() {
+        let rec = LatencyRecorder::new();
+        rec.record_n(5.0, 3);
+        rec.record_n(9.0, 1);
+        rec.record_n(1.0, 0); // no-op
+        let s = rec.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.mean_us, 6.0);
+        assert_eq!(s.p50_us, 5.0);
     }
 
     #[test]

@@ -34,12 +34,29 @@
 //! actions (ok) or `n` UTF-8 error bytes (error). Routing errors
 //! (unknown id, wrong obs count) are error replies, not disconnects.
 //!
+//! **v3 (framed, versioned).** Identical request frame with `ver = 3`;
+//! the reply gains the serving policy's monotonically increasing
+//! version, stamped on success *and* error replies: `status u8`,
+//! `version u64`, `n u32`, payload. Version 0 on an error means the
+//! request never resolved to a policy (unknown id). v2 and v3 requests
+//! may be mixed on one connection; v2 replies are byte-identical to
+//! before, so existing clients are untouched.
+//!
 //! **v1 (header-less, legacy).** Raw `obs_dim × f32` request, raw
 //! `act_dim × f32` response, dimensions fixed by the *default* policy.
 //! The server sniffs the first 4 bytes of each connection: the v2 magic
 //! decodes as an f32 NaN, so no finite v1 observation can be mistaken
 //! for a v2 header. Each connection speaks one protocol for its
 //! lifetime.
+//!
+//! ## Live ops
+//!
+//! [`ServerConfig::ops`] (see [`crate::coordinator::ops`]) attaches the
+//! control plane: hot reload from a watched artifact directory, canary
+//! routing with divergence accounting, and the streaming monitor
+//! listener. Each policy's core holds its engine behind a shared
+//! [`crate::coordinator::ops::PolicySlot`] and applies staged swaps at
+//! batch boundaries, so reloads are invisible to in-flight requests.
 //!
 //! ## Concurrency model
 //!
@@ -82,11 +99,12 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::ops::{self, OpsConfig, OpsPlane, PolicySlot};
 use crate::intinfer::IntEngine;
 use crate::policy::{PolicyArtifact, PolicyRegistry};
 use crate::util::stats::ObsNormalizer;
 
-use batch::Request;
+use batch::{CoreSeed, Reply, Request};
 pub use client::{ActionClient, RoutedClient};
 pub use latency::{LatencyRecorder, LocalLatency, ServerStats};
 
@@ -96,6 +114,9 @@ pub use latency::{LatencyRecorder, LocalLatency, ServerStats};
 pub const V2_MAGIC: [u8; 4] = [0x51, 0x50, 0xC0, 0x7F];
 /// Wire protocol revision carried in every v2 frame.
 pub const V2_VERSION: u8 = 2;
+/// Version-stamped revision of the framed protocol (same request frame;
+/// replies carry the policy version).
+pub const V3_VERSION: u8 = 3;
 /// Upper bound on the per-request observation count a server will
 /// accept (guards allocations against garbage length fields).
 pub const MAX_WIRE_OBS: usize = 1 << 16;
@@ -119,6 +140,8 @@ pub struct ServerConfig {
     /// policy served to v1 (header-less) clients and to v2 requests with
     /// an empty id; `None` = the registry's first id in sorted order
     pub default_policy: Option<String>,
+    /// live ops plane (hot reload / canary / monitor); default is inert
+    pub ops: OpsConfig,
 }
 
 impl Default for ServerConfig {
@@ -131,6 +154,7 @@ impl Default for ServerConfig {
             batch_idle: Duration::from_millis(2),
             accept_poll: Duration::from_millis(1),
             default_policy: None,
+            ops: OpsConfig::default(),
         }
     }
 }
@@ -149,16 +173,18 @@ impl ServerConfig {
                         && !self.batch_idle.is_zero()
                         && !self.accept_poll.is_zero(),
                         "timeouts must be non-zero");
-        Ok(())
+        self.ops.validate()
     }
 }
 
 /// Routing table shared with connection threads: one inference core per
-/// registered policy.
+/// registered policy, plus its shared ops slot (version reads for reply
+/// stamping).
 struct CoreHandle {
     tx: Sender<Request>,
     obs_dim: usize,
     act_dim: usize,
+    slot: Arc<PolicySlot>,
 }
 
 struct Router {
@@ -199,38 +225,99 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
                       -> Result<ServerStats> {
     cfg.validate()?;
     let default_id = registry.default_id(cfg.default_policy.as_deref())?;
+    // every canary route must name a registered policy, exactly once
+    let mut canary_fracs: BTreeMap<String, f64> = BTreeMap::new();
+    for c in &cfg.ops.canary {
+        anyhow::ensure!(registry.get(&c.id).is_some(),
+                        "canary id `{}` not in registry (have: {})",
+                        c.id, registry.ids().join(", "));
+        anyhow::ensure!(
+            canary_fracs.insert(c.id.clone(), c.fraction).is_none(),
+            "duplicate canary spec for `{}`", c.id);
+    }
     listener.set_nonblocking(true)?;
     let recorder = Arc::new(LatencyRecorder::new());
 
-    let mut cores = BTreeMap::new();
-    let mut core_threads = Vec::new();
     // consume the registry: each policy is *moved* into its core, so
     // the weights live exactly once per core for the serving lifetime
-    for (id, artifact) in registry.into_entries() {
+    let entries = registry.into_versioned_entries();
+    // the shared control plane: one swappable slot per policy, built
+    // before the cores so watcher/monitor threads can start against it
+    let slots: BTreeMap<String, Arc<PolicySlot>> = entries
+        .iter()
+        .map(|(id, (artifact, version))| {
+            (id.clone(), Arc::new(PolicySlot::new(
+                id.clone(), artifact.policy.obs_dim,
+                artifact.policy.act_dim, *version,
+                canary_fracs.get(id).copied())))
+        })
+        .collect();
+    let plane = Arc::new(OpsPlane::new(slots));
+
+    let mut cores = BTreeMap::new();
+    let mut core_threads = Vec::new();
+    for (id, (artifact, _version)) in entries {
         let norm = artifact.normalizer();
         let obs_dim = artifact.policy.obs_dim;
         let act_dim = artifact.policy.act_dim;
         // shared lower → optimize → verify → compile path: each core
         // executes the pass-pipeline output, pinned bit-identical to
         // the unoptimized engine by the qir property suite
-        let engine = IntEngine::optimized(artifact.policy)?;
+        let engine = Box::new(IntEngine::optimized(artifact.policy)?);
+        let slot = plane
+            .slot(&id)
+            .expect("slot exists for every entry")
+            .clone();
         let (tx, rx) = mpsc::channel::<Request>();
-        cores.insert(id.clone(), CoreHandle { tx, obs_dim, act_dim });
-        let recorder = recorder.clone();
-        let stop = stop.clone();
-        let cfg2 = cfg.clone();
+        cores.insert(id.clone(), CoreHandle {
+            tx,
+            obs_dim,
+            act_dim,
+            slot: slot.clone(),
+        });
+        let seed = CoreSeed {
+            engine,
+            norm,
+            slot,
+            plane: plane.clone(),
+            stop: stop.clone(),
+            cfg: cfg.clone(),
+            recorder: recorder.clone(),
+        };
         core_threads.push(
             std::thread::Builder::new()
                 .name(format!("qserve-core-{id}"))
-                .spawn(move || {
-                    batch::run_inference_core(rx, engine, norm, stop, cfg2,
-                                              recorder)
-                })
+                .spawn(move || batch::run_inference_core(rx, seed))
                 .context("spawn inference core")?,
         );
     }
     let n_policies = cores.len() as u64;
     let router = Arc::new(Router { cores, default_id });
+
+    // control-plane threads: artifact watcher and monitor hub
+    let mut ops_threads = Vec::new();
+    if let Some(dir) = cfg.ops.watch_dir.clone() {
+        let (plane, stop) = (plane.clone(), stop.clone());
+        let poll = cfg.ops.reload_poll;
+        ops_threads.push(
+            std::thread::Builder::new()
+                .name("qserve-watch".to_string())
+                .spawn(move || ops::reload::run_watcher(dir, plane, stop,
+                                                        poll))
+                .context("spawn reload watcher")?,
+        );
+    }
+    if let Some(mon) = cfg.ops.monitor.clone() {
+        let (plane, stop) = (plane.clone(), stop.clone());
+        let tick = cfg.ops.monitor_tick;
+        ops_threads.push(
+            std::thread::Builder::new()
+                .name("qserve-monitor".to_string())
+                .spawn(move || ops::monitor::run_monitor(mon, plane, stop,
+                                                         tick))
+                .context("spawn monitor hub")?,
+        );
+    }
 
     let gate = Arc::new(Gate::new(cfg.max_connections));
     let io_errors = Arc::new(AtomicU64::new(0));
@@ -296,12 +383,18 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
         h.join()
             .map_err(|_| anyhow::anyhow!("inference core panicked"))?;
     }
+    // the watcher notices stop within reload_poll, the monitor within
+    // monitor_tick; neither holds requests, so they join last
+    for h in ops_threads {
+        let _ = h.join();
+    }
     accept_res?;
 
     let mut stats = recorder.snapshot();
     stats.connections = accepted;
     stats.io_errors = io_errors.load(Ordering::Relaxed);
     stats.policies = n_policies;
+    stats.reloads = plane.reloads.load(Ordering::Relaxed);
     Ok(stats)
 }
 
@@ -360,19 +453,20 @@ fn serve_v1(mut stream: TcpStream, router: &Router, stop: &AtomicBool,
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        let Some(act) = submit(core, obs)? else {
+        let Some(reply) = submit(core, obs)? else {
             return Ok(()); // shutting down
         };
-        for (i, &a) in act.iter().enumerate() {
+        for (i, &a) in reply.act.iter().enumerate() {
             act_buf[i * 4..(i + 1) * 4].copy_from_slice(&a.to_le_bytes());
         }
         stream.write_all(&act_buf).context("write response")?;
     }
 }
 
-/// v2 framed loop: per-request header routes to the policy's core;
+/// v2/v3 framed loop: per-request header routes to the policy's core;
 /// routing problems are error replies, protocol violations end the
-/// connection.
+/// connection. The version byte is per *request*, so a client may mix
+/// plain (v2) and version-stamped (v3) requests on one connection.
 fn serve_v2(mut stream: TcpStream, router: &Router, stop: &AtomicBool)
             -> Result<()> {
     // a disconnect after part of a request was consumed is a protocol
@@ -402,9 +496,10 @@ fn serve_v2(mut stream: TcpStream, router: &Router, stop: &AtomicBool)
         if !read_frame(&mut stream, &mut hdr, stop, 0)? {
             return mid_request(stop);
         }
-        anyhow::ensure!(hdr[0] == V2_VERSION,
-                        "unsupported wire version {} (server speaks \
-                         {V2_VERSION})", hdr[0]);
+        let ver = hdr[0];
+        anyhow::ensure!(ver == V2_VERSION || ver == V3_VERSION,
+                        "unsupported wire version {ver} (server speaks \
+                         {V2_VERSION} and {V3_VERSION})");
         let mut id_buf = vec![0u8; hdr[1] as usize];
         if !read_frame(&mut stream, &mut id_buf, stop, 0)? {
             return mid_request(stop);
@@ -422,49 +517,62 @@ fn serve_v2(mut stream: TcpStream, router: &Router, stop: &AtomicBool)
         }
 
         let Ok(id) = std::str::from_utf8(&id_buf) else {
-            write_v2_error(&mut stream, "policy id is not UTF-8")?;
+            // no policy resolved: a v3 error reply carries version 0
+            write_error_reply(&mut stream, ver, 0,
+                              "policy id is not UTF-8")?;
             continue;
         };
         let Some(core) = router.resolve(id) else {
-            write_v2_error(&mut stream,
-                           &format!("unknown policy id `{id}`"))?;
+            write_error_reply(&mut stream, ver, 0,
+                              &format!("unknown policy id `{id}`"))?;
             continue;
         };
         if n_obs != core.obs_dim {
-            write_v2_error(&mut stream,
-                           &format!("policy `{id}` expects {} observation \
-                                     values, got {n_obs}", core.obs_dim))?;
+            write_error_reply(&mut stream, ver, core.slot.version(),
+                              &format!("policy `{id}` expects {} \
+                                        observation values, got {n_obs}",
+                                       core.obs_dim))?;
             continue;
         }
         let obs: Vec<f32> = payload
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        let Some(act) = submit(core, obs)? else {
+        let Some(r) = submit(core, obs)? else {
             return Ok(()); // shutting down
         };
-        let mut reply = Vec::with_capacity(5 + act.len() * 4);
+        let mut reply = Vec::with_capacity(13 + r.act.len() * 4);
         reply.push(0u8);
-        reply.extend_from_slice(&(act.len() as u32).to_le_bytes());
-        for &a in &act {
+        if ver == V3_VERSION {
+            reply.extend_from_slice(&r.version.to_le_bytes());
+        }
+        reply.extend_from_slice(&(r.act.len() as u32).to_le_bytes());
+        for &a in &r.act {
             reply.extend_from_slice(&a.to_le_bytes());
         }
         stream.write_all(&reply).context("write response")?;
     }
 }
 
-fn write_v2_error(stream: &mut TcpStream, msg: &str) -> Result<()> {
+/// Error reply in the requested framing: v2 omits the version field,
+/// v3 stamps it (0 = the request never resolved to a policy).
+fn write_error_reply(stream: &mut TcpStream, ver: u8, version: u64,
+                     msg: &str) -> Result<()> {
     let bytes = msg.as_bytes();
-    let mut reply = Vec::with_capacity(5 + bytes.len());
+    let mut reply = Vec::with_capacity(13 + bytes.len());
     reply.push(1u8);
+    if ver == V3_VERSION {
+        reply.extend_from_slice(&version.to_le_bytes());
+    }
     reply.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     reply.extend_from_slice(bytes);
     stream.write_all(&reply).context("write error response")
 }
 
-/// Submit one observation to a core and wait for the action.
-/// `Ok(None)` means the server is draining — close the connection.
-fn submit(core: &CoreHandle, obs: Vec<f32>) -> Result<Option<Vec<f32>>> {
+/// Submit one observation to a core and wait for the reply (action +
+/// policy version). `Ok(None)` means the server is draining — close the
+/// connection.
+fn submit(core: &CoreHandle, obs: Vec<f32>) -> Result<Option<Reply>> {
     // per-request reply channel, sender *moved* into the request:
     // whatever happens to the request, recv below unblocks
     let (tx, rx) = mpsc::channel();
@@ -472,7 +580,7 @@ fn submit(core: &CoreHandle, obs: Vec<f32>) -> Result<Option<Vec<f32>>> {
         return Ok(None); // core gone — shutting down
     }
     match rx.recv() {
-        Ok(a) => Ok(Some(a)),
+        Ok(r) => Ok(Some(r)),
         Err(_) => Ok(None), // request dropped in shutdown drain
     }
 }

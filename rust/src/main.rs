@@ -11,6 +11,7 @@
 //!   export    convert a checkpoint into a deployable .qpol artifact
 //!   emit      render a .qpol as integer-only C and/or a Verilog module
 //!   serve     run the integer action server over TCP (ckpt or artifact dir)
+//!   monitor   subscribe to a serving monitor port, emit monitor.json
 //!   info      artifact/manifest summary
 //!
 //! Examples:
@@ -28,6 +29,7 @@ use qcontrol::coordinator::select::{paper_table1, select_model_on,
                                     select_run_name, usable_widths,
                                     SelectProtocol, SelectReport};
 use qcontrol::coordinator::serving;
+use qcontrol::coordinator::{CanarySpec, MonitorClient, OpsConfig};
 use qcontrol::coordinator::store::{now_secs, Store};
 use qcontrol::coordinator::sweep::{run_sweep, sweep_run_name, Scope,
                                    SweepProtocol};
@@ -90,6 +92,7 @@ fn main() -> Result<()> {
         "export" => cmd_export(&args),
         "emit" => cmd_emit(&args),
         "serve" => cmd_serve(&args),
+        "monitor" => cmd_monitor(&args),
         "info" => cmd_info(&args),
         // (`--help` never reaches here: `--`-prefixed tokens are flags,
         // so `qcontrol --help` lands on the empty-positional default)
@@ -143,8 +146,22 @@ usage: qcontrol <cmd> [--flags]
             identical ROMs shared across policies)
   serve    --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
            [--max-batch N] [--max-connections N]
+           [--watch] [--reload-poll-ms MS]
+           [--canary ID=FRACTION[,ID=FRACTION...]]
+           [--monitor-port P] [--monitor-tick-ms MS]
            (--dir serves every .qpol in ARTIFACTS, routed by policy id
-            over the v2 wire protocol; v1 clients get the default policy)
+            over the v2/v3 wire protocols; v1 clients get the default
+            policy. --watch hot-reloads a policy when its .qpol changes
+            on disk — publish with tmp+rename; every v3 reply carries
+            the policy's monotone version. --canary mirrors that
+            fraction of traffic through <ID>.qpol.canary and tracks
+            divergence; promote/rollback over the monitor port.
+            --monitor-port streams telemetry to `qcontrol monitor`)
+  monitor  --addr HOST:PORT [--frames N] [--out FILE]
+           [--promote ID] [--rollback ID]
+           (subscribes to a serving monitor port, prints per-policy
+            state and ops events for N frames (default 5), then writes
+            the merged state as monitor.json)
   info
 
 sweep/select/pipeline run trials on a parallel executor (--jobs /
@@ -667,10 +684,37 @@ fn cmd_serve(a: &Args) -> Result<()> {
         reg.insert(artifact_from_ckpt(a)?)?;
         reg
     };
+    let mut ops = OpsConfig::default();
+    // --canary implies --watch: the candidate comes from a watched
+    // sidecar, so canarying without the watcher could never see one
+    if a.has("watch") || a.has("canary") {
+        let dir = a.str_opt("dir").context(
+            "--watch/--canary need --dir: hot reload watches the \
+             artifact directory")?;
+        ops.watch_dir = Some(std::path::PathBuf::from(dir));
+    }
+    ops.reload_poll =
+        std::time::Duration::from_millis(a.u64("reload-poll-ms", 100)?);
+    if let Some(spec) = a.str_opt("canary") {
+        ops.canary = CanarySpec::parse_list(spec).context("--canary")?;
+    }
+    if let Some(p) = a.str_opt("monitor-port") {
+        let mp: u16 = p.parse()
+            .with_context(|| format!("--monitor-port={p}"))?;
+        let l = std::net::TcpListener::bind(("127.0.0.1", mp))?;
+        println!("monitor streaming on 127.0.0.1:{mp} \
+                  (subscribe with `qcontrol monitor --addr \
+                  127.0.0.1:{mp}`)");
+        ops.monitor = Some(std::sync::Arc::new(l));
+    }
+    ops.monitor_tick =
+        std::time::Duration::from_millis(a.u64("monitor-tick-ms", 500)?);
+
     let cfg = serving::ServerConfig {
         max_connections: a.usize("max-connections", 64)?,
         max_batch: a.usize("max-batch", 32)?,
         default_policy: a.str_opt("default").map(|s| s.to_string()),
+        ops,
         ..serving::ServerConfig::default()
     };
     cfg.validate()?;
@@ -678,6 +722,15 @@ fn cmd_serve(a: &Args) -> Result<()> {
 
     let port = a.usize("port", 7777)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    if let Some(dir) = &cfg.ops.watch_dir {
+        println!("hot reload: watching {} every {} ms",
+                 dir.display(), cfg.ops.reload_poll.as_millis());
+    }
+    for c in &cfg.ops.canary {
+        println!("canary: {} at fraction {} (candidate {}{})",
+                 c.id, c.fraction, c.id,
+                 qcontrol::coordinator::ops::SIDECAR_SUFFIX);
+    }
     println!("serving {} integer policy(ies) on 127.0.0.1:{port}:",
              registry.len());
     for (id, art) in registry.iter() {
@@ -690,10 +743,96 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stats = serving::serve_registry(listener, registry, stop, cfg)?;
     println!("served {} requests over {} connections ({} batched passes, \
-              {} policy cores), inference p50 {:.1} µs  p99 {:.1} µs  \
-              p99.9 {:.1} µs",
+              {} policy cores, {} hot reloads), inference p50 {:.1} µs  \
+              p99 {:.1} µs  p99.9 {:.1} µs",
              stats.requests, stats.connections, stats.batches,
-             stats.policies, stats.p50_us, stats.p99_us, stats.p999_us);
+             stats.policies, stats.reloads, stats.p50_us, stats.p99_us,
+             stats.p999_us);
+    Ok(())
+}
+
+/// `qcontrol monitor`: subscribe to a serving monitor port, merge the
+/// full-snapshot + diff stream back into complete per-policy state,
+/// print it live, and persist the final merged view as monitor.json.
+fn cmd_monitor(a: &Args) -> Result<()> {
+    let addr = a.str("addr", "127.0.0.1:7878");
+    let mut client = MonitorClient::connect(&addr)?;
+    if let Some(id) = a.str_opt("promote") {
+        client.promote(id)?;
+        println!("-> promote `{id}` (outcome arrives on the event feed)");
+    }
+    if let Some(id) = a.str_opt("rollback") {
+        client.rollback(id)?;
+        println!("-> rollback `{id}` (outcome arrives on the event feed)");
+    }
+    let frames = a.usize("frames", 5)?;
+
+    // merged view: diffs overlay the snapshot field-by-field
+    let mut state: std::collections::BTreeMap<String, Json> =
+        std::collections::BTreeMap::new();
+    let mut server = Json::Obj(Default::default());
+    let mut events: Vec<Json> = Vec::new();
+    for i in 0..frames.max(1) {
+        let frame = client.recv()
+            .with_context(|| format!("monitor frame {i}"))?;
+        let kind = frame.get("type")?.as_str()?.to_string();
+        for (id, fields) in frame.get("policies")?.as_obj()? {
+            let slot = state.entry(id.clone()).or_insert_with(
+                || Json::Obj(Default::default()));
+            if let (Json::Obj(dst), Ok(src)) = (slot, fields.as_obj()) {
+                for (k, v) in src {
+                    dst.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        server = frame.get("server")?.clone();
+        let new_events = frame.get("events")?.as_arr()?;
+        events.extend(new_events.iter().cloned());
+        println!("frame {i} ({kind}): {} policy update(s), {} event(s)",
+                 frame.get("policies")?.as_obj()?.len(),
+                 new_events.len());
+        for ev in new_events {
+            println!("  event {}", ev.to_string());
+        }
+    }
+
+    let mut table = Table::new(&["policy", "version", "requests", "qps",
+                                 "p50 µs", "p99 µs", "canary"]);
+    for (id, fields) in &state {
+        let num = |k: &str| -> f64 {
+            fields.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+        };
+        let canary = match fields.opt("canary_fraction") {
+            Some(f) => format!(
+                "{}@{} dis={:.3}", if fields.opt("candidate_live")
+                    .and_then(|v| v.as_bool().ok()).unwrap_or(false)
+                { "live" } else { "-" },
+                f.as_f64().unwrap_or(0.0), num("disagree_rate")),
+            None => "-".to_string(),
+        };
+        table.row(vec![id.clone(), format!("{}", num("version") as u64),
+                       format!("{}", num("requests") as u64),
+                       format!("{:.1}", num("qps")),
+                       format!("{:.1}", num("p50_us")),
+                       format!("{:.1}", num("p99_us")), canary]);
+    }
+    table.print();
+
+    let report = Json::obj(vec![
+        ("v", Json::num(1.0)),
+        ("addr", Json::str(addr.as_str())),
+        ("frames", Json::num(frames as f64)),
+        ("policies", Json::Obj(state)),
+        ("server", server),
+        ("events", Json::Arr(events)),
+    ]);
+    let out = a.str("out", "monitor.json");
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, report.to_string())
+        .with_context(|| format!("write {out}"))?;
+    println!("monitor report -> {out}");
     Ok(())
 }
 

@@ -568,6 +568,42 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Read the stored CRC out of a `.qpol` file's END section without
+/// parsing (or even reading) the body: magic + version from the head,
+/// `tag 0xFFFF | len 4 | crc32` from the last 14 bytes. This is the hot
+/// probe of the serving reload watcher — two tiny reads per candidate
+/// file per change, so polling a large artifact directory stays cheap.
+///
+/// The returned CRC identifies the file *content* (it covers every byte
+/// before the END section); whether that content is a valid artifact is
+/// only established by [`PolicyArtifact::load`].
+pub fn crc_probe(path: impl AsRef<Path>) -> Result<u32> {
+    use std::io::{Read as _, Seek, SeekFrom};
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let len = f.metadata()?.len();
+    // minimal file: magic(4) ver(2) flags(2) + END(14)
+    ensure!(len >= 22, "{}: {len} bytes is too short for a .qpol",
+            path.display());
+    let mut head = [0u8; 6];
+    f.read_exact(&mut head)?;
+    ensure!(head[..4] == MAGIC, "{}: bad magic (not a .qpol file)",
+            path.display());
+    let version = u16::from_le_bytes([head[4], head[5]]);
+    ensure!(version == VERSION, "{}: unsupported .qpol version {version}",
+            path.display());
+    f.seek(SeekFrom::End(-14))?;
+    let mut end = [0u8; 14];
+    f.read_exact(&mut end)?;
+    let tag = u16::from_le_bytes([end[0], end[1]]);
+    let sec_len = u64::from_le_bytes(end[2..10].try_into().unwrap());
+    ensure!(tag == SEC_END && sec_len == 4,
+            "{}: malformed END section (tag {tag:#06x}, len {sec_len})",
+            path.display());
+    Ok(u32::from_le_bytes(end[10..14].try_into().unwrap()))
+}
+
 /// CRC-32 (IEEE 802.3, reflected); bitwise — artifact files are small and
 /// written once, so simplicity beats a table here.
 pub fn crc32(bytes: &[u8]) -> u32 {
@@ -651,6 +687,34 @@ mod tests {
         let want = probe;
         norm.normalize(&mut probe);
         assert_eq!(probe, want);
+    }
+
+    #[test]
+    fn crc_probe_matches_full_parse() {
+        let dir = std::env::temp_dir().join("qcontrol_crc_probe");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let policy = testkit::toy_policy(4, 4, 8, 2, BitCfg::new(4, 3, 8));
+        let art = PolicyArtifact::new("probe", policy);
+        let bytes = art.to_bytes().unwrap();
+        let path = dir.join("probe.qpol");
+        std::fs::write(&path, &bytes).unwrap();
+        // the probe reads exactly the CRC the writer sealed
+        let want = crc32(&bytes[..bytes.len() - 14]);
+        assert_eq!(crc_probe(&path).unwrap(), want);
+        // changing any content byte changes the sealed CRC
+        let mut art2 = art.clone();
+        art2.env = "pendulum".to_string();
+        std::fs::write(&path, art2.to_bytes().unwrap()).unwrap();
+        assert_ne!(crc_probe(&path).unwrap(), want);
+        // a file too short / wrong magic / torn END is a probe error
+        std::fs::write(&path, b"QPOL").unwrap();
+        assert!(crc_probe(&path).is_err());
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        assert!(crc_probe(&path).is_err());
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(crc_probe(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -15,10 +15,31 @@ use super::artifact::PolicyArtifact;
 use super::PolicyBackend;
 use crate::intinfer::IntEngine;
 
-/// Policies keyed by id, in deterministic (sorted) order.
+/// Policies keyed by id, in deterministic (sorted) order. Each entry
+/// carries a monotonically increasing *version*, starting at 1 on
+/// insert and bumped by every [`PolicyRegistry::reload_from_path`] —
+/// the number the serving ops plane stamps on replies and reload
+/// events.
 #[derive(Default)]
 pub struct PolicyRegistry {
     entries: BTreeMap<String, PolicyArtifact>,
+    versions: BTreeMap<String, u64>,
+}
+
+/// Shared compatibility gate for replacing a live policy: the routing
+/// facts a connection relies on (observation/action dims) are fixed for
+/// a serving lifetime, so a replacement artifact must match them.
+/// Everything else (weights, thresholds, normalizer values, bit
+/// widths) may change freely.
+pub fn compatible_swap(art: &PolicyArtifact, obs_dim: usize,
+                       act_dim: usize) -> Result<()> {
+    anyhow::ensure!(art.policy.obs_dim == obs_dim,
+                    "policy `{}`: replacement obs_dim {} != served {}",
+                    art.id, art.policy.obs_dim, obs_dim);
+    anyhow::ensure!(art.policy.act_dim == act_dim,
+                    "policy `{}`: replacement act_dim {} != served {}",
+                    art.id, art.policy.act_dim, act_dim);
+    Ok(())
 }
 
 impl PolicyRegistry {
@@ -47,8 +68,40 @@ impl PolicyRegistry {
                         "policy `{}`: normalizer dim {} != obs_dim {}",
                         artifact.id, artifact.norm_mean.len(),
                         artifact.policy.obs_dim);
+        self.versions.insert(artifact.id.clone(), 1);
         self.entries.insert(artifact.id.clone(), artifact);
         Ok(())
+    }
+
+    /// Current version of one entry (1 = as first inserted).
+    pub fn version_of(&self, id: &str) -> Option<u64> {
+        self.versions.get(id).copied()
+    }
+
+    /// Replace an existing entry from a `.qpol` file, bumping its
+    /// version. The artifact's *parsed* id must already be registered
+    /// (a reload can never add or rename a policy), and the replacement
+    /// must pass [`compatible_swap`] against the incumbent's dims.
+    /// Returns the id and its new version.
+    pub fn reload_from_path(&mut self, path: impl AsRef<Path>)
+                            -> Result<(String, u64)> {
+        let path = path.as_ref();
+        let art = PolicyArtifact::load(path)?;
+        let old = self.entries.get(&art.id).with_context(|| {
+            format!("reload of {}: id `{}` is not registered",
+                    path.display(), art.id)
+        })?;
+        compatible_swap(&art, old.policy.obs_dim, old.policy.act_dim)?;
+        let v = self
+            .versions
+            .get(&art.id)
+            .copied()
+            .unwrap_or(1)
+            .saturating_add(1);
+        let id = art.id.clone();
+        self.versions.insert(id.clone(), v);
+        self.entries.insert(id.clone(), art);
+        Ok((id, v))
     }
 
     /// Load every `*.qpol` file in `dir`. A directory with no artifacts
@@ -91,6 +144,22 @@ impl PolicyRegistry {
     /// the weights then live exactly once per core).
     pub fn into_entries(self) -> BTreeMap<String, PolicyArtifact> {
         self.entries
+    }
+
+    /// Like [`PolicyRegistry::into_entries`] but keeping each entry's
+    /// version — the form the serving ops plane consumes, so versions
+    /// survive the registry → policy-slot handoff.
+    pub fn into_versioned_entries(self)
+                                  -> BTreeMap<String, (PolicyArtifact, u64)>
+    {
+        let versions = self.versions;
+        self.entries
+            .into_iter()
+            .map(|(id, art)| {
+                let v = versions.get(&id).copied().unwrap_or(1);
+                (id, (art, v))
+            })
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -203,6 +272,41 @@ mod tests {
         // a corrupt artifact fails the whole load, loudly
         std::fs::write(dir.join("bad.qpol"), b"not a qpol").unwrap();
         assert!(PolicyRegistry::load_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reload_bumps_version_and_gates_dims() {
+        let dir = std::env::temp_dir().join("qcontrol_registry_reload");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut reg = PolicyRegistry::new();
+        reg.insert(art("p", 1)).unwrap();
+        assert_eq!(reg.version_of("p"), Some(1));
+        assert_eq!(reg.version_of("nope"), None);
+
+        // same id, new weights: version bumps, entry replaced
+        let path = dir.join("p.qpol");
+        art("p", 2).save(&path).unwrap();
+        assert_eq!(reg.reload_from_path(&path).unwrap(),
+                   ("p".to_string(), 2));
+        assert_eq!(reg.version_of("p"), Some(2));
+
+        // unknown id: a reload can never add a policy
+        art("other", 3).save(&path).unwrap();
+        assert!(reg.reload_from_path(&path).is_err());
+        assert_eq!(reg.version_of("p"), Some(2));
+
+        // dim change: rejected by the swap gate
+        let wide = PolicyArtifact::new(
+            "p", testkit::toy_policy(4, 6, 8, 2, BitCfg::new(4, 3, 8)));
+        wide.save(&path).unwrap();
+        let err = reg.reload_from_path(&path).unwrap_err();
+        assert!(err.to_string().contains("obs_dim"), "{err}");
+        assert_eq!(reg.version_of("p"), Some(2));
+
+        let versioned = reg.into_versioned_entries();
+        assert_eq!(versioned["p"].1, 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,591 @@
+//! Integration tests for the live ops plane: versioned hot reload under
+//! concurrent load (bit-identical replies, zero client-visible errors),
+//! malformed-artifact resilience, deterministic canary routing with
+//! hand-computed divergence accounting, promote/rollback over the
+//! monitor protocol, the v3 versioned wire framing, and the
+//! full-snapshot-then-diffs monitor stream.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qcontrol::coordinator::ops::{canary, CanarySpec, MonitorClient,
+                                 OpsConfig};
+use qcontrol::coordinator::serving::{serve_registry, RoutedClient,
+                                     ServerConfig, ServerStats};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
+use qcontrol::quant::BitCfg;
+use qcontrol::util::json::Json;
+use qcontrol::util::testkit;
+
+const OBS: usize = 5;
+const ACT: usize = 3;
+
+fn toy_art(id: &str, seed: u64, env: &str) -> PolicyArtifact {
+    let mut art = PolicyArtifact::new(
+        id, testkit::toy_policy(seed, OBS, 12, ACT, BitCfg::new(4, 3, 8)));
+    art.env = env.to_string();
+    art
+}
+
+fn obs_for(client: usize, step: usize) -> Vec<f32> {
+    (0..OBS)
+        .map(|d| {
+            ((client * 131 + step * 17 + d * 7) as f32 * 0.23).sin() * 2.0
+        })
+        .collect()
+}
+
+/// Atomic publication, the contract the watcher documents: write to a
+/// temp name the watcher ignores, then rename into place.
+fn publish_bytes(dir: &Path, name: &str, bytes: &[u8]) {
+    let tmp = dir.join(format!("{name}.tmp"));
+    std::fs::write(&tmp, bytes).unwrap();
+    std::fs::rename(&tmp, dir.join(name)).unwrap();
+}
+
+fn publish(dir: &Path, name: &str, art: &PolicyArtifact) {
+    publish_bytes(dir, name, &art.to_bytes().unwrap());
+}
+
+struct OpsHarness {
+    dir: PathBuf,
+    addr: String,
+    mon_addr: String,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<ServerStats>,
+}
+
+/// Start a registry server with the full ops plane attached: `arts` are
+/// saved as `<id>.qpol` (and loaded back through the production
+/// `load_dir` path), `sidecars` as `<id>.qpol.canary`.
+fn start(dirname: &str, arts: &[PolicyArtifact],
+         sidecars: &[PolicyArtifact], canary: Vec<CanarySpec>)
+         -> OpsHarness {
+    let dir = std::env::temp_dir().join(dirname);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    for a in arts {
+        a.save(dir.join(format!("{}.qpol", a.id))).unwrap();
+    }
+    for a in sidecars {
+        a.save(dir.join(format!("{}.qpol.canary", a.id))).unwrap();
+    }
+    let registry = PolicyRegistry::load_dir(&dir).unwrap();
+    let mon = TcpListener::bind("127.0.0.1:0").unwrap();
+    let mon_addr = mon.local_addr().unwrap().to_string();
+    let cfg = ServerConfig {
+        ops: OpsConfig {
+            watch_dir: Some(dir.clone()),
+            reload_poll: Duration::from_millis(15),
+            canary,
+            monitor: Some(Arc::new(mon)),
+            monitor_tick: Duration::from_millis(40),
+        },
+        ..ServerConfig::default()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        serve_registry(listener, registry, stop2, cfg).unwrap()
+    });
+    OpsHarness { dir, addr, mon_addr, stop, handle }
+}
+
+fn finish(h: OpsHarness) -> ServerStats {
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&h.dir);
+    stats
+}
+
+/// A monitor subscriber that merges the full-snapshot + diff stream back
+/// into complete per-policy state, exactly as `qcontrol monitor` does.
+/// Heartbeat frames arrive every tick, so `wait` always makes progress.
+struct MonitorView {
+    client: MonitorClient,
+    frames: Vec<Json>,
+    state: BTreeMap<String, BTreeMap<String, Json>>,
+    events: Vec<Json>,
+    server: Json,
+}
+
+impl MonitorView {
+    fn connect(addr: &str) -> MonitorView {
+        MonitorView {
+            client: MonitorClient::connect(addr).unwrap(),
+            frames: Vec::new(),
+            state: BTreeMap::new(),
+            events: Vec::new(),
+            server: Json::Null,
+        }
+    }
+
+    fn pump(&mut self) {
+        let frame = self.client.recv().expect("monitor stream closed");
+        for (id, fields) in frame.get("policies").unwrap().as_obj().unwrap()
+        {
+            let merged = self.state.entry(id.clone()).or_default();
+            for (k, v) in fields.as_obj().unwrap() {
+                merged.insert(k.clone(), v.clone());
+            }
+        }
+        self.events.extend(
+            frame.get("events").unwrap().as_arr().unwrap().iter().cloned());
+        self.server = frame.get("server").unwrap().clone();
+        self.frames.push(frame);
+    }
+
+    fn wait(&mut self, secs: u64, what: &str,
+            pred: impl Fn(&MonitorView) -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        while !pred(self) {
+            assert!(Instant::now() < deadline,
+                    "timeout waiting for {what}");
+            self.pump();
+        }
+    }
+
+    fn num(&self, id: &str, key: &str) -> f64 {
+        self.state
+            .get(id)
+            .and_then(|f| f.get(key))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(-1.0)
+    }
+
+    fn flag(&self, id: &str, key: &str) -> bool {
+        self.state
+            .get(id)
+            .and_then(|f| f.get(key))
+            .and_then(|v| v.as_bool().ok())
+            .unwrap_or(false)
+    }
+
+    fn server_num(&self, key: &str) -> f64 {
+        self.server
+            .opt(key)
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(-1.0)
+    }
+
+    fn events_of(&self, name: &str) -> Vec<&Json> {
+        self.events
+            .iter()
+            .filter(|e| {
+                e.opt("event").and_then(|v| v.as_str().ok()) == Some(name)
+            })
+            .collect()
+    }
+}
+
+fn op_failed_on(v: &MonitorView, op: &str) -> bool {
+    v.events_of("op_failed")
+        .iter()
+        .any(|e| e.opt("op").and_then(|o| o.as_str().ok()) == Some(op))
+}
+
+// ---- hot reload --------------------------------------------------------
+
+/// The acceptance gate: 10 hot swaps while 4 clients hammer the server —
+/// every reply bit-identical to the (unchanged) policy, versions monotone
+/// per connection, zero client-visible errors, and the monitor sees every
+/// reload in order.
+#[test]
+fn hot_swaps_under_load_are_lossless_and_bit_identical() {
+    let art = toy_art("p", 42, "v1");
+    let h = start("qcontrol_ops_hotswap", &[art.clone()], &[], vec![]);
+    let mut view = MonitorView::connect(&h.mon_addr);
+    // the full snapshot proves we are subscribed before any reload, so
+    // the event feed below is complete
+    view.pump();
+
+    let done = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for c in 0..4usize {
+        let addr = h.addr.clone();
+        let policy = art.policy.clone();
+        let done = done.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut check = IntEngine::new(policy);
+            let mut cl = RoutedClient::connect(&addr).unwrap();
+            let mut last_ver = 0u64;
+            let mut n = 0u64;
+            let mut s = 0usize;
+            while !done.load(Ordering::Relaxed) {
+                let obs = obs_for(c, s);
+                let (act, ver) = cl.act_versioned("p", &obs).unwrap();
+                // only the env tag changes on disk, so the actions must
+                // stay bit-identical across every swap
+                assert_eq!(act, check.infer_vec(&obs),
+                           "client {c} step {s}");
+                assert!(ver >= last_ver,
+                        "version went backwards: {last_ver} -> {ver}");
+                last_ver = ver;
+                n += 1;
+                s += 1;
+            }
+            n
+        }));
+    }
+
+    // 10 sequential publications; each env tag has a distinct length so
+    // the metadata gate fires even on coarse-mtime filesystems
+    let mut probe = RoutedClient::connect(&h.addr).unwrap();
+    for k in 2..=11u64 {
+        let mut next = art.clone();
+        next.env = "x".repeat(k as usize);
+        publish(&h.dir, "p.qpol", &next);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (_, v) = probe
+                .act_versioned("p", &obs_for(9, k as usize))
+                .unwrap();
+            if v >= k {
+                break;
+            }
+            assert!(Instant::now() < deadline,
+                    "swap to v{k} never applied (still v{v})");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+
+    done.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    for j in clients {
+        total += j.join().unwrap();
+    }
+    assert!(total >= 40, "clients made only {total} requests");
+
+    view.wait(30, "10 reloaded events",
+              |v| v.events_of("reloaded").len() >= 10);
+    let versions: Vec<u64> = view
+        .events_of("reloaded")
+        .iter()
+        .map(|e| e.get("version").unwrap().as_f64().unwrap() as u64)
+        .collect();
+    assert_eq!(versions, (2..=11).collect::<Vec<u64>>(),
+               "monitor must see every reload, in order");
+    view.wait(10, "state at version 11",
+              |v| v.num("p", "version") == 11.0);
+
+    let stats = finish(h);
+    assert_eq!(stats.io_errors, 0,
+               "hot swaps must be invisible to clients");
+    assert_eq!(stats.reloads, 10);
+    assert_eq!(stats.policies, 1);
+}
+
+/// A malformed artifact (truncated or bit-flipped) must never kill
+/// serving: the incumbent keeps answering bit-exactly at its version, a
+/// `reload_failed` event names the failure, and a later valid artifact
+/// still lands.
+#[test]
+fn malformed_artifacts_never_kill_serving() {
+    let art = toy_art("p", 7, "good");
+    let good = art.to_bytes().unwrap();
+    let h = start("qcontrol_ops_malformed", &[art.clone()], &[], vec![]);
+    let mut view = MonitorView::connect(&h.mon_addr);
+    view.pump();
+
+    let mut check = IntEngine::new(art.policy.clone());
+    let mut cl = RoutedClient::connect(&h.addr).unwrap();
+    let obs = obs_for(0, 0);
+    assert_eq!(cl.act_versioned("p", &obs).unwrap(),
+               (check.infer_vec(&obs), 1));
+
+    // (1) truncated file: even the END-section probe fails
+    publish_bytes(&h.dir, "p.qpol", &good[..good.len() - 7]);
+    view.wait(30, "first reload_failed",
+              |v| !v.events_of("reload_failed").is_empty());
+
+    // (2) bit flip deep in a layer body: the sealed CRC still *reads*
+    // fine, so only the full parse catches it — as a checksum mismatch
+    let mut flipped = good.clone();
+    let at = good.len() - 20;
+    flipped[at] ^= 0x01;
+    publish_bytes(&h.dir, "p.qpol", &flipped);
+    view.wait(30, "second reload_failed",
+              |v| v.events_of("reload_failed").len() >= 2);
+    {
+        let evs = view.events_of("reload_failed");
+        assert_eq!(evs[0].get("id").unwrap().as_str().unwrap(), "p");
+        let err = evs[1].get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    // the incumbent served bit-exactly at version 1 throughout
+    assert_eq!(cl.act_versioned("p", &obs).unwrap(),
+               (check.infer_vec(&obs), 1));
+
+    // (3) a valid replacement after two failures still swaps in
+    let mut fixed = art.clone();
+    fixed.env = "fixed-after-failures".to_string();
+    publish(&h.dir, "p.qpol", &fixed);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (act, v) = cl.act_versioned("p", &obs).unwrap();
+        assert_eq!(act, check.infer_vec(&obs));
+        if v >= 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "recovery swap never applied");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    view.wait(10, "server reload_failures count",
+              |v| v.server_num("reload_failures") >= 2.0);
+
+    let stats = finish(h);
+    assert_eq!(stats.reloads, 1, "only the valid artifact reloads");
+    assert_eq!(stats.io_errors, 0);
+}
+
+// ---- canary routing ----------------------------------------------------
+
+/// Canary selection is a pure function of the observation bits: the
+/// mirrored count reported by the monitor equals exactly the count this
+/// test predicts with `canary::selects`, and every client reply is the
+/// incumbent's action.
+#[test]
+fn canary_selection_is_deterministic_and_exact() {
+    let a = toy_art("p", 42, "inc");
+    let b = toy_art("p", 77, "cand");
+    let h = start("qcontrol_ops_canary_det", &[a.clone()], &[b],
+                  vec![CanarySpec { id: "p".into(), fraction: 0.5 }]);
+    let mut view = MonitorView::connect(&h.mon_addr);
+    view.wait(30, "candidate installed",
+              |v| v.flag("p", "candidate_live"));
+
+    let obs_set: Vec<Vec<f32>> = (0..30).map(|s| obs_for(5, s)).collect();
+    let expected = obs_set
+        .iter()
+        .filter(|o| canary::selects(0.5, o))
+        .count() as f64;
+    assert!(expected > 0.0 && expected < 30.0,
+            "degenerate observation set ({expected} selected)");
+
+    let mut check = IntEngine::new(a.policy.clone());
+    let mut cl = RoutedClient::connect(&h.addr).unwrap();
+    for (s, o) in obs_set.iter().enumerate() {
+        // mirrored or not, the client gets the incumbent's action
+        assert_eq!(cl.act("p", o).unwrap(), check.infer_vec(o),
+                   "step {s}");
+    }
+
+    view.wait(30, "all requests visible",
+              |v| v.num("p", "requests") == 30.0);
+    assert_eq!(view.num("p", "canaried"), expected);
+    assert_eq!(view.num("p", "canary_fraction"), 0.5);
+
+    let stats = finish(h);
+    assert_eq!(stats.io_errors, 0);
+    assert_eq!(stats.reloads, 0, "mirroring is not a reload");
+}
+
+/// At fraction 1.0 every request runs through both engines; the
+/// divergence block the monitor reports (disagreement count, per-
+/// component bit mismatches, L∞, rate) must equal this test's
+/// hand-computed int-vs-int′ comparison *exactly*.
+#[test]
+fn canary_divergence_matches_hand_computed_values() {
+    let a = toy_art("p", 42, "inc");
+    let b = toy_art("p", 77, "cand");
+    let h = start("qcontrol_ops_canary_div", &[a.clone()], &[b.clone()],
+                  vec![CanarySpec { id: "p".into(), fraction: 1.0 }]);
+    let mut view = MonitorView::connect(&h.mon_addr);
+    view.wait(30, "candidate installed",
+              |v| v.flag("p", "candidate_live"));
+
+    let n = 25usize;
+    let mut inc = IntEngine::new(a.policy.clone());
+    let mut cand = IntEngine::new(b.policy.clone());
+    let mut linf = 0f64;
+    let mut disagreed = 0u64;
+    let mut mism = vec![0u64; ACT];
+    let mut cl = RoutedClient::connect(&h.addr).unwrap();
+    for s in 0..n {
+        let obs = obs_for(3, s);
+        let want = inc.infer_vec(&obs);
+        assert_eq!(cl.act("p", &obs).unwrap(), want,
+                   "client must see the incumbent, step {s}");
+        // the same arithmetic the server's divergence ledger uses
+        let alt = cand.infer_vec(&obs);
+        let mut any = false;
+        for (i, (&x, &y)) in want.iter().zip(&alt).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                any = true;
+                mism[i] += 1;
+            }
+            let d = (x as f64 - y as f64).abs();
+            if d > linf {
+                linf = d;
+            }
+        }
+        if any {
+            disagreed += 1;
+        }
+    }
+    assert!(disagreed > 0, "seeds 42/77 should disagree somewhere");
+
+    view.wait(30, "every request canaried",
+              |v| v.num("p", "canaried") == n as f64);
+    assert_eq!(view.num("p", "disagreed"), disagreed as f64);
+    // f64 values survive the JSON framing exactly (shortest-roundtrip
+    // formatting), so exact equality is the right assertion
+    assert_eq!(view.num("p", "linf_max"), linf);
+    assert_eq!(view.num("p", "disagree_rate"), disagreed as f64 / n as f64);
+    let got_mism: Vec<u64> = view.state["p"]["bit_mismatch"]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u64)
+        .collect();
+    assert_eq!(got_mism, mism);
+
+    let stats = finish(h);
+    assert_eq!(stats.io_errors, 0);
+}
+
+/// Promote/rollback round-trip over the monitor protocol: promotion makes
+/// the candidate the incumbent (replies switch engines, version bumps), a
+/// fresh sidecar installs a second generation, rollback drops it, and
+/// candidate-less commands fail visibly on the event feed.
+#[test]
+fn promote_and_rollback_over_the_monitor_protocol() {
+    let a = toy_art("p", 42, "inc");
+    let b = toy_art("p", 77, "cand");
+    let h = start("qcontrol_ops_promote", &[a.clone()], &[b.clone()],
+                  vec![CanarySpec { id: "p".into(), fraction: 0.25 }]);
+    let mut view = MonitorView::connect(&h.mon_addr);
+    view.wait(30, "candidate installed",
+              |v| v.flag("p", "candidate_live"));
+
+    let mut inc = IntEngine::new(a.policy.clone());
+    let mut cand = IntEngine::new(b.policy.clone());
+    let mut cl = RoutedClient::connect(&h.addr).unwrap();
+    let obs = obs_for(1, 1);
+    assert_eq!(cl.act_versioned("p", &obs).unwrap(),
+               (inc.infer_vec(&obs), 1));
+
+    view.client.promote("p").unwrap();
+    view.wait(30, "promotion applied",
+              |v| v.num("p", "version") == 2.0);
+    assert!(!view.flag("p", "candidate_live"));
+    assert_eq!(cl.act_versioned("p", &obs).unwrap(),
+               (cand.infer_vec(&obs), 2),
+               "after promotion the candidate serves, at version 2");
+    let evs = view.events_of("canary_promoted");
+    assert_eq!(evs.len(), 1);
+    assert_eq!(evs[0].get("version").unwrap().as_f64().unwrap(), 2.0);
+
+    // a changed sidecar installs candidate generation 2...
+    let mut b2 = b.clone();
+    b2.env = "cand-gen2".to_string();
+    publish(&h.dir, "p.qpol.canary", &b2);
+    view.wait(30, "second candidate generation",
+              |v| v.flag("p", "candidate_live"));
+    assert_eq!(view.num("p", "candidate_gen"), 2.0);
+    // ...and rollback drops it without touching the promoted incumbent
+    view.client.rollback("p").unwrap();
+    view.wait(30, "rollback applied",
+              |v| !v.flag("p", "candidate_live")
+                  && !v.events_of("canary_rolled_back").is_empty());
+    assert_eq!(cl.act_versioned("p", &obs).unwrap(),
+               (cand.infer_vec(&obs), 2));
+
+    // with no candidate, both commands fail loudly on the event feed
+    view.client.promote("p").unwrap();
+    view.wait(30, "op_failed for promote",
+              |v| op_failed_on(v, "promote"));
+    view.client.rollback("p").unwrap();
+    view.wait(30, "op_failed for rollback",
+              |v| op_failed_on(v, "rollback"));
+
+    let stats = finish(h);
+    assert_eq!(stats.reloads, 1, "a promotion counts as a reload");
+    assert_eq!(stats.io_errors, 0);
+}
+
+// ---- wire protocol v3 and the monitor stream ---------------------------
+
+/// v2 and v3 requests mix freely on one connection; routing errors are
+/// v3 replies (not disconnects) and the connection stays usable.
+#[test]
+fn v2_and_v3_mix_on_one_connection_and_errors_stay_usable() {
+    let a = toy_art("p", 42, "x");
+    let h = start("qcontrol_ops_wire", &[a.clone()], &[], vec![]);
+    let mut check = IntEngine::new(a.policy.clone());
+    let mut cl = RoutedClient::connect(&h.addr).unwrap();
+    for s in 0..10usize {
+        let obs = obs_for(2, s);
+        if s % 2 == 0 {
+            let (act, ver) = cl.act_versioned("p", &obs).unwrap();
+            assert_eq!(ver, 1);
+            assert_eq!(act, check.infer_vec(&obs));
+        } else {
+            assert_eq!(cl.act("p", &obs).unwrap(), check.infer_vec(&obs));
+        }
+    }
+    let err = cl.act_versioned("nope", &obs_for(2, 0)).unwrap_err();
+    assert!(err.to_string().contains("nope"), "{err}");
+    let err = cl.act_versioned("p", &[1.0]).unwrap_err();
+    assert!(err.to_string().contains("expects"), "{err}");
+    let obs = obs_for(2, 99);
+    assert_eq!(cl.act_versioned("p", &obs).unwrap().0,
+               check.infer_vec(&obs));
+    let stats = finish(h);
+    assert_eq!(stats.io_errors, 0);
+}
+
+/// The monitor stream is one full snapshot then diffs: unchanged fields
+/// are never re-sent, yet merging the diffs reproduces complete state.
+#[test]
+fn monitor_stream_is_full_snapshot_then_diffs() {
+    let a = toy_art("p", 42, "x");
+    let h = start("qcontrol_ops_diffs", &[a.clone()], &[], vec![]);
+    let mut view = MonitorView::connect(&h.mon_addr);
+    view.pump();
+    assert_eq!(view.frames[0].get("type").unwrap().as_str().unwrap(),
+               "full");
+
+    // two waves of traffic with a frame observed between them force at
+    // least two diff frames that mention the policy
+    let mut cl = RoutedClient::connect(&h.addr).unwrap();
+    let mut sent = 0u64;
+    for wave in 0..2usize {
+        for s in 0..6usize {
+            cl.act("p", &obs_for(wave, s)).unwrap();
+            sent += 1;
+        }
+        let want = sent as f64;
+        view.wait(30, "requests visible",
+                  move |v| v.num("p", "requests") == want);
+    }
+
+    let diffs_with_p: Vec<&Json> = view
+        .frames
+        .iter()
+        .skip(1)
+        .filter(|f| {
+            f.get("policies").unwrap().opt("p").is_some()
+        })
+        .collect();
+    assert!(diffs_with_p.len() >= 2, "expected two diffs naming `p`");
+    let last = diffs_with_p.last().unwrap().get("policies").unwrap()
+        .opt("p").unwrap();
+    assert!(last.opt("requests").is_some());
+    assert!(last.opt("version").is_none(),
+            "unchanged fields must not be re-sent: {last:?}");
+    // the merged view still reproduces the complete state
+    assert_eq!(view.num("p", "version"), 1.0);
+    assert_eq!(view.num("p", "requests"), 12.0);
+
+    let stats = finish(h);
+    assert_eq!(stats.io_errors, 0);
+}
