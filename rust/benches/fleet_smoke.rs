@@ -1,0 +1,159 @@
+//! Fleet smoke bench: a small population-scale closed loop against a
+//! self-hosted live server, with one injected hot reload and forced
+//! connection drops — the CI guard that the fleet subsystem survives
+//! its own fault injection with zero unrecovered client errors.
+//!
+//! Artifact-free (surrogate toy policy, loopback TCP). Besides the
+//! human-readable table, every run writes `BENCH_fleet.json`
+//! (per-cohort return distributions joined with server-side tail
+//! latency and the fault/recovery ledger) so the fleet trajectory is
+//! machine-trackable across PRs.
+//!
+//! Scale knobs:
+//!   QCONTROL_FLEET_EPISODES=200 cargo bench --bench fleet_smoke
+
+use std::time::{Duration, Instant};
+
+use qcontrol::coordinator::serving::ClientConfig;
+use qcontrol::fleet::{run_fleet, FaultSpec, FleetConfig};
+use qcontrol::policy::PolicyArtifact;
+use qcontrol::quant::BitCfg;
+use qcontrol::util::bench::Table;
+use qcontrol::util::json::Json;
+use qcontrol::util::stats::ObsNormalizer;
+use qcontrol::util::testkit;
+
+const OBS: usize = 3;
+const ACT: usize = 1;
+const HIDDEN: usize = 16;
+
+fn pend_art(id: &str, seed: u64) -> PolicyArtifact {
+    let policy = testkit::toy_policy(seed, OBS, HIDDEN, ACT,
+                                     BitCfg::new(6, 4, 8));
+    let mut norm = ObsNormalizer::new(OBS, true);
+    for k in 0..32 {
+        let k = k as f32;
+        norm.observe(&[(k * 0.31).sin(), (k * 0.17).cos() * 0.6,
+                       k * 0.1 - 1.6]);
+    }
+    norm.freeze();
+    let mut art =
+        PolicyArtifact::new(id, policy).with_normalizer(&norm);
+    art.env = "pendulum".to_string();
+    art
+}
+
+fn main() {
+    let episodes: usize = std::env::var("QCONTROL_FLEET_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    println!();
+    println!("=== fleet_smoke: population closed loop over the wire, \
+              faults injected ===");
+    println!("surrogate pendulum policy {OBS}->{HIDDEN}->{HIDDEN}->{ACT} \
+              b=(6,4,8), {episodes} episodes, loopback TCP");
+    println!();
+
+    let arts = vec![pend_art("p", 7), pend_art("canary", 8)];
+    let cfg = FleetConfig {
+        spec: "60%=nominal 25%=sensor-noise 15%=sim2real@canary"
+            .to_string(),
+        episodes,
+        block: 10,
+        jobs: 4,
+        seed: 42,
+        faults: FaultSpec {
+            drop_every: 389,
+            delay_every: 997,
+            delay: Duration::from_millis(1),
+        },
+        reloads: 1,
+        client: ClientConfig {
+            reconnect_backoff: Duration::from_millis(2),
+            ..ClientConfig::default()
+        },
+        ..FleetConfig::default()
+    };
+
+    let t0 = Instant::now();
+    let report = run_fleet(arts, &cfg)
+        .expect("fleet smoke must complete with zero unrecovered errors");
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // the smoke contract: faults were actually injected AND absorbed
+    assert!(report.injected_reloads >= 1, "no reload was injected");
+    assert!(report.server.reloads >= 1,
+            "the server never applied the injected reload");
+    assert!(report.counters.forced_drops > 0,
+            "no connection drops were forced");
+    assert_eq!(report.counters.recovered, report.counters.forced_drops,
+               "every forced drop must be recovered");
+    assert_eq!(report.server.io_errors, 0,
+               "injected faults must stay server-side-clean");
+
+    let mut table = Table::new(&[
+        "cohort", "policy", "episodes", "mean", "p50", "p99",
+    ]);
+    for c in &report.cohorts {
+        table.row(vec![
+            c.label.clone(),
+            c.policy.clone().unwrap_or_else(|| "(default)".to_string()),
+            c.episodes.to_string(),
+            format!("{:.3}", c.mean),
+            format!("{:.3}", c.p50),
+            format!("{:.3}", c.p99),
+        ]);
+    }
+    table.print();
+
+    let req_s = report.counters.requests as f64 / wall_s;
+    println!();
+    println!("{} episodes in {wall_s:.2} s — {req_s:.0} actions/s over \
+              the wire; {} forced drops all recovered, {} reload(s) \
+              applied live, server p99.9 {:.2} µs, 0 unrecovered errors",
+             report.episodes, report.counters.forced_drops,
+             report.server.reloads, report.server.p999_us);
+
+    let cohort_rows: Vec<Json> = report
+        .cohorts
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("label", Json::str(&c.label)),
+                ("policy", Json::str(
+                    c.policy.clone().unwrap_or_default())),
+                ("episodes", Json::num(c.episodes as f64)),
+                ("mean", Json::num(c.mean)),
+                ("p50", Json::num(c.p50)),
+                ("p99", Json::num(c.p99)),
+            ])
+        })
+        .collect();
+    let bench = Json::obj(vec![
+        ("bench", Json::str("fleet_smoke")),
+        ("episodes", Json::num(report.episodes as f64)),
+        ("jobs", Json::num(report.jobs as f64)),
+        ("block", Json::num(report.block as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("actions_per_s", Json::num(req_s)),
+        ("requests", Json::num(report.counters.requests as f64)),
+        ("forced_drops",
+         Json::num(report.counters.forced_drops as f64)),
+        ("recovered", Json::num(report.counters.recovered as f64)),
+        ("delayed", Json::num(report.counters.delayed as f64)),
+        ("reloads", Json::num(report.server.reloads as f64)),
+        ("unrecovered_errors", Json::num(0.0)),
+        ("server_p50_us", Json::num(report.server.p50_us)),
+        ("server_p99_us", Json::num(report.server.p99_us)),
+        ("server_p999_us", Json::num(report.server.p999_us)),
+        ("monitor_frames", Json::num(report.monitor.frames as f64)),
+        ("monitor_peak_qps", Json::num(report.monitor.peak_qps)),
+        ("cohorts", Json::Arr(cohort_rows)),
+    ]);
+    match std::fs::write("BENCH_fleet.json", bench.to_string()) {
+        Ok(()) => println!("wrote BENCH_fleet.json"),
+        Err(e) => eprintln!("could not write BENCH_fleet.json: {e}"),
+    }
+}

@@ -39,6 +39,7 @@ pub use ops::{CanarySpec, MonitorClient, OpsConfig};
 pub use pipeline::{run_pipeline, PipelineRun};
 pub use select::{select_model, select_model_on, SelectProtocol,
                  SelectReport, Stage, StageOutcome};
-pub use serving::{ActionClient, RoutedClient, ServerConfig, ServerStats};
+pub use serving::{ActionClient, ClientConfig, RoutedClient, ServerConfig,
+                  ServerStats};
 pub use sweep::{fp32_band, run_config, run_points, run_sweep, PointSpec,
                 Scope, SweepPoint, SweepProtocol, SweepReport};

@@ -10,11 +10,78 @@
 //! and the throughput bench.
 
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::{MAX_WIRE_OBS, V2_MAGIC, V2_VERSION, V3_VERSION};
+
+/// Socket and reconnect tunables shared by the serving clients. The
+/// defaults bound every phase of a round-trip — a client can no longer
+/// hang forever on a stalled server — while staying far above any
+/// latency a healthy loopback or LAN server exhibits.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// TCP connect bound (applies per resolved address)
+    pub connect_timeout: Duration,
+    /// socket read bound: a reply byte must arrive within this window
+    pub read_timeout: Duration,
+    /// socket write bound against a stalled receiver
+    pub write_timeout: Duration,
+    /// reconnect attempts before [`RoutedClient::reconnect`] gives up
+    pub reconnect_attempts: u32,
+    /// backoff before the first reconnect attempt; doubles per attempt
+    pub reconnect_backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(5),
+            reconnect_attempts: 4,
+            reconnect_backoff: Duration::from_millis(25),
+        }
+    }
+}
+
+impl ClientConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.connect_timeout.is_zero()
+                        && !self.read_timeout.is_zero()
+                        && !self.write_timeout.is_zero(),
+                        "client timeouts must be non-zero (a zero socket \
+                         timeout means `block forever` to the OS)");
+        Ok(())
+    }
+}
+
+/// Open one configured stream: resolve, connect with a bound, arm the
+/// socket timeouts. Tries every resolved address before giving up.
+fn open_stream(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+    let addrs: Vec<_> = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "{addr} resolved to no addresses");
+    let mut last_err = None;
+    for sa in &addrs {
+        match TcpStream::connect_timeout(sa, cfg.connect_timeout) {
+            Ok(stream) => {
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(Some(cfg.read_timeout))?;
+                stream.set_write_timeout(Some(cfg.write_timeout))?;
+                return Ok(stream);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap())
+        .with_context(|| format!("connecting {addr} (timeout {:?})",
+                                 cfg.connect_timeout))
+}
 
 /// Synchronous v1 round-trip client: one outstanding request per
 /// connection, dimensions fixed at connect time.
@@ -27,8 +94,7 @@ pub struct ActionClient {
 impl ActionClient {
     pub fn connect(addr: &str, obs_dim: usize, act_dim: usize)
                    -> Result<ActionClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
+        let stream = open_stream(addr, &ClientConfig::default())?;
         Ok(ActionClient { stream, obs_dim, act_dim })
     }
 
@@ -53,15 +119,62 @@ impl ActionClient {
 /// comes back on the wire, so no dimensions are needed up front. Routing
 /// errors (unknown id, wrong obs count) surface as `Err` with the
 /// server's message; the connection stays usable afterwards.
+///
+/// Every socket phase is bounded by a [`ClientConfig`] timeout, and the
+/// client remembers its address, so a broken connection (server restart,
+/// injected fault, network blip) can be repaired in place with
+/// [`RoutedClient::reconnect`] — bounded retry with exponential backoff.
 pub struct RoutedClient {
     stream: TcpStream,
+    addr: String,
+    cfg: ClientConfig,
 }
 
 impl RoutedClient {
+    /// Connect with [`ClientConfig::default`] timeouts.
     pub fn connect(addr: &str) -> Result<RoutedClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(RoutedClient { stream })
+        RoutedClient::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with explicit timeout/reconnect tunables.
+    pub fn connect_with(addr: &str, cfg: ClientConfig)
+                        -> Result<RoutedClient> {
+        cfg.validate()?;
+        let stream = open_stream(addr, &cfg)?;
+        Ok(RoutedClient { stream, addr: addr.to_string(), cfg })
+    }
+
+    /// Drop the current connection and dial the same address again:
+    /// up to `reconnect_attempts` tries, sleeping
+    /// `reconnect_backoff * 2^k` before try `k`. Any state of the old
+    /// connection (a half-written request, an unread reply) is
+    /// discarded — callers re-send after a successful reconnect.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let mut backoff = self.cfg.reconnect_backoff;
+        let mut last = None;
+        for _ in 0..self.cfg.reconnect_attempts.max(1) {
+            std::thread::sleep(backoff);
+            backoff = backoff.saturating_mul(2);
+            match open_stream(&self.addr, &self.cfg) {
+                Ok(stream) => {
+                    self.stream = stream;
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap()).with_context(|| {
+            format!("reconnect to {} failed after {} attempt(s)",
+                    self.addr, self.cfg.reconnect_attempts.max(1))
+        })
+    }
+
+    /// Close the underlying socket without replacing it. The next
+    /// request will fail until [`RoutedClient::reconnect`] succeeds —
+    /// this is the fault-injection hook the fleet harness uses to
+    /// exercise mid-episode connection drops.
+    pub fn force_disconnect(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 
     /// Send one observation to the policy `id` (`""` = server default),

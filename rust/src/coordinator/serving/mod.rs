@@ -105,7 +105,7 @@ use crate::policy::{PolicyArtifact, PolicyRegistry};
 use crate::util::stats::ObsNormalizer;
 
 use batch::{CoreSeed, Reply, Request};
-pub use client::{ActionClient, RoutedClient};
+pub use client::{ActionClient, ClientConfig, RoutedClient};
 pub use latency::{LatencyRecorder, LocalLatency, ServerStats};
 
 /// v2 frame magic. Interpreted as a little-endian f32 this is a quiet

@@ -1,0 +1,404 @@
+//! Fleet simulation: a population-scale closed loop between the
+//! vectorized episode pool and the live serving subsystem.
+//!
+//! `qcontrol robustness` measures returns in process; the serving bench
+//! measures latency against synthetic frames. This module closes
+//! ROADMAP item 3 by measuring **both in the same run**: thousands of
+//! concurrent scenario-wrapped episodes (the PR-4 grammar) whose every
+//! action comes over the real v2/v3 wire protocol from a live
+//! [`serve_registry`] process on loopback, while the PR-7 monitor
+//! protocol streams the server's own view of the load.
+//!
+//! ```text
+//!  run_fleet
+//!    ├── serve_registry thread        (staged .qpol dir, ops plane,
+//!    │                                 ephemeral loopback port)
+//!    ├── monitor-capture thread       (MonitorClient; merges the
+//!    │                                 diff stream → MonitorSummary)
+//!    ├── reload-injection thread      (tmp+rename republish, version
+//!    │                                 confirmed over the wire)
+//!    └── J worker threads, each:      (cohort, block) queue →
+//!          VecEnv(scenario, width=block)
+//!            └─ RemoteBackend ──────── v3 framed requests ──→ server
+//! ```
+//!
+//! ## Determinism at any concurrency
+//!
+//! Each cohort's episodes are split into fixed-size blocks
+//! ([`Population::blocks`]); a block is one [`VecEnv::rollout_returns`]
+//! call seeded by [`population::block_seed`]. Block structure depends
+//! only on `(spec, episodes, block)` — never on `--jobs` — and the
+//! `VecEnv` pool invariant plus the serving core's row-wise determinism
+//! make each block's returns a pure function of its seed. Workers steal
+//! blocks from a shared queue and write results into slots keyed by
+//! episode index, so a fleet run is bit-identical at any job count —
+//! including runs with injected faults, because a hot-republished
+//! artifact carries the same weights, and reconnect-resent
+//! observations yield the same actions.
+//!
+//! Normalization note: the serving core normalizes raw wire
+//! observations with each artifact's frozen normalizer, so fleet
+//! environments carry **no** client-side `Normalize` layer — scenario
+//! perturbations act on raw sensor readings, the deployment-realistic
+//! convention (`qcontrol robustness` instead perturbs normalized
+//! state; the two harnesses agree only for bare scenarios).
+
+pub mod population;
+pub mod remote;
+pub mod report;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ops::{MonitorClient, OpsConfig};
+use crate::coordinator::serving::{serve_registry, ClientConfig,
+                                  RoutedClient, ServerConfig};
+use crate::envs::VecEnv;
+use crate::policy::{PolicyArtifact, PolicyRegistry};
+
+pub use population::{block_seed, Cohort, Population};
+pub use remote::{FaultSpec, RemoteBackend, RemoteCounters, ServerMirror};
+pub use report::{CohortReport, FleetReport, MonitorSummary};
+
+/// Everything one fleet run needs besides the artifacts.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// population spec (see [`population`] grammar)
+    pub spec: String,
+    /// environment override; `None` = the default artifact's env
+    pub env: Option<String>,
+    /// total episodes across all cohorts
+    pub episodes: usize,
+    /// episodes per rollout block — the lockstep width of each
+    /// `VecEnv`, and the determinism unit (results are invariant to
+    /// `jobs`, *not* to `block`)
+    pub block: usize,
+    /// worker threads; concurrent in-flight episodes peak at
+    /// `jobs * block`
+    pub jobs: usize,
+    /// fleet seed; all block seeds derive from it by FNV-1a
+    pub seed: u64,
+    /// policy served to cohorts without an explicit `@policy`;
+    /// `None` = the registry's first id in sorted order
+    pub default_policy: Option<String>,
+    /// client-side fault injection (forced drops, delayed frames)
+    pub faults: FaultSpec,
+    /// server-side fault injection: hot republishes of the default
+    /// policy (tmp+rename, confirmed over the wire) during the run
+    pub reloads: u64,
+    /// wire client timeouts/backoff
+    pub client: ClientConfig,
+    /// server batch limit
+    pub max_batch: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            spec: "70%=nominal 20%=sensor-noise 10%=sim2real".to_string(),
+            env: None,
+            episodes: 2000,
+            block: 250,
+            jobs: 4,
+            seed: 42,
+            default_policy: None,
+            faults: FaultSpec::default(),
+            reloads: 0,
+            client: ClientConfig::default(),
+            max_batch: 32,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.episodes > 0, "fleet episodes must be >= 1");
+        anyhow::ensure!(self.block > 0, "fleet block must be >= 1");
+        anyhow::ensure!(self.jobs > 0, "fleet jobs must be >= 1");
+        anyhow::ensure!(self.max_batch > 0, "fleet max_batch must be >= 1");
+        self.client.validate()
+    }
+}
+
+/// Distinguishes concurrent fleet runs in one process (tests run in
+/// parallel threads; the pid alone would collide their stage dirs).
+static STAGE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Run one fleet simulation: stage the artifacts, self-host a
+/// [`serve_registry`] on an ephemeral loopback port with the ops plane
+/// attached, drive the population through it, and join client-side
+/// return distributions with the server's telemetry. Any unrecovered
+/// client error aborts the run with a descriptive error — a returned
+/// [`FleetReport`] certifies zero unrecovered errors.
+pub fn run_fleet(artifacts: Vec<PolicyArtifact>, cfg: &FleetConfig)
+                 -> Result<FleetReport> {
+    cfg.validate()?;
+    anyhow::ensure!(!artifacts.is_empty(), "fleet needs >= 1 artifact");
+
+    // stage the registry in a private dir: hot-reload injection
+    // republishes artifacts, and user artifact dirs must not be touched
+    let stage = std::env::temp_dir().join(format!(
+        "qcontrol_fleet_{}_{}", std::process::id(),
+        STAGE_SEQ.fetch_add(1, Ordering::Relaxed)));
+    let _ = std::fs::remove_dir_all(&stage);
+    std::fs::create_dir_all(&stage)
+        .with_context(|| format!("creating stage dir {}",
+                                 stage.display()))?;
+    let result = run_staged(&artifacts, cfg, &stage);
+    let _ = std::fs::remove_dir_all(&stage);
+    result
+}
+
+fn run_staged(artifacts: &[PolicyArtifact], cfg: &FleetConfig,
+              stage: &std::path::Path) -> Result<FleetReport> {
+    for art in artifacts {
+        art.save(stage.join(format!("{}.qpol", art.id)))?;
+    }
+    let registry = PolicyRegistry::load_dir(stage)?;
+    let default_id = registry.default_id(cfg.default_policy.as_deref())?;
+    let dims: BTreeMap<String, (usize, usize)> = registry
+        .iter()
+        .map(|(id, a)| (id.to_string(),
+                        (a.policy.obs_dim, a.policy.act_dim)))
+        .collect();
+    let default_art = registry
+        .get(&default_id)
+        .expect("default id is registered")
+        .clone();
+
+    // population against the run env (explicit override, else the
+    // default artifact's recorded training env)
+    let env = match &cfg.env {
+        Some(e) => e.clone(),
+        None => {
+            anyhow::ensure!(!default_art.env.is_empty(),
+                            "artifact `{default_id}` does not record an \
+                             env; pass one explicitly");
+            default_art.env.clone()
+        }
+    };
+    let mut pop = Population::parse(&cfg.spec, &env)?;
+    if pop.normalized {
+        eprintln!("fleet: population weights do not sum to 100% — \
+                   normalized to relative fractions");
+    }
+    pop.allocate(cfg.episodes)?;
+    for c in &pop.cohorts {
+        if let Some(p) = &c.policy {
+            anyhow::ensure!(dims.contains_key(p),
+                            "cohort `{}` routes to policy `{p}`, which \
+                             is not in the registry (have: {})",
+                            c.label, registry.ids().join(", "));
+        }
+    }
+
+    // self-hosted server on an ephemeral loopback port, ops plane
+    // attached: watcher on the stage dir, monitor pre-bound so we know
+    // its port before serving starts
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let mon_listener = Arc::new(TcpListener::bind("127.0.0.1:0")?);
+    let mon_addr = mon_listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server_cfg = ServerConfig {
+        // workers hold one connection each; +margin for the reload
+        // probe and block-boundary connection churn
+        max_connections: cfg.jobs + 8,
+        max_batch: cfg.max_batch,
+        default_policy: Some(default_id.clone()),
+        ops: OpsConfig {
+            watch_dir: Some(stage.to_path_buf()),
+            reload_poll: Duration::from_millis(5),
+            monitor: Some(mon_listener),
+            monitor_tick: Duration::from_millis(50),
+            ..OpsConfig::default()
+        },
+        ..ServerConfig::default()
+    };
+    let server = {
+        let stop = stop.clone();
+        std::thread::Builder::new()
+            .name("qfleet-server".to_string())
+            .spawn(move || serve_registry(listener, registry, stop,
+                                          server_cfg))
+            .context("spawn fleet server")?
+    };
+
+    // monitor capture: merge the diff stream for the whole run; the
+    // thread exits when the hub closes its stream at server shutdown
+    let summary = Arc::new(Mutex::new(MonitorSummary::default()));
+    let monitor = {
+        let summary = summary.clone();
+        std::thread::Builder::new()
+            .name("qfleet-monitor".to_string())
+            .spawn(move || {
+                let Ok(mut client) = MonitorClient::connect(&mon_addr)
+                else {
+                    return;
+                };
+                while let Ok(frame) = client.recv() {
+                    summary.lock().unwrap().merge(&frame);
+                }
+            })
+            .context("spawn monitor capture")?
+    };
+
+    // the run itself: scoped worker pool + reload injector
+    let drive_result = drive(cfg, &pop, &addr, &default_id, &default_art,
+                             &dims, stage);
+
+    // shutdown in dependency order: server (joins its own cores and
+    // ops threads), then the capture thread the hub just released
+    stop.store(true, Ordering::Relaxed);
+    let stats = server
+        .join()
+        .map_err(|_| anyhow::anyhow!("fleet server thread panicked"))??;
+    let _ = monitor.join();
+    let (returns, counters, injected_reloads) = drive_result?;
+
+    anyhow::ensure!(stats.io_errors == 0,
+                    "fleet run saw {} server-side io error(s); injected \
+                     faults must stay client-visible-clean",
+                    stats.io_errors);
+
+    let cohorts: Vec<CohortReport> = pop
+        .cohorts
+        .iter()
+        .zip(returns)
+        .map(|(c, r)| CohortReport::new(c, r))
+        .collect();
+    let monitor_summary = summary.lock().unwrap().clone();
+    Ok(FleetReport {
+        env,
+        spec: cfg.spec.clone(),
+        episodes: cfg.episodes,
+        block: cfg.block,
+        jobs: cfg.jobs,
+        seed: cfg.seed,
+        cohorts,
+        counters,
+        injected_reloads,
+        server: stats,
+        monitor: monitor_summary,
+    })
+}
+
+type DriveOut = (Vec<Vec<f64>>, RemoteCounters, u64);
+
+/// Worker pool + reload injector, scoped so borrows of the population
+/// and artifact suffice. Returns per-cohort returns (episode-indexed),
+/// aggregated client counters, and the confirmed injected reload count.
+fn drive(cfg: &FleetConfig, pop: &Population, addr: &str,
+         default_id: &str, default_art: &PolicyArtifact,
+         dims: &BTreeMap<String, (usize, usize)>,
+         stage: &std::path::Path) -> Result<DriveOut> {
+    let queue: Mutex<VecDeque<(usize, usize, usize)>> =
+        Mutex::new(pop.blocks(cfg.block).into());
+    let returns: Mutex<Vec<Vec<f64>>> = Mutex::new(
+        pop.cohorts.iter().map(|c| vec![0.0; c.episodes]).collect());
+    let counters: Mutex<RemoteCounters> =
+        Mutex::new(RemoteCounters::default());
+
+    let worker = || -> Result<()> {
+        loop {
+            let Some((ci, bi, n)) = queue.lock().unwrap().pop_front()
+            else {
+                return Ok(());
+            };
+            let cohort = &pop.cohorts[ci];
+            let policy = cohort.policy.as_deref().unwrap_or(default_id);
+            let &(obs_dim, act_dim) = dims
+                .get(policy)
+                .expect("cohort policies validated against registry");
+            let mut venv = VecEnv::new(|| cohort.scenario.build(), n)
+                .with_context(|| format!("cohort `{}`", cohort.label))?;
+            let mut backend = RemoteBackend::connect(
+                addr, cohort.policy.as_deref().unwrap_or(""), obs_dim,
+                act_dim, cfg.client.clone(), cfg.faults.clone())?;
+            let seed = block_seed(cfg.seed, &cohort.label, bi);
+            let r = venv
+                .rollout_returns(&mut backend, n, seed)
+                .with_context(|| {
+                    format!("cohort `{}` block {bi}", cohort.label)
+                })?;
+            let start = bi * cfg.block;
+            returns.lock().unwrap()[ci][start..start + n]
+                .copy_from_slice(&r);
+            counters.lock().unwrap().absorb(&backend.counters());
+        }
+    };
+
+    let injected = std::thread::scope(|s| -> Result<u64> {
+        let reloader = if cfg.reloads > 0 {
+            Some(s.spawn(|| inject_reloads(cfg.reloads, addr, default_id,
+                                           default_art, stage)))
+        } else {
+            None
+        };
+        let handles: Vec<_> =
+            (0..cfg.jobs).map(|_| s.spawn(worker)).collect();
+        let mut first_err = None;
+        for h in handles {
+            let r = h.join()
+                .map_err(|_| anyhow::anyhow!("fleet worker panicked"))
+                .and_then(|r| r);
+            if let Err(e) = r {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        let injected = match reloader {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow::anyhow!("reload injector panicked"))
+                .and_then(|r| r)?,
+            None => 0,
+        };
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(injected),
+        }
+    })?;
+
+    Ok((returns.into_inner().unwrap(), counters.into_inner().unwrap(),
+        injected))
+}
+
+/// Republish the default policy `n` times under changed env tags
+/// (tmp+rename — the publication idiom the watcher expects; distinct
+/// tag lengths defeat coarse mtime). Each swap is confirmed through
+/// the wire via the v3 version stamp before the next, so every
+/// publication lands as exactly one reload *during* the run. The
+/// weights are unchanged, keeping fleet results bit-identical.
+fn inject_reloads(n: u64, addr: &str, default_id: &str,
+                  art: &PolicyArtifact, stage: &std::path::Path)
+                  -> Result<u64> {
+    // let the population ramp up before the first swap
+    std::thread::sleep(Duration::from_millis(30));
+    let mut probe = RoutedClient::connect(addr)?;
+    let obs = vec![0.0f32; art.policy.obs_dim];
+    for k in 2..=(n + 1) {
+        let mut next = art.clone();
+        next.env = "x".repeat(k as usize);
+        let tmp = stage.join(format!("{default_id}.qpol.tmp"));
+        std::fs::write(&tmp, next.to_bytes()?)?;
+        std::fs::rename(&tmp, stage.join(format!("{default_id}.qpol")))?;
+        loop {
+            let (_, v) = probe
+                .act_versioned(default_id, &obs)
+                .context("reload probe")?;
+            if v >= k {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    Ok(n)
+}

@@ -1,0 +1,285 @@
+//! The fleet population spec: weighted cohorts of scenario-wrapped
+//! simulated users.
+//!
+//! ## Grammar
+//!
+//! ```text
+//! population := cohort ( (',' | whitespace) cohort )*
+//! cohort     := weight '%'? '=' scenario-suffix ( '@' policy-id )?
+//! ```
+//!
+//! e.g. `70%=nominal 20%=sensor-noise 10%=sim2real`, or with explicit
+//! routing, `50%=nominal@pend 50%=obsnoise:0.2@pend_v2`. The scenario
+//! part is a PR-4 suffix (preset name or `+`-joined atom list) applied
+//! to the run's environment; the optional `@policy-id` routes the
+//! cohort's requests to that registry policy instead of the server
+//! default.
+//!
+//! Weights are relative: they *should* sum to 100, and a spec that does
+//! not is normalized (the [`Population::normalized`] flag lets the CLI
+//! warn). Duplicate cohort labels are rejected, and every parse error
+//! names the offending cohort — the spec is user input, so failures are
+//! descriptive errors, never panics.
+//!
+//! ## Determinism
+//!
+//! Episode allocation ([`Population::allocate`]) is largest-remainder
+//! and wholly deterministic, and every rollout block's RNG seed is
+//! derived by FNV-1a from `(fleet seed, cohort label, block index)`
+//! ([`block_seed`]) — so a fleet run is a pure function of
+//! `(spec, seed, episodes, block size)`, reproducible at any
+//! concurrency.
+
+use anyhow::{Context, Result};
+
+use crate::envs::Scenario;
+use crate::experiment::fnv1a64;
+
+/// One weighted cohort of the population.
+#[derive(Clone, Debug)]
+pub struct Cohort {
+    /// the spec token after the weight (scenario suffix + optional
+    /// `@policy`); unique within a population
+    pub label: String,
+    /// normalized weight fraction in (0, 1]
+    pub weight: f64,
+    /// fully parsed evaluation condition
+    pub scenario: Scenario,
+    /// registry policy id; `None` = the server default
+    pub policy: Option<String>,
+    /// episodes allocated by [`Population::allocate`] (0 until then)
+    pub episodes: usize,
+}
+
+/// A parsed population spec against one environment.
+#[derive(Clone, Debug)]
+pub struct Population {
+    pub env: String,
+    pub cohorts: Vec<Cohort>,
+    /// true when the spec weights did not sum to 100 and were rescaled
+    pub normalized: bool,
+}
+
+/// Deterministic per-block rollout seed: FNV-1a over the fleet seed,
+/// the cohort label, and the block index. Independent of `--jobs`,
+/// worker scheduling, and cohort order.
+pub fn block_seed(fleet_seed: u64, cohort_label: &str, block: usize)
+                  -> u64 {
+    fnv1a64(&format!("{fleet_seed}|{cohort_label}|{block}"))
+}
+
+impl Population {
+    /// Parse a population spec against `env`. Cohorts may be separated
+    /// by commas and/or whitespace.
+    pub fn parse(spec: &str, env: &str) -> Result<Population> {
+        let tokens: Vec<&str> = spec
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|t| !t.is_empty())
+            .collect();
+        anyhow::ensure!(!tokens.is_empty(),
+                        "empty population spec (expected e.g. \
+                         `70%=nominal 30%=sensor-noise`)");
+        let mut cohorts = Vec::with_capacity(tokens.len());
+        for tok in &tokens {
+            cohorts.push(parse_cohort(tok, env)?);
+        }
+        for i in 1..cohorts.len() {
+            let label = &cohorts[i].label;
+            anyhow::ensure!(
+                cohorts[..i].iter().all(|c| &c.label != label),
+                "duplicate cohort `{label}` in population spec (labels \
+                 are the part after `=`; merge the weights instead)");
+        }
+        let sum: f64 = cohorts.iter().map(|c| c.weight).sum();
+        anyhow::ensure!(sum > 0.0, "population weights sum to 0");
+        let normalized = (sum - 100.0).abs() > 1e-6;
+        for c in &mut cohorts {
+            c.weight /= sum;
+        }
+        Ok(Population { env: env.to_string(), cohorts, normalized })
+    }
+
+    /// Split `total` episodes across the cohorts by weight
+    /// (largest-remainder rounding, ties broken by cohort order), then
+    /// guarantee every cohort at least one episode — a cohort the user
+    /// asked for must contribute to the report. Requires
+    /// `total >= cohorts`.
+    pub fn allocate(&mut self, total: usize) -> Result<()> {
+        let n = self.cohorts.len();
+        anyhow::ensure!(total >= n,
+                        "{total} episode(s) cannot cover {n} cohort(s) \
+                         with at least one episode each");
+        let mut rem: Vec<(usize, f64)> = Vec::with_capacity(n);
+        let mut assigned = 0usize;
+        for (i, c) in self.cohorts.iter_mut().enumerate() {
+            let quota = c.weight * total as f64;
+            c.episodes = quota.floor() as usize;
+            assigned += c.episodes;
+            rem.push((i, quota - quota.floor()));
+        }
+        // largest fractional remainder first; equal remainders keep
+        // cohort order (stable sort on the negated remainder)
+        rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap()
+                    .then(a.0.cmp(&b.0)));
+        for &(i, _) in rem.iter().take(total - assigned) {
+            self.cohorts[i].episodes += 1;
+        }
+        // floor can strand a tiny cohort at 0: take from the largest
+        while let Some(zero) =
+            self.cohorts.iter().position(|c| c.episodes == 0)
+        {
+            let donor = self
+                .cohorts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, c)| c.episodes)
+                .map(|(i, _)| i)
+                .expect("population has cohorts");
+            anyhow::ensure!(self.cohorts[donor].episodes > 1,
+                            "cannot give every cohort an episode");
+            self.cohorts[donor].episodes -= 1;
+            self.cohorts[zero].episodes += 1;
+        }
+        debug_assert_eq!(
+            self.cohorts.iter().map(|c| c.episodes).sum::<usize>(), total);
+        Ok(())
+    }
+
+    /// Every `(cohort index, block index, episodes in block)` rollout
+    /// unit, in deterministic order. Each block is one independent
+    /// `VecEnv::rollout_returns` call of at most `block` episodes,
+    /// seeded by [`block_seed`] — the unit of work-stealing that keeps
+    /// fleet results identical at any `--jobs`.
+    pub fn blocks(&self, block: usize) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        for (ci, c) in self.cohorts.iter().enumerate() {
+            let mut left = c.episodes;
+            let mut bi = 0usize;
+            while left > 0 {
+                let n = left.min(block.max(1));
+                out.push((ci, bi, n));
+                left -= n;
+                bi += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Parse one `weight[%]=suffix[@policy]` token.
+fn parse_cohort(tok: &str, env: &str) -> Result<Cohort> {
+    let (w, rest) = tok.split_once('=').with_context(|| {
+        format!("cohort `{tok}` is not `WEIGHT%=SCENARIO[@policy]`")
+    })?;
+    let w = w.strip_suffix('%').unwrap_or(w);
+    let weight: f64 = w
+        .parse()
+        .with_context(|| format!("cohort `{tok}`: bad weight `{w}`"))?;
+    anyhow::ensure!(weight.is_finite() && weight > 0.0,
+                    "cohort `{tok}`: weight must be finite and > 0, \
+                     got {weight}");
+    anyhow::ensure!(!rest.is_empty(),
+                    "cohort `{tok}` has an empty scenario part");
+    let (suffix, policy) = match rest.split_once('@') {
+        Some((s, p)) => {
+            anyhow::ensure!(!p.is_empty(),
+                            "cohort `{tok}` has an empty policy id \
+                             after `@`");
+            (s, Some(p.to_string()))
+        }
+        None => (rest, None),
+    };
+    let scenario = Scenario::parse_suffix(env, suffix)
+        .with_context(|| format!("cohort `{rest}`: bad scenario \
+                                  `{suffix}`"))?;
+    Ok(Cohort {
+        label: rest.to_string(),
+        weight,
+        scenario,
+        policy,
+        episodes: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let p = Population::parse("70%=nominal 20%=sensor-noise \
+                                   10%=sim2real", "pendulum").unwrap();
+        assert_eq!(p.cohorts.len(), 3);
+        assert!(!p.normalized);
+        assert!((p.cohorts[0].weight - 0.7).abs() < 1e-12);
+        assert!(p.cohorts[0].scenario.is_bare());
+        assert_eq!(p.cohorts[1].scenario.suffix(), "obsnoise:0.1");
+        assert!(p.cohorts.iter().all(|c| c.policy.is_none()));
+    }
+
+    #[test]
+    fn comma_separation_policy_routing_and_normalization() {
+        let p = Population::parse("3=obsnoise:0.2@alt,1=nominal",
+                                  "pendulum").unwrap();
+        assert!(p.normalized); // 3 + 1 != 100 — rescaled
+        assert!((p.cohorts[0].weight - 0.75).abs() < 1e-12);
+        assert_eq!(p.cohorts[0].policy.as_deref(), Some("alt"));
+        assert_eq!(p.cohorts[0].label, "obsnoise:0.2@alt");
+        assert_eq!(p.cohorts[1].policy, None);
+    }
+
+    #[test]
+    fn errors_name_the_offending_cohort() {
+        let err = Population::parse("50%=nominal 50%=obsnoise:-1",
+                                    "pendulum").unwrap_err();
+        assert!(format!("{err:#}").contains("obsnoise:-1"), "{err:#}");
+        let err = Population::parse("50%=nominal 50%=nominal",
+                                    "pendulum").unwrap_err();
+        assert!(err.to_string().contains("duplicate cohort `nominal`"),
+                "{err}");
+        let err = Population::parse("x%=nominal", "pendulum").unwrap_err();
+        assert!(err.to_string().contains("x%=nominal"), "{err}");
+        assert!(Population::parse("", "pendulum").is_err());
+        assert!(Population::parse("50%=nominal@", "pendulum").is_err());
+    }
+
+    #[test]
+    fn allocation_is_exact_and_floors_at_one() {
+        let mut p = Population::parse("70%=nominal 20%=sensor-noise \
+                                       10%=sim2real", "pendulum").unwrap();
+        p.allocate(10).unwrap();
+        let eps: Vec<usize> =
+            p.cohorts.iter().map(|c| c.episodes).collect();
+        assert_eq!(eps, vec![7, 2, 1]);
+
+        // a 1% cohort still gets an episode out of 10
+        let mut p = Population::parse("99%=nominal 1%=sim2real",
+                                      "pendulum").unwrap();
+        p.allocate(10).unwrap();
+        assert_eq!(p.cohorts[1].episodes, 1);
+        assert_eq!(p.cohorts[0].episodes, 9);
+
+        // fewer episodes than cohorts is a descriptive error
+        assert!(p.allocate(1).is_err());
+    }
+
+    #[test]
+    fn blocks_partition_the_allocation() {
+        let mut p = Population::parse("60%=nominal 40%=sensor-noise",
+                                      "pendulum").unwrap();
+        p.allocate(10).unwrap();
+        let blocks = p.blocks(4);
+        assert_eq!(blocks, vec![(0, 0, 4), (0, 1, 2), (1, 0, 4)]);
+        let total: usize = blocks.iter().map(|&(_, _, n)| n).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn block_seeds_are_distinct_and_stable() {
+        let a = block_seed(42, "nominal", 0);
+        assert_eq!(a, block_seed(42, "nominal", 0));
+        assert_ne!(a, block_seed(42, "nominal", 1));
+        assert_ne!(a, block_seed(42, "sensor-noise", 0));
+        assert_ne!(a, block_seed(43, "nominal", 0));
+    }
+}

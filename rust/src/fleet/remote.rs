@@ -1,0 +1,258 @@
+//! [`RemoteBackend`] — a [`PolicyBackend`] whose inference happens on a
+//! live serving process over the v3 wire protocol.
+//!
+//! Each `infer_batch` row becomes one framed round-trip through a
+//! [`RoutedClient`]; because the serving core is row-wise deterministic
+//! and call-history-free, a resent observation yields the identical
+//! action — which is what lets the fault-recovery path (reconnect +
+//! resend) preserve bit-exact rollouts even while connections are being
+//! dropped on purpose.
+//!
+//! The backend also carries the fleet's client-side fault injectors:
+//! forced connection drops every N requests and delayed frames, both
+//! off by default. Version stamps from v3 replies are tracked so a
+//! mid-run hot reload is *observed* by the population, not just by the
+//! server's own counters.
+//!
+//! Note on normalization: the serving core normalizes raw wire
+//! observations with the artifact's frozen normalizer, so fleet
+//! environments are built **without** a client-side `Normalize` layer —
+//! scenario perturbations act on raw sensor readings, exactly what a
+//! deployed controller would see. [`ServerMirror`] reproduces the
+//! server's normalize-then-infer core in process for equivalence tests.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::serving::{ClientConfig, RoutedClient};
+use crate::intinfer::IntEngine;
+use crate::policy::{check_block, PolicyArtifact, PolicyBackend,
+                    PolicyDescriptor};
+use crate::util::stats::ObsNormalizer;
+
+/// Client-side fault injection knobs (all off by default).
+#[derive(Clone, Debug, Default)]
+pub struct FaultSpec {
+    /// force-close the connection every N requests (0 = never); the
+    /// next request then exercises the reconnect + resend path
+    pub drop_every: u64,
+    /// delay one frame every N requests by `delay` (0 = never)
+    pub delay_every: u64,
+    /// how long a delayed frame stalls before being sent
+    pub delay: Duration,
+}
+
+/// Wire/fault counters a fleet run aggregates across its backends.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RemoteCounters {
+    pub requests: u64,
+    /// connections deliberately closed by [`FaultSpec::drop_every`]
+    pub forced_drops: u64,
+    /// successful reconnect + resend recoveries (forced or not)
+    pub recovered: u64,
+    /// frames stalled by [`FaultSpec::delay_every`]
+    pub delayed: u64,
+    /// v3 version transitions observed mid-run (hot reloads seen)
+    pub reloads_observed: u64,
+}
+
+impl RemoteCounters {
+    pub fn absorb(&mut self, other: &RemoteCounters) {
+        self.requests += other.requests;
+        self.forced_drops += other.forced_drops;
+        self.recovered += other.recovered;
+        self.delayed += other.delayed;
+        self.reloads_observed += other.reloads_observed;
+    }
+}
+
+/// A policy backend that speaks to a live server. Dimensions are fixed
+/// at construction (the fleet knows its artifacts), so a `VecEnv` can
+/// shape-check before any wire traffic.
+pub struct RemoteBackend {
+    client: RoutedClient,
+    /// id sent on the wire; `""` routes to the server default
+    policy: String,
+    obs_dim: usize,
+    act_dim: usize,
+    faults: FaultSpec,
+    counters: RemoteCounters,
+    last_version: Option<u64>,
+}
+
+impl RemoteBackend {
+    pub fn connect(addr: &str, policy: &str, obs_dim: usize,
+                   act_dim: usize, cfg: ClientConfig, faults: FaultSpec)
+                   -> Result<RemoteBackend> {
+        let client = RoutedClient::connect_with(addr, cfg)?;
+        Ok(RemoteBackend {
+            client,
+            policy: policy.to_string(),
+            obs_dim,
+            act_dim,
+            faults,
+            counters: RemoteCounters::default(),
+            last_version: None,
+        })
+    }
+
+    pub fn counters(&self) -> RemoteCounters {
+        self.counters
+    }
+
+    /// Latest v3 version stamp seen from the server (None before the
+    /// first reply).
+    pub fn version(&self) -> Option<u64> {
+        self.last_version
+    }
+
+    /// One recoverable round-trip: on any failure, repair the
+    /// connection (bounded retry with backoff) and resend once. A
+    /// second failure is an unrecovered error and bubbles up.
+    fn round_trip(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        self.counters.requests += 1;
+        if self.faults.drop_every > 0
+            && self.counters.requests % self.faults.drop_every == 0
+        {
+            self.client.force_disconnect();
+            self.counters.forced_drops += 1;
+        }
+        if self.faults.delay_every > 0
+            && self.counters.requests % self.faults.delay_every == 0
+            && !self.faults.delay.is_zero()
+        {
+            std::thread::sleep(self.faults.delay);
+            self.counters.delayed += 1;
+        }
+        let (act, version) =
+            match self.client.act_versioned(&self.policy, obs) {
+                Ok(r) => r,
+                Err(first) => {
+                    self.client.reconnect().with_context(|| {
+                        format!("unrecovered: request failed ({first:#}) \
+                                 and reconnect did not succeed")
+                    })?;
+                    let r = self
+                        .client
+                        .act_versioned(&self.policy, obs)
+                        .with_context(|| {
+                            format!("unrecovered: resend after reconnect \
+                                     failed (original error: {first:#})")
+                        })?;
+                    self.counters.recovered += 1;
+                    r
+                }
+            };
+        if let Some(prev) = self.last_version {
+            if version != prev {
+                self.counters.reloads_observed += 1;
+            }
+        }
+        self.last_version = Some(version);
+        Ok(act)
+    }
+}
+
+impl PolicyBackend for RemoteBackend {
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> Result<()> {
+        let batch = check_block(obs, actions_out, self.obs_dim,
+                                self.act_dim)?;
+        for row in 0..batch {
+            let o = &obs[row * self.obs_dim..(row + 1) * self.obs_dim];
+            let act = self.round_trip(o)?;
+            anyhow::ensure!(act.len() == self.act_dim,
+                            "server returned {} action values, policy \
+                             `{}` expects {}", act.len(),
+                            if self.policy.is_empty() { "(default)" }
+                            else { self.policy.as_str() }, self.act_dim);
+            actions_out[row * self.act_dim..(row + 1) * self.act_dim]
+                .copy_from_slice(&act);
+        }
+        Ok(())
+    }
+
+    /// Unknown from the wire (weights live server-side).
+    fn macs(&self) -> u64 {
+        0
+    }
+
+    fn descriptor(&self) -> PolicyDescriptor {
+        PolicyDescriptor {
+            id: if self.policy.is_empty() {
+                "(default)".to_string()
+            } else {
+                self.policy.clone()
+            },
+            kind: "remote",
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+            hidden: 0,
+            bits: None,
+        }
+    }
+}
+
+/// In-process replica of one serving core: normalize each raw
+/// observation row with the artifact's frozen normalizer, then run the
+/// same optimized integer engine the server compiles. A `VecEnv`
+/// rollout through a `ServerMirror` is the bit-exact reference for the
+/// same rollout through a [`RemoteBackend`].
+pub struct ServerMirror {
+    engine: IntEngine,
+    norm: ObsNormalizer,
+    scratch: Vec<f32>,
+}
+
+impl ServerMirror {
+    pub fn new(artifact: &PolicyArtifact) -> Result<ServerMirror> {
+        Ok(ServerMirror {
+            engine: IntEngine::optimized(artifact.policy.clone())?,
+            norm: artifact.normalizer(),
+            scratch: Vec::new(),
+        })
+    }
+}
+
+impl PolicyBackend for ServerMirror {
+    fn obs_dim(&self) -> usize {
+        self.engine.obs_dim()
+    }
+
+    fn act_dim(&self) -> usize {
+        self.engine.act_dim()
+    }
+
+    fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32])
+                   -> Result<()> {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(obs);
+        let obs_dim = PolicyBackend::obs_dim(&self.engine);
+        for lane in self.scratch.chunks_exact_mut(obs_dim) {
+            self.norm.normalize(lane);
+        }
+        // the trait method (the inherent `IntEngine::infer_batch`
+        // asserts on dim errors instead of returning them)
+        PolicyBackend::infer_batch(&mut self.engine, &self.scratch,
+                                   actions_out)
+    }
+
+    fn macs(&self) -> u64 {
+        self.engine.macs()
+    }
+
+    fn descriptor(&self) -> PolicyDescriptor {
+        let mut d = self.engine.descriptor();
+        d.kind = "mirror";
+        d
+    }
+}

@@ -1,0 +1,210 @@
+//! The machine-readable fleet report (`fleet.json`): per-cohort return
+//! distributions joined with the server-side telemetry captured over
+//! the monitor protocol *during the same run* — the first artifact in
+//! the repo where reward and tail latency degrade together or not at
+//! all.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::serving::ServerStats;
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::population::Cohort;
+use super::remote::RemoteCounters;
+
+/// One cohort's return distribution.
+#[derive(Clone, Debug)]
+pub struct CohortReport {
+    pub label: String,
+    pub policy: Option<String>,
+    pub weight: f64,
+    pub episodes: usize,
+    pub returns: Vec<f64>,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl CohortReport {
+    pub fn new(cohort: &Cohort, returns: Vec<f64>) -> CohortReport {
+        let mean = stats::mean(&returns);
+        let p50 = stats::percentile(&returns, 50.0);
+        let p99 = stats::percentile(&returns, 99.0);
+        let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &r in &returns {
+            min = min.min(r);
+            max = max.max(r);
+        }
+        if returns.is_empty() {
+            min = 0.0;
+            max = 0.0;
+        }
+        CohortReport {
+            label: cohort.label.clone(),
+            policy: cohort.policy.clone(),
+            weight: cohort.weight,
+            episodes: returns.len(),
+            returns,
+            mean,
+            p50,
+            p99,
+            min,
+            max,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("policy", match &self.policy {
+                Some(p) => Json::str(p),
+                None => Json::str(""),
+            }),
+            ("weight", Json::num(self.weight)),
+            ("episodes", Json::num(self.episodes as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p99", Json::num(self.p99)),
+            ("min", Json::num(self.min)),
+            ("max", Json::num(self.max)),
+            ("returns", Json::Arr(
+                self.returns.iter().map(|&r| Json::num(r)).collect())),
+        ])
+    }
+}
+
+/// The merged view of the monitor stream over the run: last complete
+/// per-policy state (diffs overlaid on the snapshot), the ordered ops
+/// event feed, and the peak aggregate QPS observed across frames.
+#[derive(Clone, Debug, Default)]
+pub struct MonitorSummary {
+    pub frames: u64,
+    pub peak_qps: f64,
+    /// merged per-policy fields (version, qps, mean_batch, p50/p99/
+    /// p999_us, ...), keyed by policy id
+    pub policies: BTreeMap<String, BTreeMap<String, Json>>,
+    /// last `server` block seen (reloads, reload_failures, ...)
+    pub server: Option<Json>,
+    pub events: Vec<Json>,
+}
+
+impl MonitorSummary {
+    /// Overlay one monitor frame (full or diff) onto the merged state.
+    /// Malformed frames are skipped — telemetry capture must never
+    /// fail the run it observes.
+    pub fn merge(&mut self, frame: &Json) {
+        self.frames += 1;
+        if let Ok(policies) = frame.get("policies").and_then(|p| {
+            p.as_obj().map(|m| m.clone())
+        }) {
+            for (id, fields) in policies {
+                let slot = self.policies.entry(id).or_default();
+                if let Ok(src) = fields.as_obj() {
+                    for (k, v) in src {
+                        slot.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+        }
+        let total_qps: f64 = self
+            .policies
+            .values()
+            .filter_map(|f| f.get("qps"))
+            .filter_map(|v| v.as_f64().ok())
+            .sum();
+        self.peak_qps = self.peak_qps.max(total_qps);
+        if let Ok(server) = frame.get("server") {
+            self.server = Some(server.clone());
+        }
+        if let Ok(events) = frame.get("events").and_then(|e| {
+            e.as_arr().map(|a| a.to_vec())
+        }) {
+            self.events.extend(events);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("frames", Json::num(self.frames as f64)),
+            ("peak_qps", Json::num(self.peak_qps)),
+            ("policies", Json::Obj(
+                self.policies
+                    .iter()
+                    .map(|(id, f)| (id.clone(), Json::Obj(f.clone())))
+                    .collect())),
+            ("server", self.server.clone()
+                .unwrap_or(Json::Obj(BTreeMap::new()))),
+            ("events", Json::Arr(self.events.clone())),
+        ])
+    }
+}
+
+/// Everything one fleet run produced.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub env: String,
+    pub spec: String,
+    pub episodes: usize,
+    pub block: usize,
+    pub jobs: usize,
+    pub seed: u64,
+    pub cohorts: Vec<CohortReport>,
+    /// aggregated client-side wire/fault counters
+    pub counters: RemoteCounters,
+    /// server-side hot reloads injected and confirmed during the run
+    pub injected_reloads: u64,
+    /// final aggregate server stats (joined after shutdown)
+    pub server: ServerStats,
+    /// telemetry captured over the monitor protocol during the run
+    pub monitor: MonitorSummary,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(1.0)),
+            ("env", Json::str(&self.env)),
+            ("population", Json::str(&self.spec)),
+            ("episodes", Json::num(self.episodes as f64)),
+            ("block", Json::num(self.block as f64)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("seed", Json::str(self.seed.to_string())),
+            ("cohorts", Json::Arr(
+                self.cohorts.iter().map(|c| c.to_json()).collect())),
+            ("client", Json::obj(vec![
+                ("requests", Json::num(self.counters.requests as f64)),
+                ("forced_drops",
+                 Json::num(self.counters.forced_drops as f64)),
+                ("recovered", Json::num(self.counters.recovered as f64)),
+                ("delayed", Json::num(self.counters.delayed as f64)),
+                ("reloads_observed",
+                 Json::num(self.counters.reloads_observed as f64)),
+                // a FleetReport only exists for a run with no
+                // unrecovered client errors (they abort the run)
+                ("unrecovered_errors", Json::num(0.0)),
+            ])),
+            ("injected_reloads", Json::num(self.injected_reloads as f64)),
+            ("server", Json::obj(vec![
+                ("requests", Json::num(self.server.requests as f64)),
+                ("connections",
+                 Json::num(self.server.connections as f64)),
+                ("batches", Json::num(self.server.batches as f64)),
+                ("mean_batch", Json::num(if self.server.batches == 0 {
+                    0.0
+                } else {
+                    self.server.requests as f64
+                        / self.server.batches as f64
+                })),
+                ("io_errors", Json::num(self.server.io_errors as f64)),
+                ("reloads", Json::num(self.server.reloads as f64)),
+                ("p50_us", Json::num(self.server.p50_us)),
+                ("p99_us", Json::num(self.server.p99_us)),
+                ("p999_us", Json::num(self.server.p999_us)),
+            ])),
+            ("monitor", self.monitor.to_json()),
+        ])
+    }
+}

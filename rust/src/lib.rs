@@ -27,3 +27,4 @@ pub mod runtime;
 pub mod rl;
 pub mod experiment;
 pub mod coordinator;
+pub mod fleet;

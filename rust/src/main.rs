@@ -12,6 +12,7 @@
 //!   emit      render a .qpol as integer-only C and/or a Verilog module
 //!   serve     run the integer action server over TCP (ckpt or artifact dir)
 //!   monitor   subscribe to a serving monitor port, emit monitor.json
+//!   fleet     population-scale closed loop against a live loopback server
 //!   info      artifact/manifest summary
 //!
 //! Examples:
@@ -93,6 +94,7 @@ fn main() -> Result<()> {
         "emit" => cmd_emit(&args),
         "serve" => cmd_serve(&args),
         "monitor" => cmd_monitor(&args),
+        "fleet" => cmd_fleet(&args),
         "info" => cmd_info(&args),
         // (`--help` never reaches here: `--`-prefixed tokens are flags,
         // so `qcontrol --help` lands on the empty-positional default)
@@ -162,6 +164,21 @@ usage: qcontrol <cmd> [--flags]
            (subscribes to a serving monitor port, prints per-policy
             state and ops events for N frames (default 5), then writes
             the merged state as monitor.json)
+  fleet    --dir ARTIFACTS | --ckpt PATH
+           [--population \"70%=nominal 20%=sensor-noise 10%=sim2real\"]
+           [--episodes N] [--block N] [--jobs N] [--seed S] [--env E]
+           [--default ID] [--drop-every N] [--delay-every N]
+           [--delay-ms MS] [--reloads N] [--max-batch N] [--out FILE]
+           (population-scale closed loop: self-hosts a registry server
+            on loopback and drives jobs x block concurrent
+            scenario-wrapped episodes through it over the v3 wire
+            protocol. Cohorts are WEIGHT%=SCENARIO[@policy-id]; block
+            seeds derive from --seed by FNV-1a, so runs are
+            bit-identical at any --jobs. --drop-every/--delay-every/
+            --delay-ms inject client faults, --reloads hot-republishes
+            the default policy mid-run; emits fleet.json joining
+            per-cohort return distributions with the server telemetry
+            captured over the monitor protocol)
   info
 
 sweep/select/pipeline run trials on a parallel executor (--jobs /
@@ -833,6 +850,86 @@ fn cmd_monitor(a: &Args) -> Result<()> {
     std::fs::write(&out, report.to_string())
         .with_context(|| format!("write {out}"))?;
     println!("monitor report -> {out}");
+    Ok(())
+}
+
+/// `qcontrol fleet`: population-scale closed loop — thousands of
+/// concurrent scenario-wrapped episodes driven against a self-hosted
+/// live `serve_registry` over the wire, emitting fleet.json.
+fn cmd_fleet(a: &Args) -> Result<()> {
+    use qcontrol::fleet::{FaultSpec, FleetConfig};
+    let artifacts: Vec<PolicyArtifact> = if let Some(dir) = a.str_opt("dir")
+    {
+        PolicyRegistry::load_dir(dir)?
+            .into_entries()
+            .into_values()
+            .collect()
+    } else {
+        vec![artifact_from_ckpt(a).context(
+            "fleet needs --dir ARTIFACTS or --ckpt PATH")?]
+    };
+    let cfg = FleetConfig {
+        spec: a.str("population",
+                    "70%=nominal 20%=sensor-noise 10%=sim2real"),
+        env: a.str_opt("env").map(String::from),
+        episodes: a.usize("episodes", 2000)?,
+        block: a.usize("block", 250)?,
+        jobs: a.usize("jobs", 4)?,
+        seed: a.u64("seed", 42)?,
+        default_policy: a.str_opt("default").map(String::from),
+        faults: FaultSpec {
+            drop_every: a.u64("drop-every", 0)?,
+            delay_every: a.u64("delay-every", 0)?,
+            delay: std::time::Duration::from_millis(
+                a.u64("delay-ms", 5)?),
+        },
+        reloads: a.u64("reloads", 0)?,
+        client: Default::default(),
+        max_batch: a.usize("max-batch", 32)?,
+    };
+    println!("fleet: {} episodes in blocks of {} on {} job(s) \
+              (~{} concurrent), population `{}`",
+             cfg.episodes, cfg.block, cfg.jobs,
+             cfg.jobs * cfg.block.min(cfg.episodes), cfg.spec);
+    let report = qcontrol::fleet::run_fleet(artifacts, &cfg)?;
+
+    let mut table = Table::new(&["cohort", "policy", "episodes", "mean",
+                                 "p50", "p99"]);
+    for c in &report.cohorts {
+        table.row(vec![
+            c.label.clone(),
+            c.policy.clone().unwrap_or_else(|| "(default)".into()),
+            c.episodes.to_string(),
+            format!("{:.1}", c.mean),
+            format!("{:.1}", c.p50),
+            format!("{:.1}", c.p99),
+        ]);
+    }
+    table.print();
+    println!("client: {} requests, {} forced drop(s), {} recovered, \
+              {} delayed frame(s), {} reload(s) observed, 0 unrecovered \
+              errors",
+             report.counters.requests, report.counters.forced_drops,
+             report.counters.recovered, report.counters.delayed,
+             report.counters.reloads_observed);
+    println!("server: {} requests over {} connections, {} hot reload(s) \
+              ({} injected), inference p50 {:.1} µs  p99 {:.1} µs  \
+              p99.9 {:.1} µs, peak {:.0} qps over {} monitor frame(s)",
+             report.server.requests, report.server.connections,
+             report.server.reloads, report.injected_reloads,
+             report.server.p50_us, report.server.p99_us,
+             report.server.p999_us, report.monitor.peak_qps,
+             report.monitor.frames);
+
+    let out = a.str("out", "fleet.json");
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out, report.to_json().to_string())
+        .with_context(|| format!("write {out}"))?;
+    println!("fleet report -> {out}");
     Ok(())
 }
 

@@ -1,0 +1,226 @@
+//! Integration tests for the fleet subsystem: wire-vs-in-process
+//! bit-identity (a `VecEnv` rollout through a live server equals the
+//! same rollout through the `ServerMirror` reference), `run_fleet`
+//! bit-identity across job counts, fault injection (forced drops,
+//! delayed frames, hot reloads under load) with zero unrecovered
+//! errors, client timeout bounds, and population-routing validation.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qcontrol::coordinator::serving::{serve_registry, ClientConfig,
+                                     RoutedClient, ServerConfig};
+use qcontrol::envs::{Scenario, VecEnv};
+use qcontrol::fleet::{run_fleet, FaultSpec, FleetConfig, RemoteBackend,
+                      ServerMirror};
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
+use qcontrol::quant::BitCfg;
+use qcontrol::util::stats::ObsNormalizer;
+use qcontrol::util::testkit;
+
+const OBS: usize = 3;
+const ACT: usize = 1;
+
+/// A pendulum artifact with a *frozen, enabled* normalizer so the
+/// server-side normalize-then-infer path is actually exercised.
+fn pend_art(id: &str, seed: u64) -> PolicyArtifact {
+    let policy = testkit::toy_policy(seed, OBS, 8, ACT,
+                                     BitCfg::new(6, 4, 8));
+    let mut norm = ObsNormalizer::new(OBS, true);
+    for k in 0..16 {
+        let k = k as f32;
+        norm.observe(&[(k * 0.37).sin(), (k * 0.11).cos() * 0.5,
+                       k * 0.2 - 1.5]);
+    }
+    norm.freeze();
+    let mut art =
+        PolicyArtifact::new(id, policy).with_normalizer(&norm);
+    art.env = "pendulum".to_string();
+    art
+}
+
+/// The same scenario-wrapped rollout, once through a live server over
+/// the wire and once through the in-process `ServerMirror`, must be
+/// bit-identical: the wire carries exact f32 bytes, and the serving
+/// core is the same normalize-then-optimized-engine computation.
+#[test]
+fn wire_rollout_matches_in_process_mirror() {
+    let art = pend_art("p", 11);
+    let sc = Scenario::parse_suffix("pendulum", "sensor-noise").unwrap();
+
+    let mut mirror = ServerMirror::new(&art).unwrap();
+    let mut venv = VecEnv::new(|| sc.build(), 4).unwrap();
+    let want = venv.rollout_returns(&mut mirror, 6, 77).unwrap();
+
+    let mut registry = PolicyRegistry::new();
+    registry.insert(art).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve_registry(listener, registry, stop2,
+                       ServerConfig::default())
+            .unwrap()
+    });
+
+    let mut remote = RemoteBackend::connect(
+        &addr, "p", OBS, ACT, ClientConfig::default(),
+        FaultSpec::default())
+        .unwrap();
+    let mut venv = VecEnv::new(|| sc.build(), 4).unwrap();
+    let got = venv.rollout_returns(&mut remote, 6, 77).unwrap();
+
+    stop.store(true, Ordering::Relaxed);
+    let stats = server.join().unwrap();
+
+    assert_eq!(got, want,
+               "wire rollout diverged from the in-process mirror");
+    assert_eq!(stats.io_errors, 0);
+    assert!(remote.version().is_some(),
+            "v3 replies must carry a version stamp");
+}
+
+/// The determinism contract of the block design: a fault-free fleet
+/// run's per-cohort returns are bit-identical across `--jobs {1,8}`.
+#[test]
+fn fleet_returns_bit_identical_across_jobs() {
+    let arts = vec![pend_art("p", 11), pend_art("alt", 12)];
+    let cfg1 = FleetConfig {
+        spec: "50%=nominal 30%=sensor-noise@alt 20%=sim2real"
+            .to_string(),
+        episodes: 24,
+        block: 5,
+        jobs: 1,
+        seed: 9,
+        ..FleetConfig::default()
+    };
+    let mut cfg8 = cfg1.clone();
+    cfg8.jobs = 8;
+
+    let r1 = run_fleet(arts.clone(), &cfg1).unwrap();
+    let r8 = run_fleet(arts, &cfg8).unwrap();
+
+    assert_eq!(r1.cohorts.len(), 3);
+    assert_eq!(r8.cohorts.len(), 3);
+    for (a, b) in r1.cohorts.iter().zip(&r8.cohorts) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.episodes, b.episodes);
+        assert_eq!(a.returns, b.returns,
+                   "cohort `{}` diverged between jobs=1 and jobs=8",
+                   a.label);
+    }
+    // cohort routing: sensor-noise went to `alt`, the rest defaulted
+    assert_eq!(r1.cohorts[1].policy.as_deref(), Some("alt"));
+    assert!(r1.cohorts[0].policy.is_none());
+    assert_eq!(r1.server.io_errors, 0);
+    assert_eq!(r8.server.io_errors, 0);
+}
+
+/// Forced connection drops, delayed frames, and a hot reload injected
+/// mid-run: the run completes with every drop recovered, the reload
+/// confirmed by both the server and the monitor stream, and zero
+/// server-side io errors.
+#[test]
+fn fleet_survives_injected_faults() {
+    let arts = vec![pend_art("p", 11)];
+    let cfg = FleetConfig {
+        spec: "100%=nominal".to_string(),
+        episodes: 8,
+        block: 4,
+        jobs: 2,
+        seed: 5,
+        faults: FaultSpec {
+            drop_every: 97,
+            delay_every: 251,
+            delay: Duration::from_millis(1),
+        },
+        reloads: 1,
+        client: ClientConfig {
+            reconnect_backoff: Duration::from_millis(2),
+            ..ClientConfig::default()
+        },
+        ..FleetConfig::default()
+    };
+    let report = run_fleet(arts, &cfg).unwrap();
+
+    assert_eq!(report.injected_reloads, 1);
+    assert_eq!(report.server.reloads, 1,
+               "the injected republish must land as exactly one reload");
+    assert!(report.counters.forced_drops > 0,
+            "drop_every=97 over ~1600 requests must force drops");
+    assert_eq!(report.counters.recovered, report.counters.forced_drops,
+               "every forced drop must be recovered by reconnect+resend");
+    assert!(report.counters.delayed > 0);
+    assert_eq!(report.server.io_errors, 0,
+               "forced drops land on frame boundaries; the server must \
+                see clean disconnects");
+
+    // telemetry captured over the monitor protocol during the run
+    assert!(report.monitor.frames > 0,
+            "monitor capture saw no frames");
+    let json = report.to_json().to_string();
+    assert!(json.contains("\"p999_us\""));
+    assert!(json.contains("\"unrecovered_errors\": 0")
+                || json.contains("\"unrecovered_errors\":0"),
+            "fleet.json must certify zero unrecovered errors: {json}");
+}
+
+/// Satellite: a cohort routed to a policy the registry doesn't hold is
+/// a descriptive error naming the cohort — before any server starts.
+#[test]
+fn unknown_cohort_policy_is_a_descriptive_error() {
+    let arts = vec![pend_art("p", 11)];
+    let cfg = FleetConfig {
+        spec: "100%=nominal@nope".to_string(),
+        episodes: 2,
+        block: 2,
+        jobs: 1,
+        ..FleetConfig::default()
+    };
+    let err = run_fleet(arts, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("nope") && msg.contains("cohort"),
+            "error must name the cohort and the missing policy: {msg}");
+}
+
+/// Satellite: client reads are bounded by the configured timeout, and
+/// reconnect gives up after its bounded retry budget — no infinite
+/// hangs against a stalled or vanished server.
+#[test]
+fn client_timeouts_and_reconnects_are_bounded() {
+    // a listener that never accepts: connect succeeds (backlog), the
+    // read then times out instead of hanging forever
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = ClientConfig {
+        read_timeout: Duration::from_millis(50),
+        reconnect_attempts: 2,
+        reconnect_backoff: Duration::from_millis(1),
+        ..ClientConfig::default()
+    };
+    let mut client = RoutedClient::connect_with(&addr, cfg).unwrap();
+    let t0 = Instant::now();
+    assert!(client.act("p", &[0.0; OBS]).is_err(),
+            "a reply that never comes must be an error");
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "read did not time out promptly");
+
+    // server gone entirely: reconnect retries are bounded too
+    drop(listener);
+    let t0 = Instant::now();
+    let err = client.reconnect().unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "reconnect did not give up promptly");
+    assert!(format!("{err:#}").contains("attempt"),
+            "reconnect error should mention the attempt budget: {err:#}");
+
+    // zero timeouts are a config error, not an accidental infinite wait
+    let bad = ClientConfig {
+        read_timeout: Duration::ZERO,
+        ..ClientConfig::default()
+    };
+    assert!(bad.validate().is_err());
+}
