@@ -63,6 +63,7 @@ fn main() -> Result<()> {
             episodes: 10,
             seed: 99,
             backend,
+            lbits: None,
         }, &res.flat, &res.normalizer)?;
         println!("-- eval[{backend:?}]: {mean:.1} ± {std:.1}");
         returns.push(mean);

@@ -95,6 +95,7 @@ fn trained_rows(rt: &Runtime, env: &str) -> Vec<Row> {
                     episodes: proto.eval_episodes,
                     seed: 1000,
                     backend,
+                    lbits: None,
                 }, &res.flat, &res.normalizer).unwrap()
             };
             Row {

@@ -1,0 +1,142 @@
+//! Pareto smoke bench: the mixed-precision search end to end with a
+//! surrogate trainer and the REAL synthesis cost model — artifact-free
+//! (no PJRT, no checkpoints), so CI exercises the full candidate
+//! pipeline: grid wave → evolutionary refinement → per-allocation
+//! `lower → optimize → verify → fold` costing → Pareto selection.
+//!
+//! The smoke contract, asserted hard: the frontier holds at least two
+//! non-dominated allocations with a strict hardware-cost spread (a
+//! degenerate single-point "frontier" means the search stopped trading
+//! cost for reward). Every run writes `BENCH_pareto.json`.
+//!
+//! Scale knobs:
+//!   QCONTROL_SEARCH_ROUNDS=3 cargo bench --bench pareto_smoke
+
+use std::time::Instant;
+
+use qcontrol::experiment::{Executor, Trial, TrialResult};
+use qcontrol::search::{run_search_on, synth_cost_model, SearchProtocol,
+                       SearchStrategy};
+use qcontrol::util::bench::Table;
+use qcontrol::util::json::Json;
+
+/// Surrogate trainer with the paper's §3.2 sensitivity structure:
+/// reward collapses as input precision drops; internal layers tolerate
+/// narrowing. Deterministic in (allocation, seed) — the scheduling and
+/// selection machinery is what this bench measures, not SAC.
+fn surrogate(t: &Trial) -> anyhow::Result<TrialResult> {
+    let lb = t.lbits.clone().expect("search trials carry lbits");
+    let mut r = 1000.0 - 30.0 * (8 - lb.b_in.min(8)) as f64;
+    for &(w, a) in &lb.layers {
+        r -= 2.0 * (8 - w.min(8)) as f64;
+        r -= 1.0 * (8 - a.min(8)) as f64;
+    }
+    Ok(TrialResult {
+        trial_id: t.id(),
+        eval_mean: r + t.seed as f64 * 0.25,
+        eval_std: 1.0,
+        ckpt: None,
+    })
+}
+
+fn main() {
+    let rounds: usize = std::env::var("QCONTROL_SEARCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+
+    let mut proto = SearchProtocol::from_env()
+        .expect("default protocol must construct");
+    proto.sweep.steps = 500;
+    proto.sweep.learning_starts = 100;
+    proto.sweep = proto.sweep.with_seed_count(2).unwrap();
+    proto.hidden = 16;
+    // the feasible regime on XC7A15T (the paper's own 8-bit designs
+    // overflow the device, §4): cores at <= 4 bits, inputs down to 3
+    proto.input_bits = vec![6, 4, 3];
+    proto.mid_bits = vec![4, 3, 2];
+    proto.strategy = SearchStrategy::Evolve;
+    proto.rounds = rounds;
+
+    println!();
+    println!("=== pareto_smoke: mixed-precision search, surrogate \
+              trainer, real synthesis costs ===");
+    println!("pendulum h={}, grid {:?}x{:?}, {} evolve round(s), jobs 4",
+             proto.hidden, proto.input_bits, proto.mid_bits, rounds);
+    println!();
+
+    let cost = synth_cost_model("pendulum", proto.hidden, proto.clock_hz)
+        .expect("cost model must construct");
+    let t0 = Instant::now();
+    let rep = run_search_on(&surrogate, "pendulum", &proto,
+                            &Executor::new(4).unwrap(), None, &*cost)
+        .expect("search must complete");
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // the smoke contract
+    assert!(rep.pareto.len() >= 2,
+            "frontier collapsed to {} point(s)", rep.pareto.len());
+    assert!(rep.evaluated.len() > proto.input_bits.len()
+            * proto.mid_bits.len(),
+            "evolution never expanded past the grid");
+    for pair in rep.pareto.windows(2) {
+        assert!(pair[0].luts < pair[1].luts
+                || (pair[0].luts == pair[1].luts
+                    && pair[0].energy_per_action
+                        <= pair[1].energy_per_action),
+                "frontier is not cheapest-first");
+        assert!(pair[0].luts < pair[1].luts
+                || pair[0].energy_per_action < pair[1].energy_per_action,
+                "two frontier points share identical hardware cost");
+    }
+    // the best reward seen anywhere must survive onto the frontier
+    // (nothing can dominate a reward-maximal candidate from below)
+    let best = |cs: &[qcontrol::search::Candidate]| -> f64 {
+        cs.iter().map(|c| c.reward()).fold(f64::NEG_INFINITY, f64::max)
+    };
+    assert_eq!(best(&rep.pareto), best(&rep.evaluated),
+               "the reward-maximal allocation fell off the frontier");
+    let (lo, hi) = (rep.pareto.first().unwrap(),
+                    rep.pareto.last().unwrap());
+    assert!(hi.luts > lo.luts,
+            "no strict LUT spread across the frontier ({} .. {})",
+            lo.luts, hi.luts);
+
+    let mut table = Table::new(&[
+        "allocation", "envelope", "origin", "return", "LUT", "FF",
+        "E/action [J]",
+    ]);
+    for c in &rep.pareto {
+        table.row(vec![
+            c.lbits.to_string(),
+            c.lbits.envelope().to_string(),
+            c.origin.clone(),
+            format!("{:.1}", c.reward()),
+            c.luts.to_string(),
+            c.ffs.to_string(),
+            format!("{:.3e}", c.energy_per_action),
+        ]);
+    }
+    table.print();
+
+    println!();
+    println!("{} allocations evaluated ({} on the frontier) in \
+              {wall_s:.2} s; LUT spread {} .. {} ({}x)",
+             rep.evaluated.len(), rep.pareto.len(), lo.luts, hi.luts,
+             hi.luts as f64 / lo.luts.max(1) as f64);
+
+    let bench = Json::obj(vec![
+        ("bench", Json::str("pareto_smoke")),
+        ("wall_s", Json::num(wall_s)),
+        ("rounds", Json::num(rounds as f64)),
+        ("evaluated", Json::num(rep.evaluated.len() as f64)),
+        ("frontier", Json::num(rep.pareto.len() as f64)),
+        ("lut_min", Json::num(lo.luts as f64)),
+        ("lut_max", Json::num(hi.luts as f64)),
+        ("report", rep.to_json()),
+    ]);
+    match std::fs::write("BENCH_pareto.json", bench.to_string()) {
+        Ok(()) => println!("wrote BENCH_pareto.json"),
+        Err(e) => eprintln!("could not write BENCH_pareto.json: {e}"),
+    }
+}

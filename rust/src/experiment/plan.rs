@@ -6,7 +6,7 @@
 //! in any interleaving and the results still land at their plan index.
 
 use crate::experiment::trial::{fnv1a64, Trial};
-use crate::quant::BitCfg;
+use crate::quant::{BitCfg, LayerBits};
 use crate::rl::Algo;
 
 /// Shared per-plan trial parameters; `trial()` stamps out grid points.
@@ -38,7 +38,17 @@ impl TrialTemplate {
             eval_episodes: self.eval_episodes,
             seed,
             scenario: self.scenario.clone(),
+            lbits: None,
         }
+    }
+
+    /// Stamp out a mixed-precision trial: trained at the allocation's
+    /// envelope triple, evaluated on the heterogeneous integer engine
+    /// (see [`Trial::with_lbits`]).
+    pub fn trial_mixed(&self, hidden: usize, lbits: LayerBits, seed: u64)
+                       -> Trial {
+        self.trial(hidden, lbits.envelope(), true, seed)
+            .with_lbits(lbits)
     }
 }
 
@@ -70,6 +80,21 @@ impl ExperimentPlan {
         for &(hidden, bits, quant_on) in configs {
             for &seed in seeds {
                 self.push(tmpl.trial(hidden, bits, quant_on, seed));
+            }
+        }
+        start..self.trials.len()
+    }
+
+    /// Expand an (allocation × seed) grid of mixed-precision trials,
+    /// seed-minor like [`ExperimentPlan::grid`]. Returns the index range
+    /// the grid occupies.
+    pub fn grid_mixed(&mut self, tmpl: &TrialTemplate, hidden: usize,
+                      allocs: &[LayerBits], seeds: &[u64])
+                      -> std::ops::Range<usize> {
+        let start = self.trials.len();
+        for lb in allocs {
+            for &seed in seeds {
+                self.push(tmpl.trial_mixed(hidden, lb.clone(), seed));
             }
         }
         start..self.trials.len()

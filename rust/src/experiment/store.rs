@@ -169,6 +169,7 @@ mod tests {
             eval_episodes: 5,
             seed,
             scenario: None,
+            lbits: None,
         }
     }
 

@@ -13,7 +13,7 @@
 use anyhow::{Context, Result};
 
 use crate::envs::Scenario;
-use crate::quant::BitCfg;
+use crate::quant::{BitCfg, LayerBits};
 use crate::rl::Algo;
 use crate::util::json::Json;
 
@@ -56,6 +56,13 @@ pub struct Trial {
     /// bare env — never `Some("")`, so scenario-less trials keep their
     /// historical ids and old run dirs still resume.
     pub scenario: Option<String>,
+    /// mixed-precision per-layer allocation (the search subsystem's
+    /// trials). When set, `bits` must be its envelope: QAT trains at
+    /// the envelope triple (the compiled training graph only takes the
+    /// triple) and the post-training evaluation runs the heterogeneous
+    /// integer engine — exactly what the FPGA would execute. `None` =
+    /// classic uniform trial, keeping historical ids byte-identical.
+    pub lbits: Option<LayerBits>,
 }
 
 impl Trial {
@@ -75,7 +82,22 @@ impl Trial {
             d.push_str("|sc:");
             d.push_str(sc);
         }
+        // same rule for the per-layer allocation (PR 9): uniform trials
+        // keep their pre-search descriptors and resume old run dirs
+        if let Some(lb) = &self.lbits {
+            d.push_str("|lb:");
+            d.push_str(&lb.to_string());
+        }
         d
+    }
+
+    /// Pin a per-layer allocation onto this trial: `lbits` is stored
+    /// and `bits` is forced to its envelope (what QAT trains at), so
+    /// the two can never disagree.
+    pub fn with_lbits(mut self, lb: LayerBits) -> Trial {
+        self.bits = lb.envelope();
+        self.lbits = Some(lb);
+        self
     }
 
     /// Deterministic content-derived id: a human-readable prefix plus the
@@ -136,6 +158,9 @@ impl Trial {
         if let Some(sc) = &self.scenario {
             pairs.push(("scenario", Json::str(sc)));
         }
+        if let Some(lb) = &self.lbits {
+            pairs.push(("lbits", Json::str(lb.to_string())));
+        }
         Json::obj(pairs)
     }
 
@@ -159,6 +184,11 @@ impl Trial {
                 .map_err(|e| anyhow::anyhow!("trial seed: {e}"))?,
             scenario: match j.opt("scenario") {
                 Some(s) => Some(s.as_str().context("scenario")?.to_string()),
+                None => None,
+            },
+            lbits: match j.opt("lbits") {
+                Some(s) => Some(LayerBits::parse(
+                    s.as_str().context("lbits")?, 3)?),
                 None => None,
             },
         })
@@ -259,6 +289,7 @@ mod tests {
             eval_episodes: 5,
             seed,
             scenario: None,
+            lbits: None,
         }
     }
 

@@ -27,4 +27,5 @@ pub mod runtime;
 pub mod rl;
 pub mod experiment;
 pub mod coordinator;
+pub mod search;
 pub mod fleet;

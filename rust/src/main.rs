@@ -6,6 +6,7 @@
 //!   robustness  scenario × backend reward grid, emits robustness.json
 //!   sweep       Fig.1-style bitwidth sweep for one env (parallel, resumable)
 //!   select    staged model selection (paper §3.2; parallel, resumable)
+//!   search    mixed-precision per-layer bit search, emits pareto.json
 //!   pipeline  one-shot select → export → synth, emits pipeline.json
 //!   synth     synthesize a config to the XC7A15T model (Table 3 row)
 //!   export    convert a checkpoint into a deployable .qpol artifact
@@ -38,21 +39,44 @@ use qcontrol::envs::Scenario;
 use qcontrol::experiment::{Executor, RlRunner, RunStore};
 use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
-use qcontrol::quant::BitCfg;
+use qcontrol::quant::{BitCfg, LayerBits};
 use qcontrol::rl::{self, Algo, EvalBackend, EvalOpts, TrainConfig};
 use qcontrol::runtime::{default_artifact_dir, Manifest, Runtime};
+use qcontrol::search::{run_search, search_run_name, SearchProtocol,
+                       SearchStrategy};
 use qcontrol::synth::{synthesize_with, XC7A15T};
 use qcontrol::util::bench::Table;
 use qcontrol::util::cli::Args;
 use qcontrol::util::json::Json;
 use qcontrol::util::stats::ObsNormalizer;
 
-/// Parse + validate `--bits b_in,b_core,b_out`; a bad width is a CLI
-/// error here, not a `QRange` assert deep inside export.
+/// Parse + validate `--bits` for commands that drive the compiled
+/// training/eval graphs, which only take the uniform triple. Both
+/// grammars parse (the error text enumerates both); a genuinely
+/// heterogeneous allocation is redirected to the commands that can
+/// honor it instead of being silently flattened.
 fn parse_bits(a: &Args) -> Result<BitCfg> {
     match a.str_opt("bits") {
         None => Ok(BitCfg::uniform(8)),
-        Some(s) => BitCfg::parse(s).context("--bits"),
+        Some(s) => {
+            let lb = LayerBits::parse(s, 3).context("--bits")?;
+            anyhow::ensure!(
+                lb.is_uniform(),
+                "--bits {s}: this command runs the compiled \
+                 training/eval graph, which takes the uniform triple \
+                 only; cost a per-layer allocation with `qcontrol synth \
+                 --bits {s}` or explore them with `qcontrol search`");
+            Ok(lb.envelope())
+        }
+    }
+}
+
+/// Parse `--bits` in either grammar as a per-layer allocation (for the
+/// commands whose integer path is genuinely per-layer, e.g. `synth`).
+fn parse_bits_mixed(a: &Args, default: BitCfg) -> Result<LayerBits> {
+    match a.str_opt("bits") {
+        None => Ok(LayerBits::from(default)),
+        Some(s) => LayerBits::parse(s, 3).context("--bits"),
     }
 }
 
@@ -88,6 +112,7 @@ fn main() -> Result<()> {
         "robustness" => cmd_robustness(&args),
         "sweep" => cmd_sweep(&args),
         "select" => cmd_select(&args),
+        "search" => cmd_search(&args),
         "pipeline" => cmd_pipeline(&args),
         "synth" => cmd_synth(&args),
         "export" => cmd_export(&args),
@@ -128,14 +153,26 @@ usage: qcontrol <cmd> [--flags]
   sweep    --env E [--scopes all,input,output,core] [--bits 8,6,4,3,2]
            [--steps N] [--seeds N] [--jobs N]
   select   --env E [--steps N] [--seeds N] [--jobs N]
+  search   --env E [--strategy grid|evolve] [--hidden H] [--rounds N]
+           [--steps N] [--seeds N] [--jobs N] [--clock-hz HZ]
+           (mixed-precision search over per-layer bit allocations
+            (`--bits` grammar `b_in;w1,a1;...;wN,aN`): a coarse uniform
+            grid, then — under `evolve`, the default — bounded rounds of
+            ±1-bit mutations around the current Pareto survivors.
+            Candidates train at their envelope triple and are scored on
+            the integer engine; LUT/energy cost comes from the XC7A15T
+            estimator at HZ (default 1e8). Emits the non-dominated
+            frontier as results/runs/<run-id>/pareto.json)
   pipeline --env E [--steps N] [--seeds N] [--jobs N] [--clock-hz HZ]
            [--opt|--no-opt]
            (staged selection -> .qpol export -> QIR pass pipeline ->
             XC7A15T synthesis at HZ (default 1e8) -> C/Verilog datapath
             emission; emits results/runs/<run-id>/pipeline.json with
             per-pass cost deltas under \"passes\")
-  synth    --env E [--hidden H] [--bits i,c,o] [--opt|--no-opt]
-           (defaults: paper Table 1)
+  synth    --env E [--hidden H] [--bits i,c,o | i;w1,a1;w2,a2;w3,a3]
+           [--opt|--no-opt]
+           (defaults: paper Table 1; the per-layer `--bits` grammar
+            costs a heterogeneous allocation from `qcontrol search`)
   export   --ckpt PATH [--out FILE.qpol] [--id ID]
            (checkpoint -> versioned integer .qpol artifact)
   emit     --qpol FILE.qpol | --dir ARTIFACTS
@@ -301,6 +338,7 @@ fn cmd_eval(a: &Args) -> Result<()> {
         episodes: a.usize("episodes", 10)?,
         seed: a.u64("seed", 42)?,
         backend: EvalBackend::parse(&a.str("backend", "pjrt"))?,
+        lbits: None,
     };
     let (mean, std) = rl::evaluate(&rt, &opts, &flat, &norm)?;
     println!("{}: return {mean:.1} ± {std:.1} over {} episodes \
@@ -356,6 +394,7 @@ fn cmd_robustness(a: &Args) -> Result<()> {
                 episodes,
                 seed,
                 backend,
+                lbits: None,
             };
             let returns = rl::evaluate_returns(&rt, &opts, &flat, &norm)?;
             let (mean, std) = (qcontrol::util::stats::mean(&returns),
@@ -500,6 +539,54 @@ fn cmd_select(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_search(a: &Args) -> Result<()> {
+    let rt = Runtime::load(default_artifact_dir())?;
+    let env = a.str("env", "pendulum");
+    let mut proto = SearchProtocol::from_env()?;
+    apply_protocol_flags(a, &mut proto.sweep)?;
+    let h_def = paper_table1(&env).map(|(h, _)| h).unwrap_or(proto.hidden);
+    proto.hidden = a.usize("hidden", h_def)?;
+    // the search trains real candidates: the width must have artifacts
+    usable_widths(&rt, &env, &[proto.hidden])?;
+    proto.strategy = SearchStrategy::parse(&a.str("strategy", "evolve"))?;
+    proto.rounds = a.usize("rounds", proto.rounds)?;
+    proto.clock_hz = a.f64("clock-hz", proto.clock_hz)?;
+    let exec = executor_from(a)?;
+    let run_store = RunStore::for_run(&search_run_name(&env, &proto))?;
+    println!("mixed-precision search on {env} (h={}, {}, strategy {}, \
+              {} jobs)", proto.hidden, proto.sweep.describe(),
+             proto.strategy.name(), exec.jobs());
+    println!("run dir {} (completed trials are skipped on re-run)",
+             run_store.dir().display());
+
+    let rep = run_search(&rt, &env, &proto, &exec, Some(&run_store))?;
+    let mut table = Table::new(&["allocation", "envelope", "return",
+                                 "LUT", "E/action"]);
+    for c in &rep.pareto {
+        table.row(vec![c.lbits.to_string(),
+                       c.lbits.envelope().to_string(),
+                       format!("{:.1} ± {:.1}", c.point.mean,
+                               c.point.std),
+                       c.luts.to_string(),
+                       format!("{:.2e} J", c.energy_per_action)]);
+    }
+    table.print();
+    println!("{} allocation(s) evaluated, {} on the frontier",
+             rep.evaluated.len(), rep.pareto.len());
+    if !rep.infeasible.is_empty() {
+        println!("{} allocation(s) infeasible on the device (first: {} \
+                  — {}); all recorded in the report",
+                 rep.infeasible.len(), rep.infeasible[0].0,
+                 rep.infeasible[0].1);
+    }
+    let report_path = run_store.write_report("pareto", &rep.to_json())?;
+    let stats = exec.stats();
+    println!("{} trial(s) trained, {} resumed, {} deduped; pareto -> {}",
+             stats.executed, stats.cached, stats.deduped,
+             report_path.display());
+    Ok(())
+}
+
 fn cmd_pipeline(a: &Args) -> Result<()> {
     let rt = Runtime::load(default_artifact_dir())?;
     let env = a.str("env", "pendulum");
@@ -550,7 +637,7 @@ fn cmd_synth(a: &Args) -> Result<()> {
     let (h_def, bits_def) = paper_table1(&env)
         .unwrap_or((64, BitCfg::new(4, 3, 8)));
     let hidden = a.usize("hidden", h_def)?;
-    let bits = if a.has("bits") { parse_bits(a)? } else { bits_def };
+    let lbits = parse_bits_mixed(a, bits_def)?;
 
     // synthesize a representative (randomly initialized or checkpointed)
     // policy — resources/latency depend only on dims+bits, not weights
@@ -569,11 +656,11 @@ fn cmd_synth(a: &Args) -> Result<()> {
     };
     let tensors = rl::extract_tensors(spec, &flat, dims.obs_dim, hidden,
                                       dims.act_dim)?;
-    let policy = IntPolicy::from_tensors(&tensors, bits);
+    let policy = IntPolicy::from_tensors_mixed(&tensors, &lbits)?;
     let level = parse_opt_level(a)?;
     let (report, passes) = synthesize_with(&policy, &XC7A15T, 1e8,
                                            level)?;
-    println!("{env} h={hidden} bits={bits} on {}:", XC7A15T.name);
+    println!("{env} h={hidden} bits={lbits} on {}:", XC7A15T.name);
     for line in passes.summary_lines() {
         println!("  {line}");
     }

@@ -21,6 +21,16 @@
 //! | 3   | NORM  | dim u32, mean f64×dim, var f64×dim (dim 0 = disabled) |
 //! | 4   | LAYER | one per layer, in forward order (see `put_layer`)     |
 //! | 5   | TANH  | n u32, LUT f32×n                                      |
+//! | 6   | LBITS | n u32, b_in u32, (w u32, a u32)×n — declared per-layer|
+//! |     |       | allocation; cross-checked against the LAYER geometry  |
+//!
+//! LBITS (PR 9) declares the mixed-precision allocation explicitly. It
+//! is *derivable* — every number it carries is already implied by the
+//! LAYER sections' lattices — so: old artifacts without it load
+//! unchanged (the allocation is derived), old readers skip it by the
+//! unknown-section rule and still infer bit-identically from the LAYER
+//! sections, and a new reader cross-checks declaration against
+//! geometry so a hand-edited file can't lie about its widths.
 //!
 //! **Forward compatibility:** a reader MUST skip sections with unknown
 //! tags (they are covered by the CRC, so corruption is still caught).
@@ -33,7 +43,7 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::quant::export::{IntLayer, IntPolicy};
-use crate::quant::{BitCfg, QRange};
+use crate::quant::{BitCfg, LayerBits, QRange};
 use crate::util::stats::ObsNormalizer;
 
 pub const MAGIC: [u8; 4] = *b"QPOL";
@@ -44,6 +54,7 @@ const SEC_BITS: u16 = 2;
 const SEC_NORM: u16 = 3;
 const SEC_LAYER: u16 = 4;
 const SEC_TANH: u16 = 5;
+const SEC_LBITS: u16 = 6;
 const SEC_END: u16 = 0xFFFF;
 
 /// Caps that bound allocations while parsing untrusted files.
@@ -63,6 +74,10 @@ pub struct PolicyArtifact {
     /// per-dimension normalizer mean/var; empty = normalization disabled
     pub norm_mean: Vec<f64>,
     pub norm_var: Vec<f64>,
+    /// the LBITS declaration found on load (`None` for pre-PR-9 files
+    /// and for artifacts constructed in-process; the writer always
+    /// emits the section from the policy geometry regardless)
+    pub declared_lbits: Option<LayerBits>,
 }
 
 impl PolicyArtifact {
@@ -74,6 +89,25 @@ impl PolicyArtifact {
             policy,
             norm_mean: Vec::new(),
             norm_var: Vec::new(),
+            declared_lbits: None,
+        }
+    }
+
+    /// Descriptive note for artifacts whose geometry is heterogeneous
+    /// but whose file carried no LBITS declaration — the degraded path
+    /// a pre-PR-9 reader's output takes through a new reader. Inference
+    /// is still bit-identical (the LAYER sections are authoritative);
+    /// only the declared intent is missing, so `bits` shows the uniform
+    /// envelope.
+    pub fn compat_note(&self) -> Option<String> {
+        let lb = self.policy.layer_bits();
+        if self.declared_lbits.is_none() && !lb.is_uniform() {
+            Some(format!(
+                "artifact carries the heterogeneous per-layer \
+                 allocation {lb} but no LBITS declaration; bits are \
+                 reported as the uniform envelope {}", self.policy.bits))
+        } else {
+            None
         }
     }
 
@@ -173,6 +207,17 @@ impl PolicyArtifact {
         for layer in &p.layers {
             w.section(SEC_LAYER, |w| put_layer(w, layer));
         }
+        // declared per-layer allocation (derivable from the LAYER
+        // sections — old readers skip this tag and lose nothing)
+        let lb = p.layer_bits();
+        w.section(SEC_LBITS, |w| {
+            w.put_u32(lb.n_layers() as u32);
+            w.put_u32(lb.b_in);
+            for &(wb, ab) in &lb.layers {
+                w.put_u32(wb);
+                w.put_u32(ab);
+            }
+        });
         w.section(SEC_TANH, |w| {
             w.put_u32(p.tanh_lut.len() as u32);
             for &x in &p.tanh_lut {
@@ -202,6 +247,7 @@ impl PolicyArtifact {
         let mut norm: Option<(Vec<f64>, Vec<f64>)> = None;
         let mut layers: Vec<IntLayer> = Vec::new();
         let mut tanh_lut: Option<Vec<f32>> = None;
+        let mut declared_lbits: Option<LayerBits> = None;
 
         loop {
             let tag = r.u16().context("reading section tag")?;
@@ -265,6 +311,21 @@ impl PolicyArtifact {
                             "more than {MAX_LAYERS} layer sections");
                     layers.push(read_layer(&mut s)?);
                 }
+                SEC_LBITS => {
+                    ensure!(declared_lbits.is_none(),
+                            "duplicate LBITS section");
+                    let n = s.u32()? as usize;
+                    ensure!(n >= 1 && n <= MAX_LAYERS,
+                            "implausible LBITS layer count {n}");
+                    let b_in = s.u32()?;
+                    let mut per = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        per.push((s.u32()?, s.u32()?));
+                    }
+                    let lb = LayerBits { b_in, layers: per };
+                    lb.validate().context("LBITS section")?;
+                    declared_lbits = Some(lb);
+                }
                 SEC_TANH => {
                     ensure!(tanh_lut.is_none(), "duplicate TANH section");
                     let n = s.u32()? as usize;
@@ -320,6 +381,15 @@ impl PolicyArtifact {
             layers,
             tanh_lut,
         };
+        // a declared allocation must match the geometry the LAYER
+        // sections actually carry — a file can't claim widths its
+        // lattices don't have (absent LBITS = pre-PR-9 file: derive)
+        if let Some(lb) = &declared_lbits {
+            let derived = policy.layer_bits();
+            ensure!(*lb == derived,
+                    "LBITS declares allocation {lb} but the LAYER \
+                     sections derive {derived}");
+        }
         // a .qpol is untrusted input feeding the i32 engines (registry,
         // serving, eval): run the full IR verification — threshold
         // monotonicity, lattice membership, accumulator-width safety —
@@ -334,6 +404,7 @@ impl PolicyArtifact {
             policy,
             norm_mean,
             norm_var,
+            declared_lbits,
         })
     }
 }
@@ -715,6 +786,133 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
         assert!(crc_probe(&path).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Drop the LBITS section from serialized bytes and re-seal the CRC —
+    /// reconstructing byte-for-byte what a pre-PR-9 writer produced (it
+    /// wrote the same sections in the same order, minus tag 6).
+    fn strip_lbits(bytes: &[u8]) -> Vec<u8> {
+        let mut out = bytes[..8].to_vec(); // magic + version + flags
+        let mut pos = 8;
+        loop {
+            let tag =
+                u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap());
+            let len = u64::from_le_bytes(
+                bytes[pos + 2..pos + 10].try_into().unwrap()) as usize;
+            if tag == SEC_END {
+                break;
+            }
+            if tag != SEC_LBITS {
+                out.extend_from_slice(&bytes[pos..pos + 10 + len]);
+            }
+            pos += 10 + len;
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&SEC_END.to_le_bytes());
+        out.extend_from_slice(&4u64.to_le_bytes());
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn pre_pr9_file_without_lbits_loads_bit_identically() {
+        // a uniform-allocation artifact written before the LBITS section
+        // existed must load exactly as the new format does: same policy,
+        // same inference, no compat note — and re-serializing it must
+        // regenerate the full new-format bytes (LBITS is derivable)
+        let policy = testkit::toy_policy(11, 5, 12, 3, BitCfg::new(4, 3, 8));
+        let art = PolicyArtifact::new("legacy", policy);
+        let bytes = art.to_bytes().unwrap();
+        let old = strip_lbits(&bytes);
+        assert!(old.len() < bytes.len(), "LBITS was not present to strip");
+
+        let full = PolicyArtifact::from_bytes(&bytes).unwrap();
+        assert!(full.declared_lbits.is_some(),
+                "new-format parse must surface the declaration");
+        let back = PolicyArtifact::from_bytes(&old).unwrap();
+        assert_eq!(back.declared_lbits, None,
+                   "pre-PR-9 file has nothing to declare");
+        assert_eq!(back.compat_note(), None,
+                   "uniform allocation needs no note");
+        for i in 0..20 {
+            let obs: Vec<f32> =
+                (0..5).map(|d| ((i * 5 + d) as f32) * 0.21 - 2.5).collect();
+            let a = full.policy.forward_naive(&obs);
+            let b = back.policy.forward_naive(&obs);
+            let (ab, bb): (Vec<u32>, Vec<u32>) =
+                (a.iter().map(|x| x.to_bits()).collect(),
+                 b.iter().map(|x| x.to_bits()).collect());
+            assert_eq!(ab, bb, "inference drift on probe {i}");
+        }
+        // round-trip upgrade: the old file re-serialized IS the new file
+        assert_eq!(back.to_bytes().unwrap(), bytes);
+    }
+
+    #[test]
+    fn stripped_heterogeneous_artifact_degrades_with_a_note() {
+        // a reader that skips LBITS (or a file that lost it) must still
+        // infer bit-identically from the self-describing LAYER sections;
+        // `bits` degrades to the uniform envelope and compat_note() says
+        // so — descriptively, never by panicking
+        let lb = LayerBits::parse("8;4,4;3,3;2,8", 3).unwrap();
+        let policy = testkit::toy_policy_mixed(17, 5, 12, 3, &lb).unwrap();
+        let art = PolicyArtifact::new("mixed", policy);
+        let bytes = art.to_bytes().unwrap();
+
+        let full = PolicyArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(full.declared_lbits, Some(lb.clone()),
+                   "writer must declare the geometry it serialized");
+        assert_eq!(full.compat_note(), None,
+                   "a declared allocation needs no note");
+
+        let back = PolicyArtifact::from_bytes(&strip_lbits(&bytes)).unwrap();
+        assert_eq!(back.declared_lbits, None);
+        assert_eq!(back.policy.layer_bits(), lb,
+                   "LAYER sections are authoritative for the geometry");
+        assert_eq!(back.policy.bits, lb.envelope(),
+                   "bits degrade to the uniform envelope");
+        let note = back.compat_note().expect("heterogeneous + undeclared");
+        assert!(note.contains(&lb.to_string()), "note lacks allocation: {note}");
+        for i in 0..20 {
+            let obs: Vec<f32> =
+                (0..5).map(|d| ((i * 3 + d) as f32) * 0.37 - 2.0).collect();
+            let (a, b) = (full.policy.forward_naive(&obs),
+                          back.policy.forward_naive(&obs));
+            let (ab, bb): (Vec<u32>, Vec<u32>) =
+                (a.iter().map(|x| x.to_bits()).collect(),
+                 b.iter().map(|x| x.to_bits()).collect());
+            assert_eq!(ab, bb, "inference drift on probe {i}");
+        }
+    }
+
+    #[test]
+    fn lying_lbits_declaration_is_rejected() {
+        // a hand-edited LBITS that contradicts the LAYER geometry must
+        // be an error, not silently trusted
+        let lb = LayerBits::parse("8;4,4;3,3;2,8", 3).unwrap();
+        let policy = testkit::toy_policy_mixed(23, 4, 8, 2, &lb).unwrap();
+        let bytes = PolicyArtifact::new("liar", policy).to_bytes().unwrap();
+        // rebuild with a falsified LBITS section
+        let mut patched = strip_lbits(&bytes);
+        let end_at = patched.len() - (2 + 8 + 4);
+        patched.truncate(end_at);
+        let fake = LayerBits::parse("8;8,8;8,8;8,8", 3).unwrap();
+        patched.extend_from_slice(&SEC_LBITS.to_le_bytes());
+        patched.extend_from_slice(
+            &((4 + 4 + 8 * fake.n_layers()) as u64).to_le_bytes());
+        patched.extend_from_slice(&(fake.n_layers() as u32).to_le_bytes());
+        patched.extend_from_slice(&fake.b_in.to_le_bytes());
+        for &(w, a) in &fake.layers {
+            patched.extend_from_slice(&w.to_le_bytes());
+            patched.extend_from_slice(&a.to_le_bytes());
+        }
+        let crc = crc32(&patched);
+        patched.extend_from_slice(&SEC_END.to_le_bytes());
+        patched.extend_from_slice(&4u64.to_le_bytes());
+        patched.extend_from_slice(&crc.to_le_bytes());
+        let err = PolicyArtifact::from_bytes(&patched).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("LBITS declares"), "wrong error: {msg}");
     }
 
     #[test]

@@ -152,6 +152,8 @@ pub fn emit_c(g: &QGraph) -> Result<String> {
                  `qcontrol emit`.", g.name)?;
     writeln!(w, " *")?;
     writeln!(w, " * graph: {}", g.summary())?;
+    writeln!(w, " * layer widths: {} (b_in; per-layer w,a — the last \
+                 a is b_out)", g.layer_bits()?)?;
     writeln!(w, " *")?;
     writeln!(w, " * Contract: the caller feeds the *normalized* \
                  observation (the frozen")?;
@@ -254,7 +256,8 @@ pub fn emit_c_registry(graphs: &[QGraph])
         g.verify()
             .with_context(|| format!("registry policy `{}`", g.name))?;
         writeln!(w)?;
-        writeln!(w, "/* ==== {}: {} ==== */", g.name, g.summary())?;
+        writeln!(w, "/* ==== {}: {} | layer widths {} ==== */", g.name,
+                 g.summary(), g.layer_bits()?)?;
         emit_c_graph(w, g, &mut Some(&mut share))?;
     }
     Ok((c, share.report))

@@ -57,6 +57,8 @@ pub fn emit_verilog(g: &QGraph) -> Result<String> {
                  `qcontrol emit`.", g.name)?;
     writeln!(w, "//")?;
     writeln!(w, "// graph: {}", g.summary())?;
+    writeln!(w, "// layer widths: {} (b_in; per-layer w,a — the last \
+                 a is b_out)", g.layer_bits()?)?;
     writeln!(w, "//")?;
     writeln!(w, "// Bit-true combinational reference of the verified \
                  integer IR; the")?;

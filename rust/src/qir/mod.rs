@@ -520,6 +520,22 @@ impl QGraph {
         Ok((lut.as_slice(), r))
     }
 
+    /// The per-layer width vector of the datapath — the input lattice
+    /// width plus each layer's (weight width, output-lattice width) —
+    /// as a [`LayerBits`] allocation. Derived entirely from the typed
+    /// edges, so it reflects what the graph *is*, declared or not; the
+    /// emitters stamp its canonical string into generated file headers
+    /// so synthesized datapaths are self-describing.
+    pub fn layer_bits(&self) -> Result<crate::quant::LayerBits> {
+        let (_, in_r) = self.input_quantizer()?;
+        let layers = self
+            .layers()?
+            .iter()
+            .map(|v| (v.w_bits, v.out_range.bits()))
+            .collect();
+        Ok(crate::quant::LayerBits { b_in: in_r.bits(), layers })
+    }
+
     /// Largest integer vector dim flowing through the graph (scratch
     /// sizing for executors and the emitted C).
     pub fn max_int_dim(&self) -> usize {

@@ -26,7 +26,9 @@
 //! whose `verify()` pass checks the structural invariants — including
 //! that the worst-case accumulator fits `i32` — once for all backends.
 
-use super::{absmax_scale, quantize, BitCfg, QRange};
+use anyhow::Result;
+
+use super::{absmax_scale, quantize, BitCfg, LayerBits, QRange};
 use super::fakequant::PolicyTensors;
 
 /// One integer layer of the deployed policy.
@@ -185,37 +187,80 @@ fn build_layer(
 }
 
 impl IntPolicy {
-    /// Build the integer policy from trained FP tensors + bit config.
+    /// Build the integer policy from trained FP tensors + a uniform bit
+    /// config — the degenerate case of [`IntPolicy::from_tensors_mixed`]
+    /// (kept infallible: a uniform 3-layer allocation over a `BitCfg`
+    /// that `QRange::new` accepts cannot fail the per-layer checks).
     pub fn from_tensors(p: &PolicyTensors, bits: BitCfg) -> IntPolicy {
+        Self::from_tensors_mixed(p, &LayerBits::from(bits))
+            .expect("uniform 3-layer allocation is always buildable")
+    }
+
+    /// Build the integer policy with a per-layer [`LayerBits`]
+    /// allocation: input on the signed `b_in` lattice, each hidden
+    /// layer's weights on its own signed `w` lattice with ReLU
+    /// activations requantized to its unsigned `a` lattice, the final
+    /// layer requantizing to the signed output lattice. The stored
+    /// `bits` triple is the allocation's [`LayerBits::envelope`] — what
+    /// QAT trained at; the heterogeneous widths live in the per-layer
+    /// ranges themselves (and round-trip through `.qpol` that way).
+    pub fn from_tensors_mixed(p: &PolicyTensors, lb: &LayerBits)
+                              -> Result<IntPolicy> {
         p.validate();
-        let r_in = QRange::new(bits.b_in, true);
-        let r_core = QRange::new(bits.b_core, false);
-        let r_out = QRange::new(bits.b_out, true);
+        lb.validate()?;
+        anyhow::ensure!(
+            lb.n_layers() == 3,
+            "per-layer allocation `{lb}` has {} layers; the policy MLP \
+             has 3 (fc1, fc2, mean)", lb.n_layers());
+        let (w1, a1) = lb.layers[0];
+        let (w2, a2) = lb.layers[1];
+        let (w3, b_out) = lb.layers[2];
+        let r_in = QRange::new(lb.b_in, true);
+        let r_h1 = QRange::new(a1, false);
+        let r_h2 = QRange::new(a2, false);
+        let r_out = QRange::new(b_out, true);
 
         let l1 = build_layer(
             p.fc1_w, p.fc1_b, p.hidden, p.obs_dim,
-            p.s_in, p.s_h1, r_in, r_core, bits.b_core, true);
+            p.s_in, p.s_h1, r_in, r_h1, w1, true);
         let l2 = build_layer(
             p.fc2_w, p.fc2_b, p.hidden, p.hidden,
-            p.s_h1, p.s_h2, r_core, r_core, bits.b_core, true);
+            p.s_h1, p.s_h2, r_h1, r_h2, w2, true);
         let l3 = build_layer(
             p.mean_w, p.mean_b, p.act_dim, p.hidden,
-            p.s_h2, p.s_out, r_core, r_out, bits.b_core, false);
+            p.s_h2, p.s_out, r_h2, r_out, w3, false);
 
         let delta_out = l3.delta_out;
         let tanh_lut: Vec<f32> = (r_out.qmin..=r_out.qmax)
             .map(|q| ((q as f64) * delta_out).tanh() as f32)
             .collect();
 
-        IntPolicy {
+        Ok(IntPolicy {
             obs_dim: p.obs_dim,
             hidden: p.hidden,
             act_dim: p.act_dim,
-            bits,
+            bits: lb.envelope(),
             s_in: p.s_in,
             in_range: r_in,
             layers: vec![l1, l2, l3],
             tanh_lut,
+        })
+    }
+
+    /// The per-layer allocation this policy actually carries, derived
+    /// from the layer geometry (input lattice width, each layer's
+    /// weight width and output-lattice width). Total — every built or
+    /// loaded policy has one, whether or not a `.qpol` declared it —
+    /// which is what lets old artifacts without an LBITS section load
+    /// unchanged.
+    pub fn layer_bits(&self) -> LayerBits {
+        LayerBits {
+            b_in: self.in_range.bits(),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| (l.w_bits, l.out_range.bits()))
+                .collect(),
         }
     }
 
@@ -412,6 +457,56 @@ mod tests {
             assert_eq!(ip.forward_naive(&obs),
                        ip.forward_naive_rescale(&obs));
         }
+    }
+
+    #[test]
+    fn mixed_allocation_builds_heterogeneous_layers() {
+        let bufs = toy_bufs(6, 5, 8, 2);
+        let p = toy_tensors(&bufs, 5, 8, 2);
+        let lb = LayerBits::parse("8;4,4;3,3;2,8", 3).unwrap();
+        let ip = IntPolicy::from_tensors_mixed(&p, &lb).unwrap();
+        // the derivation reproduces the requested allocation exactly
+        assert_eq!(ip.layer_bits(), lb);
+        assert_eq!(ip.bits, lb.envelope());
+        assert_eq!(ip.layers[0].w_bits, 4);
+        assert_eq!(ip.layers[1].w_bits, 3);
+        assert_eq!(ip.layers[2].w_bits, 2);
+        assert_eq!(ip.layers[0].out_range, QRange::new(4, false));
+        assert_eq!(ip.layers[1].out_range, QRange::new(3, false));
+        assert_eq!(ip.layers[2].out_range, QRange::new(8, true));
+        // the central integer invariant holds per heterogeneous layer
+        let mut rng = Rng::new(17);
+        for _ in 0..100 {
+            let mut obs = vec![0.0f32; 5];
+            rng.fill_normal(&mut obs);
+            assert_eq!(ip.forward_naive(&obs),
+                       ip.forward_naive_rescale(&obs));
+        }
+        // a wrong layer count is an error, not a truncated build
+        let lb4 = LayerBits::parse("8;4,4;3,3;3,3;2,8", 3).unwrap();
+        assert!(IntPolicy::from_tensors_mixed(&p, &lb4).is_err());
+    }
+
+    #[test]
+    fn uniform_mixed_build_is_bit_identical_to_from_tensors() {
+        let bufs = toy_bufs(7, 4, 6, 2);
+        let p = toy_tensors(&bufs, 4, 6, 2);
+        let bits = BitCfg::new(4, 3, 8);
+        let a = IntPolicy::from_tensors(&p, bits);
+        let b = IntPolicy::from_tensors_mixed(
+            &p, &LayerBits::from(bits)).unwrap();
+        assert_eq!(a.bits, b.bits);
+        assert_eq!(a.layer_bits(), b.layer_bits());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.w_int, y.w_int);
+            assert_eq!(x.thresholds, y.thresholds);
+        }
+        let lut_a: Vec<u32> =
+            a.tanh_lut.iter().map(|v| v.to_bits()).collect();
+        let lut_b: Vec<u32> =
+            b.tanh_lut.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(lut_a, lut_b);
+        assert_eq!(a.layer_bits(), LayerBits::from(bits));
     }
 
     #[test]

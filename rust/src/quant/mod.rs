@@ -136,6 +136,169 @@ impl std::fmt::Display for BitCfg {
     }
 }
 
+impl QRange {
+    /// Storage width of a `QRange::new`-shaped lattice: the `bits` that
+    /// reconstruct it (signed: `qs = 2^(b-1)`; unsigned: `qmax =
+    /// 2^b - 1`). Inverse of [`QRange::new`] for lattice ranges; not
+    /// meaningful for the optimizer's narrowed accumulator intervals.
+    pub fn bits(&self) -> u32 {
+        if self.qmin < 0 {
+            32 - (self.qs as u32).leading_zeros()
+        } else {
+            32 - (self.qmax as u32).leading_zeros()
+        }
+    }
+}
+
+/// Per-layer bit allocation: the mixed-precision generalization of
+/// [`BitCfg`]. One input width plus one `(weight, activation)` pair per
+/// layer; the last layer's activation width IS the output width, so the
+/// uniform triple `(b_in, b_core, b_out)` is the degenerate case
+/// `b_in; (b_core, b_core); …; (b_core, b_out)`.
+///
+/// Canonical string form (the `--bits` per-layer grammar):
+/// `8;4,4;3,3;2,8` = input 8 bits; layer 1 weights 4 / activations 4;
+/// layer 2 weights 3 / activations 3; layer 3 weights 2 / output 8.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerBits {
+    pub b_in: u32,
+    /// per-layer `(weight_bits, activation_bits)`, forward order; the
+    /// final entry's activation width is the signed output lattice
+    pub layers: Vec<(u32, u32)>,
+}
+
+impl LayerBits {
+    /// Expand a uniform triple over `n_layers` layers.
+    pub fn uniform(bits: BitCfg, n_layers: usize) -> LayerBits {
+        let mut layers = vec![(bits.b_core, bits.b_core); n_layers];
+        if let Some(last) = layers.last_mut() {
+            last.1 = bits.b_out;
+        }
+        LayerBits { b_in: bits.b_in, layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Output width (the last layer's activation slot).
+    pub fn b_out(&self) -> u32 {
+        self.layers.last().map(|&(_, a)| a).unwrap_or(0)
+    }
+
+    /// The tightest uniform [`BitCfg`] covering this allocation: b_in,
+    /// the widest weight/internal-activation width, b_out. For an
+    /// allocation built by [`LayerBits::uniform`] this round-trips the
+    /// original triple. QAT trains at the envelope (the compiled
+    /// training graph only takes the triple); the heterogeneous widths
+    /// apply at integer export/eval time.
+    pub fn envelope(&self) -> BitCfg {
+        let mut core = 1;
+        for (i, &(w, a)) in self.layers.iter().enumerate() {
+            core = core.max(w);
+            if i + 1 < self.layers.len() {
+                core = core.max(a);
+            }
+        }
+        BitCfg::new(self.b_in, core, self.b_out())
+    }
+
+    /// Whether every layer sits at the envelope widths (i.e. this is a
+    /// plain triple in per-layer clothing).
+    pub fn is_uniform(&self) -> bool {
+        *self == LayerBits::uniform(self.envelope(), self.n_layers())
+    }
+
+    /// Same storage constraints as [`BitCfg::validate`], per layer:
+    /// weights on the i8 lattice ([`BitCfg::CORE_RANGE`]), input /
+    /// activation / output widths in [`BitCfg::BITS_RANGE`].
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(),
+                        "per-layer bit config has no layers");
+        anyhow::ensure!(BitCfg::BITS_RANGE.contains(&self.b_in),
+                        "b_in={} out of range (expected {}..={} bits)",
+                        self.b_in, BitCfg::BITS_RANGE.start(),
+                        BitCfg::BITS_RANGE.end());
+        for (i, &(w, a)) in self.layers.iter().enumerate() {
+            anyhow::ensure!(BitCfg::CORE_RANGE.contains(&w),
+                            "layer {} weight width {w} out of range \
+                             (expected {}..={} bits — lattice weights \
+                             are stored as i8)", i + 1,
+                            BitCfg::CORE_RANGE.start(),
+                            BitCfg::CORE_RANGE.end());
+            // internal activations are requantized onto an unsigned
+            // lattice whose thresholds are enumerated per level — cap
+            // them like weights; the final (output) width only needs
+            // the I/O range
+            let cap = if i + 1 < self.layers.len() {
+                BitCfg::CORE_RANGE
+            } else {
+                BitCfg::BITS_RANGE
+            };
+            anyhow::ensure!(cap.contains(&a),
+                            "layer {} activation width {a} out of range \
+                             (expected {}..={} bits)", i + 1,
+                            cap.start(), cap.end());
+        }
+        Ok(())
+    }
+
+    /// Parse either `--bits` grammar, validated:
+    /// * the uniform triple `b_in,b_core,b_out` (e.g. `4,3,8`), expanded
+    ///   over `default_layers` layers;
+    /// * the per-layer form `b_in;w1,a1;…;wN,aN` (e.g. `8;4,4;3,3;2,8`).
+    pub fn parse(s: &str, default_layers: usize)
+                 -> anyhow::Result<LayerBits> {
+        let grammar_err = || {
+            anyhow::anyhow!(
+                "bit config `{s}`: expected the uniform triple \
+                 `b_in,b_core,b_out` (e.g. `4,3,8`) or the per-layer \
+                 form `b_in;w1,a1;...;wN,aN` (e.g. `8;4,4;3,3;2,8`)")
+        };
+        if !s.contains(';') {
+            let bits = BitCfg::parse(s).map_err(|e| {
+                grammar_err().context(e)
+            })?;
+            return Ok(LayerBits::uniform(bits, default_layers));
+        }
+        let mut parts = s.split(';').map(|t| t.trim());
+        let b_in: u32 = parts
+            .next()
+            .ok_or_else(grammar_err)?
+            .parse()
+            .map_err(|_| grammar_err())?;
+        let mut layers = Vec::new();
+        for part in parts {
+            let (w, a) = part.split_once(',').ok_or_else(grammar_err)?;
+            layers.push((w.trim().parse().map_err(|_| grammar_err())?,
+                         a.trim().parse().map_err(|_| grammar_err())?));
+        }
+        let lb = LayerBits { b_in, layers };
+        lb.validate()?;
+        Ok(lb)
+    }
+}
+
+impl From<BitCfg> for LayerBits {
+    /// The historical 3-layer MLP shape.
+    fn from(bits: BitCfg) -> LayerBits {
+        LayerBits::uniform(bits, 3)
+    }
+}
+
+/// Canonical per-layer form `8;4,4;3,3;2,8` (the inverse of the
+/// per-layer arm of [`LayerBits::parse`]); used in trial descriptors,
+/// pareto reports, and emitted-file headers.
+impl std::fmt::Display for LayerBits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.b_in)?;
+        for &(w, a) in &self.layers {
+            write!(f, ";{w},{a}")?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +357,61 @@ mod tests {
         assert_eq!(b.to_string(), "4,3,8");
         assert_eq!(BitCfg::parse("4,3,8").unwrap(), b);
         assert_eq!(BitCfg::parse(" 4 , 3 , 8 ").unwrap(), b);
+    }
+
+    #[test]
+    fn qrange_bits_inverts_new() {
+        for b in 1..=16 {
+            assert_eq!(QRange::new(b, true).bits(), b, "signed b={b}");
+            assert_eq!(QRange::new(b, false).bits(), b, "unsigned b={b}");
+        }
+    }
+
+    #[test]
+    fn layerbits_uniform_roundtrips_the_triple() {
+        let bits = BitCfg::new(4, 3, 8);
+        let lb = LayerBits::from(bits);
+        assert_eq!(lb.to_string(), "4;3,3;3,3;3,8");
+        assert_eq!(lb.envelope(), bits);
+        assert!(lb.is_uniform());
+        assert_eq!(lb.b_out(), 8);
+        // both grammars parse to the same allocation
+        assert_eq!(LayerBits::parse("4,3,8", 3).unwrap(), lb);
+        assert_eq!(LayerBits::parse("4;3,3;3,3;3,8", 3).unwrap(), lb);
+    }
+
+    #[test]
+    fn layerbits_heterogeneous_parse_display_roundtrip() {
+        let lb = LayerBits::parse("8;4,4;3,3;2,8", 3).unwrap();
+        assert_eq!(lb.b_in, 8);
+        assert_eq!(lb.layers, vec![(4, 4), (3, 3), (2, 8)]);
+        assert_eq!(lb.to_string(), "8;4,4;3,3;2,8");
+        assert_eq!(LayerBits::parse(&lb.to_string(), 3).unwrap(), lb);
+        assert!(!lb.is_uniform());
+        assert_eq!(lb.envelope(), BitCfg::new(8, 4, 8));
+        // whitespace tolerated like the triple grammar
+        assert_eq!(LayerBits::parse(" 8 ; 4 , 4 ; 3,3 ; 2,8 ", 3).unwrap(),
+                   lb);
+    }
+
+    #[test]
+    fn layerbits_parse_errors_enumerate_both_grammars() {
+        for bad in ["", "8;", "8;4", "8;4,4;x,3", "x,3,8", "8;;4,4"] {
+            let err = match LayerBits::parse(bad, 3) {
+                Err(e) => format!("{e:#}"),
+                Ok(lb) => panic!("`{bad}` parsed as {lb}"),
+            };
+            assert!(err.contains("b_in,b_core,b_out")
+                        && err.contains("b_in;w1,a1"),
+                    "`{bad}` error must show both grammars: {err}");
+        }
+        // out-of-range widths fail validation, not the grammar
+        assert!(LayerBits::parse("8;9,4;3,3;2,8", 3).is_err());
+        assert!(LayerBits::parse("0;4,4;3,3;2,8", 3).is_err());
+        assert!(LayerBits::parse("8;4,12;3,3;2,8", 3).is_err(),
+                "internal activations are threshold-enumerated: cap 8");
+        assert!(LayerBits::parse("8;4,4;3,3;2,16", 3).is_ok(),
+                "the final (output) width only needs the I/O range");
     }
 
     #[test]

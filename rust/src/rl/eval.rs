@@ -39,7 +39,7 @@ use crate::policy::{FakeQuantBackend, Fp32Backend, PolicyBackend,
                     PolicyDescriptor};
 use crate::quant::export::IntPolicy;
 use crate::quant::fakequant::PolicyTensors;
-use crate::quant::BitCfg;
+use crate::quant::{BitCfg, LayerBits};
 use crate::runtime::{Exe, Runtime};
 use crate::util::stats::{self, ObsNormalizer};
 
@@ -89,6 +89,12 @@ pub struct EvalOpts {
     pub episodes: usize,
     pub seed: u64,
     pub backend: EvalBackend,
+    /// Optional heterogeneous per-layer allocation. Only the `Integer`
+    /// backend consumes it (the integer engine is the one path whose
+    /// layer geometry is free per layer); when set, `bits` must be its
+    /// envelope — [`Trial::with_lbits`](crate::experiment::Trial)
+    /// maintains that invariant for executor-driven evals.
+    pub lbits: Option<LayerBits>,
 }
 
 impl EvalOpts {
@@ -127,7 +133,10 @@ pub fn make_backend<'a>(rt: &Runtime, opts: &EvalOpts, flat: &'a [f32],
         EvalBackend::Integer => {
             anyhow::ensure!(opts.quant_on,
                             "integer backend requires a quantized policy");
-            let policy = IntPolicy::from_tensors(tensors, opts.bits);
+            let policy = match &opts.lbits {
+                Some(lb) => IntPolicy::from_tensors_mixed(tensors, lb)?,
+                None => IntPolicy::from_tensors(tensors, opts.bits),
+            };
             // the shared lower → optimize → verify → compile path gates
             // the i32 engine behind the IR invariants (notably
             // accumulator-width safety) exactly like artifact loading

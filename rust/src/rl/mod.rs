@@ -317,6 +317,7 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainResult> {
                 episodes: cfg.eval_episodes,
                 seed: eval_seed,
                 backend: EvalBackend::Pjrt,
+                lbits: None,
             }, &flat, &norm)?;
             if cfg.verbose {
                 println!(
@@ -381,7 +382,12 @@ pub fn run_trial(rt: &Runtime, trial: &Trial) -> Result<TrialRun> {
         quant_on: trial.quant_on,
         episodes: trial.eval_episodes,
         seed: trial.eval_seed(),
-        backend: EvalBackend::Pjrt,
+        // a per-layer allocation only exists on the integer engine:
+        // mixed trials train at the envelope triple (above) and are
+        // scored on exactly what the FPGA would execute
+        backend: if trial.lbits.is_some() { EvalBackend::Integer }
+                 else { EvalBackend::Pjrt },
+        lbits: trial.lbits.clone(),
     }, &train.flat, &train.normalizer)?;
     Ok(TrialRun {
         result: TrialResult {

@@ -1,0 +1,537 @@
+//! Mixed-precision search: per-layer bit allocation with Pareto
+//! selection on the experiment executor.
+//!
+//! The staged selection (`coordinator::select`) answers "what is the
+//! *smallest uniform* configuration that still matches FP32?". This
+//! subsystem answers the HAQ-style generalization: which *per-layer*
+//! allocations ([`LayerBits`]) sit on the reward-vs-hardware frontier?
+//! The paper's own observation motivates it — input precision is the
+//! sensitive axis while internal layers tolerate 2–3 bits (§3.2) — so
+//! heterogeneous allocations should dominate uniform ones on cost at
+//! equal reward.
+//!
+//! Two staged strategies, both running candidate waves on the parallel
+//! [`Executor`]:
+//!
+//! * `grid`   — the coarse (b_in × b_mid) uniform grid only;
+//! * `evolve` — the grid, then bounded rounds of deterministic ±1-bit
+//!              mutations around the current Pareto survivors
+//!              ([`space::neighbors`]), deduplicated against every
+//!              allocation seen so far.
+//!
+//! Each candidate trains with QAT at its **envelope** triple (the
+//! compiled training graph only takes the uniform triple) and is then
+//! scored on the heterogeneous **integer engine** — exactly what the
+//! FPGA would execute — while hardware cost (LUTs / energy per action)
+//! comes from the synthesis estimator on the candidate's actual layer
+//! geometry. Every decision is a pure function of complete waves, so
+//! `pareto.json` is bit-identical at any `--jobs` value; attach a
+//! [`RunStore`] and an interrupted search resumes by skipping finished
+//! trials.
+
+pub mod pareto;
+pub mod space;
+
+pub use pareto::{dominates, pareto_front, Candidate};
+pub use space::{coarse_grid, neighbors};
+
+use anyhow::Result;
+
+use crate::coordinator::sweep::{SweepPoint, SweepProtocol};
+use crate::experiment::{fingerprint, Executor, ExperimentPlan, RlRunner,
+                        RunStore, TrialRunner};
+use crate::qir::{self, OptLevel};
+use crate::quant::LayerBits;
+use crate::rl::Algo;
+use crate::runtime::Runtime;
+use crate::synth::{synthesize_graph, XC7A15T};
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::testkit;
+
+/// How the candidate set is expanded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchStrategy {
+    Grid,
+    Evolve,
+}
+
+impl SearchStrategy {
+    pub fn parse(s: &str) -> Result<SearchStrategy> {
+        Ok(match s {
+            "grid" => SearchStrategy::Grid,
+            "evolve" => SearchStrategy::Evolve,
+            _ => anyhow::bail!("unknown strategy `{s}` (grid|evolve)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchStrategy::Grid => "grid",
+            SearchStrategy::Evolve => "evolve",
+        }
+    }
+}
+
+/// Full search configuration. `sweep` carries the training protocol
+/// (steps / seeds / eval episodes); the axes here shape the candidate
+/// space.
+#[derive(Clone, Debug)]
+pub struct SearchProtocol {
+    pub sweep: SweepProtocol,
+    /// MLP hidden width searched over (the bit allocation is the search
+    /// axis; width stays fixed — compose with `select` for both).
+    pub hidden: usize,
+    /// stage-1 grid: input widths …
+    pub input_bits: Vec<u32>,
+    /// … × uniform internal widths (weights + activations)
+    pub mid_bits: Vec<u32>,
+    pub strategy: SearchStrategy,
+    /// max evolutionary rounds (each mutates the current frontier)
+    pub rounds: usize,
+    /// clock for the synthesis cost model
+    pub clock_hz: f64,
+}
+
+impl SearchProtocol {
+    pub fn from_env() -> Result<SearchProtocol> {
+        Ok(SearchProtocol {
+            sweep: SweepProtocol::from_env()?,
+            hidden: 16,
+            input_bits: vec![8, 6, 4, 3],
+            mid_bits: vec![8, 4, 3, 2],
+            strategy: SearchStrategy::Evolve,
+            rounds: 2,
+            clock_hz: 1e8,
+        })
+    }
+
+    /// Stable fingerprint of everything that shapes the candidate set
+    /// and its evaluation — names the resumable run directory.
+    pub fn fingerprint(&self, env: &str) -> String {
+        let join_u32 = |v: &[u32]| -> String {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        fingerprint(&[&self.sweep.fingerprint(Algo::Sac, env),
+                      &self.hidden.to_string(),
+                      &join_u32(&self.input_bits),
+                      &join_u32(&self.mid_bits), self.strategy.name(),
+                      &self.rounds.to_string(),
+                      &format!("{:e}", self.clock_hz)])
+    }
+}
+
+/// Deterministic run-directory name for a search configuration.
+pub fn search_run_name(env: &str, proto: &SearchProtocol) -> String {
+    format!("search-{env}-{}", proto.fingerprint(env))
+}
+
+/// Hardware cost of one allocation, as the Pareto axes consume it.
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateCost {
+    pub luts: u64,
+    pub ffs: u64,
+    pub energy_per_action: f64,
+}
+
+/// Cost model signature: allocation → hardware cost. The search is
+/// generic over it so tests and the `pareto_smoke` bench can run an
+/// artifact-free surrogate; [`synth_cost_model`] is the real one.
+pub type CostModel<'a> = dyn Fn(&LayerBits) -> Result<CandidateCost> + 'a;
+
+/// The synthesis-estimator cost model: resources and energy depend only
+/// on dims + widths, not on trained weights (the `qcontrol synth`
+/// convention), so each allocation is costed from a deterministic
+/// representative policy at the env's dimensions — no training, no PJRT
+/// runtime, just the shared `lower → optimize → verify` path and the
+/// folding search on the target device.
+pub fn synth_cost_model(env: &str, hidden: usize, clock_hz: f64)
+                        -> Result<Box<CostModel<'static>>> {
+    let probe = crate::envs::make(env)?;
+    let (obs_dim, act_dim) = (probe.obs_dim(), probe.act_dim());
+    drop(probe);
+    Ok(Box::new(move |lb: &LayerBits| {
+        let policy =
+            testkit::toy_policy_mixed(7, obs_dim, hidden, act_dim, lb)?;
+        let (g, _) = qir::prepare(&policy, OptLevel::Full)?;
+        let rep = synthesize_graph(&g, &XC7A15T, clock_hz)?;
+        Ok(CandidateCost {
+            luts: rep.design.luts(),
+            ffs: rep.design.ffs(),
+            energy_per_action: rep.energy_per_action,
+        })
+    }))
+}
+
+/// Typed result of a mixed-precision search.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    pub env: String,
+    pub protocol: String,
+    pub strategy: SearchStrategy,
+    pub jobs: usize,
+    pub hidden: usize,
+    /// every allocation evaluated, in wave order (the audit trail)
+    pub evaluated: Vec<Candidate>,
+    /// the non-dominated subset, cheapest-first
+    pub pareto: Vec<Candidate>,
+    /// allocations the cost model rejected (e.g. no feasible folding on
+    /// the device), with the reason — recorded, never silently dropped
+    pub infeasible: Vec<(String, String)>,
+}
+
+impl SearchReport {
+    /// The `pareto.json` schema (see README §Mixed-precision search).
+    /// Deliberately excludes `jobs`: the report is a pure function of
+    /// the protocol, so the emitted file is bit-identical at any
+    /// `--jobs` value — worker count is an execution detail, not a
+    /// result.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("env", Json::str(&self.env)),
+            ("protocol", Json::str(&self.protocol)),
+            ("strategy", Json::str(self.strategy.name())),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("evaluated", Json::Arr(
+                self.evaluated.iter().map(|c| c.to_json()).collect())),
+            ("pareto", Json::Arr(
+                self.pareto.iter().map(|c| c.to_json()).collect())),
+            ("infeasible", Json::Arr(
+                self.infeasible
+                    .iter()
+                    .map(|(lb, why)| Json::obj(vec![
+                        ("lbits", Json::str(lb)),
+                        ("reason", Json::str(why)),
+                    ]))
+                    .collect())),
+        ])
+    }
+}
+
+/// Train + evaluate a batch of allocations as **one** executor wave
+/// (every allocation × every seed scheduled together), aggregated into
+/// [`SweepPoint`]s in allocation order — the mixed-precision analogue
+/// of `sweep::run_points`.
+pub fn run_allocs(runner: &dyn TrialRunner, algo: Algo, env: &str,
+                  proto: &SweepProtocol, hidden: usize,
+                  allocs: &[LayerBits], exec: &Executor,
+                  store: Option<&RunStore>) -> Result<Vec<SweepPoint>> {
+    let tmpl = proto.template(algo, env);
+    let mut plan = ExperimentPlan::new(format!("search-{env}"));
+    plan.grid_mixed(&tmpl, hidden, allocs, &proto.seeds);
+    let results = exec.run(&plan, runner, store)?;
+    let n_seeds = proto.seeds.len();
+    Ok(allocs
+        .iter()
+        .enumerate()
+        .map(|(i, lb)| {
+            let per_seed: Vec<f64> = results[i * n_seeds..(i + 1) * n_seeds]
+                .iter()
+                .map(|r| r.eval_mean)
+                .collect();
+            SweepPoint {
+                label: lb.to_string(),
+                mean: stats::mean(&per_seed),
+                std: stats::std(&per_seed),
+                per_seed,
+            }
+        })
+        .collect())
+}
+
+/// Run the mixed-precision search on any runner / cost model / executor
+/// (runtime-agnostic, like `select_model_on`): coarse grid first, then —
+/// under the `evolve` strategy — up to `proto.rounds` waves of ±1-bit
+/// mutations around the current Pareto survivors, deduplicated against
+/// every allocation already seen. Stops early when a round yields no
+/// new allocation.
+pub fn run_search_on(runner: &dyn TrialRunner, env: &str,
+                     proto: &SearchProtocol, exec: &Executor,
+                     store: Option<&RunStore>, cost: &CostModel)
+                     -> Result<SearchReport> {
+    let algo = Algo::Sac;
+    anyhow::ensure!(!proto.input_bits.is_empty()
+                    && !proto.mid_bits.is_empty(),
+                    "search needs non-empty input/mid bit axes");
+    anyhow::ensure!(proto.hidden >= 1, "search needs a hidden width");
+
+    let mut seen = std::collections::BTreeSet::new();
+    let mut cands: Vec<Candidate> = Vec::new();
+    let mut infeasible: Vec<(String, String)> = Vec::new();
+    let evaluate = |allocs: Vec<LayerBits>, origin: String,
+                        cands: &mut Vec<Candidate>,
+                        infeasible: &mut Vec<(String, String)>|
+                       -> Result<()> {
+        // cost first: it is cheap where training is not, and an
+        // allocation the device cannot hold has no business training —
+        // it is recorded as infeasible, never aborting the search
+        let mut feasible: Vec<LayerBits> = Vec::new();
+        let mut costs: Vec<CandidateCost> = Vec::new();
+        for lb in allocs {
+            match cost(&lb) {
+                Ok(c) => {
+                    feasible.push(lb);
+                    costs.push(c);
+                }
+                Err(e) => infeasible.push((lb.to_string(),
+                                           format!("{e:#}"))),
+            }
+        }
+        let points = run_allocs(runner, algo, env, &proto.sweep,
+                                proto.hidden, &feasible, exec, store)?;
+        for ((lb, point), c) in
+            feasible.into_iter().zip(points).zip(costs)
+        {
+            cands.push(Candidate {
+                lbits: lb,
+                origin: origin.clone(),
+                point,
+                luts: c.luts,
+                ffs: c.ffs,
+                energy_per_action: c.energy_per_action,
+            });
+        }
+        Ok(())
+    };
+
+    // stage 1: the coarse uniform grid (one wave)
+    let grid: Vec<LayerBits> =
+        coarse_grid(&proto.input_bits, &proto.mid_bits, 3)
+            .into_iter()
+            .filter(|lb| seen.insert(lb.to_string()))
+            .collect();
+    evaluate(grid, "grid".into(), &mut cands, &mut infeasible)?;
+
+    // stage 2: evolutionary refinement around the frontier
+    if proto.strategy == SearchStrategy::Evolve {
+        for round in 1..=proto.rounds {
+            let front = pareto_front(&cands);
+            let fresh: Vec<LayerBits> = front
+                .iter()
+                .flat_map(|c| neighbors(&c.lbits))
+                .filter(|lb| seen.insert(lb.to_string()))
+                .collect();
+            if fresh.is_empty() {
+                break;
+            }
+            evaluate(fresh, format!("evolve:{round}"), &mut cands,
+                     &mut infeasible)?;
+        }
+    }
+
+    anyhow::ensure!(!cands.is_empty(),
+                    "every allocation was infeasible on the target \
+                     device (first: {} — {}); widen the device or \
+                     narrow the bit axes",
+                    infeasible.first().map(|(l, _)| l.as_str())
+                        .unwrap_or("?"),
+                    infeasible.first().map(|(_, w)| w.as_str())
+                        .unwrap_or("?"));
+    let pareto = pareto_front(&cands);
+    Ok(SearchReport {
+        env: env.to_string(),
+        protocol: proto.sweep.describe(),
+        strategy: proto.strategy,
+        jobs: exec.jobs(),
+        hidden: proto.hidden,
+        evaluated: cands,
+        pareto,
+        infeasible,
+    })
+}
+
+/// PJRT-backed facade: real training runner + the synthesis cost model
+/// (the `qcontrol search` entry point).
+pub fn run_search(rt: &Runtime, env: &str, proto: &SearchProtocol,
+                  exec: &Executor, store: Option<&RunStore>)
+                  -> Result<SearchReport> {
+    let cost = synth_cost_model(env, proto.hidden, proto.clock_hz)?;
+    run_search_on(&RlRunner::new(rt), env, proto, exec, store, &*cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::{Trial, TrialResult};
+
+    /// Surrogate with the paper's sensitivity structure: input precision
+    /// dominates reward; internal layers barely matter. Per-seed spread
+    /// comes from the seed itself.
+    fn surrogate(t: &Trial) -> Result<TrialResult> {
+        let lb = t.lbits.clone().expect("search trials carry lbits");
+        let mut r = 1000.0;
+        if lb.b_in < 4 {
+            r -= 120.0 * (4 - lb.b_in) as f64;
+        }
+        for (i, &(w, a)) in lb.layers.iter().enumerate() {
+            if w < 2 {
+                r -= 15.0;
+            }
+            if i + 1 < lb.layers.len() && a < 2 {
+                r -= 15.0;
+            }
+        }
+        Ok(TrialResult {
+            trial_id: t.id(),
+            eval_mean: r + t.seed as f64,
+            eval_std: 1.0,
+            ckpt: None,
+        })
+    }
+
+    /// Artifact-free cost surrogate: monotone in every width.
+    fn toy_cost(lb: &LayerBits) -> Result<CandidateCost> {
+        let mut units: u64 = lb.b_in as u64 * 4;
+        for &(w, a) in &lb.layers {
+            units += (w as u64) * (a as u64) * 16;
+        }
+        Ok(CandidateCost {
+            luts: units * 10,
+            ffs: units * 4,
+            energy_per_action: units as f64 * 1e-9,
+        })
+    }
+
+    fn proto(strategy: SearchStrategy) -> SearchProtocol {
+        let mut sweep =
+            SweepProtocol::from_parts(Some("400"), Some("2")).unwrap();
+        sweep.hidden = 16;
+        SearchProtocol {
+            sweep,
+            hidden: 16,
+            input_bits: vec![8, 4, 2],
+            mid_bits: vec![4, 2],
+            strategy,
+            rounds: 2,
+            clock_hz: 1e8,
+        }
+    }
+
+    #[test]
+    fn grid_search_finds_a_frontier() {
+        let rep = run_search_on(&surrogate, "pendulum",
+                                &proto(SearchStrategy::Grid),
+                                &Executor::serial(), None, &toy_cost)
+            .unwrap();
+        assert_eq!(rep.evaluated.len(), 6, "3 input × 2 mid widths");
+        assert!(rep.pareto.len() >= 2,
+                "at least two non-dominated allocations, got {}",
+                rep.pareto.len());
+        // cheapest-first: the frontier trades cost against reward
+        for pair in rep.pareto.windows(2) {
+            assert!(pair[0].luts <= pair[1].luts);
+            assert!(pair[0].reward() <= pair[1].reward(),
+                    "spending more LUTs must buy reward on the frontier");
+        }
+        // the report round-trips through JSON
+        crate::util::json::parse(&rep.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn evolve_refines_beyond_the_grid() {
+        let rep = run_search_on(&surrogate, "pendulum",
+                                &proto(SearchStrategy::Evolve),
+                                &Executor::serial(), None, &toy_cost)
+            .unwrap();
+        assert!(rep.evaluated.len() > 6, "mutation waves ran");
+        assert!(rep.evaluated.iter().any(|c| c.origin == "evolve:1"));
+        // mutations produced genuinely heterogeneous allocations
+        assert!(rep.evaluated.iter().any(|c| !c.lbits.is_uniform()));
+        // dedup: no allocation evaluated twice
+        let mut keys: Vec<String> = rep
+            .evaluated
+            .iter()
+            .map(|c| c.lbits.to_string())
+            .collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "an allocation was evaluated twice");
+        // the surrogate rewards cheap internals: some heterogeneous
+        // allocation must survive onto the frontier
+        assert!(rep.pareto.iter().any(|c| !c.lbits.is_uniform()),
+                "frontier is all-uniform; refinement bought nothing");
+    }
+
+    #[test]
+    fn search_is_jobs_invariant() {
+        let serial = run_search_on(&surrogate, "pendulum",
+                                   &proto(SearchStrategy::Evolve),
+                                   &Executor::serial(), None, &toy_cost)
+            .unwrap();
+        let par = run_search_on(&surrogate, "pendulum",
+                                &proto(SearchStrategy::Evolve),
+                                &Executor::new(4).unwrap(), None,
+                                &toy_cost)
+            .unwrap();
+        assert_eq!(serial.evaluated.len(), par.evaluated.len());
+        for (a, b) in serial.evaluated.iter().zip(&par.evaluated) {
+            assert_eq!(a.lbits, b.lbits);
+            assert_eq!(a.point.per_seed, b.point.per_seed);
+        }
+        let key = |r: &SearchReport| -> Vec<String> {
+            r.pareto.iter().map(|c| c.lbits.to_string()).collect()
+        };
+        assert_eq!(key(&serial), key(&par));
+    }
+
+    #[test]
+    fn infeasible_allocations_are_recorded_not_fatal() {
+        // a cost model that rejects every 8-bit-input allocation: the
+        // search completes on the rest and the rejects are on record
+        let picky = |lb: &LayerBits| -> Result<CandidateCost> {
+            anyhow::ensure!(lb.b_in < 8, "no feasible folding for {lb}");
+            toy_cost(lb)
+        };
+        let rep = run_search_on(&surrogate, "pendulum",
+                                &proto(SearchStrategy::Grid),
+                                &Executor::serial(), None, &picky)
+            .unwrap();
+        assert_eq!(rep.evaluated.len(), 4, "2 input x 2 mid survive");
+        assert_eq!(rep.infeasible.len(), 2);
+        assert!(rep.evaluated.iter().all(|c| c.lbits.b_in < 8));
+        assert!(rep.infeasible.iter()
+                    .all(|(lb, why)| lb.starts_with("8;")
+                         && why.contains("no feasible folding")));
+        // ... and the report JSON carries them
+        let j = crate::util::json::parse(&rep.to_json().to_string())
+            .unwrap();
+        assert_eq!(j.get("infeasible").unwrap().as_arr().unwrap().len(),
+                   2);
+
+        // a cost model that rejects everything is a hard error
+        let hostile =
+            |_: &LayerBits| -> Result<CandidateCost> { anyhow::bail!("no") };
+        let err = run_search_on(&surrogate, "pendulum",
+                                &proto(SearchStrategy::Grid),
+                                &Executor::serial(), None, &hostile)
+            .unwrap_err();
+        assert!(err.to_string().contains("every allocation was \
+                                          infeasible"),
+                "{err}");
+    }
+
+    #[test]
+    fn run_name_derives_from_the_whole_protocol() {
+        let a = search_run_name("pendulum", &proto(SearchStrategy::Grid));
+        let b = search_run_name("pendulum",
+                                &proto(SearchStrategy::Evolve));
+        assert_ne!(a, b, "strategy is part of the run identity");
+        let mut p = proto(SearchStrategy::Grid);
+        p.mid_bits = vec![4];
+        assert_ne!(a, search_run_name("pendulum", &p));
+        assert!(a.starts_with("search-pendulum-"), "{a}");
+        assert_eq!(a, search_run_name("pendulum",
+                                      &proto(SearchStrategy::Grid)));
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(SearchStrategy::parse("grid").unwrap(),
+                   SearchStrategy::Grid);
+        assert_eq!(SearchStrategy::parse("evolve").unwrap(),
+                   SearchStrategy::Evolve);
+        let err = SearchStrategy::parse("anneal").unwrap_err().to_string();
+        assert!(err.contains("grid") && err.contains("evolve"), "{err}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Pareto selection over evaluated bit allocations.
+//!
+//! The search objectives are (reward ↑, LUTs ↓, energy/action ↓): a
+//! candidate is kept iff no other candidate is at least as good on all
+//! three axes and strictly better on one. Selection is a pure function
+//! of the candidate set, so the frontier is bit-identical at any
+//! `--jobs` value and any wave interleaving.
+
+use crate::coordinator::sweep::{point_json, SweepPoint};
+use crate::quant::LayerBits;
+use crate::util::json::Json;
+
+/// One fully evaluated allocation: reward from the trial wave, hardware
+/// cost from the synthesis estimator at the search's device/clock.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub lbits: LayerBits,
+    /// which expansion produced it (`"grid"` or `"evolve:<round>"`)
+    pub origin: String,
+    pub point: SweepPoint,
+    pub luts: u64,
+    pub ffs: u64,
+    pub energy_per_action: f64,
+}
+
+impl Candidate {
+    /// Reward objective (mean final return over the protocol's seeds).
+    pub fn reward(&self) -> f64 {
+        self.point.mean
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lbits", Json::str(self.lbits.to_string())),
+            ("envelope", Json::str(self.lbits.envelope().to_string())),
+            ("origin", Json::str(&self.origin)),
+            ("point", point_json(&self.point)),
+            ("luts", Json::num(self.luts as f64)),
+            ("ffs", Json::num(self.ffs as f64)),
+            ("energy_per_action", Json::num(self.energy_per_action)),
+        ])
+    }
+}
+
+/// Whether `a` dominates `b`: no worse on every objective, strictly
+/// better on at least one.
+pub fn dominates(a: &Candidate, b: &Candidate) -> bool {
+    let no_worse = a.reward() >= b.reward()
+        && a.luts <= b.luts
+        && a.energy_per_action <= b.energy_per_action;
+    let strictly = a.reward() > b.reward()
+        || a.luts < b.luts
+        || a.energy_per_action < b.energy_per_action;
+    no_worse && strictly
+}
+
+/// The non-dominated subset, cheapest-first (LUTs, then energy, then
+/// descending reward, then the allocation string as the total
+/// tie-break) — a deterministic order regardless of input order.
+pub fn pareto_front(cands: &[Candidate]) -> Vec<Candidate> {
+    let mut front: Vec<Candidate> = cands
+        .iter()
+        .filter(|c| !cands.iter().any(|o| dominates(o, c)))
+        .cloned()
+        .collect();
+    front.sort_by(|x, y| {
+        x.luts
+            .cmp(&y.luts)
+            .then(x.energy_per_action
+                .partial_cmp(&y.energy_per_action)
+                .expect("finite energy"))
+            .then(y.reward()
+                .partial_cmp(&x.reward())
+                .expect("finite reward"))
+            .then_with(|| x.lbits.to_string().cmp(&y.lbits.to_string()))
+    });
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(lb: &str, reward: f64, luts: u64, energy: f64) -> Candidate {
+        Candidate {
+            lbits: LayerBits::parse(lb, 3).unwrap(),
+            origin: "grid".into(),
+            point: SweepPoint { label: lb.into(), mean: reward, std: 1.0,
+                                per_seed: vec![reward] },
+            luts,
+            ffs: luts / 2,
+            energy_per_action: energy,
+        }
+    }
+
+    #[test]
+    fn dominance_needs_a_strict_edge() {
+        let a = cand("8;4,4;4,4;4,8", 100.0, 500, 1e-6);
+        let b = cand("8;3,3;3,3;3,8", 100.0, 500, 1e-6);
+        // equal on every objective: neither dominates
+        assert!(!dominates(&a, &b) && !dominates(&b, &a));
+        let c = cand("8;2,2;2,2;2,8", 100.0, 400, 1e-6);
+        assert!(dominates(&c, &a));
+        assert!(!dominates(&a, &c));
+    }
+
+    #[test]
+    fn front_keeps_the_tradeoff_curve() {
+        let cands = vec![
+            cand("8;8,8;8,8;8,8", 100.0, 1000, 4e-6), // best reward
+            cand("8;4,4;4,4;4,8", 98.0, 600, 2e-6),   // middle
+            cand("8;2,2;2,2;2,8", 80.0, 300, 1e-6),   // cheapest
+            cand("8;4,4;3,3;4,8", 70.0, 700, 3e-6),   // dominated
+        ];
+        let front = pareto_front(&cands);
+        assert_eq!(front.len(), 3);
+        // cheapest-first deterministic order
+        assert_eq!(front[0].luts, 300);
+        assert_eq!(front[2].luts, 1000);
+        assert!(front.iter().all(|c| c.point.mean >= 80.0));
+    }
+
+    #[test]
+    fn front_order_is_input_order_invariant() {
+        let mut cands = vec![
+            cand("8;8,8;8,8;8,8", 100.0, 1000, 4e-6),
+            cand("8;2,2;2,2;2,8", 80.0, 300, 1e-6),
+            cand("8;4,4;4,4;4,8", 98.0, 600, 2e-6),
+        ];
+        let a = pareto_front(&cands);
+        cands.reverse();
+        let b = pareto_front(&cands);
+        let key = |v: &[Candidate]| -> Vec<String> {
+            v.iter().map(|c| c.lbits.to_string()).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+}

@@ -1,0 +1,103 @@
+//! The mixed-precision allocation space: coarse-grid enumeration and
+//! the ±1-bit neighborhood used by the evolutionary refinement stage.
+//!
+//! Everything here is deterministic and order-stable: the grid walks
+//! its axes in the order given, and `neighbors` emits mutations in
+//! slot order (input, then layer 1 weights, layer 1 activations, …),
+//! narrowing before widening. The search's reproducibility guarantee
+//! (bit-identical `pareto.json` at any `--jobs`) rests on this plus
+//! the executor's wave semantics — no RNG anywhere.
+
+use crate::quant::{BitCfg, LayerBits};
+
+/// Stage-1 grid: every (b_in × b_mid) uniform allocation with the
+/// output pinned at 8 bits (the paper finds b_out immaterial, §3.2).
+/// Uniform points seed the search with exactly the configurations the
+/// staged selection would have considered, so the refined frontier is
+/// comparable to Table 1.
+pub fn coarse_grid(input_bits: &[u32], mid_bits: &[u32],
+                   n_layers: usize) -> Vec<LayerBits> {
+    let mut grid = Vec::with_capacity(input_bits.len() * mid_bits.len());
+    for &b_in in input_bits {
+        for &b in mid_bits {
+            grid.push(LayerBits::uniform(BitCfg::new(b_in, b, 8),
+                                         n_layers));
+        }
+    }
+    grid
+}
+
+/// Every valid single-slot ±1-bit mutation of `lb`, in deterministic
+/// slot order, narrower variant first. The output width (last layer's
+/// activation slot) stays pinned — the search never trades output
+/// resolution, matching the staged selection's b_out=8 convention.
+pub fn neighbors(lb: &LayerBits) -> Vec<LayerBits> {
+    let mut out = Vec::new();
+    let mut push = |cand: LayerBits| {
+        if cand.validate().is_ok() {
+            out.push(cand);
+        }
+    };
+    for delta in [-1i64, 1] {
+        let mut c = lb.clone();
+        c.b_in = (lb.b_in as i64 + delta).max(0) as u32;
+        push(c);
+    }
+    for i in 0..lb.n_layers() {
+        for delta in [-1i64, 1] {
+            let mut c = lb.clone();
+            c.layers[i].0 = (lb.layers[i].0 as i64 + delta).max(0) as u32;
+            push(c);
+        }
+        if i + 1 < lb.n_layers() {
+            for delta in [-1i64, 1] {
+                let mut c = lb.clone();
+                c.layers[i].1 =
+                    (lb.layers[i].1 as i64 + delta).max(0) as u32;
+                push(c);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_axis_ordered() {
+        let g = coarse_grid(&[8, 4], &[4, 2], 3);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].to_string(), "8;4,4;4,4;4,8");
+        assert_eq!(g[1].to_string(), "8;2,2;2,2;2,8");
+        assert_eq!(g[2].to_string(), "4;4,4;4,4;4,8");
+        assert!(g.iter().all(|lb| lb.b_out() == 8));
+    }
+
+    #[test]
+    fn neighbors_cover_every_slot_but_the_output() {
+        let lb = LayerBits::parse("8;4,4;3,3;2,8", 3).unwrap();
+        let n = neighbors(&lb);
+        // 1 input slot + 3 weight slots + 2 internal activation slots,
+        // ±1 each, all interior → 12 variants
+        assert_eq!(n.len(), 12);
+        assert!(n.iter().all(|c| c.validate().is_ok()));
+        assert!(n.iter().all(|c| c.b_out() == 8), "output stays pinned");
+        assert!(n.contains(&LayerBits::parse("7;4,4;3,3;2,8", 3).unwrap()));
+        assert!(n.contains(&LayerBits::parse("8;4,4;3,3;3,8", 3).unwrap()));
+        // deterministic order: input slot first, narrower first
+        assert_eq!(n[0].to_string(), "7;4,4;3,3;2,8");
+        assert_eq!(n[1].to_string(), "9;4,4;3,3;2,8");
+    }
+
+    #[test]
+    fn neighbors_respect_the_lattice_bounds() {
+        // 1-bit slots cannot narrow; 8-bit weight slots cannot widen
+        let lb = LayerBits::parse("1;8,1;1,1;1,8", 3).unwrap();
+        let n = neighbors(&lb);
+        assert!(n.iter().all(|c| c.validate().is_ok()));
+        assert!(!n.iter().any(|c| c.b_in == 0));
+        assert!(!n.iter().any(|c| c.layers[0].0 > 8));
+    }
+}

@@ -7,7 +7,7 @@
 
 use crate::policy::OwnedTensors;
 use crate::quant::export::IntPolicy;
-use crate::quant::BitCfg;
+use crate::quant::{BitCfg, LayerBits};
 use crate::util::rng::Rng;
 
 /// Deterministic random 3-layer FP32 tensors of the given dimensions
@@ -47,6 +47,16 @@ pub fn toy_policy(seed: u64, obs_dim: usize, hidden: usize,
                   act_dim: usize, bits: BitCfg) -> IntPolicy {
     IntPolicy::from_tensors(
         &toy_tensors(seed, obs_dim, hidden, act_dim).views(), bits)
+}
+
+/// [`toy_policy`] with a heterogeneous per-layer allocation (same seed +
+/// dims + allocation → identical policy). Fails only if the allocation
+/// itself is malformed.
+pub fn toy_policy_mixed(seed: u64, obs_dim: usize, hidden: usize,
+                        act_dim: usize, lb: &LayerBits)
+                        -> anyhow::Result<IntPolicy> {
+    IntPolicy::from_tensors_mixed(
+        &toy_tensors(seed, obs_dim, hidden, act_dim).views(), lb)
 }
 
 /// A toy policy with planted all-zero weight rows: the first `dead_h1`

@@ -4,7 +4,7 @@
 use qcontrol::intinfer::IntEngine;
 use qcontrol::quant::export::IntPolicy;
 use qcontrol::quant::fakequant::PolicyTensors;
-use qcontrol::quant::{qdq, BitCfg, QRange};
+use qcontrol::quant::{qdq, BitCfg, LayerBits, QRange};
 use qcontrol::synth::model::{cost_layer, Design, LayerFold, XC7A15T};
 use qcontrol::synth::{search_folding, simulate_latency_cycles};
 use qcontrol::util::prop::{check, Gen};
@@ -59,6 +59,52 @@ fn prop_qdq_projection_and_monotonicity() {
         let x2 = x + g.f32_in(0.0, 10.0);
         if qdq(x2, s, r) < y {
             return Err(format!("non-monotone at {x} < {x2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layerbits_display_parse_roundtrip() {
+    // every valid allocation survives Display → parse bit-exactly, in
+    // both grammars; the envelope of a uniform expansion recovers the
+    // original triple
+    check("layerbits-roundtrip", 300, 808, |g| {
+        let n = g.usize_in(1, 6);
+        let mut layers = Vec::with_capacity(n);
+        for i in 0..n {
+            let w = g.usize_in(1, 8) as u32;
+            // internal activations live on the enumerated-threshold
+            // lattice (<= 8); the final slot is the I/O range (<= 16)
+            let a = if i + 1 < n {
+                g.usize_in(1, 8) as u32
+            } else {
+                g.usize_in(1, 16) as u32
+            };
+            layers.push((w, a));
+        }
+        let lb = LayerBits { b_in: g.usize_in(1, 16) as u32, layers };
+        lb.validate().map_err(|e| format!("generated invalid: {e}"))?;
+        let back = LayerBits::parse(&lb.to_string(), n)
+            .map_err(|e| format!("reparse of `{lb}`: {e}"))?;
+        if back != lb {
+            return Err(format!("round-trip drift: `{lb}` -> `{back}`"));
+        }
+        // the uniform triple grammar meets the per-layer grammar at
+        // LayerBits::uniform: same allocation from either spelling
+        let bits = BitCfg::new(g.usize_in(1, 16) as u32,
+                               g.usize_in(1, 8) as u32,
+                               g.usize_in(1, 16) as u32);
+        let uni = LayerBits::uniform(bits, n.max(2));
+        if uni.envelope() != bits {
+            return Err(format!("envelope drift: {bits} -> {}",
+                               uni.envelope()));
+        }
+        let from_triple = LayerBits::parse(&bits.to_string(), n.max(2))
+            .map_err(|e| format!("triple grammar: {e}"))?;
+        if from_triple != uni {
+            return Err(format!("grammar mismatch: `{bits}` -> \
+                                `{from_triple}` vs `{uni}`"));
         }
         Ok(())
     });

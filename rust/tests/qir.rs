@@ -13,7 +13,7 @@ use qcontrol::qir::{emit_c, emit_verilog, lower, prepare, EdgeTy,
                     OptLevel, Pass, PassManager, PruneDeadRows, QGraph,
                     QOp};
 use qcontrol::quant::export::IntPolicy;
-use qcontrol::quant::{BitCfg, QRange};
+use qcontrol::quant::{BitCfg, LayerBits, QRange};
 use qcontrol::synth::model::{layer_geometry, pad_to, LayerGeom,
                              PAD_MULTIPLE};
 use qcontrol::synth::{estimate_power, search_geometry, synthesize,
@@ -63,6 +63,53 @@ fn interpreter_engine_and_naive_forward_agree_bit_for_bit() {
                        "interp vs engine, bits={bits:?} case={case}");
             assert_eq!(bits_of(&a), bits_of(&c),
                        "interp vs naive, bits={bits:?} case={case}");
+        }
+    }
+}
+
+/// The heterogeneous-width matrix every mixed-precision property runs
+/// over, including a 2-bit internal layer (the paper's finding: input
+/// precision is the sensitive axis; internals tolerate 2–3 bits).
+const LBITS_MATRIX: [&str; 5] = [
+    "8;4,4;3,3;2,8",  // monotone narrowing toward the output
+    "8;4,4;2,2;4,8",  // 2-bit internal layer (weights + activations)
+    "4;3,2;2,3;3,4",  // nothing uniform anywhere
+    "2;8,8;8,8;8,2",  // 2-bit I/O around an 8-bit core
+    "16;2,2;2,2;2,16", // wide I/O over an all-2-bit core
+];
+
+#[test]
+fn heterogeneous_interpreter_engine_and_naive_agree_bit_for_bit() {
+    for (i, s) in LBITS_MATRIX.iter().enumerate() {
+        let lb = LayerBits::parse(s, 3).unwrap();
+        let p = testkit::toy_policy_mixed(90 + i as u64, 6, 24, 3, &lb)
+            .unwrap();
+        let g = lower(&p);
+        g.verify().unwrap_or_else(|e| {
+            panic!("lowered graph must verify for lbits={lb}: {e}")
+        });
+        // the graph's derived allocation is exactly what was requested
+        assert_eq!(g.layer_bits().unwrap(), lb);
+        let interp = Interpreter::new(g).unwrap();
+        let mut eng = IntEngine::new(p.clone());
+        // the optimizing pass pipeline must hold bit-identity on
+        // heterogeneous graphs too
+        let mut opt = IntEngine::optimized(p.clone()).unwrap();
+        let mut rng = Rng::new(3);
+        for case in 0..100 {
+            let mut obs = vec![0.0f32; 6];
+            rng.fill_normal(&mut obs);
+            let a = interp.infer(&obs).unwrap();
+            let b = eng.infer_vec(&obs);
+            let c = p.forward_naive(&obs);
+            let d = opt.infer_vec(&obs);
+            assert_eq!(bits_of(&a), bits_of(&b),
+                       "interp vs engine, lbits={lb} case={case}");
+            assert_eq!(bits_of(&a), bits_of(&c),
+                       "interp vs naive, lbits={lb} case={case}");
+            assert_eq!(bits_of(&a), bits_of(&d),
+                       "interp vs optimized engine, lbits={lb} \
+                        case={case}");
         }
     }
 }
@@ -314,6 +361,74 @@ fn verify_accumulator_bound_is_exact_at_the_i32_boundary() {
     let err = acc_bound_graph(66312).verify().unwrap_err().to_string();
     assert!(err.contains("exceeds i32"), "{err}");
     assert!(err.contains("66312"), "names the cols: {err}");
+}
+
+/// Hand-build a two-layer *heterogeneous* graph: layer 1 carries
+/// `w1_bits` weights (pinned to the lattice max) against the unsigned
+/// 8-bit input, layer 2 is a narrow 2-bit layer. `cols` dials layer 1's
+/// worst-case accumulator exactly like [`acc_bound_graph`].
+fn het_acc_graph(cols: usize, w1_bits: u32) -> QGraph {
+    let in_r = QRange::new(8, false); // [0, 255]
+    let mid_r = QRange::new(2, false); // [0, 3]
+    let out_r = QRange::new(2, true); // [-2, 1], 4 levels
+    let w1max = QRange::new(w1_bits, true).qmax as i8;
+    let bound1 = cols as i64 * w1max as i64 * 255;
+    QGraph {
+        name: "het-acc-bound".into(),
+        obs_dim: cols,
+        act_dim: 1,
+        ops: vec![
+            QOp::QuantizeInput { s_in: 1.0 },
+            QOp::MatVec { rows: 2, cols, w_bits: w1_bits,
+                          w: vec![w1max; 2 * cols] },
+            QOp::ThresholdRequant {
+                levels: 4,
+                acc_bits: 33,
+                thresholds: vec![-1000, 0, 1000, -1000, 0, 1000],
+            },
+            QOp::MatVec { rows: 1, cols: 2, w_bits: 2, w: vec![1, 1] },
+            QOp::ThresholdRequant {
+                levels: 4,
+                acc_bits: 33,
+                thresholds: vec![-5, 0, 5],
+            },
+            QOp::TanhLut { lut: vec![-0.9, -0.5, 0.5, 0.9] },
+        ],
+        edges: vec![
+            EdgeTy::lattice(cols, in_r),
+            EdgeTy::acc(2, bound1),
+            EdgeTy::lattice(2, mid_r),
+            EdgeTy::acc(1, 6), // 2 cols x |w|max 1 x |x|max 3
+            EdgeTy::lattice(1, out_r),
+            EdgeTy::F32 { dim: 1 },
+        ],
+    }
+}
+
+#[test]
+fn verify_heterogeneous_widest_layer_pins_the_i32_boundary() {
+    // only the WIDEST layer's geometry decides: 8-bit weights against
+    // the 8-bit input overflow i32 at cols = 66312 (cols * 127 * 255),
+    // exactly as in the uniform boundary test above
+    let ok = het_acc_graph(66311, 8);
+    ok.verify().expect("at the boundary: accepted");
+    // the graph really is heterogeneous: (8-bit, 2-bit) weight layers
+    let lb = ok.layer_bits().unwrap();
+    assert!(!lb.is_uniform(), "expected a heterogeneous allocation: {lb}");
+    assert_eq!(lb.to_string(), "8;8,2;2,2");
+
+    let err = het_acc_graph(66312, 8).verify().unwrap_err().to_string();
+    assert!(err.contains("exceeds i32"), "{err}");
+    assert!(err.contains("66312"), "names the cols: {err}");
+
+    // the SAME graph with only the offending layer narrowed (7-bit
+    // weights: 66312 * 63 * 255 = 1_065_303_480 <= i32::MAX) verifies —
+    // per-layer narrowing buys back accumulator headroom exactly where
+    // it is needed
+    assert!(66312i64 * 63 * 255 <= i32::MAX as i64);
+    het_acc_graph(66312, 7)
+        .verify()
+        .expect("narrowed offending layer: accepted");
 }
 
 #[test]

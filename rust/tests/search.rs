@@ -1,0 +1,195 @@
+//! Integration tests for the mixed-precision search subsystem: an
+//! artifact-free surrogate drives the real executor/run-store machinery
+//! end to end, pinning the ISSUE-9 acceptance properties — a frontier
+//! with at least two non-dominated allocations, a `pareto.json` that is
+//! bit-identical at any `--jobs` value, and resume that re-runs nothing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use qcontrol::experiment::{Executor, RunStore, Trial, TrialResult};
+use qcontrol::quant::LayerBits;
+use qcontrol::search::{run_search_on, search_run_name, CandidateCost,
+                       SearchProtocol, SearchStrategy};
+use qcontrol::util::json;
+
+/// Deterministic training score with the paper's §3.2 sensitivity
+/// structure: reward collapses as input precision drops, while internal
+/// layers are cheap to narrow.
+fn score(t: &Trial) -> TrialResult {
+    let lb = t.lbits.clone().expect("search trials carry lbits");
+    let mut r = 1000.0 - 30.0 * (8 - lb.b_in.min(8)) as f64;
+    for &(w, a) in &lb.layers {
+        r -= 2.0 * (8 - w.min(8)) as f64;
+        r -= 1.0 * (8 - a.min(8)) as f64;
+    }
+    TrialResult {
+        trial_id: t.id(),
+        eval_mean: r + t.seed as f64 * 0.25,
+        eval_std: 1.0,
+        ckpt: None,
+    }
+}
+
+/// The score as a counting runner, so the resume tests can assert how
+/// much actually re-ran.
+fn surrogate(counter: &AtomicUsize)
+             -> impl Fn(&Trial) -> anyhow::Result<TrialResult> + '_ {
+    move |t: &Trial| {
+        counter.fetch_add(1, Ordering::SeqCst);
+        Ok(score(t))
+    }
+}
+
+/// Cost surrogate monotone in every width (so narrowing always saves
+/// hardware and the reward/cost tradeoff is genuine).
+fn toy_cost(lb: &LayerBits) -> anyhow::Result<CandidateCost> {
+    let mut units: u64 = lb.b_in as u64 * 8;
+    for &(w, a) in &lb.layers {
+        units += (w as u64) * (a as u64) * 32;
+    }
+    Ok(CandidateCost {
+        luts: units * 12,
+        ffs: units * 5,
+        energy_per_action: units as f64 * 2e-9,
+    })
+}
+
+fn proto() -> SearchProtocol {
+    let mut p = SearchProtocol::from_env().unwrap();
+    p.sweep.steps = 500;
+    p.sweep.learning_starts = 100;
+    p.sweep = p.sweep.with_seed_count(2).unwrap();
+    p.hidden = 16;
+    p.input_bits = vec![8, 4, 2];
+    p.mid_bits = vec![4, 2];
+    p.strategy = SearchStrategy::Evolve;
+    p.rounds = 2;
+    p
+}
+
+fn tmp_store(name: &str) -> RunStore {
+    let dir = std::env::temp_dir().join("qcontrol_search_itest").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    RunStore::open(dir).unwrap()
+}
+
+#[test]
+fn search_emits_a_frontier_and_pareto_json_is_jobs_invariant() {
+    let proto = proto();
+    let count = AtomicUsize::new(0);
+    let store = tmp_store(&search_run_name("pendulum", &proto));
+
+    let serial = run_search_on(&surrogate(&count), "pendulum", &proto,
+                               &Executor::serial(), Some(&store),
+                               &toy_cost)
+        .unwrap();
+    let ran = count.swap(0, Ordering::SeqCst);
+    assert!(ran > 0, "first pass must actually train");
+    assert!(serial.pareto.len() >= 2,
+            "acceptance: >= 2 non-dominated allocations, got {}",
+            serial.pareto.len());
+    assert!(serial.evaluated.len() > 6, "evolve expanded past the grid");
+    let text = serial.to_json().to_string();
+
+    // resume from the same store at --jobs 4: zero trials re-run, and
+    // the emitted pareto.json is byte-for-byte the serial one
+    let par = run_search_on(&surrogate(&count), "pendulum", &proto,
+                            &Executor::new(4).unwrap(), Some(&store),
+                            &toy_cost)
+        .unwrap();
+    assert_eq!(count.load(Ordering::SeqCst), 0,
+               "resume re-ran trials the store already had");
+    assert_eq!(par.to_json().to_string(), text,
+               "pareto.json differs between --jobs 1 and --jobs 4");
+
+    // the report lands in the run dir as pareto.json and parses back
+    let path = store.write_report("pareto", &serial.to_json()).unwrap();
+    let body = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(body, text);
+}
+
+#[test]
+fn pareto_json_carries_the_documented_schema() {
+    let proto = proto();
+    let count = AtomicUsize::new(0);
+    let rep = run_search_on(&surrogate(&count), "pendulum", &proto,
+                            &Executor::serial(), None, &toy_cost)
+        .unwrap();
+    let j = json::parse(&rep.to_json().to_string()).unwrap();
+    assert_eq!(j.get("env").unwrap().as_str().unwrap(), "pendulum");
+    assert_eq!(j.get("strategy").unwrap().as_str().unwrap(), "evolve");
+    assert_eq!(j.get("hidden").unwrap().as_usize().unwrap(), 16);
+    assert!(!j.get("protocol").unwrap().as_str().unwrap().is_empty());
+    // the worker count must NOT be in the file — it would break the
+    // bit-identical-across-jobs guarantee
+    assert!(j.opt("jobs").is_none());
+
+    let evaluated = j.get("evaluated").unwrap().as_arr().unwrap();
+    let pareto = j.get("pareto").unwrap().as_arr().unwrap();
+    assert_eq!(evaluated.len(), rep.evaluated.len());
+    assert!(pareto.len() >= 2 && pareto.len() <= evaluated.len());
+    for c in evaluated.iter().chain(pareto) {
+        let lb = LayerBits::parse(c.get("lbits").unwrap()
+                                      .as_str().unwrap(), 3)
+            .expect("lbits field reparses");
+        assert_eq!(c.get("envelope").unwrap().as_str().unwrap(),
+                   lb.envelope().to_string());
+        let origin = c.get("origin").unwrap().as_str().unwrap();
+        assert!(origin == "grid" || origin.starts_with("evolve:"),
+                "unknown origin {origin}");
+        assert!(c.get("luts").unwrap().as_f64().unwrap() > 0.0);
+        assert!(c.get("ffs").unwrap().as_f64().unwrap() > 0.0);
+        assert!(c.get("energy_per_action").unwrap().as_f64().unwrap()
+                > 0.0);
+        let point = c.get("point").unwrap();
+        assert_eq!(point.get("label").unwrap().as_str().unwrap(),
+                   lb.to_string());
+        assert_eq!(point.get("per_seed").unwrap().as_arr().unwrap().len(),
+                   proto.sweep.seeds.len());
+        point.get("mean").unwrap().as_f64().unwrap();
+        point.get("std").unwrap().as_f64().unwrap();
+    }
+    // frontier is cheapest-first and actually trades cost for reward
+    for pair in rep.pareto.windows(2) {
+        assert!(pair[0].luts <= pair[1].luts);
+        assert!(pair[0].reward() <= pair[1].reward());
+    }
+}
+
+#[test]
+fn interrupted_search_resumes_without_duplicating_work() {
+    // a runner that dies partway through the first wave, then a clean
+    // rerun against the same store: the executor persists what finished
+    // and the second pass only runs the remainder
+    let proto = proto();
+    let store = tmp_store("interrupted");
+    let bomb = AtomicUsize::new(0);
+    let dying = |t: &Trial| {
+        if bomb.fetch_add(1, Ordering::SeqCst) >= 5 {
+            anyhow::bail!("simulated crash");
+        }
+        Ok(score(t))
+    };
+    let err = run_search_on(&dying, "pendulum", &proto,
+                            &Executor::serial(), Some(&store), &toy_cost)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("simulated crash"));
+
+    let count = AtomicUsize::new(0);
+    let rep = run_search_on(&surrogate(&count), "pendulum", &proto,
+                            &Executor::serial(), Some(&store), &toy_cost)
+        .unwrap();
+    let total = rep.evaluated.len() * proto.sweep.seeds.len();
+    let reran = count.load(Ordering::SeqCst);
+    assert!(reran < total, "resume re-ran everything ({reran}/{total})");
+    assert!(rep.pareto.len() >= 2);
+
+    // and the completed run is a pure function of the protocol: a fresh
+    // store yields the identical report
+    let fresh = run_search_on(&surrogate(&AtomicUsize::new(0)), "pendulum",
+                              &proto, &Executor::serial(),
+                              Some(&tmp_store("fresh")), &toy_cost)
+        .unwrap();
+    assert_eq!(fresh.to_json().to_string(), rep.to_json().to_string(),
+               "resumed run drifted from a from-scratch run");
+}

@@ -72,6 +72,7 @@ fn short_training_run_improves_pendulum() {
         episodes: 10,
         seed: 42,
         backend: EvalBackend::Pjrt,
+        lbits: None,
     };
     let (trained, _) = rl::evaluate(&rt, &opts, &res.flat,
                                     &res.normalizer).unwrap();
