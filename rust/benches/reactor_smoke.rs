@@ -1,0 +1,137 @@
+//! Tier-1 reactor smoke: a small, fast, *gated* pass over the sharded
+//! serving core. Unlike `server_throughput` (a measurement bench with a
+//! 4096-connection ramp), this one is sized to run in seconds on a
+//! laptop and fails the build if the serving path regresses:
+//!
+//!   - 32 connections over an explicit 2-shard reactor, 200 requests
+//!     each, multiplexed by 8 driver threads;
+//!   - every reply checked bit-exact against a local `IntEngine`
+//!     (which itself exercises the SIMD panel kernels for batches);
+//!   - zero I/O errors, zero busy replies, zero shed connections;
+//!   - inference p99 must stay under `QCONTROL_REACTOR_P99_US`
+//!     (default 50_000 µs — generous, catches order-of-magnitude
+//!     regressions, not noise).
+//!
+//! Emits `BENCH_reactor.json` with the measured numbers plus the SIMD
+//! lane block the engine selected, so the perf trajectory and kernel
+//! layout choice are both machine-trackable.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use qcontrol::coordinator::serving::{serve_registry, AdmissionPolicy,
+                                     RoutedClient, ServerConfig};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
+use qcontrol::quant::BitCfg;
+use qcontrol::util::json::Json;
+use qcontrol::util::testkit;
+
+const OBS: usize = 8;
+const ACT: usize = 4;
+const HIDDEN: usize = 32;
+const CONNS: usize = 32;
+const DRIVERS: usize = 8;
+const REQS_PER_CONN: usize = 200;
+
+fn main() {
+    let p99_gate_us: f64 = std::env::var("QCONTROL_REACTOR_P99_US")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000.0);
+    let policy = testkit::toy_policy(7, OBS, HIDDEN, ACT,
+                                     BitCfg::new(4, 3, 8));
+    let lane_block = IntEngine::new(policy.clone()).lane_block();
+
+    let mut reg = PolicyRegistry::new();
+    reg.insert(PolicyArtifact::new("p", policy.clone())).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let cfg = ServerConfig {
+        max_connections: CONNS + 8,
+        max_batch: 32,
+        shards: 2,
+        admission: AdmissionPolicy::Queue(256),
+        ..ServerConfig::default()
+    };
+    let server = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            serve_registry(listener, reg, stop, cfg).unwrap()
+        })
+    };
+
+    let barrier = Arc::new(Barrier::new(DRIVERS + 1));
+    let mut joins = Vec::new();
+    for d in 0..DRIVERS {
+        let addr = addr.clone();
+        let policy = policy.clone();
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut check = IntEngine::new(policy);
+            let mut conns: Vec<RoutedClient> = (0..CONNS / DRIVERS)
+                .map(|_| RoutedClient::connect(&addr).unwrap())
+                .collect();
+            barrier.wait();
+            let mut obs = vec![0.0f32; OBS];
+            for s in 0..REQS_PER_CONN {
+                for (k, client) in conns.iter_mut().enumerate() {
+                    for (i, o) in obs.iter_mut().enumerate() {
+                        *o = ((d * 997 + k * 31 + s * 7 + i) as f32
+                              * 0.13).sin();
+                    }
+                    let act = client.act("p", &obs).unwrap();
+                    assert_eq!(act, check.infer_vec(&obs),
+                               "driver {d} conn {k} step {s}");
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Relaxed);
+    let stats = server.join().unwrap();
+
+    assert_eq!(stats.connections, CONNS as u64);
+    assert_eq!(stats.requests, (CONNS * REQS_PER_CONN) as u64);
+    assert_eq!(stats.io_errors, 0, "reactor smoke: I/O errors");
+    assert_eq!(stats.busy_replies, 0,
+               "reactor smoke: unexpected admission pressure");
+    assert_eq!(stats.rejected_conns, 0,
+               "reactor smoke: connections shed below the cap");
+    assert!(stats.p99_us <= p99_gate_us,
+            "reactor smoke: inference p99 {:.1} µs exceeds gate \
+             {p99_gate_us:.1} µs (override QCONTROL_REACTOR_P99_US)",
+            stats.p99_us);
+
+    let req_s = stats.requests as f64 / wall_s;
+    println!("reactor_smoke: {} reqs over {CONNS} conns / 2 shards — \
+              {req_s:.0} req/s, infer p50 {:.2} µs, p99 {:.2} µs \
+              (gate {p99_gate_us:.0} µs), lane block {lane_block}",
+             stats.requests, stats.p50_us, stats.p99_us);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("reactor_smoke")),
+        ("connections", Json::num(CONNS as f64)),
+        ("shards", Json::num(2.0)),
+        ("requests", Json::num(stats.requests as f64)),
+        ("req_per_s", Json::num(req_s)),
+        ("p50_us", Json::num(stats.p50_us)),
+        ("p99_us", Json::num(stats.p99_us)),
+        ("p999_us", Json::num(stats.p999_us)),
+        ("p99_gate_us", Json::num(p99_gate_us)),
+        ("lane_block", Json::num(lane_block as f64)),
+    ]);
+    match std::fs::write("BENCH_reactor.json", report.to_string()) {
+        Ok(()) => println!("wrote BENCH_reactor.json"),
+        Err(e) => eprintln!("could not write BENCH_reactor.json: {e}"),
+    }
+}

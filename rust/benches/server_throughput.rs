@@ -1,31 +1,46 @@
 //! Serving throughput/tail-latency bench: requests/s and inference
-//! latency percentiles vs. concurrent client count and batch limit.
+//! latency percentiles vs. concurrent client count and batch limit,
+//! plus a connection-count load ramp against the reactor front end.
 //!
 //! The paper's headline is µs-scale per-action latency; this bench adds
 //! the throughput dimension the serving subsystem unlocks — concurrent
 //! clients coalesced into one integer GEMM-style pass. Self-contained
 //! (toy policy, loopback TCP): no artifacts needed.
 //!
-//! Besides the human-readable table, every run writes
-//! `BENCH_serving.json` (req/s, p50/p99 µs per configuration) so the
-//! serving perf trajectory is machine-trackable across PRs.
+//! Three legs:
 //!
-//! A final leg measures throughput *while the ops plane hot-swaps the
-//! policy* (12 confirmed reloads under concurrent load, zero
-//! client-visible errors) so the cost of live reloads is tracked too.
+//! 1. **Batching** — small v1 client counts × batch limits, the
+//!    coalescing trade-off.
+//! 2. **Load ramp** — {16, 256, 4096} *concurrent open connections*
+//!    multiplexed over a bounded driver pool, all held open for the
+//!    whole leg. This is the reactor's reason to exist: the
+//!    thread-per-connection server would need 4096 OS threads and would
+//!    stall accepts at its pool bound; the ramp asserts every
+//!    connection is admitted (no accept stalls, nothing shed). The
+//!    4096-connection leg needs ~8200 fds — CI raises `ulimit -n`;
+//!    locally trim with `QCONTROL_RAMP_CLIENTS=16,256`.
+//! 3. **Reload-under-load** — throughput while the ops plane applies 12
+//!    confirmed hot swaps, zero client-visible errors.
+//!
+//! Besides the human-readable tables, every run writes
+//! `BENCH_serving.json` (req/s, p50/p99 µs, busy/shed counters per
+//! configuration) so the serving perf trajectory is machine-trackable
+//! across PRs.
 //!
 //! Scale knobs:
-//!   QCONTROL_SERVER_REQS=5000 cargo bench --bench server_throughput
+//!   QCONTROL_SERVER_REQS=5000  requests/client in the batching leg
+//!   QCONTROL_RAMP_CLIENTS=16,256,4096  ramp connection counts
+//!   QCONTROL_RAMP_TOTAL=32768  total requests per ramp leg
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use qcontrol::coordinator::ops::OpsConfig;
 use qcontrol::coordinator::serving::{serve, serve_registry, ActionClient,
-                                     RoutedClient, ServerConfig,
-                                     ServerStats};
+                                     AdmissionPolicy, RoutedClient,
+                                     ServerConfig, ServerStats};
 use qcontrol::intinfer::IntEngine;
 use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
 use qcontrol::quant::export::IntPolicy;
@@ -83,6 +98,86 @@ fn run_once(policy: &IntPolicy, clients: usize, max_batch: usize,
 
     stop.store(true, Ordering::Relaxed);
     let stats = server.join().unwrap();
+    (wall_s, stats)
+}
+
+/// Bound on concurrent driver threads in the ramp leg: each driver
+/// multiplexes `clients / RAMP_DRIVERS` open connections round-robin,
+/// so 4096 connections cost 64 threads, not 4096.
+const RAMP_DRIVERS: usize = 64;
+
+/// Load-ramp leg: hold `clients` connections open simultaneously and
+/// push ~`total` requests through them. Returns (wall s, stats).
+fn run_ramp_leg(policy: &IntPolicy, clients: usize, total: usize)
+                -> (f64, ServerStats) {
+    let mut reg = PolicyRegistry::new();
+    reg.insert(PolicyArtifact::new("p", policy.clone())).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let cfg = ServerConfig {
+        // headroom over the target so admission never interferes with
+        // the measurement; the assert below still pins "nothing shed"
+        max_connections: clients + 64,
+        max_batch: 128,
+        admission: AdmissionPolicy::Queue(8192),
+        shards: 0, // auto
+        ..ServerConfig::default()
+    };
+    let server = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            serve_registry(listener, reg, stop, cfg).unwrap()
+        })
+    };
+
+    let drivers = RAMP_DRIVERS.min(clients).max(1);
+    let per_conn = (total / clients).max(2);
+    // all drivers connect first (every connection open at once), then a
+    // barrier releases the measured phase
+    let barrier = Arc::new(Barrier::new(drivers + 1));
+    let mut joins = Vec::new();
+    for d in 0..drivers {
+        let addr = addr.clone();
+        let policy = policy.clone();
+        let barrier = barrier.clone();
+        // spread the remainder so every connection is accounted for
+        let mine = clients / drivers
+            + if d < clients % drivers { 1 } else { 0 };
+        joins.push(std::thread::spawn(move || {
+            let mut check = IntEngine::new(policy);
+            let mut conns: Vec<RoutedClient> = (0..mine)
+                .map(|_| RoutedClient::connect(&addr).unwrap())
+                .collect();
+            barrier.wait();
+            let mut obs = vec![0.0f32; OBS];
+            for s in 0..per_conn {
+                for (k, client) in conns.iter_mut().enumerate() {
+                    for (i, o) in obs.iter_mut().enumerate() {
+                        *o = ((d * 997 + k * 31 + s * 7 + i) as f32
+                              * 0.11).sin();
+                    }
+                    let act = client.act("p", &obs).unwrap();
+                    assert_eq!(act, check.infer_vec(&obs),
+                               "driver {d} conn {k} step {s}");
+                }
+            }
+        }));
+    }
+    barrier.wait(); // every connection is open — start the clock
+    let t0 = Instant::now();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    stop.store(true, Ordering::Relaxed);
+    let stats = server.join().unwrap();
+    assert_eq!(stats.connections, clients as u64,
+               "every connection must be admitted (no accept stalls)");
+    assert_eq!(stats.rejected_conns, 0, "nothing may be shed at the door");
+    assert_eq!(stats.io_errors, 0);
+    assert_eq!(stats.requests, (clients * per_conn) as u64);
     (wall_s, stats)
 }
 
@@ -184,6 +279,15 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(2000);
+    let ramp_clients: Vec<usize> = std::env::var("QCONTROL_RAMP_CLIENTS")
+        .unwrap_or_else(|_| "16,256,4096".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let ramp_total: usize = std::env::var("QCONTROL_RAMP_TOTAL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32768);
     let policy = toy_policy();
 
     println!();
@@ -236,6 +340,58 @@ fn main() {
               requests into one integer pass; batch of 1 isolates the \
               per-request path.");
 
+    // load ramp: concurrent open connections against the reactor
+    println!();
+    println!("=== load ramp: {} open connections over {} driver \
+              threads, ~{} total requests/leg ===",
+             ramp_clients
+                 .iter()
+                 .map(|c| c.to_string())
+                 .collect::<Vec<_>>()
+                 .join("/"),
+             RAMP_DRIVERS, ramp_total);
+    let mut ramp_table = Table::new(&[
+        "connections", "requests", "req/s", "mean batch",
+        "infer p50 µs", "p99 µs", "busy", "shed",
+    ]);
+    for &clients in &ramp_clients {
+        let (wall_s, stats) = run_ramp_leg(&policy, clients, ramp_total);
+        let mean_batch = if stats.batches == 0 {
+            0.0
+        } else {
+            stats.requests as f64 / stats.batches as f64
+        };
+        let req_s = stats.requests as f64 / wall_s;
+        ramp_table.row(vec![
+            clients.to_string(),
+            stats.requests.to_string(),
+            format!("{req_s:.0}"),
+            format!("{mean_batch:.2}"),
+            format!("{:.2}", stats.p50_us),
+            format!("{:.2}", stats.p99_us),
+            stats.busy_replies.to_string(),
+            stats.rejected_conns.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("leg", Json::str("ramp")),
+            ("connections", Json::num(clients as f64)),
+            ("requests", Json::num(stats.requests as f64)),
+            ("req_per_s", Json::num(req_s)),
+            ("mean_batch", Json::num(mean_batch)),
+            ("p50_us", Json::num(stats.p50_us)),
+            ("p99_us", Json::num(stats.p99_us)),
+            ("p999_us", Json::num(stats.p999_us)),
+            ("busy_replies", Json::num(stats.busy_replies as f64)),
+            ("rejected_conns",
+             Json::num(stats.rejected_conns as f64)),
+            ("io_errors", Json::num(stats.io_errors as f64)),
+        ]));
+    }
+    ramp_table.print();
+    println!();
+    println!("every connection held open for the whole leg; asserts \
+              pinned: all admitted, none shed, zero I/O errors.");
+
     // live-ops leg: throughput while the watcher hot-swaps the policy
     let (wall_s, requests, stats) = run_reload_leg(&policy, 4);
     let req_s = requests as f64 / wall_s;
@@ -262,6 +418,7 @@ fn main() {
         ("policy", Json::str(format!(
             "{OBS}x{HIDDEN}x{HIDDEN}x{ACT} b=4,3,8"))),
         ("reqs_per_client", Json::num(reqs_per_client as f64)),
+        ("ramp_total", Json::num(ramp_total as f64)),
         ("rows", Json::Arr(rows)),
     ]);
     match std::fs::write("BENCH_serving.json", report.to_string()) {

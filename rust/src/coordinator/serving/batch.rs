@@ -26,10 +26,15 @@
 //! the slot accumulates the comparison. `Promote`/`Rollback` retire the
 //! candidate in the corresponding direction.
 //!
+//! The core's input is a *bounded* `sync_channel` whose capacity is the
+//! admission policy: the reactor shards `try_send` into it and turn a
+//! full queue into a `Busy` reply, so the queue depth a client can
+//! observe is explicit configuration, not an accident of memory.
+//!
 //! Shutdown: the core wakes at least every `batch_idle` to check `stop`;
 //! once stopped (or once every submitter hung up) it drains the queue so
-//! connection threads blocked on a reply always get unblocked — either
-//! with a response or by the reply channel dropping.
+//! every admitted request is either answered or visibly dropped with its
+//! reply channel — no reply is ever silently half-delivered.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -44,17 +49,23 @@ use crate::util::stats::ObsNormalizer;
 use super::latency::{LatencyRecorder, LocalLatency};
 use super::ServerConfig;
 
-/// One queued inference request. The reply sender is per-request and moved
-/// in, so dropping the request (e.g. during shutdown drain races) always
-/// unblocks the waiting connection thread.
+/// One queued inference request. The reply sender is the owning shard's
+/// completion channel (cloned per request); `tag` is the connection
+/// token the shard uses to route the reply back. Dropping the request
+/// (e.g. during shutdown drain races) is safe — the shard simply never
+/// sees a completion for that token.
 pub(crate) struct Request {
     pub obs: Vec<f32>,
+    /// connection token of the submitting shard connection
+    pub tag: u64,
     pub resp: Sender<Reply>,
 }
 
 /// Action plus the policy version that computed it (stamped on v3
-/// replies; v1/v2 connections drop it at the framing layer).
+/// replies; v1/v2 connections drop it at the framing layer), tagged
+/// with the originating connection token.
 pub(crate) struct Reply {
+    pub tag: u64,
     pub act: Vec<f32>,
     pub version: u64,
 }
@@ -297,8 +308,9 @@ impl Core {
         let version = self.slot.version();
         for (i, r) in pending.drain(..).enumerate() {
             lat.record(us);
-            // a send error means the connection died while waiting — fine
+            // a send error means the owning shard is gone (shutdown) — fine
             let _ = r.resp.send(Reply {
+                tag: r.tag,
                 act: self.act_block[i * act_dim..(i + 1) * act_dim]
                     .to_vec(),
                 version,

@@ -3,19 +3,37 @@
 //!
 //! * [`ActionClient`] — the legacy v1 header-less protocol: fixed-size
 //!   request/response pairs against the server's *default* policy.
-//! * [`RoutedClient`] — the v2 framed protocol: every request names a
-//!   policy id, so one connection can drive any registered policy.
+//! * [`RoutedClient`] — the v2/v3 framed protocol: every request names
+//!   a policy id, so one connection can drive any registered policy.
+//!
+//! ## Busy handling
+//!
+//! The reactor server sheds overload with `STATUS_BUSY` replies instead
+//! of stalling accepts. [`RoutedClient`] absorbs those transparently:
+//! a busy reply triggers up to [`ClientConfig::busy_retries`] resends
+//! with exponential backoff plus a *deterministic* jitter — the jitter
+//! lattice is seeded by FNV-1a over the target address (the same hash
+//! family the experiment/fleet layers use for block seeding), so fleet
+//! runs stay bit-identical while distinct clients still de-synchronize
+//! their retries. A connection-level shed (the server replies busy and
+//! closes) is repaired with a reconnect between retries. Exhausted
+//! retries surface as a typed [`BusyError`], reachable through
+//! `anyhow`'s `downcast_ref`.
 //!
 //! Used by `examples/policy_server.rs`, the serving integration tests,
-//! and the throughput bench.
+//! the fleet harness, and the throughput bench.
 
+use std::fmt;
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::{MAX_WIRE_OBS, V2_MAGIC, V2_VERSION, V3_VERSION};
+use crate::experiment::fnv1a64;
+
+use super::{MAX_WIRE_OBS, STATUS_BUSY, STATUS_ERROR, STATUS_OK, V2_MAGIC,
+            V2_VERSION, V3_VERSION};
 
 /// Socket and reconnect tunables shared by the serving clients. The
 /// defaults bound every phase of a round-trip — a client can no longer
@@ -33,6 +51,13 @@ pub struct ClientConfig {
     pub reconnect_attempts: u32,
     /// backoff before the first reconnect attempt; doubles per attempt
     pub reconnect_backoff: Duration,
+    /// resends after a `Busy` reply before surfacing [`BusyError`];
+    /// 0 = fail on the first busy
+    pub busy_retries: u32,
+    /// base of the busy backoff: attempt `k` sleeps
+    /// `busy_backoff * 2^k` plus a deterministic jitter of up to half
+    /// that
+    pub busy_backoff: Duration,
 }
 
 impl Default for ClientConfig {
@@ -43,6 +68,8 @@ impl Default for ClientConfig {
             write_timeout: Duration::from_secs(5),
             reconnect_attempts: 4,
             reconnect_backoff: Duration::from_millis(25),
+            busy_retries: 4,
+            busy_backoff: Duration::from_millis(1),
         }
     }
 }
@@ -56,6 +83,41 @@ impl ClientConfig {
                          timeout means `block forever` to the OS)");
         Ok(())
     }
+}
+
+/// The server shed this request with `STATUS_BUSY` and the client's
+/// bounded retries did not get it through. Typed so callers can
+/// distinguish overload (retry later, shed load upstream) from hard
+/// failures: `err.downcast_ref::<BusyError>()`.
+#[derive(Clone, Debug)]
+pub struct BusyError {
+    /// the server's busy message (queue full / connection capacity)
+    pub msg: String,
+    /// round-trips attempted before giving up (`busy_retries + 1`)
+    pub attempts: u32,
+}
+
+impl fmt::Display for BusyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "server busy after {} attempt(s): {}", self.attempts,
+               self.msg)
+    }
+}
+
+impl std::error::Error for BusyError {}
+
+/// Sleep before busy retry `attempt`: `base * 2^attempt` (exponent
+/// capped) plus up to half that from the deterministic FNV-1a jitter
+/// lattice. Pure — the same `state` seed yields the same schedule, so
+/// fleet runs with busy traffic stay reproducible.
+fn busy_delay(base: Duration, attempt: u32, state: &mut u64) -> Duration {
+    // advance the lattice exactly once per computed delay
+    *state ^= u64::from(attempt) + 1;
+    *state = state.wrapping_mul(0x100_0000_01b3);
+    let base_us = base.as_micros().min(u128::from(u64::MAX)) as u64;
+    let cap_us = base_us.saturating_mul(1 << attempt.min(6));
+    let jitter_us = if cap_us == 0 { 0 } else { *state % (cap_us / 2 + 1) };
+    Duration::from_micros(cap_us + jitter_us)
 }
 
 /// Open one configured stream: resolve, connect with a bound, arm the
@@ -115,10 +177,22 @@ impl ActionClient {
     }
 }
 
+/// Why one wire round-trip did not produce an action.
+enum TripError {
+    /// `STATUS_BUSY` reply — retryable after backoff
+    Busy(String),
+    /// transport failure (send/recv) — the connection may be dead
+    Io(anyhow::Error),
+    /// server error reply or protocol violation — not retryable
+    Fatal(anyhow::Error),
+}
+
 /// Synchronous v2 client: requests carry a policy id; the action length
 /// comes back on the wire, so no dimensions are needed up front. Routing
 /// errors (unknown id, wrong obs count) surface as `Err` with the
-/// server's message; the connection stays usable afterwards.
+/// server's message; the connection stays usable afterwards. `Busy`
+/// replies are retried with deterministic jittered backoff (see the
+/// module doc) before surfacing as [`BusyError`].
 ///
 /// Every socket phase is bounded by a [`ClientConfig`] timeout, and the
 /// client remembers its address, so a broken connection (server restart,
@@ -128,6 +202,8 @@ pub struct RoutedClient {
     stream: TcpStream,
     addr: String,
     cfg: ClientConfig,
+    /// FNV-1a jitter lattice for busy backoff, seeded from the address
+    jitter: u64,
 }
 
 impl RoutedClient {
@@ -141,7 +217,8 @@ impl RoutedClient {
                         -> Result<RoutedClient> {
         cfg.validate()?;
         let stream = open_stream(addr, &cfg)?;
-        Ok(RoutedClient { stream, addr: addr.to_string(), cfg })
+        let jitter = fnv1a64(&format!("qserve-busy|{addr}"));
+        Ok(RoutedClient { stream, addr: addr.to_string(), cfg, jitter })
     }
 
     /// Drop the current connection and dial the same address again:
@@ -206,24 +283,98 @@ impl RoutedClient {
         for &x in obs {
             buf.extend_from_slice(&x.to_le_bytes());
         }
-        self.stream.write_all(&buf)?;
+
+        let mut attempt: u32 = 0;
+        let mut last_busy: Option<String> = None;
+        loop {
+            match self.try_round_trip(&buf, ver) {
+                Ok(r) => return Ok(r),
+                Err(TripError::Busy(msg)) => {
+                    if attempt >= self.cfg.busy_retries {
+                        return Err(anyhow::Error::new(BusyError {
+                            msg,
+                            attempts: attempt + 1,
+                        }));
+                    }
+                    std::thread::sleep(busy_delay(self.cfg.busy_backoff,
+                                                  attempt,
+                                                  &mut self.jitter));
+                    last_busy = Some(msg);
+                    attempt += 1;
+                }
+                Err(TripError::Io(e)) => {
+                    // an io failure on the *first* attempt keeps the
+                    // historical semantics (callers own recovery); one
+                    // mid-retry means the server shed the whole
+                    // connection after its busy reply — repair and keep
+                    // retrying within the same budget
+                    let Some(msg) = last_busy.clone() else {
+                        return Err(e);
+                    };
+                    if attempt >= self.cfg.busy_retries {
+                        return Err(anyhow::Error::new(BusyError {
+                            msg,
+                            attempts: attempt + 1,
+                        }));
+                    }
+                    self.reconnect().context(
+                        "reconnect after connection-level busy shed")?;
+                    attempt += 1;
+                }
+                Err(TripError::Fatal(e)) => return Err(e),
+            }
+        }
+    }
+
+    /// One wire round-trip of an already-encoded request frame.
+    fn try_round_trip(&mut self, req: &[u8], ver: u8)
+                      -> std::result::Result<(Vec<f32>, u64), TripError> {
+        let io = |e: std::io::Error, what: &str| {
+            TripError::Io(anyhow::Error::new(e).context(what.to_string()))
+        };
+        self.stream.write_all(req)
+            .map_err(|e| io(e, "write request"))?;
 
         let mut status = [0u8; 1];
-        self.stream.read_exact(&mut status)?;
+        self.stream.read_exact(&mut status)
+            .map_err(|e| io(e, "read reply status"))?;
+        if status[0] == STATUS_BUSY {
+            // busy frames never carry a version field (they can be shed
+            // before the request resolves to a policy)
+            let mut n_buf = [0u8; 4];
+            self.stream.read_exact(&mut n_buf)
+                .map_err(|e| io(e, "read busy length"))?;
+            let n = u32::from_le_bytes(n_buf) as usize;
+            if n > MAX_WIRE_OBS * 4 {
+                return Err(TripError::Fatal(anyhow::anyhow!(
+                    "implausible busy message length {n}")));
+            }
+            let mut msg = vec![0u8; n];
+            self.stream.read_exact(&mut msg)
+                .map_err(|e| io(e, "read busy message"))?;
+            return Err(TripError::Busy(
+                String::from_utf8_lossy(&msg).into_owned()));
+        }
         let mut version = 0u64;
         if ver == V3_VERSION {
             let mut v = [0u8; 8];
-            self.stream.read_exact(&mut v)?;
+            self.stream.read_exact(&mut v)
+                .map_err(|e| io(e, "read reply version"))?;
             version = u64::from_le_bytes(v);
         }
         let mut n_buf = [0u8; 4];
-        self.stream.read_exact(&mut n_buf)?;
+        self.stream.read_exact(&mut n_buf)
+            .map_err(|e| io(e, "read reply length"))?;
         let n = u32::from_le_bytes(n_buf) as usize;
-        anyhow::ensure!(n <= MAX_WIRE_OBS * 4, "implausible reply length");
+        if n > MAX_WIRE_OBS * 4 {
+            return Err(TripError::Fatal(anyhow::anyhow!(
+                "implausible reply length {n}")));
+        }
         match status[0] {
-            0 => {
+            STATUS_OK => {
                 let mut payload = vec![0u8; n * 4];
-                self.stream.read_exact(&mut payload)?;
+                self.stream.read_exact(&mut payload)
+                    .map_err(|e| io(e, "read reply payload"))?;
                 Ok((payload
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes([c[0], c[1], c[2],
@@ -231,12 +382,68 @@ impl RoutedClient {
                         .collect(),
                     version))
             }
-            1 => {
+            STATUS_ERROR => {
                 let mut msg = vec![0u8; n];
-                self.stream.read_exact(&mut msg)?;
-                anyhow::bail!("server: {}", String::from_utf8_lossy(&msg));
+                self.stream.read_exact(&mut msg)
+                    .map_err(|e| io(e, "read error message"))?;
+                Err(TripError::Fatal(anyhow::anyhow!(
+                    "server: {}", String::from_utf8_lossy(&msg))))
             }
-            s => anyhow::bail!("bad reply status {s}"),
+            s => Err(TripError::Fatal(anyhow::anyhow!(
+                "bad reply status {s}"))),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_delay_is_deterministic_per_seed() {
+        let base = Duration::from_millis(1);
+        let (mut a, mut b) = (fnv1a64("qserve-busy|x"),
+                              fnv1a64("qserve-busy|x"));
+        for attempt in 0..8 {
+            assert_eq!(busy_delay(base, attempt, &mut a),
+                       busy_delay(base, attempt, &mut b));
+        }
+        assert_eq!(a, b, "lattices must advance in lockstep");
+    }
+
+    #[test]
+    fn busy_delay_grows_and_stays_bounded() {
+        let base = Duration::from_millis(1);
+        let mut s = fnv1a64("qserve-busy|y");
+        let mut prev_cap = Duration::ZERO;
+        for attempt in 0..10u32 {
+            let d = busy_delay(base, attempt, &mut s);
+            let cap = base * (1 << attempt.min(6));
+            assert!(d >= cap, "attempt {attempt}: {d:?} < floor {cap:?}");
+            assert!(d <= cap + cap / 2 + Duration::from_micros(1),
+                    "attempt {attempt}: {d:?} above jitter ceiling");
+            assert!(cap >= prev_cap);
+            prev_cap = cap;
+        }
+    }
+
+    #[test]
+    fn busy_delay_distinct_seeds_desynchronize() {
+        let base = Duration::from_millis(4);
+        let mut a = fnv1a64("qserve-busy|127.0.0.1:7777");
+        let mut b = fnv1a64("qserve-busy|127.0.0.1:7778");
+        let differs = (0..8).any(|k| {
+            busy_delay(base, k, &mut a) != busy_delay(base, k, &mut b)
+        });
+        assert!(differs, "distinct addresses should jitter differently");
+    }
+
+    #[test]
+    fn busy_error_displays_and_is_an_error() {
+        let e = BusyError { msg: "queue full".into(), attempts: 3 };
+        let any = anyhow::Error::new(e);
+        let b = any.downcast_ref::<BusyError>().expect("typed busy");
+        assert_eq!(b.attempts, 3);
+        assert!(any.to_string().contains("queue full"));
     }
 }

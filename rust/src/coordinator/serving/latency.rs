@@ -34,6 +34,12 @@ pub struct ServerStats {
     /// connections that ended with an I/O or protocol error (truncated
     /// frame, write timeout, …) rather than a clean disconnect
     pub io_errors: u64,
+    /// `Busy` replies sent: requests shed because a policy's admission
+    /// queue was full (request-level backpressure)
+    pub busy_replies: u64,
+    /// connections shed at the door after out-waiting `conn_park` while
+    /// the server sat at `max_connections` (connection-level backpressure)
+    pub rejected_conns: u64,
     /// inference passes executed (requests / batches = mean batch size)
     pub batches: u64,
     /// registered policies (= independent inference cores) this run served
@@ -55,6 +61,8 @@ impl ServerStats {
             requests: lat_us.len() as u64,
             connections: 0,
             io_errors: 0,
+            busy_replies: 0,
+            rejected_conns: 0,
             batches: 0,
             policies: 0,
             reloads: 0,

@@ -1,19 +1,24 @@
 //! Concurrent, batched, multi-policy deployment serving — integer-only
 //! inference over TCP at production client counts.
 //!
-//! Serving is built on the policy API ([`crate::policy`]): a
-//! [`PolicyRegistry`] of loaded `.qpol` artifacts, one inference core
-//! *per registered policy* (so the old single-core bottleneck becomes N
-//! independent shards), and a router that dispatches each request to its
-//! policy's core by id:
+//! Serving composes two layers. The **front end** is the sharded
+//! reactor ([`crate::reactor`]): a non-blocking accept loop that hashes
+//! each admitted connection to one of a fixed set of event-loop shards,
+//! each shard polling readiness over `TcpStream::set_nonblocking`,
+//! reassembling frames incrementally, and dispatching requests into
+//! bounded queues. The **back end** is one inference core *per
+//! registered policy* ([`PolicyRegistry`] of loaded `.qpol` artifacts):
+//! each core drains its queue, coalesces up to
+//! [`ServerConfig::max_batch`] requests, and runs one SIMD-lane
+//! [`IntEngine::infer_batch`] pass. Replies come back to the owning
+//! shard tagged by connection token:
 //!
 //! ```text
-//!  accept loop (caller thread, non-blocking + bounded pool gate)
-//!      ├── connection thread 1 ─┐  (sniff v1/v2 → route by policy id)
-//!      ├── connection thread 2 ─┼──> per-policy mpsc queues
-//!      └── connection thread N ─┘      ├─> core "walker"  (coalesce ≤
-//!                                      ├─> core "hopper"   max_batch,
-//!                                      └─> core "pend."    infer_batch)
+//!  accept loop ── FNV-1a(token) ──> shard 0 … shard S-1   (I/O only)
+//!       │  over max_connections:        │ try_send (bounded queues)
+//!       │  park ≤ conn_park, then       ▼ full → Busy reply
+//!       │  Busy + close — never     per-policy cores: coalesce ≤
+//!       │  a stalled accept         max_batch, infer_batch, reply
 //! ```
 //!
 //! ## Wire protocols
@@ -30,13 +35,21 @@
 //! obs    n_obs × f32             policy's obs_dim)
 //! ```
 //!
-//! Response: `status u8` (0 = ok, 1 = error), `n u32`, then `n × f32`
-//! actions (ok) or `n` UTF-8 error bytes (error). Routing errors
-//! (unknown id, wrong obs count) are error replies, not disconnects.
+//! Response: `status u8`, then a status-dependent body:
+//!
+//! * [`STATUS_OK`] (0) — `n u32`, `n × f32` actions.
+//! * [`STATUS_ERROR`] (1) — `n u32`, `n` UTF-8 error bytes. Routing
+//!   errors (unknown id, wrong obs count) are error replies, not
+//!   disconnects; the connection stays usable.
+//! * [`STATUS_BUSY`] (2) — `n u32`, `n` UTF-8 message bytes. Admission
+//!   control shed the request; retry after backoff
+//!   ([`RoutedClient`] does this automatically). A `Busy` frame never
+//!   carries a version field, even on a v3 connection — it can be shed
+//!   before the request resolves to a policy.
 //!
 //! **v3 (framed, versioned).** Identical request frame with `ver = 3`;
-//! the reply gains the serving policy's monotonically increasing
-//! version, stamped on success *and* error replies: `status u8`,
+//! ok and error replies gain the serving policy's monotonically
+//! increasing version between status and length: `status u8`,
 //! `version u64`, `n u32`, payload. Version 0 on an error means the
 //! request never resolved to a policy (unknown id). v2 and v3 requests
 //! may be mixed on one connection; v2 replies are byte-identical to
@@ -47,7 +60,22 @@
 //! The server sniffs the first 4 bytes of each connection: the v2 magic
 //! decodes as an f32 NaN, so no finite v1 observation can be mistaken
 //! for a v2 header. Each connection speaks one protocol for its
-//! lifetime.
+//! lifetime. v1 has no status channel, so admission-shed v1 work
+//! surfaces as a closed connection.
+//!
+//! ## Admission control
+//!
+//! Overload is explicit, never a stall ([`AdmissionPolicy`]):
+//!
+//! * **Connections** beyond [`ServerConfig::max_connections`] are
+//!   parked up to [`ServerConfig::conn_park`] (covering the race
+//!   between a client's close and the shard noticing it), then shed
+//!   with a `Busy` reply and a close.
+//! * **Requests** enter each policy core through a bounded queue —
+//!   capacity `max_batch` under [`AdmissionPolicy::Reject`], `n` under
+//!   [`AdmissionPolicy::Queue`] — and a full queue is an immediate
+//!   `Busy` reply. Each connection additionally has at most one request
+//!   in flight; pipelined frames wait in the connection's parse buffer.
 //!
 //! ## Live ops
 //!
@@ -56,45 +84,41 @@
 //! routing with divergence accounting, and the streaming monitor
 //! listener. Each policy's core holds its engine behind a shared
 //! [`crate::coordinator::ops::PolicySlot`] and applies staged swaps at
-//! batch boundaries, so reloads are invisible to in-flight requests.
-//!
-//! ## Concurrency model
-//!
-//! Thread-per-connection, bounded by [`ServerConfig::max_connections`]
-//! (the accept loop blocks — backpressure — when the pool is full).
-//! Connection threads do only I/O and framing; inference funnels through
-//! the per-policy cores, so each engine's scratch buffers stay
-//! single-threaded while distinct policies run fully in parallel.
+//! batch boundaries. The core remains the slot's *single* consumer —
+//! the reactor only changed who fills the queues — so reload, canary,
+//! and monitor semantics are exactly those of the thread-per-connection
+//! server, now under thousands of concurrent clients.
 //!
 //! ## Batching semantics
 //!
 //! Each core coalesces whatever is queued for *its* policy at pickup
 //! time, up to [`ServerConfig::max_batch`] — a lone request is never
-//! delayed. [`IntEngine::infer_batch`] is bit-identical to
-//! per-observation [`IntEngine::infer`], so batching is invisible to
-//! clients.
+//! delayed. [`IntEngine::infer_batch`] runs blocked 8/4-lane integer
+//! kernels that are bit-identical to per-observation
+//! [`IntEngine::infer`] (property-pinned against the QIR interpreter),
+//! so batching and vectorization are invisible to clients.
 //!
 //! ## Shutdown contract
 //!
 //! Flip `stop`, then join the thread running [`serve`] /
 //! [`serve_registry`]. Bounds: the accept loop notices within
-//! [`ServerConfig::accept_poll`]; every connection thread notices within
-//! [`ServerConfig::read_timeout`] even mid-read; every core notices
-//! within [`ServerConfig::batch_idle`] and then drains its queue so no
-//! connection thread is left waiting on a reply. Requests arriving
-//! during the drain race may be dropped — their clients observe a closed
-//! connection, never a corrupt response.
+//! [`ServerConfig::accept_poll`]; every shard notices within
+//! [`ServerConfig::shard_poll`] (sooner under load); every core notices
+//! within [`ServerConfig::batch_idle`] and then drains its queue.
+//! Connections open at shutdown are dropped without error accounting —
+//! a half-received frame at stop is not a client error. Requests
+//! arriving during the drain race may be dropped; their clients observe
+//! a closed connection, never a corrupt response.
 
 mod batch;
 mod client;
 mod latency;
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -102,10 +126,13 @@ use anyhow::{Context, Result};
 use crate::coordinator::ops::{self, OpsConfig, OpsPlane, PolicySlot};
 use crate::intinfer::IntEngine;
 use crate::policy::{PolicyArtifact, PolicyRegistry};
+use crate::reactor;
 use crate::util::stats::ObsNormalizer;
 
-use batch::{CoreSeed, Reply, Request};
-pub use client::{ActionClient, ClientConfig, RoutedClient};
+use batch::CoreSeed;
+pub(crate) use batch::{Reply, Request};
+pub use crate::reactor::AdmissionPolicy;
+pub use client::{ActionClient, BusyError, ClientConfig, RoutedClient};
 pub use latency::{LatencyRecorder, LocalLatency, ServerStats};
 
 /// v2 frame magic. Interpreted as a little-endian f32 this is a quiet
@@ -121,22 +148,43 @@ pub const V3_VERSION: u8 = 3;
 /// accept (guards allocations against garbage length fields).
 pub const MAX_WIRE_OBS: usize = 1 << 16;
 
+/// Reply status byte: success, `n × f32` actions follow.
+pub const STATUS_OK: u8 = 0;
+/// Reply status byte: routing/validation error, UTF-8 message follows;
+/// the connection stays usable.
+pub const STATUS_ERROR: u8 = 1;
+/// Reply status byte: admission control shed the request — retryable
+/// after backoff. Never carries a v3 version field.
+pub const STATUS_BUSY: u8 = 2;
+
 /// Tunables of the serving subsystem. Defaults favor fast shutdown and
 /// low per-request latency; raise `max_batch` for throughput workloads.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// connection-thread pool bound; accepts block when it is exhausted
+    /// open-connection bound; beyond it, connections park for
+    /// `conn_park` and are then shed with `Busy` (accepts never stall)
     pub max_connections: usize,
     /// max requests coalesced into one inference pass
     pub max_batch: usize,
-    /// socket read timeout — the bound on noticing `stop` mid-read
+    /// socket read timeout (blocking-socket phases, e.g. shedding)
     pub read_timeout: Duration,
-    /// socket write timeout — bounds shutdown against stalled readers
+    /// socket write timeout against a stalled reader while shedding
     pub write_timeout: Duration,
-    /// inference-core wake interval while the queue is idle
+    /// inference-core wake interval while its queue is idle
     pub batch_idle: Duration,
     /// accept-loop poll interval (listener is non-blocking)
     pub accept_poll: Duration,
+    /// reactor shard count; 0 = auto (half the cores, clamped to 1..=4)
+    pub shards: usize,
+    /// what a full per-policy queue does to the overflow
+    pub admission: AdmissionPolicy,
+    /// how long an over-capacity connection waits for a slot before it
+    /// is shed — covers the close-detection race so briefly-over-cap
+    /// workloads (sequential clients) are parked, not rejected
+    pub conn_park: Duration,
+    /// shard idle sleep — the bound on a shard noticing `stop` (busy
+    /// shards notice immediately)
+    pub shard_poll: Duration,
     /// policy served to v1 (header-less) clients and to v2 requests with
     /// an empty id; `None` = the registry's first id in sorted order
     pub default_policy: Option<String>,
@@ -153,6 +201,10 @@ impl Default for ServerConfig {
             write_timeout: Duration::from_secs(5),
             batch_idle: Duration::from_millis(2),
             accept_poll: Duration::from_millis(1),
+            shards: 0,
+            admission: AdmissionPolicy::default(),
+            conn_park: Duration::from_millis(250),
+            shard_poll: Duration::from_millis(1),
             default_policy: None,
             ops: OpsConfig::default(),
         }
@@ -164,8 +216,9 @@ impl ServerConfig {
     /// runtime; called by [`serve_registry`] before binding anything.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.max_connections > 0,
-                        "max_connections must be >= 1 (0 would deadlock \
-                         the accept loop: no slot can ever be claimed)");
+                        "max_connections must be >= 1 (0 would park and \
+                         shed every connection: no slot can ever be \
+                         claimed)");
         anyhow::ensure!(self.max_batch > 0,
                         "max_batch must be >= 1 (0 can never coalesce a \
                          request)");
@@ -173,27 +226,34 @@ impl ServerConfig {
                         && !self.batch_idle.is_zero()
                         && !self.accept_poll.is_zero(),
                         "timeouts must be non-zero");
+        anyhow::ensure!(!self.shard_poll.is_zero(),
+                        "shard_poll must be non-zero (a zero idle sleep \
+                         would spin every shard at 100% CPU forever)");
+        self.admission
+            .validate()
+            .context("ServerConfig::admission")?;
         self.ops.validate()
     }
 }
 
-/// Routing table shared with connection threads: one inference core per
+/// Routing table shared with the reactor shards: one inference core per
 /// registered policy, plus its shared ops slot (version reads for reply
-/// stamping).
-struct CoreHandle {
-    tx: Sender<Request>,
-    obs_dim: usize,
-    act_dim: usize,
-    slot: Arc<PolicySlot>,
+/// stamping). The submit side is a *bounded* `SyncSender` — its
+/// capacity is the admission policy.
+pub(crate) struct CoreHandle {
+    pub(crate) tx: SyncSender<Request>,
+    pub(crate) obs_dim: usize,
+    pub(crate) act_dim: usize,
+    pub(crate) slot: Arc<PolicySlot>,
 }
 
-struct Router {
+pub(crate) struct Router {
     cores: BTreeMap<String, CoreHandle>,
     default_id: String,
 }
 
 impl Router {
-    fn resolve(&self, id: &str) -> Option<&CoreHandle> {
+    pub(crate) fn resolve(&self, id: &str) -> Option<&CoreHandle> {
         if id.is_empty() {
             self.cores.get(&self.default_id)
         } else {
@@ -216,10 +276,12 @@ pub fn serve(listener: TcpListener, engine: IntEngine, norm: ObsNormalizer,
 
 /// Serve every policy in the registry until `stop` flips: one inference
 /// core per policy, requests routed by id (v2) or to the default policy
-/// (v1). Returns aggregate latency stats across all cores.
+/// (v1), connections multiplexed over the reactor shards. Returns
+/// aggregate latency stats across all cores.
 ///
-/// Blocks the calling thread; run it on a dedicated thread and use the
-/// shutdown contract in the module doc to stop it.
+/// Blocks the calling thread (it runs the accept loop); run it on a
+/// dedicated thread and use the shutdown contract in the module doc to
+/// stop it.
 pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
                       stop: Arc<AtomicBool>, cfg: ServerConfig)
                       -> Result<ServerStats> {
@@ -235,7 +297,6 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
             canary_fracs.insert(c.id.clone(), c.fraction).is_none(),
             "duplicate canary spec for `{}`", c.id);
     }
-    listener.set_nonblocking(true)?;
     let recorder = Arc::new(LatencyRecorder::new());
 
     // consume the registry: each policy is *moved* into its core, so
@@ -254,6 +315,9 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
         .collect();
     let plane = Arc::new(OpsPlane::new(slots));
 
+    // per-core queue bound: this *is* the admission policy — a full
+    // queue turns into a Busy reply at the shard, never a blocked shard
+    let queue_cap = cfg.admission.capacity(cfg.max_batch);
     let mut cores = BTreeMap::new();
     let mut core_threads = Vec::new();
     for (id, (artifact, _version)) in entries {
@@ -268,7 +332,7 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
             .slot(&id)
             .expect("slot exists for every entry")
             .clone();
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue_cap);
         cores.insert(id.clone(), CoreHandle {
             tx,
             obs_dim,
@@ -319,65 +383,17 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
         );
     }
 
-    let gate = Arc::new(Gate::new(cfg.max_connections));
-    let io_errors = Arc::new(AtomicU64::new(0));
-    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut accepted: u64 = 0;
+    // the reactor front end: shard threads + the accept loop (on this
+    // thread). Returns with the shards joined.
+    let counters = Arc::new(reactor::FrontCounters::default());
+    let accept_res = reactor::run_front_end(&listener, router.clone(),
+                                            stop.clone(), &cfg,
+                                            counters.clone());
 
-    let mut accept_loop = || -> Result<()> {
-        loop {
-            if stop.load(Ordering::Relaxed) {
-                return Ok(());
-            }
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    // bounded pool: wait for a slot (backpressure) unless
-                    // stop flips while we wait
-                    if !gate.wait_for_slot(&stop) {
-                        return Ok(());
-                    }
-                    let permit = Permit(gate.clone());
-                    accepted += 1;
-                    reap_finished(&mut conns);
-                    let router = router.clone();
-                    let stop = stop.clone();
-                    let cfg = cfg.clone();
-                    let errs = io_errors.clone();
-                    let h = std::thread::Builder::new()
-                        .name(format!("qserve-conn-{accepted}"))
-                        .spawn(move || {
-                            let _permit = permit;
-                            // io errors end the connection, not the
-                            // server — but they must stay diagnosable
-                            if let Err(e) = handle_connection(
-                                stream, &router, &stop, &cfg)
-                            {
-                                errs.fetch_add(1, Ordering::Relaxed);
-                                eprintln!("qserve: connection error: {e}");
-                            }
-                        })
-                        .context("spawn connection thread")?;
-                    conns.push(h);
-                }
-                Err(ref e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock =>
-                {
-                    std::thread::sleep(cfg.accept_poll);
-                }
-                Err(e) => return Err(e).context("accept"),
-            }
-        }
-    };
-    let accept_res = accept_loop();
-
-    // shutdown sequence (also taken on accept errors): make sure every
-    // helper thread observes stop, then join in dependency order —
-    // connections first, then (dropping our router clone closes the
-    // submit channels) the per-policy cores
+    // shutdown sequence (also taken on accept errors): shards are down;
+    // dropping our router clone closes the submit channels, so the
+    // per-policy cores drain and exit, then the ops threads
     stop.store(true, Ordering::Relaxed);
-    for h in conns {
-        let _ = h.join();
-    }
     drop(router);
     for h in core_threads {
         h.join()
@@ -391,279 +407,12 @@ pub fn serve_registry(listener: TcpListener, registry: PolicyRegistry,
     accept_res?;
 
     let mut stats = recorder.snapshot();
-    stats.connections = accepted;
-    stats.io_errors = io_errors.load(Ordering::Relaxed);
+    stats.connections = counters.accepted.load(Ordering::Relaxed);
+    stats.io_errors = counters.io_errors.load(Ordering::Relaxed);
+    stats.busy_replies = counters.busy_replies.load(Ordering::Relaxed);
+    stats.rejected_conns =
+        counters.rejected_conns.load(Ordering::Relaxed);
     stats.policies = n_policies;
     stats.reloads = plane.reloads.load(Ordering::Relaxed);
     Ok(stats)
-}
-
-/// Join connection threads that already exited, keeping the handle list
-/// from growing without bound on long-lived servers.
-fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
-    let mut i = 0;
-    while i < conns.len() {
-        if conns[i].is_finished() {
-            let _ = conns.swap_remove(i).join();
-        } else {
-            i += 1;
-        }
-    }
-}
-
-/// One connection: sniff the protocol from the first 4 bytes, then run
-/// the matching request loop until disconnect or stop.
-fn handle_connection(mut stream: TcpStream, router: &Router,
-                     stop: &AtomicBool, cfg: &ServerConfig) -> Result<()> {
-    // accepted sockets inherit the listener's non-blocking flag on some
-    // platforms (Windows); timeouts below need a blocking socket
-    stream.set_nonblocking(false)?;
-    stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(cfg.read_timeout))?;
-    stream.set_write_timeout(Some(cfg.write_timeout))?;
-
-    let mut head = [0u8; 4];
-    if !read_frame(&mut stream, &mut head, stop, 0)? {
-        return Ok(()); // disconnect or stop before the first byte
-    }
-    if head == V2_MAGIC {
-        serve_v2(stream, router, stop)
-    } else {
-        serve_v1(stream, router, stop, head)
-    }
-}
-
-/// Legacy header-less loop: fixed-size frames against the default policy.
-fn serve_v1(mut stream: TcpStream, router: &Router, stop: &AtomicBool,
-            head: [u8; 4]) -> Result<()> {
-    let core = router
-        .resolve("")
-        .expect("router always contains the default policy");
-    let mut obs_buf = vec![0u8; core.obs_dim * 4];
-    let mut act_buf = vec![0u8; core.act_dim * 4];
-    // the 4 sniffed bytes are the head of the first observation frame
-    obs_buf[..4].copy_from_slice(&head);
-    let mut prefilled = 4;
-    loop {
-        if !read_frame(&mut stream, &mut obs_buf, stop, prefilled)? {
-            return Ok(()); // disconnect or stop
-        }
-        prefilled = 0;
-        let obs: Vec<f32> = obs_buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        let Some(reply) = submit(core, obs)? else {
-            return Ok(()); // shutting down
-        };
-        for (i, &a) in reply.act.iter().enumerate() {
-            act_buf[i * 4..(i + 1) * 4].copy_from_slice(&a.to_le_bytes());
-        }
-        stream.write_all(&act_buf).context("write response")?;
-    }
-}
-
-/// v2/v3 framed loop: per-request header routes to the policy's core;
-/// routing problems are error replies, protocol violations end the
-/// connection. The version byte is per *request*, so a client may mix
-/// plain (v2) and version-stamped (v3) requests on one connection.
-fn serve_v2(mut stream: TcpStream, router: &Router, stop: &AtomicBool)
-            -> Result<()> {
-    // a disconnect after part of a request was consumed is a protocol
-    // error, not a clean close — unless the server is stopping
-    let mid_request = |stop: &AtomicBool| -> Result<()> {
-        if stop.load(Ordering::Relaxed) {
-            Ok(())
-        } else {
-            Err(anyhow::anyhow!("disconnect mid-request (truncated v2 \
-                                 header or payload)"))
-        }
-    };
-    // the first request's magic was consumed by the sniff
-    let mut need_magic = false;
-    loop {
-        if need_magic {
-            let mut magic = [0u8; 4];
-            if !read_frame(&mut stream, &mut magic, stop, 0)? {
-                return Ok(()); // clean disconnect at a frame boundary
-            }
-            anyhow::ensure!(magic == V2_MAGIC,
-                            "bad v2 frame magic {magic:02x?}");
-        }
-        need_magic = true;
-
-        let mut hdr = [0u8; 2]; // ver, id_len
-        if !read_frame(&mut stream, &mut hdr, stop, 0)? {
-            return mid_request(stop);
-        }
-        let ver = hdr[0];
-        anyhow::ensure!(ver == V2_VERSION || ver == V3_VERSION,
-                        "unsupported wire version {ver} (server speaks \
-                         {V2_VERSION} and {V3_VERSION})");
-        let mut id_buf = vec![0u8; hdr[1] as usize];
-        if !read_frame(&mut stream, &mut id_buf, stop, 0)? {
-            return mid_request(stop);
-        }
-        let mut n_buf = [0u8; 4];
-        if !read_frame(&mut stream, &mut n_buf, stop, 0)? {
-            return mid_request(stop);
-        }
-        let n_obs = u32::from_le_bytes(n_buf) as usize;
-        anyhow::ensure!(n_obs <= MAX_WIRE_OBS,
-                        "request claims {n_obs} observation values");
-        let mut payload = vec![0u8; n_obs * 4];
-        if !read_frame(&mut stream, &mut payload, stop, 0)? {
-            return mid_request(stop);
-        }
-
-        let Ok(id) = std::str::from_utf8(&id_buf) else {
-            // no policy resolved: a v3 error reply carries version 0
-            write_error_reply(&mut stream, ver, 0,
-                              "policy id is not UTF-8")?;
-            continue;
-        };
-        let Some(core) = router.resolve(id) else {
-            write_error_reply(&mut stream, ver, 0,
-                              &format!("unknown policy id `{id}`"))?;
-            continue;
-        };
-        if n_obs != core.obs_dim {
-            write_error_reply(&mut stream, ver, core.slot.version(),
-                              &format!("policy `{id}` expects {} \
-                                        observation values, got {n_obs}",
-                                       core.obs_dim))?;
-            continue;
-        }
-        let obs: Vec<f32> = payload
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        let Some(r) = submit(core, obs)? else {
-            return Ok(()); // shutting down
-        };
-        let mut reply = Vec::with_capacity(13 + r.act.len() * 4);
-        reply.push(0u8);
-        if ver == V3_VERSION {
-            reply.extend_from_slice(&r.version.to_le_bytes());
-        }
-        reply.extend_from_slice(&(r.act.len() as u32).to_le_bytes());
-        for &a in &r.act {
-            reply.extend_from_slice(&a.to_le_bytes());
-        }
-        stream.write_all(&reply).context("write response")?;
-    }
-}
-
-/// Error reply in the requested framing: v2 omits the version field,
-/// v3 stamps it (0 = the request never resolved to a policy).
-fn write_error_reply(stream: &mut TcpStream, ver: u8, version: u64,
-                     msg: &str) -> Result<()> {
-    let bytes = msg.as_bytes();
-    let mut reply = Vec::with_capacity(13 + bytes.len());
-    reply.push(1u8);
-    if ver == V3_VERSION {
-        reply.extend_from_slice(&version.to_le_bytes());
-    }
-    reply.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-    reply.extend_from_slice(bytes);
-    stream.write_all(&reply).context("write error response")
-}
-
-/// Submit one observation to a core and wait for the reply (action +
-/// policy version). `Ok(None)` means the server is draining — close the
-/// connection.
-fn submit(core: &CoreHandle, obs: Vec<f32>) -> Result<Option<Reply>> {
-    // per-request reply channel, sender *moved* into the request:
-    // whatever happens to the request, recv below unblocks
-    let (tx, rx) = mpsc::channel();
-    if core.tx.send(Request { obs, resp: tx }).is_err() {
-        return Ok(None); // core gone — shutting down
-    }
-    match rx.recv() {
-        Ok(r) => Ok(Some(r)),
-        Err(_) => Ok(None), // request dropped in shutdown drain
-    }
-}
-
-/// Read one fixed-size frame, preserving partial progress across read
-/// timeouts. Returns `Ok(false)` on stop, or on a clean disconnect at a
-/// frame boundary (`prefilled == 0` and no bytes read); EOF after any
-/// bytes of the frame arrived is an error.
-fn read_frame(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool,
-              prefilled: usize) -> Result<bool> {
-    use std::io::ErrorKind::*;
-    let mut filled = prefilled;
-    while filled < buf.len() {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(false);
-        }
-        match stream.read(&mut buf[filled..]) {
-            Ok(0) if filled == 0 => return Ok(false),
-            Ok(0) => anyhow::bail!("eof mid-request ({filled}/{} bytes)",
-                                   buf.len()),
-            Ok(n) => filled += n,
-            Err(ref e)
-                if matches!(e.kind(),
-                            WouldBlock | TimedOut | Interrupted) =>
-            {
-                continue;
-            }
-            Err(ref e)
-                if matches!(e.kind(),
-                            ConnectionReset | ConnectionAborted
-                            | BrokenPipe) =>
-            {
-                return Ok(false);
-            }
-            Err(e) => return Err(e).context("read request"),
-        }
-    }
-    Ok(true)
-}
-
-/// Counting gate bounding the connection-thread pool.
-struct Gate {
-    free: Mutex<usize>,
-    cv: Condvar,
-}
-
-impl Gate {
-    fn new(slots: usize) -> Gate {
-        Gate { free: Mutex::new(slots), cv: Condvar::new() }
-    }
-
-    /// Claim a slot, waiting while the pool is full. Returns `false` if
-    /// `stop` flips during the wait. On `true` the caller owns one slot
-    /// and must wrap it in a [`Permit`] to release it.
-    fn wait_for_slot(&self, stop: &AtomicBool) -> bool {
-        let mut free = self.free.lock().unwrap();
-        loop {
-            if stop.load(Ordering::Relaxed) {
-                return false;
-            }
-            if *free > 0 {
-                *free -= 1;
-                return true;
-            }
-            let (guard, _) = self
-                .cv
-                .wait_timeout(free, Duration::from_millis(10))
-                .unwrap();
-            free = guard;
-        }
-    }
-
-    fn release(&self) {
-        *self.free.lock().unwrap() += 1;
-        self.cv.notify_one();
-    }
-}
-
-/// RAII slot of the [`Gate`]; releases on drop (connection thread exit).
-struct Permit(Arc<Gate>);
-
-impl Drop for Permit {
-    fn drop(&mut self) {
-        self.0.release();
-    }
 }

@@ -199,6 +199,10 @@ impl FleetReport {
                         / self.server.batches as f64
                 })),
                 ("io_errors", Json::num(self.server.io_errors as f64)),
+                ("busy_replies",
+                 Json::num(self.server.busy_replies as f64)),
+                ("rejected_conns",
+                 Json::num(self.server.rejected_conns as f64)),
                 ("reloads", Json::num(self.server.reloads as f64)),
                 ("p50_us", Json::num(self.server.p50_us)),
                 ("p99_us", Json::num(self.server.p99_us)),

@@ -144,10 +144,17 @@ pub struct IntEngine {
     plan: ExecPlan,
     /// per-lane stride of the scratch buffers: max dim of any activation
     lane: usize,
+    /// SIMD panel width chosen from the plan's geometry (8 or 4)
+    lane_block: usize,
     // ping-pong activation buffers (i32 lattice values); grown on demand
     // to `lane * batch` so batched inference reuses them per batch lane
     buf_a: Vec<i32>,
     buf_b: Vec<i32>,
+    // transposed activation panels for the blocked kernels: activation c
+    // of panel lane k lives at `c * L + k`, so the inner accumulation
+    // loop is a contiguous L-wide stripe (vectorizable without gathers)
+    blk_a: Vec<i32>,
+    blk_b: Vec<i32>,
 }
 
 impl IntEngine {
@@ -182,13 +189,27 @@ impl IntEngine {
 
     fn from_plan(policy: IntPolicy, plan: ExecPlan) -> IntEngine {
         let lane = plan.lane();
+        // panel width from the plan's geometry: an 8-wide panel holds
+        // 2 × lane × 8 i32 (64 KiB at lane 1024) — beyond that the
+        // transposed panels start fighting the weight rows for L1/L2,
+        // so wide graphs drop to 4 lanes
+        let lane_block = if lane <= 1024 { 8 } else { 4 };
         IntEngine {
             policy,
             plan,
             lane,
+            lane_block,
             buf_a: vec![0; lane],
             buf_b: vec![0; lane],
+            blk_a: vec![0; lane * 8],
+            blk_b: vec![0; lane * 8],
         }
+    }
+
+    /// The SIMD panel width [`IntEngine::infer_batch`] blocks by (8 or
+    /// 4, chosen from the plan's geometry at build time).
+    pub fn lane_block(&self) -> usize {
+        self.lane_block
     }
 
     /// Integer forward for one (already normalized) observation.
@@ -239,16 +260,114 @@ impl IntEngine {
     /// Batched integer forward over a row-major observation block.
     ///
     /// `obs` is `[batch, obs_dim]` row-major (already normalized),
-    /// `actions_out` is `[batch, act_dim]` row-major. Lanes are laid out at
-    /// a fixed stride in the ping-pong scratch buffers (grown on demand,
-    /// then reused), and each layer walks weight rows in the outer loop so
-    /// one row services every lane — a weight-stationary integer GEMM pass.
+    /// `actions_out` is `[batch, act_dim]` row-major.
     ///
-    /// Per lane the accumulation order, threshold search, and tanh lookup
-    /// are exactly those of [`IntEngine::infer`], so results are
-    /// bit-identical to per-observation inference (pinned by a property
-    /// test); concurrent serving may therefore coalesce requests freely.
+    /// The batch is cut into panels of [`IntEngine::lane_block`] lanes
+    /// (8, or 4 for wide graphs) and each panel runs a blocked kernel
+    /// over a *transposed* activation panel: activation `c` of panel
+    /// lane `k` lives at `c * L + k`, so the per-weight inner loop is a
+    /// contiguous L-wide i32 stripe — the auto-vectorizer turns it into
+    /// SIMD multiply-accumulates with one weight broadcast per column,
+    /// the integer analogue of the paper's DSP lanes. Leftover rows run
+    /// a 4-panel and then [`IntEngine::infer`].
+    ///
+    /// Per lane the accumulation order (ascending columns, i32, exact by
+    /// the `qir::verify` overflow bound), threshold search, and tanh
+    /// lookup are exactly those of [`IntEngine::infer`], so results are
+    /// bit-identical to per-observation inference — and to the scalar
+    /// reference [`IntEngine::infer_batch_scalar`] — for every bit
+    /// configuration (pinned by property tests); concurrent serving may
+    /// therefore coalesce requests freely.
     pub fn infer_batch(&mut self, obs: &[f32], actions_out: &mut [f32]) {
+        let obs_dim = self.plan.obs_dim;
+        let act_dim = self.plan.act_dim;
+        assert_eq!(obs.len() % obs_dim, 0, "obs block not [batch, obs_dim]");
+        let batch = obs.len() / obs_dim;
+        assert_eq!(actions_out.len(), batch * act_dim,
+                   "out block not [batch, act_dim]");
+        let mut b = 0;
+        if self.lane_block >= 8 {
+            while batch - b >= 8 {
+                self.infer_panel::<8>(
+                    &obs[b * obs_dim..(b + 8) * obs_dim],
+                    &mut actions_out[b * act_dim..(b + 8) * act_dim]);
+                b += 8;
+            }
+        }
+        while batch - b >= 4 {
+            self.infer_panel::<4>(
+                &obs[b * obs_dim..(b + 4) * obs_dim],
+                &mut actions_out[b * act_dim..(b + 4) * act_dim]);
+            b += 4;
+        }
+        while b < batch {
+            let (o, a) = (&obs[b * obs_dim..(b + 1) * obs_dim],
+                          &mut actions_out[b * act_dim..(b + 1) * act_dim]);
+            self.infer(o, a);
+            b += 1;
+        }
+    }
+
+    /// One blocked pass over exactly `L` observations (`L` = 8 or 4).
+    fn infer_panel<const L: usize>(&mut self, obs: &[f32],
+                                   out: &mut [f32]) {
+        let p = &self.plan;
+        let (obs_dim, act_dim) = (p.obs_dim, p.act_dim);
+        debug_assert_eq!(obs.len(), L * obs_dim);
+        debug_assert_eq!(out.len(), L * act_dim);
+
+        // quantize into the transposed panel: lane k's activation d at
+        // `d * L + k`
+        for k in 0..L {
+            let row = &obs[k * obs_dim..(k + 1) * obs_dim];
+            for (d, &x) in row.iter().enumerate() {
+                self.blk_a[d * L + k] =
+                    crate::quant::quantize(x, p.s_in, p.in_range);
+            }
+        }
+
+        let (mut cur, mut nxt) = (&mut self.blk_a, &mut self.blk_b);
+        for layer in &p.layers {
+            let x = &cur[..layer.cols * L];
+            for j in 0..layer.rows {
+                let wrow = &layer.w[j * layer.cols..(j + 1) * layer.cols];
+                // one weight broadcast per column against a contiguous
+                // L-stripe of activations: ascending-column i32
+                // accumulation, exactly the scalar order per lane
+                let mut acc = [0i32; L];
+                for (c, &w) in wrow.iter().enumerate() {
+                    let wv = w as i32;
+                    let xs = &x[c * L..(c + 1) * L];
+                    for k in 0..L {
+                        acc[k] += wv * xs[k];
+                    }
+                }
+                let t =
+                    &layer.thresholds[j * layer.nthr..(j + 1) * layer.nthr];
+                let stripe = &mut nxt[j * L..(j + 1) * L];
+                for k in 0..L {
+                    let cnt = t.partition_point(|&th| th <= acc[k]);
+                    stripe[k] = layer.qmin + cnt as i32;
+                }
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        let qmin = p.out_qmin;
+        for k in 0..L {
+            let row = &mut out[k * act_dim..(k + 1) * act_dim];
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = p.tanh_lut[(cur[j * L + k] - qmin) as usize];
+            }
+        }
+    }
+
+    /// Scalar reference for the batched path: the pre-SIMD lane-strided
+    /// loop, kept as the oracle the property suite pins
+    /// [`IntEngine::infer_batch`] against (and a fallback for debugging
+    /// vectorization issues).
+    pub fn infer_batch_scalar(&mut self, obs: &[f32],
+                              actions_out: &mut [f32]) {
         let obs_dim = self.plan.obs_dim;
         let act_dim = self.plan.act_dim;
         assert_eq!(obs.len() % obs_dim, 0, "obs block not [batch, obs_dim]");
@@ -443,6 +562,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn simd_panels_match_scalar_reference_across_bitcfg_matrix() {
+        // panel boundaries matter: cover pure-8, pure-4, mixed, and
+        // scalar-tail batch sizes
+        for bits in [BitCfg::new(2, 2, 2), BitCfg::new(3, 2, 4),
+                     BitCfg::new(4, 3, 8), BitCfg::new(8, 8, 8)] {
+            let (mut simd, _keep) = build(17, 9, 20, 3, bits);
+            let (mut scalar, _keep2) = build(17, 9, 20, 3, bits);
+            assert_eq!(simd.lane_block(), 8);
+            let mut rng = Rng::new(6);
+            for &batch in &[1usize, 3, 4, 5, 7, 8, 9, 12, 16, 17, 33] {
+                let mut block = vec![0.0f32; batch * 9];
+                rng.fill_normal(&mut block);
+                let mut got = vec![0.0f32; batch * 3];
+                simd.infer_batch(&block, &mut got);
+                let mut want = vec![0.0f32; batch * 3];
+                scalar.infer_batch_scalar(&block, &mut want);
+                assert_eq!(got, want, "bits={bits:?} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_block_follows_plan_geometry() {
+        let (small, _keep) = build(1, 6, 16, 2, BitCfg::new(4, 3, 8));
+        assert_eq!(small.lane_block(), 8, "narrow graphs take 8 lanes");
+        let (wide, _keep2) = build(2, 4, 1030, 2, BitCfg::new(2, 2, 2));
+        assert_eq!(wide.lane_block(), 4,
+                   "graphs wider than 1024 drop to 4 lanes");
+        // the wide engine's panels must still match its scalar path
+        let mut wide = wide;
+        let mut rng = Rng::new(9);
+        let mut block = vec![0.0f32; 9 * 4];
+        rng.fill_normal(&mut block);
+        let mut got = vec![0.0f32; 9 * 2];
+        wide.infer_batch(&block, &mut got);
+        let mut want = vec![0.0f32; 9 * 2];
+        wide.infer_batch_scalar(&block, &mut want);
+        assert_eq!(got, want);
     }
 
     #[test]

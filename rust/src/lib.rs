@@ -27,5 +27,6 @@ pub mod runtime;
 pub mod rl;
 pub mod experiment;
 pub mod coordinator;
+pub mod reactor;
 pub mod search;
 pub mod fleet;

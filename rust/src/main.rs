@@ -185,17 +185,21 @@ usage: qcontrol <cmd> [--flags]
             identical ROMs shared across policies)
   serve    --ckpt PATH | --dir ARTIFACTS [--default ID] [--port P]
            [--max-batch N] [--max-connections N]
+           [--shards N] [--admission reject|queue:N]
            [--watch] [--reload-poll-ms MS]
            [--canary ID=FRACTION[,ID=FRACTION...]]
            [--monitor-port P] [--monitor-tick-ms MS]
            (--dir serves every .qpol in ARTIFACTS, routed by policy id
             over the v2/v3 wire protocols; v1 clients get the default
-            policy. --watch hot-reloads a policy when its .qpol changes
-            on disk — publish with tmp+rename; every v3 reply carries
-            the policy's monotone version. --canary mirrors that
-            fraction of traffic through <ID>.qpol.canary and tracks
-            divergence; promote/rollback over the monitor port.
-            --monitor-port streams telemetry to `qcontrol monitor`)
+            policy. Connections multiplex over --shards reactor event
+            loops (0 = auto); overload yields Busy replies per the
+            --admission policy instead of stalled accepts. --watch
+            hot-reloads a policy when its .qpol changes on disk —
+            publish with tmp+rename; every v3 reply carries the
+            policy's monotone version. --canary mirrors that fraction
+            of traffic through <ID>.qpol.canary and tracks divergence;
+            promote/rollback over the monitor port. --monitor-port
+            streams telemetry to `qcontrol monitor`)
   monitor  --addr HOST:PORT [--frames N] [--out FILE]
            [--promote ID] [--rollback ID]
            (subscribes to a serving monitor port, prints per-policy
@@ -814,9 +818,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
     ops.monitor_tick =
         std::time::Duration::from_millis(a.u64("monitor-tick-ms", 500)?);
 
+    let admission = match a.str_opt("admission") {
+        Some(spec) => serving::AdmissionPolicy::parse(spec)
+            .context("--admission")?,
+        None => serving::AdmissionPolicy::default(),
+    };
     let cfg = serving::ServerConfig {
         max_connections: a.usize("max-connections", 64)?,
         max_batch: a.usize("max-batch", 32)?,
+        shards: a.usize("shards", 0)?,
+        admission,
         default_policy: a.str_opt("default").map(|s| s.to_string()),
         ops,
         ..serving::ServerConfig::default()
@@ -835,8 +846,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
                  c.id, c.fraction, c.id,
                  qcontrol::coordinator::ops::SIDECAR_SUFFIX);
     }
-    println!("serving {} integer policy(ies) on 127.0.0.1:{port}:",
-             registry.len());
+    println!("serving {} integer policy(ies) on 127.0.0.1:{port} \
+              ({} reactor shard(s), admission {}):",
+             registry.len(),
+             qcontrol::reactor::effective_shards(cfg.shards),
+             cfg.admission);
     for (id, art) in registry.iter() {
         let p = &art.policy;
         println!("  {id:<24} env={:<12} obs={} act={} bits={}{}",
@@ -847,10 +861,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stats = serving::serve_registry(listener, registry, stop, cfg)?;
     println!("served {} requests over {} connections ({} batched passes, \
-              {} policy cores, {} hot reloads), inference p50 {:.1} µs  \
-              p99 {:.1} µs  p99.9 {:.1} µs",
+              {} policy cores, {} hot reloads, {} busy replies, {} \
+              connections shed), inference p50 {:.1} µs  p99 {:.1} µs  \
+              p99.9 {:.1} µs",
              stats.requests, stats.connections, stats.batches,
-             stats.policies, stats.reloads, stats.p50_us, stats.p99_us,
+             stats.policies, stats.reloads, stats.busy_replies,
+             stats.rejected_conns, stats.p50_us, stats.p99_us,
              stats.p999_us);
     Ok(())
 }

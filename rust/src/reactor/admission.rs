@@ -1,0 +1,140 @@
+//! Admission control for the reactor front end.
+//!
+//! The pre-reactor server had exactly one overload behavior: when the
+//! connection pool was full the accept loop *stalled*, so overload was
+//! invisible to admitted clients and indistinguishable from a hung
+//! server for everyone else. The reactor replaces that with an explicit
+//! policy, applied at two points:
+//!
+//! * **Connections** over [`super::ServerConfig::max_connections`] are
+//!   parked for at most `conn_park`, then shed with a `Busy` reply
+//!   (framed clients) or a close (v1 has no status channel) — accepts
+//!   never stall.
+//! * **Requests** flow into each policy core through a *bounded* queue
+//!   whose capacity this policy picks; a full queue produces an
+//!   immediate `Busy` reply instead of unbounded buffering.
+
+use std::fmt;
+
+use anyhow::Result;
+
+/// What the server does when a policy core's request queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Keep the queue as small as latency allows — one `max_batch` of
+    /// requests — and shed everything beyond it with `Busy`. This is
+    /// the strict-backpressure mode: a client's `Busy` means "the very
+    /// next batch is already full".
+    Reject,
+    /// Buffer up to `n` requests per policy core before shedding.
+    /// Larger `n` trades queueing delay for fewer `Busy` replies.
+    Queue(usize),
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> AdmissionPolicy {
+        // deep enough that pre-reactor workloads (tests, fleet, bench)
+        // never see a Busy unless they ask for a tighter policy
+        AdmissionPolicy::Queue(1024)
+    }
+}
+
+impl AdmissionPolicy {
+    /// Parse the CLI/config spelling: `reject`, `queue:N`, or `queue(N)`.
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("reject") {
+            return Ok(AdmissionPolicy::Reject);
+        }
+        let body = s
+            .strip_prefix("queue:")
+            .or_else(|| s.strip_prefix("queue(")
+                         .and_then(|r| r.strip_suffix(')')));
+        if let Some(n) = body {
+            let n: usize = n.trim().parse().map_err(|_| {
+                anyhow::anyhow!("admission queue depth `{n}` is not a \
+                                 number (expected queue:N or queue(N))")
+            })?;
+            let p = AdmissionPolicy::Queue(n);
+            p.validate()?;
+            return Ok(p);
+        }
+        anyhow::bail!("unknown admission policy `{s}` (expected `reject`, \
+                       `queue:N`, or `queue(N)`)")
+    }
+
+    /// Reject configurations that could never admit a request.
+    pub fn validate(&self) -> Result<()> {
+        if let AdmissionPolicy::Queue(0) = self {
+            anyhow::bail!("admission queue(0) can never admit a request \
+                           — use `reject` for strict backpressure or \
+                           queue(n) with n >= 1");
+        }
+        Ok(())
+    }
+
+    /// Capacity of each policy core's bounded request queue.
+    pub(crate) fn capacity(&self, max_batch: usize) -> usize {
+        match *self {
+            AdmissionPolicy::Reject => max_batch.max(1),
+            AdmissionPolicy::Queue(n) => n.max(1),
+        }
+    }
+}
+
+impl fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionPolicy::Reject => write!(f, "reject"),
+            AdmissionPolicy::Queue(n) => write!(f, "queue({n})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_both_queue_spellings() {
+        assert_eq!(AdmissionPolicy::parse("reject").unwrap(),
+                   AdmissionPolicy::Reject);
+        assert_eq!(AdmissionPolicy::parse("REJECT").unwrap(),
+                   AdmissionPolicy::Reject);
+        assert_eq!(AdmissionPolicy::parse("queue:64").unwrap(),
+                   AdmissionPolicy::Queue(64));
+        assert_eq!(AdmissionPolicy::parse("queue(64)").unwrap(),
+                   AdmissionPolicy::Queue(64));
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_descriptive_errors() {
+        let e = AdmissionPolicy::parse("drop").unwrap_err().to_string();
+        assert!(e.contains("unknown admission policy"), "{e}");
+        let e = AdmissionPolicy::parse("queue:x").unwrap_err().to_string();
+        assert!(e.contains("not a number"), "{e}");
+        let e = AdmissionPolicy::parse("queue:0").unwrap_err().to_string();
+        assert!(e.contains("never admit"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_zero_queue_only() {
+        assert!(AdmissionPolicy::Queue(0).validate().is_err());
+        assert!(AdmissionPolicy::Queue(1).validate().is_ok());
+        assert!(AdmissionPolicy::Reject.validate().is_ok());
+    }
+
+    #[test]
+    fn capacity_mapping() {
+        assert_eq!(AdmissionPolicy::Reject.capacity(32), 32);
+        assert_eq!(AdmissionPolicy::Reject.capacity(0), 1);
+        assert_eq!(AdmissionPolicy::Queue(7).capacity(32), 7);
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        for p in [AdmissionPolicy::Reject, AdmissionPolicy::Queue(9)] {
+            assert_eq!(AdmissionPolicy::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Incremental, non-blocking frame parsing for the serving wire.
+//!
+//! The pre-reactor server read frames with blocking `read_exact`-style
+//! loops, one thread per connection. A reactor shard instead feeds
+//! whatever bytes the socket has ready into a per-connection
+//! [`FrameParser`] and asks for complete frames; a frame split across
+//! any number of reads (down to one byte at a time) reassembles
+//! transparently, and several frames arriving in one read all come out.
+//!
+//! The parser speaks both wire families (see the serving module doc for
+//! the byte layout): the first 4 buffered bytes sniff the protocol —
+//! the v2 magic decodes as an f32 NaN, so no finite v1 observation can
+//! collide with it — and the connection then speaks that protocol for
+//! its lifetime, exactly as before. Payload bytes are decoded straight
+//! out of the accumulation buffer (no per-field intermediate copies),
+//! and the buffer compacts in place once consumed bytes accumulate.
+//!
+//! Reply encoders live here too so the framing knowledge has one home:
+//! ok / error / busy frames are appended to a connection's write buffer
+//! and flushed by the shard as the socket accepts them.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::serving::{MAX_WIRE_OBS, STATUS_BUSY, STATUS_ERROR,
+                                  STATUS_OK, V2_MAGIC, V2_VERSION,
+                                  V3_VERSION};
+
+/// One complete request frame.
+#[derive(Debug, PartialEq)]
+pub(crate) enum WireFrame {
+    /// Legacy header-less frame: `obs_dim × f32` against the default
+    /// policy (the length is fixed at sniff time).
+    V1 { obs: Vec<f32> },
+    /// Framed v2/v3 request. The id is raw bytes — UTF-8 validation is
+    /// a *routing* concern (it produces an error reply, not a
+    /// connection error), so it stays out of the parser.
+    Routed { ver: u8, id: Vec<u8>, obs: Vec<f32> },
+}
+
+enum Proto {
+    Unknown,
+    V1,
+    Framed,
+}
+
+/// Streaming parser over one connection's inbound bytes.
+pub(crate) struct FrameParser {
+    buf: Vec<u8>,
+    /// bytes of `buf` already consumed by emitted frames
+    pos: usize,
+    proto: Proto,
+    /// v1 frame size in bytes (`default obs_dim × 4`)
+    v1_frame: usize,
+}
+
+/// Consumed-prefix length that triggers an in-place compaction.
+const COMPACT_AT: usize = 4096;
+
+impl FrameParser {
+    pub(crate) fn new(v1_frame: usize) -> FrameParser {
+        FrameParser {
+            buf: Vec::new(),
+            pos: 0,
+            proto: Proto::Unknown,
+            v1_frame: v1_frame.max(4),
+        }
+    }
+
+    /// Append freshly read socket bytes.
+    pub(crate) fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame. Used to
+    /// classify a disconnect: EOF with `buffered() == 0` is a clean
+    /// close at a frame boundary, anything else died mid-request.
+    pub(crate) fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Try to produce the next complete frame. `Ok(None)` means more
+    /// bytes are needed; `Err` is a protocol violation (bad magic,
+    /// unsupported version, implausible length) that ends the
+    /// connection.
+    pub(crate) fn next(&mut self) -> Result<Option<WireFrame>> {
+        if matches!(self.proto, Proto::Unknown) {
+            if self.buffered() < 4 {
+                return Ok(None);
+            }
+            self.proto = if self.buf[self.pos..self.pos + 4] == V2_MAGIC {
+                Proto::Framed
+            } else {
+                Proto::V1
+            };
+        }
+        let frame = match self.proto {
+            Proto::V1 => self.next_v1(),
+            Proto::Framed => self.next_framed()?,
+            Proto::Unknown => unreachable!("protocol sniffed above"),
+        };
+        if frame.is_some() {
+            self.compact();
+        }
+        Ok(frame)
+    }
+
+    fn next_v1(&mut self) -> Option<WireFrame> {
+        if self.buffered() < self.v1_frame {
+            return None;
+        }
+        let obs = decode_f32s(
+            &self.buf[self.pos..self.pos + self.v1_frame]);
+        self.pos += self.v1_frame;
+        Some(WireFrame::V1 { obs })
+    }
+
+    fn next_framed(&mut self) -> Result<Option<WireFrame>> {
+        let b = &self.buf[self.pos..];
+        // magic(4) ver(1) id_len(1)
+        if b.len() < 6 {
+            return Ok(None);
+        }
+        ensure!(b[..4] == V2_MAGIC, "bad v2 frame magic {:02x?}",
+                &b[..4]);
+        let ver = b[4];
+        ensure!(ver == V2_VERSION || ver == V3_VERSION,
+                "unsupported wire version {ver} (server speaks \
+                 {V2_VERSION} and {V3_VERSION})");
+        let id_len = b[5] as usize;
+        if b.len() < 6 + id_len + 4 {
+            return Ok(None);
+        }
+        let n_off = 6 + id_len;
+        let n_obs = u32::from_le_bytes([b[n_off], b[n_off + 1],
+                                        b[n_off + 2], b[n_off + 3]])
+            as usize;
+        ensure!(n_obs <= MAX_WIRE_OBS,
+                "request claims {n_obs} observation values");
+        let total = n_off + 4 + n_obs * 4;
+        if b.len() < total {
+            return Ok(None);
+        }
+        let id = b[6..6 + id_len].to_vec();
+        let obs = decode_f32s(&b[n_off + 4..total]);
+        self.pos += total;
+        Ok(Some(WireFrame::Routed { ver, id, obs }))
+    }
+
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= COMPACT_AT {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
+fn decode_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+// ---- reply encoders ------------------------------------------------------
+
+/// Raw `act_dim × f32` v1 reply.
+pub(crate) fn write_v1_reply(out: &mut Vec<u8>, act: &[f32]) {
+    out.reserve(act.len() * 4);
+    for &a in act {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+}
+
+/// Success reply in the requested framing: v2 omits the version field,
+/// v3 stamps the serving policy's version.
+pub(crate) fn write_ok_reply(out: &mut Vec<u8>, ver: u8, version: u64,
+                             act: &[f32]) {
+    out.reserve(13 + act.len() * 4);
+    out.push(STATUS_OK);
+    if ver == V3_VERSION {
+        out.extend_from_slice(&version.to_le_bytes());
+    }
+    out.extend_from_slice(&(act.len() as u32).to_le_bytes());
+    for &a in act {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+}
+
+/// Error reply (routing problems — the connection stays usable).
+pub(crate) fn write_error_reply(out: &mut Vec<u8>, ver: u8, version: u64,
+                                msg: &str) {
+    let bytes = msg.as_bytes();
+    out.reserve(13 + bytes.len());
+    out.push(STATUS_ERROR);
+    if ver == V3_VERSION {
+        out.extend_from_slice(&version.to_le_bytes());
+    }
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+/// Busy reply: `status u8 = 2`, `n u32`, `n` UTF-8 message bytes.
+/// Never carries a version field (even to a v3 request) — a `Busy` can
+/// be shed *before* the request resolves to a policy (connection-level
+/// admission), where no version exists, so the frame shape is uniform.
+pub(crate) fn write_busy_reply(out: &mut Vec<u8>, msg: &str) {
+    let bytes = msg.as_bytes();
+    out.reserve(5 + bytes.len());
+    out.push(STATUS_BUSY);
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v3_frame(id: &[u8], obs: &[f32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&V2_MAGIC);
+        b.push(V3_VERSION);
+        b.push(id.len() as u8);
+        b.extend_from_slice(id);
+        b.extend_from_slice(&(obs.len() as u32).to_le_bytes());
+        for &x in obs {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn framed_request_reassembles_byte_by_byte() {
+        let obs = [0.5f32, -1.25, 3.0];
+        let wire = v3_frame(b"pend", &obs);
+        let mut p = FrameParser::new(8);
+        for (i, &byte) in wire.iter().enumerate() {
+            assert_eq!(p.next().unwrap(), None,
+                       "complete frame before byte {i}?");
+            p.feed(&[byte]);
+        }
+        match p.next().unwrap() {
+            Some(WireFrame::Routed { ver, id, obs: got }) => {
+                assert_eq!(ver, V3_VERSION);
+                assert_eq!(id, b"pend");
+                assert_eq!(got, obs);
+            }
+            other => panic!("expected routed frame, got {other:?}"),
+        }
+        assert_eq!(p.buffered(), 0);
+        assert_eq!(p.next().unwrap(), None);
+    }
+
+    #[test]
+    fn several_frames_in_one_feed_all_come_out() {
+        let mut wire = v3_frame(b"a", &[1.0]);
+        wire.extend_from_slice(&v3_frame(b"b", &[2.0, 3.0]));
+        wire.extend_from_slice(&v3_frame(b"", &[]));
+        let mut p = FrameParser::new(8);
+        p.feed(&wire);
+        let mut ids = Vec::new();
+        while let Some(WireFrame::Routed { id, .. }) = p.next().unwrap() {
+            ids.push(id);
+        }
+        assert_eq!(ids, vec![b"a".to_vec(), b"b".to_vec(), Vec::new()]);
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn v1_sniffs_and_emits_fixed_frames() {
+        let mut p = FrameParser::new(2 * 4);
+        let mut wire = Vec::new();
+        for x in [1.0f32, 2.0, 3.0, 4.0] {
+            wire.extend_from_slice(&x.to_le_bytes());
+        }
+        p.feed(&wire[..5]); // partial second f32
+        assert_eq!(p.next().unwrap(), None);
+        p.feed(&wire[5..]);
+        assert_eq!(p.next().unwrap(),
+                   Some(WireFrame::V1 { obs: vec![1.0, 2.0] }));
+        assert_eq!(p.next().unwrap(),
+                   Some(WireFrame::V1 { obs: vec![3.0, 4.0] }));
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn mid_frame_state_is_visible_for_disconnect_accounting() {
+        let wire = v3_frame(b"p", &[1.0, 2.0]);
+        let mut p = FrameParser::new(8);
+        p.feed(&wire[..7]);
+        assert_eq!(p.next().unwrap(), None);
+        assert!(p.buffered() > 0, "partial frame must read as pending");
+    }
+
+    #[test]
+    fn bad_magic_after_first_frame_is_a_protocol_error() {
+        let mut wire = v3_frame(b"p", &[1.0]);
+        wire.extend_from_slice(&[0u8; 6]); // not the magic
+        let mut p = FrameParser::new(8);
+        p.feed(&wire);
+        assert!(matches!(p.next().unwrap(), Some(WireFrame::Routed { .. })));
+        let e = p.next().unwrap_err().to_string();
+        assert!(e.contains("bad v2 frame magic"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_version_and_oversized_n_are_errors() {
+        let mut bad_ver = v3_frame(b"p", &[1.0]);
+        bad_ver[4] = 9;
+        let mut p = FrameParser::new(8);
+        p.feed(&bad_ver);
+        let e = p.next().unwrap_err().to_string();
+        assert!(e.contains("unsupported wire version 9"), "{e}");
+
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&V2_MAGIC);
+        huge.push(V2_VERSION);
+        huge.push(0);
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut p = FrameParser::new(8);
+        p.feed(&huge);
+        let e = p.next().unwrap_err().to_string();
+        assert!(e.contains("observation values"), "{e}");
+    }
+
+    #[test]
+    fn buffer_compacts_without_losing_frames() {
+        let frame = v3_frame(b"id", &[1.0; 64]); // ~270 bytes
+        let mut p = FrameParser::new(8);
+        for k in 0..100 {
+            p.feed(&frame);
+            match p.next().unwrap() {
+                Some(WireFrame::Routed { obs, .. }) => {
+                    assert_eq!(obs.len(), 64, "frame {k}");
+                }
+                other => panic!("frame {k}: {other:?}"),
+            }
+        }
+        assert!(p.buf.len() < COMPACT_AT + frame.len(),
+                "buffer grew without compaction: {}", p.buf.len());
+    }
+
+    #[test]
+    fn busy_reply_has_no_version_field() {
+        let mut out = Vec::new();
+        write_busy_reply(&mut out, "full");
+        assert_eq!(out[0], STATUS_BUSY);
+        assert_eq!(u32::from_le_bytes([out[1], out[2], out[3], out[4]]),
+                   4);
+        assert_eq!(&out[5..], b"full");
+    }
+
+    #[test]
+    fn ok_and_error_replies_match_the_legacy_encoding() {
+        let mut ok2 = Vec::new();
+        write_ok_reply(&mut ok2, V2_VERSION, 7, &[1.0]);
+        assert_eq!(ok2.len(), 1 + 4 + 4); // no version on v2
+        let mut ok3 = Vec::new();
+        write_ok_reply(&mut ok3, V3_VERSION, 7, &[1.0]);
+        assert_eq!(ok3.len(), 1 + 8 + 4 + 4);
+        assert_eq!(u64::from_le_bytes(ok3[1..9].try_into().unwrap()), 7);
+        let mut err = Vec::new();
+        write_error_reply(&mut err, V2_VERSION, 0, "nope");
+        assert_eq!(err[0], STATUS_ERROR);
+        assert_eq!(&err[5..], b"nope");
+    }
+}

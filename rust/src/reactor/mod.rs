@@ -1,0 +1,301 @@
+//! Sharded reactor serving core — the non-blocking front end of the
+//! serving subsystem.
+//!
+//! The thread-per-connection server (PR 1/2) spent one OS thread per
+//! client and *stalled the accept loop* when `max_connections` was
+//! reached. This module replaces that front end with a fixed set of
+//! event-loop shards over non-blocking sockets, so one process holds
+//! thousands of concurrent connections on a handful of threads and
+//! overload produces explicit `Busy` replies instead of silence:
+//!
+//! ```text
+//!            accept loop (caller thread, non-blocking)
+//!                 │  over max_connections → park ≤ conn_park,
+//!                 │  then Busy + close        (never stalls)
+//!        token ── hash ──> shard            FNV-1a(token) % shards
+//!        ┌───────────┬───────────┐
+//!     shard 0     shard 1     shard S-1     one thread each:
+//!     ├ conn a    ├ conn c    ├ conn e      poll readiness, feed
+//!     ├ conn b    ├ conn d    └ …           FrameParser, ≤1 request
+//!     └ …         └ …                       in flight per conn
+//!        │  try_send (bounded)  │
+//!        ▼                      ▼           full → Busy reply
+//!     per-policy core queues  (capacity = admission policy)
+//!     ┌─> core "walker"  ─┐   coalesce ≤ max_batch,
+//!     ├─> core "hopper"   ┼─> infer_batch (SIMD lanes), replies
+//!     └─> core "pend."   ─┘   come back tagged by connection token
+//! ```
+//!
+//! The pieces:
+//!
+//! * [`frame`] — incremental parsing of the v1/v2/v3 wire: bytes in,
+//!   complete frames out, any split tolerated.
+//! * [`shard`] — the per-shard event loop: readiness polling over
+//!   `TcpStream::set_nonblocking`, one in-flight request per
+//!   connection, write buffering, close accounting.
+//! * [`admission`] — the bounded-queue policy (`reject` | `queue(n)`)
+//!   applied at dispatch, plus connection-level parking/shedding here.
+//!
+//! Inference still runs in the per-policy cores of
+//! [`crate::coordinator::serving`]: each core is the *single* consumer
+//! of its [`crate::coordinator::ops::PolicySlot`], which is what makes
+//! hot reload, canary routing, and the monitor stream correct — the
+//! reactor only changed who feeds the queues, so the whole ops plane
+//! rides on it unchanged.
+//!
+//! Shard routing is hashed (FNV-1a over the accept token): stable for
+//! a connection's lifetime, uniform across shards, and free of shared
+//! state between shards. Work *stealing* was considered and rejected:
+//! connections are cheap to hold, the expensive part (inference) is
+//! already load-balanced through the per-policy queues, and stealing
+//! would make `Busy` accounting racy.
+
+mod admission;
+mod frame;
+mod shard;
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::serving::{Router, ServerConfig, V2_MAGIC};
+
+pub use admission::AdmissionPolicy;
+pub(crate) use shard::{run_shard, NewConn, ShardSeed};
+
+/// Shared accounting between the acceptor, the shards, and the final
+/// [`crate::coordinator::serving::ServerStats`].
+#[derive(Default)]
+pub(crate) struct FrontCounters {
+    /// connections admitted to a shard (= `ServerStats::connections`)
+    pub accepted: AtomicU64,
+    /// connections that ended with an I/O or protocol error
+    pub io_errors: AtomicU64,
+    /// `Busy` replies sent (request-level shedding)
+    pub busy_replies: AtomicU64,
+    /// connections shed at the door after `conn_park` (connection-level)
+    pub rejected_conns: AtomicU64,
+    /// currently open (admitted, not yet closed) connections
+    pub open: AtomicUsize,
+}
+
+impl FrontCounters {
+    pub(crate) fn note_io_error(&self, msg: &str) {
+        self.io_errors.fetch_add(1, Ordering::Relaxed);
+        // io errors end the connection, not the server — but they must
+        // stay diagnosable
+        eprintln!("qserve: connection error: {msg}");
+    }
+
+    pub(crate) fn note_busy(&self) {
+        self.busy_replies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn conn_closed(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Resolve `ServerConfig::shards` (0 = auto): half the available
+/// cores, clamped to [1, 4] — shards are I/O pumps, the heavy lifting
+/// stays in the per-policy inference cores.
+pub fn effective_shards(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get() / 2)
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// Route an accept token to a shard: FNV-1a over the token's LE bytes
+/// (the same hash family the experiment/fleet layers use for block
+/// seeding), reduced mod `shards`. Deterministic and uniform.
+pub(crate) fn shard_of(token: u64, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in token.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// A connection accepted while the server was at `max_connections`:
+/// held briefly (a slot usually frees within the close-detection race
+/// window), then shed.
+struct Parked {
+    stream: TcpStream,
+    since: Instant,
+}
+
+/// Run the reactor front end until `stop` flips: spawn the shard
+/// threads, then run the accept loop on the calling thread. Joins the
+/// shards before returning, so the caller may drop the router (closing
+/// the core queues) immediately after.
+pub(crate) fn run_front_end(listener: &TcpListener, router: Arc<Router>,
+                            stop: Arc<AtomicBool>, cfg: &ServerConfig,
+                            counters: Arc<FrontCounters>) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let shards = effective_shards(cfg.shards);
+    let mut txs: Vec<Sender<NewConn>> = Vec::with_capacity(shards);
+    let mut handles = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let (tx, rx) = mpsc::channel::<NewConn>();
+        let seed = ShardSeed {
+            rx,
+            router: router.clone(),
+            stop: stop.clone(),
+            cfg: cfg.clone(),
+            counters: counters.clone(),
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("qserve-shard-{i}"))
+                .spawn(move || run_shard(seed))
+                .context("spawn reactor shard")?,
+        );
+        txs.push(tx);
+    }
+
+    let accept_res = accept_loop(listener, &txs, &stop, cfg, &counters);
+
+    stop.store(true, Ordering::Relaxed);
+    drop(txs);
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("reactor shard panicked"))?;
+    }
+    accept_res
+}
+
+fn accept_loop(listener: &TcpListener, txs: &[Sender<NewConn>],
+               stop: &AtomicBool, cfg: &ServerConfig,
+               counters: &FrontCounters) -> Result<()> {
+    let mut parked: VecDeque<Parked> = VecDeque::new();
+    let mut next_token: u64 = 0;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(()); // parked connections drop (shutdown close)
+        }
+        // admit parked connections as slots free up; shed the expired
+        while let Some(p) = parked.front() {
+            if counters.open.load(Ordering::Relaxed)
+                < cfg.max_connections
+            {
+                let p = parked.pop_front().unwrap();
+                assign(p.stream, &mut next_token, txs, counters);
+            } else if p.since.elapsed() >= cfg.conn_park {
+                let p = parked.pop_front().unwrap();
+                shed(p.stream, counters);
+            } else {
+                break;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if parked.is_empty()
+                    && counters.open.load(Ordering::Relaxed)
+                        < cfg.max_connections
+                {
+                    assign(stream, &mut next_token, txs, counters);
+                } else {
+                    parked.push_back(Parked {
+                        stream,
+                        since: Instant::now(),
+                    });
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.accept_poll);
+            }
+            Err(e) => return Err(e).context("accept"),
+        }
+    }
+}
+
+/// Hand an admitted connection to its hashed shard.
+fn assign(stream: TcpStream, next_token: &mut u64, txs: &[Sender<NewConn>],
+          counters: &FrontCounters) {
+    let token = *next_token;
+    *next_token += 1;
+    counters.accepted.fetch_add(1, Ordering::Relaxed);
+    counters.open.fetch_add(1, Ordering::Relaxed);
+    let tx = &txs[shard_of(token, txs.len())];
+    if tx.send(NewConn { token, stream }).is_err() {
+        // shard already gone — only happens racing shutdown
+        counters.conn_closed();
+    }
+}
+
+/// Shed a connection that out-waited `conn_park`: framed clients (the
+/// first 4 request bytes are the v2 magic) get a wire-level `Busy`
+/// so they can back off and retry; v1 clients just see the close (the
+/// legacy wire has no status channel).
+fn shed(stream: TcpStream, counters: &FrontCounters) {
+    counters.rejected_conns.fetch_add(1, Ordering::Relaxed);
+    let mut stream = stream;
+    let ok = stream.set_nonblocking(false).is_ok()
+        && stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(20)))
+            .is_ok()
+        && stream
+            .set_write_timeout(Some(std::time::Duration::from_millis(50)))
+            .is_ok();
+    if !ok {
+        return;
+    }
+    let mut head = [0u8; 4];
+    if stream.read_exact(&mut head).is_ok() && head == V2_MAGIC {
+        let mut reply = Vec::new();
+        frame::write_busy_reply(&mut reply,
+                                "server at connection capacity");
+        let _ = stream.write_all(&reply);
+    }
+    // drop closes the socket either way
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_of_is_deterministic() {
+        for shards in [1usize, 2, 3, 8] {
+            for token in 0..256u64 {
+                assert_eq!(shard_of(token, shards),
+                           shard_of(token, shards));
+                assert!(shard_of(token, shards) < shards);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_spreads_tokens_across_shards() {
+        for shards in [2usize, 4, 8] {
+            let mut counts = vec![0usize; shards];
+            for token in 0..4096u64 {
+                counts[shard_of(token, shards)] += 1;
+            }
+            let expect = 4096 / shards;
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(c > expect / 2 && c < expect * 2,
+                        "shard {s}/{shards} got {c} of 4096");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_shards_honors_explicit_and_bounds_auto() {
+        assert_eq!(effective_shards(3), 3);
+        assert_eq!(effective_shards(17), 17);
+        let auto = effective_shards(0);
+        assert!((1..=4).contains(&auto), "auto shards {auto}");
+    }
+}

@@ -1,0 +1,353 @@
+//! One reactor shard: a thread owning a set of non-blocking connections.
+//!
+//! The shard loop interleaves three drains per tick — newly routed
+//! connections from the acceptor, completed inferences from the policy
+//! cores, and per-connection socket I/O (flush pending replies, read
+//! ready bytes into the frame parser, dispatch complete frames). Each
+//! connection has at most one request in flight: its socket is left
+//! unread while a request sits in a core queue, so a pipelining client
+//! is naturally paced by the server instead of ballooning the queues.
+//!
+//! Dispatch uses `try_send` into the core's bounded queue — a full
+//! queue is an immediate `Busy` reply (admission control), never a
+//! blocked shard. When the loop makes no progress it backs off in two
+//! stages: a short burst of `yield_now` keeps request latency in the
+//! microsecond range under active load, then `shard_poll` sleeps cap
+//! idle CPU burn.
+//!
+//! Close accounting matches the thread-per-connection server exactly:
+//! EOF at a frame boundary with nothing pending is a clean close;
+//! EOF mid-frame, protocol violations, and write failures count as
+//! `io_errors` — except during shutdown, when connections are simply
+//! dropped (a half-sent request at `stop` is not a client error).
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TrySendError};
+use std::sync::Arc;
+
+use crate::coordinator::serving::{Reply, Request, Router, ServerConfig};
+
+use super::frame::{self, FrameParser, WireFrame};
+use super::FrontCounters;
+
+/// A connection the acceptor routed to this shard.
+pub(crate) struct NewConn {
+    pub token: u64,
+    pub stream: TcpStream,
+}
+
+/// Everything a shard thread needs at spawn time.
+pub(crate) struct ShardSeed {
+    pub rx: Receiver<NewConn>,
+    pub router: Arc<Router>,
+    pub stop: Arc<AtomicBool>,
+    pub cfg: ServerConfig,
+    pub counters: Arc<FrontCounters>,
+}
+
+/// Why a connection left the shard.
+enum Close {
+    /// disconnect at a frame boundary, or an intentional shed
+    Clean,
+    /// protocol violation / truncated frame / failed write
+    Error(String),
+}
+
+struct Conn {
+    stream: TcpStream,
+    parser: FrameParser,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    in_flight: bool,
+    /// framing of the in-flight request's reply: 1 = v1, else the
+    /// request's wire version
+    reply_ver: u8,
+}
+
+/// Consecutive no-progress ticks spent yielding before the shard
+/// sleeps `shard_poll` per tick.
+const IDLE_SPINS: u32 = 64;
+
+pub(crate) fn run_shard(seed: ShardSeed) {
+    let ShardSeed { rx, router, stop, cfg, counters } = seed;
+    // completions come back tagged with the connection token; one
+    // channel per shard, its sender cloned into every request
+    let (comp_tx, comp_rx) = mpsc::channel::<Reply>();
+    let v1_frame = router
+        .resolve("")
+        .map(|c| c.obs_dim * 4)
+        .unwrap_or(4);
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut closed: Vec<(u64, Close)> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut idle: u32 = 0;
+
+    loop {
+        let mut progressed = false;
+
+        while let Ok(nc) = rx.try_recv() {
+            progressed = true;
+            let conn = Conn {
+                stream: nc.stream,
+                parser: FrameParser::new(v1_frame),
+                wbuf: Vec::new(),
+                wpos: 0,
+                in_flight: false,
+                reply_ver: 0,
+            };
+            match conn.stream.set_nonblocking(true)
+                .and_then(|()| conn.stream.set_nodelay(true))
+            {
+                Ok(()) => {
+                    conns.insert(nc.token, conn);
+                }
+                Err(e) => {
+                    counters.note_io_error(&format!("socket setup: {e}"));
+                    counters.conn_closed();
+                }
+            }
+        }
+
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+
+        while let Ok(rep) = comp_rx.try_recv() {
+            progressed = true;
+            if let Some(c) = conns.get_mut(&rep.tag) {
+                c.push_reply(&rep);
+                c.in_flight = false;
+            }
+            // a completion for a token that already closed is dropped —
+            // the core did the work, nobody is left to read it
+        }
+
+        closed.clear();
+        for (&token, c) in conns.iter_mut() {
+            match c.tick(token, &router, &comp_tx, &counters,
+                         &mut scratch) {
+                Ok(ticked) => progressed |= ticked,
+                Err(close) => closed.push((token, close)),
+            }
+        }
+        for (token, close) in closed.drain(..) {
+            conns.remove(&token);
+            counters.conn_closed();
+            if let Close::Error(msg) = close {
+                counters.note_io_error(&msg);
+            }
+        }
+
+        if progressed {
+            idle = 0;
+        } else {
+            idle = idle.saturating_add(1);
+            if idle < IDLE_SPINS {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(cfg.shard_poll);
+            }
+        }
+    }
+
+    // shutdown: drop everything without error accounting — in-flight
+    // requests drain inside the cores; their replies have no reader
+    for _ in conns {
+        counters.conn_closed();
+    }
+}
+
+impl Conn {
+    /// One scheduling pass over this connection. `Ok(true)` if any
+    /// bytes moved or frames dispatched; `Err` closes the connection.
+    fn tick(&mut self, token: u64, router: &Router, comp_tx: &Sender<Reply>,
+            counters: &FrontCounters, scratch: &mut [u8])
+            -> Result<bool, Close> {
+        let mut progressed = self
+            .flush()
+            .map_err(|e| Close::Error(format!("write response: {e}")))?;
+        if self.in_flight {
+            return Ok(progressed);
+        }
+        // frames already buffered (pipelined client) dispatch without
+        // touching the socket
+        if self.drain_frames(token, router, comp_tx, counters)? {
+            return Ok(true);
+        }
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => return Err(self.close_kind_at_eof()),
+                Ok(n) => {
+                    progressed = true;
+                    self.parser.feed(&scratch[..n]);
+                    if self.drain_frames(token, router, comp_tx,
+                                         counters)? {
+                        return Ok(true);
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(ref e)
+                    if matches!(e.kind(),
+                                ErrorKind::ConnectionReset
+                                | ErrorKind::ConnectionAborted
+                                | ErrorKind::BrokenPipe) =>
+                {
+                    return Err(self.close_kind_at_eof());
+                }
+                Err(e) => {
+                    return Err(Close::Error(format!("read request: {e}")));
+                }
+            }
+        }
+        Ok(progressed)
+    }
+
+    /// EOF / reset classification: clean only at a frame boundary with
+    /// no reply bytes left unsent.
+    fn close_kind_at_eof(&self) -> Close {
+        if self.parser.buffered() == 0 && self.wpos == self.wbuf.len() {
+            Close::Clean
+        } else {
+            Close::Error(format!(
+                "eof mid-request ({} request byte(s) buffered, {} reply \
+                 byte(s) unsent)",
+                self.parser.buffered(),
+                self.wbuf.len() - self.wpos))
+        }
+    }
+
+    /// Parse-and-dispatch until a request goes in flight or the buffer
+    /// runs dry. Returns whether a frame was dispatched.
+    fn drain_frames(&mut self, token: u64, router: &Router,
+                    comp_tx: &Sender<Reply>, counters: &FrontCounters)
+                    -> Result<bool, Close> {
+        let mut any = false;
+        loop {
+            match self.parser.next() {
+                Ok(Some(f)) => {
+                    any = true;
+                    self.dispatch(f, token, router, comp_tx, counters)?;
+                    if self.in_flight {
+                        return Ok(true);
+                    }
+                }
+                Ok(None) => return Ok(any),
+                Err(e) => return Err(Close::Error(e.to_string())),
+            }
+        }
+    }
+
+    fn dispatch(&mut self, f: WireFrame, token: u64, router: &Router,
+                comp_tx: &Sender<Reply>, counters: &FrontCounters)
+                -> Result<(), Close> {
+        match f {
+            WireFrame::V1 { obs } => {
+                let core = router
+                    .resolve("")
+                    .expect("router always contains the default policy");
+                // the parser fixed the frame length to the default
+                // policy's obs_dim, so no dimension check is needed
+                match core.tx.try_send(Request {
+                    obs,
+                    tag: token,
+                    resp: comp_tx.clone(),
+                }) {
+                    Ok(()) => {
+                        self.in_flight = true;
+                        self.reply_ver = 1;
+                        Ok(())
+                    }
+                    Err(TrySendError::Full(_)) => {
+                        // the legacy wire has no status channel — shed
+                        // by closing (counted as busy, not an io error)
+                        counters.note_busy();
+                        Err(Close::Clean)
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        Err(Close::Clean) // core gone — shutting down
+                    }
+                }
+            }
+            WireFrame::Routed { ver, id, obs } => {
+                let Ok(id) = std::str::from_utf8(&id) else {
+                    // no policy resolved: a v3 error reply carries
+                    // version 0
+                    frame::write_error_reply(&mut self.wbuf, ver, 0,
+                                             "policy id is not UTF-8");
+                    return Ok(());
+                };
+                let Some(core) = router.resolve(id) else {
+                    frame::write_error_reply(
+                        &mut self.wbuf, ver, 0,
+                        &format!("unknown policy id `{id}`"));
+                    return Ok(());
+                };
+                if obs.len() != core.obs_dim {
+                    frame::write_error_reply(
+                        &mut self.wbuf, ver, core.slot.version(),
+                        &format!("policy `{id}` expects {} observation \
+                                  values, got {}",
+                                 core.obs_dim, obs.len()));
+                    return Ok(());
+                }
+                match core.tx.try_send(Request {
+                    obs,
+                    tag: token,
+                    resp: comp_tx.clone(),
+                }) {
+                    Ok(()) => {
+                        self.in_flight = true;
+                        self.reply_ver = ver;
+                        Ok(())
+                    }
+                    Err(TrySendError::Full(_)) => {
+                        counters.note_busy();
+                        frame::write_busy_reply(
+                            &mut self.wbuf,
+                            &format!("policy `{}` admission queue full",
+                                     if id.is_empty() { "default" }
+                                     else { id }));
+                        Ok(())
+                    }
+                    Err(TrySendError::Disconnected(_)) => Err(Close::Clean),
+                }
+            }
+        }
+    }
+
+    fn push_reply(&mut self, rep: &Reply) {
+        match self.reply_ver {
+            1 => frame::write_v1_reply(&mut self.wbuf, &rep.act),
+            ver => frame::write_ok_reply(&mut self.wbuf, ver, rep.version,
+                                         &rep.act),
+        }
+    }
+
+    /// Push buffered reply bytes as far as the socket accepts.
+    fn flush(&mut self) -> std::io::Result<bool> {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    return Err(ErrorKind::WriteZero.into());
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wpos > 0 && self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(progressed)
+    }
+}

@@ -1,0 +1,484 @@
+//! Integration tests for the sharded reactor front end and the SIMD
+//! inference lanes behind it.
+//!
+//! Two concerns meet here. **Bit-identity**: the blocked 8/4-lane
+//! `infer_batch` kernels must agree bit-for-bit with the scalar
+//! reference path *and* with the QIR interpreter (the semantic ground
+//! truth) across the full bit-width matrix, including 2-bit and
+//! heterogeneous per-layer allocations — otherwise batching would be
+//! observable through the wire. **Reactor semantics**: frames split
+//! across arbitrarily small reads must reassemble, a mid-frame
+//! disconnect must count as exactly one I/O error without disturbing
+//! other connections, and overload must surface as typed retryable
+//! `Busy` — never a stalled accept.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use qcontrol::coordinator::serving::{serve_registry, ActionClient,
+                                     AdmissionPolicy, BusyError,
+                                     ClientConfig, RoutedClient,
+                                     ServerConfig, ServerStats};
+use qcontrol::intinfer::IntEngine;
+use qcontrol::policy::{PolicyArtifact, PolicyRegistry};
+use qcontrol::qir::{self, Interpreter};
+use qcontrol::quant::export::IntPolicy;
+use qcontrol::quant::{BitCfg, LayerBits};
+use qcontrol::util::rng::Rng;
+use qcontrol::util::testkit;
+
+// ---- SIMD lanes: bit-identity against scalar and the interpreter -----
+
+/// Run one policy through the SIMD batch path, the scalar batch path,
+/// and the per-observation interpreter, over panel-boundary-crossing
+/// batch sizes, and demand three-way bit-identity.
+fn assert_three_way_identity(policy: IntPolicy, tag: &str) {
+    let obs_dim = policy.obs_dim;
+    let act_dim = policy.act_dim;
+    let interp = Interpreter::new(qir::lower(&policy)).unwrap();
+    let mut simd = IntEngine::new(policy.clone());
+    let mut scalar = IntEngine::new(policy);
+    let mut rng = Rng::new(0x51C0);
+    for &batch in &[1usize, 2, 3, 4, 5, 7, 8, 9, 16, 17, 33] {
+        let mut block = vec![0.0f32; batch * obs_dim];
+        rng.fill_normal(&mut block);
+        let mut got = vec![0.0f32; batch * act_dim];
+        simd.infer_batch(&block, &mut got);
+        let mut want = vec![0.0f32; batch * act_dim];
+        scalar.infer_batch_scalar(&block, &mut want);
+        assert_eq!(got, want, "{tag}: SIMD vs scalar, batch={batch}");
+        for b in 0..batch {
+            let row = interp
+                .infer(&block[b * obs_dim..(b + 1) * obs_dim])
+                .unwrap();
+            assert_eq!(&got[b * act_dim..(b + 1) * act_dim], &row[..],
+                       "{tag}: SIMD vs interpreter, batch={batch} \
+                        lane={b}");
+        }
+    }
+}
+
+#[test]
+fn simd_lanes_bit_identical_across_uniform_bit_matrix() {
+    // the full uniform sweep including the 2-bit extreme, where the
+    // integer lattice is coarsest and any accumulation-order slip in
+    // the panels would move a threshold crossing
+    for (i, bits) in [BitCfg::new(2, 2, 2), BitCfg::new(3, 2, 4),
+                      BitCfg::new(4, 3, 8), BitCfg::new(8, 8, 8)]
+        .into_iter()
+        .enumerate()
+    {
+        let policy =
+            testkit::toy_policy(100 + i as u64, 9, 20, 3, bits);
+        assert_three_way_identity(policy, &format!("uniform {bits:?}"));
+    }
+}
+
+#[test]
+fn simd_lanes_bit_identical_across_layer_bits_matrix() {
+    // heterogeneous per-layer allocations (mixed-precision search
+    // output): every layer runs a different lattice, so the panels
+    // must track per-layer quantizer state exactly
+    for (i, spec) in ["8;4,4;3,3;2,8", "6;2,3;3,2;4,6", "8;8,8;2,2;2,8"]
+        .into_iter()
+        .enumerate()
+    {
+        let lb = LayerBits::parse(spec, 3).unwrap();
+        let policy =
+            testkit::toy_policy_mixed(200 + i as u64, 7, 18, 2, &lb)
+                .unwrap();
+        assert_three_way_identity(policy, &format!("layered {spec}"));
+    }
+}
+
+// ---- reactor harness --------------------------------------------------
+
+const OBS: usize = 5;
+const ACT: usize = 3;
+
+struct Harness {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<ServerStats>,
+    policy: IntPolicy,
+}
+
+fn start_server(cfg: ServerConfig) -> Harness {
+    let policy = testkit::toy_policy(42, OBS, 16, ACT, BitCfg::new(4, 3, 8));
+    let mut reg = PolicyRegistry::new();
+    reg.insert(PolicyArtifact::new("default", policy.clone())).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        serve_registry(listener, reg, stop2, cfg).unwrap()
+    });
+    Harness { addr, stop, handle, policy }
+}
+
+fn obs_for(seed: usize) -> Vec<f32> {
+    (0..OBS)
+        .map(|d| ((seed * 31 + d * 7) as f32 * 0.21).sin() * 2.0)
+        .collect()
+}
+
+/// Encode one framed request (ver 2 or 3).
+fn encode_frame(ver: u8, id: &str, obs: &[f32]) -> Vec<u8> {
+    let mut b = vec![0x51, 0x50, 0xC0, 0x7F];
+    b.push(ver);
+    b.push(id.len() as u8);
+    b.extend_from_slice(id.as_bytes());
+    b.extend_from_slice(&(obs.len() as u32).to_le_bytes());
+    for &x in obs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+// ---- frame reassembly and close accounting ---------------------------
+
+#[test]
+fn partial_frame_reads_reassemble_over_the_wire() {
+    let h = start_server(ServerConfig::default());
+    let mut check = IntEngine::new(h.policy.clone());
+    let mut raw = TcpStream::connect(&h.addr).unwrap();
+    raw.set_nodelay(true).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // drip a v3 frame one byte at a time: the shard must reassemble it
+    // across ~30 reads, then answer normally
+    let obs = obs_for(1);
+    let frame = encode_frame(3, "", &obs);
+    for &byte in &frame {
+        raw.write_all(&[byte]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut status = [0u8; 1];
+    raw.read_exact(&mut status).unwrap();
+    assert_eq!(status[0], 0, "ok reply expected");
+    let mut ver = [0u8; 8];
+    raw.read_exact(&mut ver).unwrap(); // v3 version stamp
+    let mut n = [0u8; 4];
+    raw.read_exact(&mut n).unwrap();
+    assert_eq!(u32::from_le_bytes(n) as usize, ACT);
+    let mut payload = vec![0u8; ACT * 4];
+    raw.read_exact(&mut payload).unwrap();
+    let got: Vec<f32> = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert_eq!(got, check.infer_vec(&obs));
+
+    drop(raw);
+    std::thread::sleep(Duration::from_millis(100));
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.io_errors, 0,
+               "byte-at-a-time framing is not an error");
+}
+
+#[test]
+fn mid_frame_disconnect_is_one_io_error_and_peers_survive() {
+    let h = start_server(ServerConfig::default());
+    // connection A dies with half a frame buffered server-side
+    let mut dying = TcpStream::connect(&h.addr).unwrap();
+    dying.write_all(&encode_frame(2, "", &obs_for(2))[..9]).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    drop(dying);
+    // give the shard time to observe the EOF while still running —
+    // shutdown-time drops are deliberately not accounted as errors
+    std::thread::sleep(Duration::from_millis(200));
+
+    // connection B is unaffected before, during, and after
+    let mut check = IntEngine::new(h.policy.clone());
+    let mut client = RoutedClient::connect(&h.addr).unwrap();
+    for s in 0..10 {
+        let obs = obs_for(100 + s);
+        assert_eq!(client.act("", &obs).unwrap(), check.infer_vec(&obs));
+    }
+    drop(client);
+    std::thread::sleep(Duration::from_millis(100));
+
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.io_errors, 1,
+               "exactly the mid-frame disconnect is an error");
+    assert_eq!(stats.requests, 10);
+    assert_eq!(stats.connections, 2);
+}
+
+// ---- admission control and the typed Busy path -----------------------
+
+#[test]
+fn connection_overflow_yields_typed_busy() {
+    let cfg = ServerConfig {
+        max_connections: 1,
+        conn_park: Duration::ZERO, // shed immediately, no parking grace
+        ..ServerConfig::default()
+    };
+    let h = start_server(cfg);
+    // first client occupies the only slot
+    let mut holder = RoutedClient::connect(&h.addr).unwrap();
+    let obs = obs_for(3);
+    holder.act("", &obs).unwrap();
+
+    // second client is shed at the door: with retries disabled the
+    // wire-level Busy must surface as a typed, downcastable error
+    let ccfg = ClientConfig { busy_retries: 0, ..ClientConfig::default() };
+    let mut shed = RoutedClient::connect_with(&h.addr, ccfg).unwrap();
+    let err = shed.act("", &obs).unwrap_err();
+    let busy = err.downcast_ref::<BusyError>().unwrap_or_else(|| {
+        panic!("expected BusyError, got: {err:#}")
+    });
+    assert_eq!(busy.attempts, 1);
+    assert!(busy.msg.contains("connection capacity"), "{}", busy.msg);
+
+    drop(holder);
+    drop(shed);
+    std::thread::sleep(Duration::from_millis(100));
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.rejected_conns, 1);
+    assert_eq!(stats.connections, 1, "the shed connection never counts");
+    assert_eq!(stats.requests, 1);
+}
+
+#[test]
+fn busy_retry_recovers_once_a_slot_frees() {
+    let cfg = ServerConfig {
+        max_connections: 1,
+        conn_park: Duration::ZERO,
+        ..ServerConfig::default()
+    };
+    let h = start_server(cfg);
+    let mut holder = RoutedClient::connect(&h.addr).unwrap();
+    holder.act("", &obs_for(4)).unwrap();
+
+    // free the slot shortly after the second client starts retrying:
+    // its bounded backoff (plus reconnects across connection-level
+    // sheds) must get a request through without caller-side logic
+    let freer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        drop(holder);
+    });
+    let ccfg = ClientConfig {
+        busy_retries: 12,
+        busy_backoff: Duration::from_millis(10),
+        ..ClientConfig::default()
+    };
+    let mut retrier = RoutedClient::connect_with(&h.addr, ccfg).unwrap();
+    let mut check = IntEngine::new(h.policy.clone());
+    let obs = obs_for(5);
+    let got = retrier.act("", &obs).unwrap();
+    assert_eq!(got, check.infer_vec(&obs));
+    freer.join().unwrap();
+
+    drop(retrier);
+    std::thread::sleep(Duration::from_millis(100));
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert!(stats.rejected_conns >= 1,
+            "the retrier must have been shed at least once");
+    assert_eq!(stats.requests, 2);
+}
+
+#[test]
+fn always_busy_server_exhausts_exactly_the_retry_budget() {
+    // a fake server that answers every request with Busy (connection
+    // kept open) pins the client's attempt accounting deterministically
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let obs = obs_for(6);
+    let req_len = encode_frame(2, "", &obs).len();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut served = 0u32;
+        let mut buf = vec![0u8; req_len];
+        while s.read_exact(&mut buf).is_ok() {
+            let msg = b"synthetic overload";
+            let mut reply = vec![2u8]; // STATUS_BUSY, no version field
+            reply.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+            reply.extend_from_slice(msg);
+            if s.write_all(&reply).is_err() {
+                break;
+            }
+            served += 1;
+        }
+        served
+    });
+
+    let ccfg = ClientConfig {
+        busy_retries: 3,
+        busy_backoff: Duration::from_micros(200),
+        ..ClientConfig::default()
+    };
+    let mut client = RoutedClient::connect_with(&addr, ccfg).unwrap();
+    let err = client.act("", &obs).unwrap_err();
+    let busy = err.downcast_ref::<BusyError>().unwrap_or_else(|| {
+        panic!("expected BusyError, got: {err:#}")
+    });
+    assert_eq!(busy.attempts, 4, "busy_retries=3 means 4 round-trips");
+    assert!(busy.msg.contains("synthetic overload"), "{}", busy.msg);
+    drop(client);
+    assert_eq!(server.join().unwrap(), 4,
+               "the wire must have seen exactly 4 requests");
+}
+
+#[test]
+fn strict_reject_admission_serves_everything_through_retries() {
+    // the tightest admission (queue = one max_batch of 1) under real
+    // concurrency: request-level Busy replies appear, and the client's
+    // deterministic backoff absorbs them — every request lands bit-exact
+    let cfg = ServerConfig {
+        max_batch: 1,
+        admission: AdmissionPolicy::Reject,
+        ..ServerConfig::default()
+    };
+    let h = start_server(cfg);
+    let mut joins = Vec::new();
+    for c in 0..6usize {
+        let addr = h.addr.clone();
+        let policy = h.policy.clone();
+        joins.push(std::thread::spawn(move || {
+            let ccfg = ClientConfig {
+                busy_retries: 40,
+                busy_backoff: Duration::from_micros(500),
+                ..ClientConfig::default()
+            };
+            let mut check = IntEngine::new(policy);
+            let mut client =
+                RoutedClient::connect_with(&addr, ccfg).unwrap();
+            for s in 0..20 {
+                let obs = obs_for(c * 1000 + s);
+                let got = client.act("", &obs).unwrap();
+                assert_eq!(got, check.infer_vec(&obs),
+                           "client {c} step {s}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    h.stop.store(true, Ordering::Relaxed);
+    let stats = h.handle.join().unwrap();
+    assert_eq!(stats.requests, 120, "every request must land");
+    assert_eq!(stats.io_errors, 0);
+}
+
+// ---- configuration surface -------------------------------------------
+
+#[test]
+fn degenerate_reactor_configs_are_rejected_up_front() {
+    let mk = || {
+        let mut reg = PolicyRegistry::new();
+        reg.insert(PolicyArtifact::new(
+            "p",
+            testkit::toy_policy(1, OBS, 8, ACT, BitCfg::new(4, 3, 8)),
+        )).unwrap();
+        reg
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let cases: Vec<(ServerConfig, &str)> = vec![
+        (ServerConfig {
+            admission: AdmissionPolicy::Queue(0),
+            ..ServerConfig::default()
+        }, "never admit"),
+        (ServerConfig {
+            shard_poll: Duration::ZERO,
+            ..ServerConfig::default()
+        }, "shard_poll"),
+    ];
+    for (cfg, needle) in cases {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = serve_registry(listener, mk(), stop.clone(), cfg)
+            .expect_err("degenerate config must be rejected");
+        assert!(format!("{err:#}").contains(needle), "{err:#}");
+    }
+}
+
+#[test]
+fn admission_policy_cli_grammar() {
+    assert_eq!(AdmissionPolicy::parse("reject").unwrap(),
+               AdmissionPolicy::Reject);
+    assert_eq!(AdmissionPolicy::parse("queue:512").unwrap(),
+               AdmissionPolicy::Queue(512));
+    assert!(AdmissionPolicy::parse("stall").is_err());
+}
+
+// ---- multi-shard routing ---------------------------------------------
+
+#[test]
+fn explicit_multi_shard_server_serves_v1_and_routed_clients() {
+    // pin an explicit shard count above 1 so connections actually land
+    // on different event loops, then mix both wire families
+    let cfg = ServerConfig {
+        shards: 3,
+        ..ServerConfig::default()
+    };
+    let pol_a = testkit::toy_policy(42, OBS, 16, ACT, BitCfg::new(4, 3, 8));
+    let pol_b = testkit::toy_policy(7, 4, 12, 2, BitCfg::new(3, 2, 4));
+    let mut reg = PolicyRegistry::new();
+    reg.insert(PolicyArtifact::new("alpha", pol_a.clone())).unwrap();
+    reg.insert(PolicyArtifact::new("beta", pol_b.clone())).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        serve_registry(listener, reg, stop2, cfg).unwrap()
+    });
+
+    let mut joins = Vec::new();
+    for c in 0..6usize {
+        let addr = addr.clone();
+        let (pa, pb) = (pol_a.clone(), pol_b.clone());
+        joins.push(std::thread::spawn(move || {
+            if c % 3 == 0 {
+                // v1 fallback to the default policy (alpha sorts first)
+                let mut check = IntEngine::new(pa);
+                let mut v1 =
+                    ActionClient::connect(&addr, OBS, ACT).unwrap();
+                for s in 0..15 {
+                    let obs = obs_for(c * 100 + s);
+                    assert_eq!(v1.act(&obs).unwrap(),
+                               check.infer_vec(&obs), "v1 {c}/{s}");
+                }
+            } else {
+                let (policy, id, dim): (IntPolicy, &str, usize) =
+                    if c % 3 == 1 { (pa, "alpha", OBS) }
+                    else { (pb, "beta", 4) };
+                let mut check = IntEngine::new(policy);
+                let mut client = RoutedClient::connect(&addr).unwrap();
+                for s in 0..15 {
+                    let obs: Vec<f32> = (0..dim)
+                        .map(|d| {
+                            ((c * 100 + s * 13 + d * 3) as f32 * 0.17)
+                                .cos() * 1.5
+                        })
+                        .collect();
+                    let (got, version) =
+                        client.act_versioned(id, &obs).unwrap();
+                    assert_eq!(got, check.infer_vec(&obs),
+                               "{id} {c}/{s}");
+                    assert!(version >= 1, "v3 must stamp a version");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::Relaxed);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.requests, 90);
+    assert_eq!(stats.connections, 6);
+    assert_eq!(stats.io_errors, 0);
+    assert_eq!(stats.policies, 2);
+}
